@@ -1,0 +1,142 @@
+//! Ablations over the design choices DESIGN.md calls out (beyond the
+//! paper's own figures):
+//!
+//! A. Serving-PE selection policy (random / least-loaded / primary).
+//! B. Shared permutation across copies vs a distinct permutation per copy
+//!    (the §IV-B resilience argument).
+//! C. §IV-E repair: Distribution A (double hashing) vs B (Feistel walk) —
+//!    probe cost and repair volume.
+//! D. §IV-C memory accounting: resident replica bytes = r·n/p exactly.
+
+use restore::config::{RestoreConfig, ServerSelection};
+use restore::metrics::{fmt_time, Table};
+use restore::restore::load::load_percent_requests;
+use restore::restore::repair::{ProbeSequences, RepairScheme};
+use restore::restore::{idl, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::{bench, black_box};
+use restore::util::rng::Rng;
+
+fn main() {
+    ablation_server_selection();
+    ablation_distinct_permutation();
+    ablation_repair_schemes();
+    ablation_memory_accounting();
+}
+
+fn ablation_server_selection() {
+    println!("=== Ablation A: serving-PE selection policy (load 1 %, p=1536) ===\n");
+    let mut table =
+        Table::new(vec!["policy", "sim time", "bottleneck msgs", "bottleneck bytes"]);
+    for (name, sel) in [
+        ("random (paper)", ServerSelection::Random),
+        ("least-loaded", ServerSelection::LeastLoaded),
+        ("primary-only", ServerSelection::Primary),
+    ] {
+        let cfg = RestoreConfig::builder(1536, 64, 262_144)
+            .replicas(4)
+            .perm_range_bytes(Some(256 * 1024))
+            .server_selection(sel)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(1536, 48);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        cluster.kill(&[100]);
+        let reqs = load_percent_requests(&store, &cluster, 1.0, 99);
+        let t = cluster.now();
+        let out = store.load(&mut cluster, &reqs).unwrap();
+        table.row(vec![
+            name.to_string(),
+            fmt_time(cluster.now() - t),
+            out.data_cost.bottleneck_msgs.to_string(),
+            out.data_cost.bottleneck_bytes.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+fn ablation_distinct_permutation() {
+    println!("=== Ablation B: shared vs distinct permutation per copy (§IV-B) ===\n");
+    let mut table = Table::new(vec!["p", "r", "shared: mean f@IDL", "distinct: mean f@IDL"]);
+    for &(p, r) in &[(256u64, 2u64), (1024, 4), (4096, 4)] {
+        let mut rng = Rng::seed_from_u64(p * 31 + r);
+        let reps = 200;
+        let units = p * 16;
+        let shared: f64 = (0..reps)
+            .map(|_| idl::simulate_failures_until_idl(p, r, &mut rng) as f64)
+            .sum::<f64>()
+            / reps as f64;
+        let distinct: f64 = (0..reps)
+            .map(|_| idl::simulate_failures_until_idl_distinct(p, r, units, &mut rng) as f64)
+            .sum::<f64>()
+            / reps as f64;
+        table.row(vec![
+            p.to_string(),
+            r.to_string(),
+            format!("{:.1} ({:.2}%)", shared, 100.0 * shared / p as f64),
+            format!("{:.1} ({:.2}%)", distinct, 100.0 * distinct / p as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(sharing one permutation across copies tolerates more failures — the\n paper's §IV-B design choice)\n");
+}
+
+fn ablation_repair_schemes() {
+    println!("=== Ablation C: §IV-E probing-sequence constructions ===\n");
+    let p = 24576;
+    let mut table = Table::new(vec!["scheme", "probe() mean", "full r-home lookup"]);
+    for (name, scheme) in [
+        ("A: double hashing", RepairScheme::DoubleHashing),
+        ("B: Feistel walk", RepairScheme::FeistelWalk),
+    ] {
+        let seqs = ProbeSequences::new(p, 7, scheme);
+        let mut x = 0u64;
+        let probe = bench(name, 1000, 20000, || {
+            x = x.wrapping_add(1);
+            black_box(seqs.probe(x, 3));
+        });
+        let seqs2 = ProbeSequences::new(p, 7, scheme);
+        let det = |k: usize| (k * (p / 4)) % p;
+        let mut y = 0u64;
+        let homes = bench(name, 200, 2000, || {
+            y = y.wrapping_add(1);
+            black_box(seqs2.replica_homes(y, 4, |pe| pe % 97 != 0, det));
+        });
+        table.row(vec![
+            name.to_string(),
+            fmt_time(probe.stats.mean),
+            fmt_time(homes.stats.mean),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+fn ablation_memory_accounting() {
+    println!("=== Ablation D: §IV-C memory formula (resident = r*n/p blocks) ===\n");
+    let mut table = Table::new(vec!["p", "r", "perm", "resident/PE", "formula", "match"]);
+    for &(p, r, perm) in
+        &[(48usize, 4usize, true), (48, 4, false), (96, 2, true), (96, 8, false)]
+    {
+        let cfg = RestoreConfig::builder(p, 64, 4096)
+            .replicas(r)
+            .perm_range_bytes(perm.then_some(16 * 1024))
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 48.min(p));
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        let resident = store.stores()[0].resident_bytes();
+        let formula = cfg.replica_bytes_per_pe() as u64;
+        let all_match = store.stores().iter().all(|s| s.resident_bytes() == formula);
+        table.row(vec![
+            p.to_string(),
+            r.to_string(),
+            perm.to_string(),
+            resident.to_string(),
+            formula.to_string(),
+            if all_match { "[OK]".into() } else { "[MISMATCH]".to_string() },
+        ]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,95 @@
+//! Fig 3 — fault resilience of the data distribution (§VI-B1).
+//!
+//! (a) Monte-Carlo simulation: kill uniformly random PEs until all copies
+//!     of some data block are lost; plot the failed fraction at that point
+//!     for r ∈ {1,2,3,4} and p = 2^4 … 2^25.
+//! (b) The §IV-D closed form vs the simulation (empirical CDF), r = 4.
+//!
+//! Paper anchors: with r = 4, even at p = 2^25 more than 1 % of all PEs
+//! must fail before data is lost; the formula matches the simulation
+//! closely; r := 4 is chosen for all further experiments.
+
+use restore::metrics::{Stats, Table};
+use restore::restore::idl;
+use restore::util::rng::Rng;
+
+fn main() {
+    println!("=== Fig 3a: % failed PEs until irrecoverable data loss ===\n");
+    let mut table = Table::new(vec!["p", "r=1", "r=2", "r=3", "r=4"]);
+    let exponents = [4u32, 7, 10, 13, 16, 19, 22, 25];
+    for &e in &exponents {
+        let p = 1u64 << e;
+        let mut cells = vec![format!("2^{e}")];
+        for r in 1..=4u64 {
+            if p % r != 0 {
+                cells.push("-".into());
+                continue;
+            }
+            let reps = if e >= 22 { 5 } else { 10 };
+            let mut rng = Rng::seed_from_u64(0xF16_3A + e as u64 * 31 + r);
+            let fracs: Vec<f64> = (0..reps)
+                .map(|_| idl::simulate_failures_until_idl(p, r, &mut rng) as f64 / p as f64)
+                .collect();
+            let s = Stats::from(&fracs);
+            cells.push(format!("{:.3}%", s.mean * 100.0));
+        }
+        table.row(cells);
+    }
+    println!("{}", table.render());
+    // the §VI-B1 anchor
+    let mut rng = Rng::seed_from_u64(1);
+    let worst: f64 = (0..5)
+        .map(|_| idl::simulate_failures_until_idl(1 << 25, 4, &mut rng) as f64 / (1u64 << 25) as f64)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "paper anchor (r=4, p=2^25): >1 % of PEs must fail before IDL -> measured min {:.2} % {}\n",
+        worst * 100.0,
+        if worst > 0.01 { "[OK]" } else { "[MISMATCH]" }
+    );
+
+    println!("=== Fig 3b: closed form (§IV-D) vs simulation, r = 4 ===\n");
+    for &p in &[1u64 << 10, 1 << 16] {
+        let r = 4u64;
+        let runs = 2000usize;
+        let mut rng = Rng::seed_from_u64(0x3B + p);
+        let mut results: Vec<u64> =
+            (0..runs).map(|_| idl::simulate_failures_until_idl(p, r, &mut rng)).collect();
+        results.sort_unstable();
+        let mut t = Table::new(vec!["f/p", "P<= (formula)", "P<= (simulated)", "approx g(f/p)^r"]);
+        let mut max_err = 0.0f64;
+        for pct in [0.1f64, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0] {
+            let f = ((pct / 100.0) * p as f64).round() as u64;
+            if f == 0 {
+                continue;
+            }
+            let exact = idl::p_idl_leq(p, r, f);
+            let emp = results.iter().filter(|&&x| x <= f).count() as f64 / runs as f64;
+            max_err = max_err.max((exact - emp).abs());
+            t.row(vec![
+                format!("{pct:.1}%"),
+                format!("{exact:.4}"),
+                format!("{emp:.4}"),
+                format!("{:.4}", idl::p_idl_approx(p, r, f)),
+            ]);
+        }
+        println!("p = {p} ({runs} simulation runs)");
+        println!("{}", t.render());
+        println!(
+            "max |formula - simulation| = {max_err:.4} {}\n",
+            if max_err < 0.03 { "[OK: matches closely]" } else { "[MISMATCH]" }
+        );
+    }
+
+    println!("E[failures until IDL] (exact formula):");
+    let mut t = Table::new(vec!["p", "r", "E[failures]", "% of p"]);
+    for &(p, r) in &[(48u64, 4u64), (1536, 4), (24576, 4), (24576, 2)] {
+        let e = idl::expected_failures_until_idl(p, r);
+        t.row(vec![
+            p.to_string(),
+            r.to_string(),
+            format!("{e:.1}"),
+            format!("{:.2}%", 100.0 * e / p as f64),
+        ]);
+    }
+    println!("{}", t.render());
+}

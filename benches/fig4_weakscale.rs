@@ -1,0 +1,98 @@
+//! Fig 4b — weak scaling of the three benchmark operations (§VI-B2).
+//!
+//! 16 MiB per PE; p = 48 … 24576; operations *submit*, *load 1 % data*,
+//! *load all data*, each with and without ID randomization (256 KiB
+//! permutation ranges). All data crosses the network (load-all rotates by
+//! one shard so no PE loads its own data).
+//!
+//! Paper shape: permutations speed up load-1% and slow down submit and
+//! load-all, increasingly so at high PE counts.
+
+use restore::config::RestoreConfig;
+use restore::metrics::{fmt_time, Stats, Table};
+use restore::restore::load::{load_all_requests, load_percent_requests};
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::sim_samples;
+
+const BYTES_PER_PE: usize = 16 * 1024 * 1024;
+const BLOCK: usize = 64;
+const PERM_RANGE: usize = 256 * 1024;
+
+fn main() {
+    let pes = [48usize, 192, 768, 3072, 12288, 24576];
+    let reps = 5;
+
+    for &op in &["submit", "load 1% data", "load all data"] {
+        println!("=== Fig 4b: {op}, 16 MiB per PE (weak scaling) ===\n");
+        let mut table =
+            Table::new(vec!["p", "no permutation", "with permutation", "perm/no-perm"]);
+        for &p in &pes {
+            let plain = run_op(op, p, None, reps);
+            let perm = run_op(op, p, Some(PERM_RANGE), reps);
+            table.row(vec![
+                p.to_string(),
+                fmt_time(plain.mean),
+                fmt_time(perm.mean),
+                format!("{:.2}x", perm.mean / plain.mean),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    // Expected qualitative anchors from the paper:
+    let l1_plain = run_op("load 1% data", 24576, None, reps);
+    let l1_perm = run_op("load 1% data", 24576, Some(PERM_RANGE), reps);
+    let la_plain = run_op("load all data", 24576, None, reps);
+    let la_perm = run_op("load all data", 24576, Some(PERM_RANGE), reps);
+    println!(
+        "anchors at p=24576: permutation speeds up load-1% ({} -> {}) {}",
+        fmt_time(l1_plain.mean),
+        fmt_time(l1_perm.mean),
+        ok(l1_perm.mean < l1_plain.mean)
+    );
+    println!(
+        "                    permutation slows down load-all ({} -> {}) {}",
+        fmt_time(la_plain.mean),
+        fmt_time(la_perm.mean),
+        ok(la_perm.mean >= la_plain.mean)
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK]"
+    } else {
+        "[MISMATCH]"
+    }
+}
+
+fn run_op(op: &str, p: usize, perm: Option<usize>, reps: usize) -> Stats {
+    sim_samples(reps, |rep| {
+        let cfg = RestoreConfig::builder(p, BLOCK, BYTES_PER_PE / BLOCK)
+            .replicas(4)
+            .perm_range_bytes(perm)
+            .seed(0xF16_4B + rep)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 48.min(p));
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        let sub = store.submit_virtual(&mut cluster).unwrap();
+        match op {
+            "submit" => sub.cost.sim_time_s,
+            "load 1% data" => {
+                let reqs =
+                    load_percent_requests(&store, &cluster, 1.0, (rep as usize * 13) % p);
+                let t = cluster.now();
+                store.load(&mut cluster, &reqs).unwrap();
+                cluster.now() - t
+            }
+            _ => {
+                let reqs = load_all_requests(&store, &cluster);
+                let t = cluster.now();
+                store.load(&mut cluster, &reqs).unwrap();
+                cluster.now() - t
+            }
+        }
+    })
+}

@@ -1,0 +1,112 @@
+//! Fig 7 — ReStore vs loading from the parallel file system (§VI-D1).
+//!
+//! 16 MiB per PE. The PFS side reads the paper's ideal layout: a single
+//! consecutive read per PE, either one file per PE (C++ ifstream) or one
+//! shared file via MPI_File_read_at_all (MPI I/O) — "a lower bound for all
+//! checkpointing libraries that have to read their data from disk".
+//!
+//! Paper anchors at p = 24576: ReStore outperforms ifstream by ~206×
+//! (load 1 %) and ~55× (load all).
+
+use restore::config::{PfsConfig, RestoreConfig};
+use restore::metrics::{fmt_time, Stats, Table};
+use restore::pfs::{CacheState, Pfs, PfsMethod};
+use restore::restore::load::{load_all_requests, load_percent_requests};
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::sim_samples;
+
+const BYTES_PER_PE: u64 = 16 * 1024 * 1024;
+const BLOCK: usize = 64;
+
+fn main() {
+    let pfs = Pfs::new(PfsConfig::default());
+    let pes = [48usize, 192, 768, 3072, 12288, 24576];
+    let reps = 5;
+
+    let mut speedup_1pct_at_max = 0.0;
+    let mut speedup_all_at_max = 0.0;
+    for &op in &["load 1% data", "load all data"] {
+        println!("=== Fig 7: {op} — ReStore vs PFS ===\n");
+        let mut table = Table::new(vec![
+            "p",
+            "ReStore",
+            "PFS ifstream",
+            "PFS MPI I/O",
+            "ifstream/ReStore",
+        ]);
+        for &p in &pes {
+            let restore_t = run_restore(op, p, reps);
+            // the PFS side reads the same per-client volume that the op
+            // distributes over the alive PEs
+            let bytes_per_client = if op == "load 1% data" {
+                (0.01 * p as f64 * BYTES_PER_PE as f64 / p as f64) as u64
+            } else {
+                BYTES_PER_PE
+            };
+            let ifs =
+                pfs.read_time_s(PfsMethod::IfStream, CacheState::Uncached, p, bytes_per_client);
+            let mio = pfs.read_time_s(PfsMethod::MpiIo, CacheState::Uncached, p, bytes_per_client);
+            let speedup = ifs / restore_t.mean;
+            if p == 24576 {
+                if op == "load 1% data" {
+                    speedup_1pct_at_max = speedup;
+                } else {
+                    speedup_all_at_max = speedup;
+                }
+            }
+            table.row(vec![
+                p.to_string(),
+                fmt_time(restore_t.mean),
+                fmt_time(ifs),
+                fmt_time(mio),
+                format!("{speedup:.0}x"),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+
+    println!(
+        "paper anchors at p=24576 (vs ifstream): load-1% 206x -> measured {:.0}x {}",
+        speedup_1pct_at_max,
+        ok(speedup_1pct_at_max > 20.0)
+    );
+    println!(
+        "                                        load-all  55x -> measured {:.0}x {}",
+        speedup_all_at_max,
+        ok(speedup_all_at_max > 5.0)
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "[OK: order of magnitude holds]"
+    } else {
+        "[MISMATCH]"
+    }
+}
+
+fn run_restore(op: &str, p: usize, reps: usize) -> Stats {
+    sim_samples(reps, |rep| {
+        // paper recommendation: permutation on for partial loads, off for
+        // load-all (§VI-B2)
+        let perm = if op == "load 1% data" { Some(256 * 1024) } else { None };
+        let cfg = RestoreConfig::builder(p, BLOCK, BYTES_PER_PE as usize / BLOCK)
+            .replicas(4)
+            .perm_range_bytes(perm)
+            .seed(0xF167 + rep)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 48.min(p));
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        let reqs = if op == "load 1% data" {
+            load_percent_requests(&store, &cluster, 1.0, (rep as usize * 31) % p)
+        } else {
+            load_all_requests(&store, &cluster)
+        };
+        let t = cluster.now();
+        store.load(&mut cluster, &reqs).unwrap();
+        cluster.now() - t
+    })
+}

@@ -1,0 +1,105 @@
+//! Hot-path micro-benchmarks — the §Perf baseline (EXPERIMENTS.md).
+//!
+//! Wall-clock throughput of the pieces that dominate real runs:
+//! * Feistel permutation application (every block-range mapping),
+//! * submit schedule construction (cost-model, p=1536, 16 MiB/PE),
+//! * load-1% request resolution + routing,
+//! * Monte-Carlo IDL simulation step,
+//! * PJRT kernel execution latency (tiny + small k-means artifacts).
+
+use restore::config::RestoreConfig;
+use restore::metrics::fmt_time;
+use restore::restore::load::load_percent_requests;
+use restore::restore::permutation::{Feistel, RangePermutation};
+use restore::restore::ReStore;
+use restore::runtime::Engine;
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::{bench, black_box};
+use restore::util::rng::Rng;
+
+fn main() {
+    println!("=== hot-path micro-benchmarks ===\n");
+
+    // Feistel throughput
+    let f = Feistel::new(1_572_864, 0xF00D); // 24576 PEs * 64 ranges
+    let mut i = 0u64;
+    let r = bench("feistel apply (per call)", 10_000, 200_000, || {
+        i = (i + 1) % 1_572_864;
+        black_box(f.apply(i));
+    });
+    println!("{}", r.line());
+
+    // submit schedule, p=1536, paper default (64 units/PE * r=4)
+    let r = bench("submit schedule p=1536 16MiB/PE r=4 perm", 1, 5, || {
+        let cfg = RestoreConfig::paper_default(1536).unwrap();
+        let mut cluster = Cluster::new_execution(1536, 48);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        black_box(store.submit_virtual(&mut cluster).unwrap());
+    });
+    println!("{}", r.line());
+
+    // submit schedule at tiny ranges (the fig4a stress case)
+    let r = bench("submit schedule p=384 16MiB/PE 1KiB ranges", 1, 3, || {
+        let cfg = RestoreConfig::builder(384, 64, 262_144)
+            .replicas(4)
+            .perm_range_bytes(Some(1024))
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(384, 48);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        black_box(store.submit_virtual(&mut cluster).unwrap());
+    });
+    println!("{}", r.line());
+
+    // load-1% end to end (schedule + routing + cost)
+    let cfg = RestoreConfig::paper_default(1536).unwrap();
+    let mut cluster = Cluster::new_execution(1536, 48);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+    let mut rep = 0usize;
+    let r = bench("load-1% resolve+route p=1536", 2, 20, || {
+        rep += 1;
+        let reqs = load_percent_requests(&store, &cluster, 1.0, rep % 1536);
+        black_box(store.load(&mut cluster, &reqs).unwrap());
+    });
+    println!("{}", r.line());
+
+    // IDL Monte-Carlo step
+    let mut rng = Rng::seed_from_u64(1);
+    let r = bench("IDL simulation p=2^20 r=4 (per run)", 1, 5, || {
+        black_box(restore::restore::idl::simulate_failures_until_idl(1 << 20, 4, &mut rng));
+    });
+    println!("{}", r.line());
+
+    // PJRT execution latency
+    match Engine::load_default() {
+        Ok(mut engine) => {
+            let points = restore::apps::kmeans::generate_points(1, 0, 256, 8, 4);
+            let centers = restore::apps::kmeans::starting_centers(1, 4, 8);
+            let r = bench("PJRT kmeans_step_tiny (256x8)", 3, 30, || {
+                black_box(engine.execute_f32("kmeans_step_tiny", &[&points, &centers]).unwrap());
+            });
+            println!("{}", r.line());
+
+            let points = restore::apps::kmeans::generate_points(1, 0, 4096, 32, 20);
+            let centers = restore::apps::kmeans::starting_centers(1, 20, 32);
+            let r = bench("PJRT kmeans_step_small (4096x32)", 2, 15, || {
+                black_box(engine.execute_f32("kmeans_step_small", &[&points, &centers]).unwrap());
+            });
+            println!("{}", r.line());
+
+            let points = restore::apps::kmeans::generate_points(1, 0, 65536, 32, 20);
+            let centers = restore::apps::kmeans::starting_centers(1, 20, 32);
+            let r = bench("PJRT kmeans_step paper (65536x32)", 1, 5, || {
+                black_box(engine.execute_f32("kmeans_step", &[&points, &centers]).unwrap());
+            });
+            println!("{}", r.line());
+            println!(
+                "\nPJRT totals: {} calls, {} cumulative",
+                engine.exec_calls,
+                fmt_time(engine.exec_seconds)
+            );
+        }
+        Err(e) => println!("PJRT benches skipped: {e}"),
+    }
+}

@@ -1,0 +1,109 @@
+//! END-TO-END DRIVER (DESIGN.md §4, recorded in EXPERIMENTS.md): the
+//! paper's §VI-C k-means workload on a real small cluster with all three
+//! layers composed:
+//!
+//!   L1 Pallas kernel  → AOT HLO artifact (`kmeans_step_small`)
+//!   L2 JAX model      → executed from Rust via PJRT, every PE, every iter
+//!   L3 Rust           → simulated 16-PE cluster, ULFM recovery, ReStore
+//!
+//! 16 PEs × 4096 points × 32 dims (0.5 MiB/PE), 60 Lloyd iterations, ~20 %
+//! of PEs failing mid-run (scaled up from the paper's 1 % so a 16-PE demo
+//! actually exercises recovery). Prints the per-phase Fig 5 breakdown and
+//! the loss (inertia) curve, and cross-checks the run against a
+//! failure-free control.
+//!
+//! Run with: `cargo run --release --example kmeans_failures`
+
+use restore::apps::kmeans::{self, KmeansParams};
+use restore::config::RestoreConfig;
+use restore::metrics::fmt_time;
+use restore::runtime::Engine;
+use restore::simnet::cluster::Cluster;
+
+fn main() -> anyhow::Result<()> {
+    let p = 16;
+    let params = KmeansParams {
+        points_per_pe: 4096,
+        dims: 32,
+        k: 20,
+        iterations: 60,
+        failure_fraction: 0.2,
+        seed: 42,
+        step_variant: "kmeans_step_small".into(),
+        update_variant: "kmeans_update".into(),
+    };
+    let bytes_per_pe = params.points_per_pe * params.dims * 4;
+    let cfg = RestoreConfig::builder(p, 64, bytes_per_pe / 64)
+        .replicas(4)
+        .perm_range_bytes(Some(64 * 1024))
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!(
+        "k-means end-to-end: p={p}, {} points x {} dims per PE ({} KiB), k={}, {} iterations",
+        params.points_per_pe,
+        params.dims,
+        bytes_per_pe / 1024,
+        params.k,
+        params.iterations
+    );
+
+    // --- failure-free control run ------------------------------------------
+    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cluster = Cluster::new_execution(p, 4);
+    let mut control = params.clone();
+    control.failure_fraction = 0.0;
+    let clean = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &control)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\ncontrol (no failures): inertia {:.1}", clean.final_inertia);
+
+    // --- the fault-tolerant run ---------------------------------------------
+    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cluster = Cluster::new_execution(p, 4);
+    let rep = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &params)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    println!(
+        "with failures: {} PEs failed in {} events, {} survivors finished",
+        rep.failures,
+        rep.failure_events,
+        cluster.n_alive()
+    );
+    println!("  final inertia        {:.1}", rep.final_inertia);
+    println!("\nFig-5-style breakdown (simulated time):");
+    println!("  overall              {}", fmt_time(rep.sim_total_s));
+    println!("  k-means loop         {}", fmt_time(rep.sim_kmeans_loop_s));
+    println!(
+        "  ReStore overhead     {}  ({:.2} % of overall)",
+        fmt_time(rep.sim_restore_s),
+        100.0 * rep.sim_restore_s / rep.sim_total_s
+    );
+    println!("  MPI recovery         {}", fmt_time(rep.sim_mpi_recovery_s));
+    println!(
+        "\nPJRT: {} kernel executions, {} wall time",
+        engine.exec_calls,
+        fmt_time(rep.wall_compute_s)
+    );
+
+    // Exactness check: the global multiset of points after all recoveries
+    // must be bit-identical to the control's (the paper's recovery claim).
+    // Inertia itself is chaotic under f32 reordering — k-means can settle
+    // in a different local optimum when partial sums regroup — so it is
+    // reported, not asserted.
+    println!(
+        "\ncross-check vs control: points checksum {:#018x} vs {:#018x} {}",
+        rep.points_checksum,
+        clean.points_checksum,
+        if rep.points_checksum == clean.points_checksum {
+            "(OK — every recovered point bit-exact)"
+        } else {
+            "(MISMATCH!)"
+        }
+    );
+    let rel = (rep.final_inertia - clean.final_inertia).abs() / clean.final_inertia;
+    println!("inertia difference vs control: {rel:.2e} (informational: f32-order chaos)");
+    if rep.points_checksum != clean.points_checksum {
+        anyhow::bail!("recovered data diverged from control");
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 jax models + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — the Rust coordinator only consumes the HLO text
+artifacts that `python -m compile.aot` writes to ../artifacts/.
+"""

@@ -1,0 +1,127 @@
+"""AOT bridge: lower the L2 models to HLO *text* artifacts for Rust/PJRT.
+
+HLO text (not `lowered.compile().serialize()` / serialized HloModuleProto) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the `xla` rust crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one `<name>.hlo.txt` per model variant plus `manifest.json` describing
+every variant's argument/result shapes for the Rust runtime's registry.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    """Every artifact: name -> (jitted fn, example arg specs, result names).
+
+    Shapes follow the paper's configuration (DESIGN.md §5):
+      k-means: 65 536 points x 32 dims per PE (16 MiB at f64 in the paper;
+      our compute artifact is f32 — the ReStore payload stays 16 MiB), 20
+      centers. The *_small variants back fast tests and examples.
+    """
+    out = {}
+
+    def kmeans(n, d, k, tile):
+        fn = functools.partial(model.kmeans_step, tile=tile)
+        return (
+            jax.jit(fn),
+            (spec(n, d), spec(k, d)),
+            ["sums", "counts", "inertia"],
+        )
+
+    out["kmeans_step"] = kmeans(65536, 32, 20, 2048)
+    out["kmeans_step_small"] = kmeans(4096, 32, 20, 512)
+    out["kmeans_step_tiny"] = kmeans(256, 8, 4, 64)
+
+    def kmeans_update(k, d):
+        return (
+            jax.jit(model.kmeans_update),
+            (spec(k, d), spec(k), spec(k, d)),
+            ["centers"],
+        )
+
+    out["kmeans_update"] = kmeans_update(20, 32)
+    out["kmeans_update_tiny"] = kmeans_update(4, 8)
+
+    def phylo(s, a, tile):
+        fn = functools.partial(model.phylo_step, tile=tile)
+        return (
+            jax.jit(fn),
+            (spec(s, a), spec(s, a), spec(a, a), spec(a, a), spec(a), spec(s)),
+            ["clv", "loglik"],
+        )
+
+    out["phylo_step"] = phylo(16384, 4, 4096)
+    out["phylo_step_small"] = phylo(1024, 4, 256)
+
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (fn, arg_specs, result_names) in variants().items():
+        if only and name not in only:
+            continue
+        lowered = fn.lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree_util.tree_leaves(lowered.out_info)
+        ]
+        manifest[name] = {
+            "file": fname,
+            "args": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in arg_specs],
+            "results": [
+                {"name": rn, **os_} for rn, os_ in zip(result_names, out_shapes)
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(manifest)} variants)")
+
+
+if __name__ == "__main__":
+    main()

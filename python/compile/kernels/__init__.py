@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by ../aot.py)."""
+
+from .kmeans import kmeans_assign
+from .phylo import phylo_loglik
+
+__all__ = ["kmeans_assign", "phylo_loglik"]

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: fused k-means assignment step.
+
+The paper's k-means application (§VI-C, Fig 5) assigns each local point to
+its nearest center and accumulates per-center partial sums which are then
+all-reduced across PEs. The hot spot is the pairwise distance computation —
+here cast as a tiled matmul so it maps onto the TPU MXU (DESIGN.md §2):
+
+    ||x - c||^2 = ||x||^2 - 2 x.cT + ||c||^2
+
+The kernel tiles points into (TILE, D) VMEM blocks; centers are small and
+live fully in VMEM for all grid steps. Per grid step the kernel emits
+per-tile partial results (sums, counts, inertia); the L2 model reduces over
+tiles. This avoids cross-grid-step accumulation, which keeps the kernel
+trivially data-parallel (double-buffering friendly on real hardware).
+
+Lowered with interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 2048 x 32 f32 = 256 KiB of points per grid step; together
+# with the distance tile (2048 x K) and partials this stays well under 1 MiB
+# of VMEM (DESIGN.md §7).
+DEFAULT_TILE = 2048
+
+
+def _kmeans_tile_kernel(x_ref, c_ref, sums_ref, counts_ref, inertia_ref):
+    """One grid step: assignment + partials for a (TILE, D) block of points.
+
+    Block shapes:
+      x_ref:       (TILE, D)  points block
+      c_ref:       (K, D)     all centers (same block every step)
+      sums_ref:    (1, K, D)  per-tile partial sums (output)
+      counts_ref:  (1, K)     per-tile partial counts (output)
+      inertia_ref: (1, 1)     per-tile partial inertia (output)
+    """
+    x = x_ref[...]
+    c = c_ref[...]
+    k = c.shape[0]
+
+    # Distance matrix via MXU matmul: (TILE, D) @ (D, K).
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (TILE, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    d2 = x2 - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32) + c2
+
+    assign = jnp.argmin(d2, axis=1)  # (TILE,)
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+
+    # Partial reductions, fused in-VMEM (the epilogue that on GPU would be a
+    # shared-memory scatter; on TPU a second small MXU matmul).
+    sums_ref[0] = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[0] = jnp.sum(onehot, axis=0)
+    inertia_ref[0, 0] = jnp.sum(jnp.min(d2, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def kmeans_assign(points, centers, *, tile=DEFAULT_TILE):
+    """Fused assignment step. Returns (sums (K,D), counts (K,), inertia ()).
+
+    `points.shape[0]` must be a multiple of `tile` (the AOT artifacts are
+    compiled for fixed shapes; model.py picks a dividing tile).
+    """
+    n, d = points.shape
+    k = centers.shape[0]
+    if n % tile != 0:
+        raise ValueError(f"point count {n} not divisible by tile {tile}")
+    grid = n // tile
+
+    sums, counts, inertia = pl.pallas_call(
+        _kmeans_tile_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid, k, d), points.dtype),
+            jax.ShapeDtypeStruct((grid, k), points.dtype),
+            jax.ShapeDtypeStruct((grid, 1), points.dtype),
+        ],
+        interpret=True,
+    )(points, centers)
+
+    # Tile reduction happens in the surrounding jit — XLA fuses it with the
+    # kernel output layout, so no extra HBM round trip on real hardware.
+    return jnp.sum(sums, axis=0), jnp.sum(counts, axis=0), jnp.sum(inertia)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: Felsenstein-pruning CLV update + log-likelihood.
+
+FT-RAxML-NG (§VI-C, Fig 6) is the paper's flagship application: a
+phylogenetic maximum-likelihood inference whose per-PE working set is a
+slice of the multiple-sequence-alignment (MSA) columns ("sites"). After a
+failure, surviving PEs reload their new site slices through ReStore and
+resume likelihood computation. The proxy compute step implemented here is
+the real inner loop of such codes: a conditional-likelihood-vector (CLV)
+update over the sites a PE owns
+
+    clv[s, i] = (sum_j P_l[i, j] clv_l[s, j]) * (sum_j P_r[i, j] clv_r[s, j])
+
+plus the rooted per-site likelihood reduction. Sites are batched site-major
+so the per-site 4x4 matvecs become (TILE, A) @ (A, A) matmuls — bandwidth-
+bound like production likelihood kernels (DESIGN.md §7).
+
+Lowered with interpret=True (CPU PJRT; see DESIGN.md §2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4096 sites x 4 states f32 = 64 KiB per CLV block; two children + output
+# + site-lik column < 256 KiB VMEM per grid step.
+DEFAULT_TILE = 4096
+
+
+def _phylo_tile_kernel(
+    clv_l_ref, clv_r_ref, p_l_ref, p_r_ref, freqs_ref, weights_ref,
+    clv_ref, wll_ref,
+):
+    """One grid step over a (TILE, A) block of sites.
+
+    Block shapes:
+      clv_l_ref, clv_r_ref: (TILE, A)   children CLVs
+      p_l_ref, p_r_ref:     (A, A)      edge transition matrices
+      freqs_ref:            (1, A)      equilibrium base frequencies
+      weights_ref:          (TILE,)     site (column-compression) weights
+      clv_ref:              (TILE, A)   output parent CLVs
+      wll_ref:              (1, 1)      output partial weighted log-likelihood
+    """
+    left = jnp.dot(clv_l_ref[...], p_l_ref[...].T,
+                   preferred_element_type=jnp.float32)
+    right = jnp.dot(clv_r_ref[...], p_r_ref[...].T,
+                    preferred_element_type=jnp.float32)
+    clv = left * right
+    clv_ref[...] = clv
+
+    site_lik = jnp.dot(clv, freqs_ref[0, :], preferred_element_type=jnp.float32)
+    site_lik = jnp.maximum(site_lik, jnp.finfo(site_lik.dtype).tiny)
+    wll_ref[0, 0] = jnp.sum(weights_ref[...] * jnp.log(site_lik))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def phylo_loglik(clv_l, clv_r, p_l, p_r, freqs, weights, *, tile=DEFAULT_TILE):
+    """Fused CLV update + weighted log-likelihood over this PE's sites.
+
+    Args:
+      clv_l, clv_r: (S, A) children CLVs; S must be a multiple of `tile`.
+      p_l, p_r:     (A, A) transition matrices.
+      freqs:        (A,)   equilibrium frequencies.
+      weights:      (S,)   per-site weights.
+
+    Returns:
+      clv:    (S, A) parent CLVs.
+      loglik: ()     weighted log-likelihood.
+    """
+    s, a = clv_l.shape
+    if s % tile != 0:
+        raise ValueError(f"site count {s} not divisible by tile {tile}")
+    grid = s // tile
+
+    clv, wll = pl.pallas_call(
+        _phylo_tile_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, a), lambda i: (i, 0)),
+            pl.BlockSpec((tile, a), lambda i: (i, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((a, a), lambda i: (0, 0)),
+            pl.BlockSpec((1, a), lambda i: (0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, a), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, a), clv_l.dtype),
+            jax.ShapeDtypeStruct((grid, 1), clv_l.dtype),
+        ],
+        interpret=True,
+    )(clv_l, clv_r, p_l, p_r, freqs[None, :], weights)
+
+    return clv, jnp.sum(wll)

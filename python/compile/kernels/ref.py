@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels (kmeans.py, phylo.py) are
+validated against in python/tests/. They are also what `model.py` would use
+if the Pallas path were disabled — importable with no Pallas dependency.
+"""
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(points, centers):
+    """Assignment step of Lloyd's algorithm.
+
+    Args:
+      points:  (N, D) float array, this PE's local points.
+      centers: (K, D) float array, current cluster centers.
+
+    Returns:
+      sums:    (K, D) sum of points assigned to each center.
+      counts:  (K,)   number of points assigned to each center.
+      inertia: ()     sum of squared distances to the assigned center.
+    """
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)  # (N, 1)
+    c2 = jnp.sum(centers * centers, axis=1)[None, :]  # (1, K)
+    d2 = x2 - 2.0 * points @ centers.T + c2  # (N, K)
+    assign = jnp.argmin(d2, axis=1)  # (N,)
+    onehot = (assign[:, None] == jnp.arange(centers.shape[0])[None, :]).astype(
+        points.dtype
+    )  # (N, K)
+    sums = onehot.T @ points  # (K, D)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return sums, counts, inertia
+
+
+def kmeans_update_ref(sums, counts, old_centers):
+    """Center update from globally-reduced partial sums.
+
+    Centers with an empty cluster keep their previous position.
+    """
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = sums / safe
+    return jnp.where(counts[:, None] > 0.0, new, old_centers)
+
+
+def phylo_clv_ref(clv_l, clv_r, p_l, p_r):
+    """Felsenstein pruning step for one inner node of a phylogenetic tree.
+
+    clv[s, i] = (sum_j P_l[i, j] clv_l[s, j]) * (sum_j P_r[i, j] clv_r[s, j])
+
+    Args:
+      clv_l, clv_r: (S, A) conditional likelihood vectors of the children.
+      p_l, p_r:     (A, A) transition probability matrices of the child edges.
+
+    Returns:
+      clv: (S, A) conditional likelihood vectors of the parent.
+    """
+    return (clv_l @ p_l.T) * (clv_r @ p_r.T)
+
+
+def phylo_loglik_ref(clv_l, clv_r, p_l, p_r, freqs, weights):
+    """Per-partition log-likelihood at the (virtual) root.
+
+    Returns:
+      clv:    (S, A) root CLVs (so the caller can continue pruning upwards).
+      loglik: ()     sum_s weights[s] * log(sum_i freqs[i] clv[s, i]).
+    """
+    clv = phylo_clv_ref(clv_l, clv_r, p_l, p_r)
+    site_lik = clv @ freqs  # (S,)
+    # clamp to avoid -inf on underflow; RAxML-NG uses per-site scaling, the
+    # proxy kernel clamps instead (documented substitution, DESIGN.md §5)
+    site_lik = jnp.maximum(site_lik, jnp.finfo(site_lik.dtype).tiny)
+    return clv, jnp.sum(weights * jnp.log(site_lik))

@@ -1,0 +1,47 @@
+"""L2: jitted step functions for the two paper applications.
+
+These are the computations the Rust coordinator executes via PJRT on its
+(simulated) PEs. Each returns a tuple — aot.py lowers them with
+return_tuple=True so the Rust side unwraps a single tuple literal.
+
+All hot-spot compute goes through the L1 Pallas kernels in kernels/;
+everything else here is glue that XLA fuses around the kernel.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.kmeans import kmeans_assign
+from .kernels.phylo import phylo_loglik
+
+
+def kmeans_step(points, centers, *, tile=None):
+    """One local k-means assignment step on a PE's point shard.
+
+    Returns (sums (K,D), counts (K,), inertia (1,)). The Rust coordinator
+    all-reduces sums/counts/inertia across PEs and then runs `kmeans_update`.
+    """
+    kwargs = {} if tile is None else {"tile": tile}
+    sums, counts, inertia = kmeans_assign(points, centers, **kwargs)
+    return (sums, counts, inertia.reshape((1,)))
+
+
+def kmeans_update(sums, counts, old_centers):
+    """Center update from globally all-reduced partials.
+
+    Empty clusters keep their previous center (the paper's simple k-means
+    keeps running regardless of cluster degeneracy).
+    """
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = sums / safe
+    return (jnp.where(counts[:, None] > 0.0, new, old_centers),)
+
+
+def phylo_step(clv_l, clv_r, p_l, p_r, freqs, weights, *, tile=None):
+    """One CLV update + log-likelihood over a PE's site shard.
+
+    Returns (clv (S,A), loglik (1,)). The coordinator all-reduces loglik
+    (sum over site shards) — exactly RAxML-NG's per-iteration reduction.
+    """
+    kwargs = {} if tile is None else {"tile": tile}
+    clv, ll = phylo_loglik(clv_l, clv_r, p_l, p_r, freqs, weights, **kwargs)
+    return (clv, ll.reshape((1,)))

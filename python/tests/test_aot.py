@@ -1,0 +1,86 @@
+"""AOT bridge tests: artifacts lower, manifest is consistent, HLO is text."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_manifest(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    import sys
+
+    argv = sys.argv
+    sys.argv = [
+        "aot",
+        "--outdir",
+        str(outdir),
+        "--only",
+        "kmeans_step_tiny,kmeans_update_tiny,phylo_step_small",
+    ]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    with open(outdir / "manifest.json") as f:
+        return outdir, json.load(f)
+
+
+def test_manifest_lists_requested_variants(small_manifest):
+    _, manifest = small_manifest
+    assert set(manifest) == {
+        "kmeans_step_tiny",
+        "kmeans_update_tiny",
+        "phylo_step_small",
+    }
+
+
+def test_artifacts_are_hlo_text(small_manifest):
+    outdir, manifest = small_manifest
+    for entry in manifest.values():
+        text = open(os.path.join(outdir, entry["file"])).read()
+        assert text.startswith("HloModule"), entry["file"]
+        # the rust loader requires an entry computation
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_match_variants(small_manifest):
+    _, manifest = small_manifest
+    km = manifest["kmeans_step_tiny"]
+    assert [a["shape"] for a in km["args"]] == [[256, 8], [4, 8]]
+    assert [r["shape"] for r in km["results"]] == [[4, 8], [4], [1]]
+    assert [r["name"] for r in km["results"]] == ["sums", "counts", "inertia"]
+    ph = manifest["phylo_step_small"]
+    assert [r["shape"] for r in ph["results"]] == [[1024, 4], [1]]
+
+
+def test_lowered_kmeans_numerics_roundtrip(small_manifest):
+    # Compile the tiny variant's HLO back through jax's CPU client and
+    # compare against the oracle — proves the *artifact*, not just the
+    # python function, is correct.
+    outdir, manifest = small_manifest
+    from jax._src.lib import xla_client as xc
+    from compile.kernels.ref import kmeans_assign_ref
+
+    text = open(os.path.join(outdir, manifest["kmeans_step_tiny"]["file"])).read()
+    client = xc._xla.get_tfrt_cpu_client()  # local CPU PJRT client
+    # Parse HLO text into an XlaComputation via the same API the rust side
+    # uses conceptually (text -> module proto -> computation).
+    comp = getattr(xc._xla, "hlo_text_to_xla_computation", None)
+    if comp is None:
+        pytest.skip("hlo_text parser not exposed by this jaxlib")
+    rng = np.random.default_rng(0)
+    points = rng.standard_normal((256, 8)).astype(np.float32)
+    centers = rng.standard_normal((4, 8)).astype(np.float32)
+    executable = client.compile(comp(text))
+    out = executable.execute([client.buffer_from_pyval(points),
+                              client.buffer_from_pyval(centers)])
+    sums = np.asarray(out[0])
+    rsums, _, _ = kmeans_assign_ref(jnp.asarray(points), jnp.asarray(centers))
+    np.testing.assert_allclose(sums, rsums, rtol=1e-4, atol=1e-3)

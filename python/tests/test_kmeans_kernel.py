@@ -1,0 +1,109 @@
+"""Pallas k-means kernel vs pure-jnp oracle — the CORE correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.kmeans import kmeans_assign
+from compile.kernels.ref import kmeans_assign_ref, kmeans_update_ref
+from compile import model
+
+
+def random_case(rng, n, d, k):
+    points = jnp.asarray(rng.standard_normal((n, d)), dtype=jnp.float32)
+    centers = jnp.asarray(rng.standard_normal((k, d)), dtype=jnp.float32)
+    return points, centers
+
+
+def check(points, centers, tile):
+    sums, counts, inertia = kmeans_assign(points, centers, tile=tile)
+    rsums, rcounts, rinertia = kmeans_assign_ref(points, centers)
+    np.testing.assert_allclose(sums, rsums, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(counts, rcounts, rtol=0, atol=0)
+    np.testing.assert_allclose(inertia, rinertia, rtol=1e-4, atol=1e-2)
+
+
+def test_paper_shape_one_tile():
+    rng = np.random.default_rng(0)
+    check(*random_case(rng, 2048, 32, 20), tile=2048)
+
+
+def test_paper_shape_multi_tile():
+    rng = np.random.default_rng(1)
+    check(*random_case(rng, 8192, 32, 20), tile=2048)
+
+
+def test_tiny_shape():
+    rng = np.random.default_rng(2)
+    check(*random_case(rng, 256, 8, 4), tile=64)
+
+
+def test_counts_sum_to_n():
+    rng = np.random.default_rng(3)
+    points, centers = random_case(rng, 4096, 16, 7)
+    _, counts, _ = kmeans_assign(points, centers, tile=512)
+    assert float(jnp.sum(counts)) == 4096.0
+
+
+def test_indivisible_tile_raises():
+    rng = np.random.default_rng(4)
+    points, centers = random_case(rng, 100, 8, 4)
+    with pytest.raises(ValueError, match="not divisible"):
+        kmeans_assign(points, centers, tile=64)
+
+
+def test_identical_points_single_cluster():
+    # All points identical -> all assigned to the nearest center, inertia
+    # equals n * distance to it.
+    points = jnp.ones((512, 8), dtype=jnp.float32)
+    centers = jnp.stack([jnp.ones(8), jnp.zeros(8)]).astype(jnp.float32)
+    sums, counts, inertia = kmeans_assign(points, centers, tile=128)
+    assert float(counts[0]) == 512.0 and float(counts[1]) == 0.0
+    np.testing.assert_allclose(inertia, 0.0, atol=1e-3)
+
+
+def test_update_matches_ref():
+    rng = np.random.default_rng(5)
+    sums = jnp.asarray(rng.standard_normal((20, 32)), dtype=jnp.float32)
+    counts = jnp.asarray(rng.integers(0, 50, 20), dtype=jnp.float32)
+    old = jnp.asarray(rng.standard_normal((20, 32)), dtype=jnp.float32)
+    (new,) = model.kmeans_update(sums, counts, old)
+    np.testing.assert_allclose(new, kmeans_update_ref(sums, counts, old), rtol=1e-6)
+
+
+def test_update_keeps_empty_cluster_center():
+    sums = jnp.zeros((3, 4), dtype=jnp.float32)
+    counts = jnp.array([0.0, 2.0, 0.0], dtype=jnp.float32)
+    old = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    (new,) = model.kmeans_update(sums, counts, old)
+    np.testing.assert_allclose(new[0], old[0])
+    np.testing.assert_allclose(new[2], old[2])
+    np.testing.assert_allclose(new[1], jnp.zeros(4))
+
+
+# Hypothesis sweep: shapes (multiples of the tile), center counts, seeds.
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 6),
+    tile=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([4, 8, 16, 32]),
+    k=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(tiles, tile, d, k, seed):
+    rng = np.random.default_rng(seed)
+    check(*random_case(rng, tiles * tile, d, k), tile=tile)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_scale_invariance_of_assignment(scale, seed):
+    # Scaling all coordinates scales sums linearly and counts not at all.
+    rng = np.random.default_rng(seed)
+    points, centers = random_case(rng, 512, 8, 5)
+    s1, c1, _ = kmeans_assign(points, centers, tile=128)
+    s2, c2, _ = kmeans_assign(points * scale, centers * scale, tile=128)
+    np.testing.assert_allclose(c1, c2)
+    np.testing.assert_allclose(s2, s1 * scale, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,86 @@
+"""Pallas phylogenetic-likelihood kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.phylo import phylo_loglik
+from compile.kernels.ref import phylo_clv_ref, phylo_loglik_ref
+
+
+def random_case(rng, s, a=4):
+    # CLVs are probabilities in (0, 1]; transition matrices are row-stochastic
+    # (as produced by expm(Q t) for a CTMC rate matrix Q).
+    clv_l = jnp.asarray(rng.uniform(0.05, 1.0, (s, a)), dtype=jnp.float32)
+    clv_r = jnp.asarray(rng.uniform(0.05, 1.0, (s, a)), dtype=jnp.float32)
+
+    def stoch():
+        m = rng.uniform(0.05, 1.0, (a, a))
+        return jnp.asarray(m / m.sum(axis=1, keepdims=True), dtype=jnp.float32)
+
+    p_l, p_r = stoch(), stoch()
+    freqs = rng.uniform(0.1, 1.0, a)
+    freqs = jnp.asarray(freqs / freqs.sum(), dtype=jnp.float32)
+    weights = jnp.asarray(rng.integers(1, 5, s), dtype=jnp.float32)
+    return clv_l, clv_r, p_l, p_r, freqs, weights
+
+
+def check(args, tile):
+    clv, ll = phylo_loglik(*args, tile=tile)
+    rclv, rll = phylo_loglik_ref(*args)
+    np.testing.assert_allclose(clv, rclv, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ll, rll, rtol=1e-4, atol=1e-2)
+
+
+def test_paper_shape():
+    check(random_case(np.random.default_rng(0), 16384), tile=4096)
+
+
+def test_small_shape_multi_tile():
+    check(random_case(np.random.default_rng(1), 1024), tile=256)
+
+
+def test_clv_matches_ref_exactly_on_identity():
+    # With identity transition matrices the parent CLV is the elementwise
+    # product of the children.
+    s, a = 512, 4
+    rng = np.random.default_rng(2)
+    clv_l = jnp.asarray(rng.uniform(0.1, 1.0, (s, a)), dtype=jnp.float32)
+    clv_r = jnp.asarray(rng.uniform(0.1, 1.0, (s, a)), dtype=jnp.float32)
+    eye = jnp.eye(a, dtype=jnp.float32)
+    freqs = jnp.full((a,), 0.25, dtype=jnp.float32)
+    weights = jnp.ones((s,), dtype=jnp.float32)
+    clv, _ = phylo_loglik(clv_l, clv_r, eye, eye, freqs, weights, tile=128)
+    np.testing.assert_allclose(clv, clv_l * clv_r, rtol=1e-6)
+    np.testing.assert_allclose(
+        clv, phylo_clv_ref(clv_l, clv_r, eye, eye), rtol=1e-6
+    )
+
+
+def test_weights_scale_loglik():
+    args = random_case(np.random.default_rng(3), 512)
+    clv_l, clv_r, p_l, p_r, freqs, weights = args
+    _, ll1 = phylo_loglik(clv_l, clv_r, p_l, p_r, freqs, weights, tile=128)
+    _, ll2 = phylo_loglik(clv_l, clv_r, p_l, p_r, freqs, 2.0 * weights, tile=128)
+    np.testing.assert_allclose(ll2, 2.0 * ll1, rtol=1e-4)
+
+
+def test_underflow_is_clamped():
+    # Tiny CLVs would produce log(0) without the clamp.
+    s, a = 128, 4
+    tiny = jnp.full((s, a), 1e-30, dtype=jnp.float32)
+    p = jnp.full((a, a), 0.25, dtype=jnp.float32)
+    freqs = jnp.full((a,), 0.25, dtype=jnp.float32)
+    weights = jnp.ones((s,), dtype=jnp.float32)
+    _, ll = phylo_loglik(tiny, tiny, p, p, freqs, weights, tile=128)
+    assert np.isfinite(float(ll))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(tiles, tile, seed):
+    check(random_case(np.random.default_rng(seed), tiles * tile), tile=tile)

@@ -1,0 +1,410 @@
+//! Fault-tolerant k-means (§VI-C, Fig 5).
+//!
+//! The paper's setup: each PE holds 65 536 points in 32 dimensions
+//! (16 MiB), all PEs share 20 random starting centers, 500 Lloyd
+//! iterations, and an expected 1 % of PEs fail during the run (discrete
+//! exponential decay). On failure the survivors split the dead PEs' points
+//! evenly (the shrinking strategy) by loading them from ReStore.
+//!
+//! Compute is the AOT-compiled Pallas kernel (`kmeans_step*` artifacts)
+//! executed via PJRT. The artifact has a fixed point count `N`; PEs whose
+//! working set grew past a multiple of `N` run multiple passes with the
+//! final pass zero-padded — the padding's exact contribution (pad points
+//! sit at the origin and all land in one known cluster) is subtracted
+//! analytically, so results are bit-accurate modulo f32 summation order.
+//!
+//! Two run modes mirror the rest of the system: **execution** (real data,
+//! real PJRT compute, small p) and **cost-model** (schedules + calibrated
+//! per-iteration compute time, the paper's PE counts).
+
+use crate::apps::Ownership;
+use crate::config::RestoreConfig;
+use crate::error::{Error, Result};
+use crate::restore::load::scatter_requests_for_ranges;
+use crate::restore::serialize::{blocks_to_f32s, f32s_to_blocks};
+use crate::restore::{LoadRequest, ReStore};
+use crate::runtime::Engine;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::failure::ExpDecaySchedule;
+use crate::simnet::ulfm;
+use crate::util::rng::Rng;
+
+/// k-means run parameters.
+#[derive(Debug, Clone)]
+pub struct KmeansParams {
+    /// Points per PE at start (the artifact's N divides the working set
+    /// into passes; paper: 65 536).
+    pub points_per_pe: usize,
+    /// Dimensions (paper: 32).
+    pub dims: usize,
+    /// Cluster count (paper: 20).
+    pub k: usize,
+    /// Lloyd iterations (paper: 500).
+    pub iterations: usize,
+    /// Expected total fraction of PEs failing during the run (paper: 1 %).
+    pub failure_fraction: f64,
+    pub seed: u64,
+    /// Artifact names (`kmeans_step`/`kmeans_update` or `*_tiny`...).
+    pub step_variant: String,
+    pub update_variant: String,
+}
+
+impl KmeansParams {
+    /// The paper's configuration (needs the full-size artifacts).
+    pub fn paper() -> Self {
+        KmeansParams {
+            points_per_pe: 65536,
+            dims: 32,
+            k: 20,
+            iterations: 500,
+            failure_fraction: 0.01,
+            seed: 42,
+            step_variant: "kmeans_step".into(),
+            update_variant: "kmeans_update".into(),
+        }
+    }
+
+    /// Small configuration for tests/examples (uses `*_tiny` artifacts:
+    /// N=256, D=8, K=4).
+    pub fn tiny(iterations: usize) -> Self {
+        KmeansParams {
+            points_per_pe: 256,
+            dims: 8,
+            k: 4,
+            iterations,
+            failure_fraction: 0.0,
+            seed: 42,
+            step_variant: "kmeans_step_tiny".into(),
+            update_variant: "kmeans_update_tiny".into(),
+        }
+    }
+}
+
+/// Timing/outcome report, split the way Fig 5 splits its bars.
+#[derive(Debug, Clone, Default)]
+pub struct KmeansReport {
+    pub iterations_run: usize,
+    pub failures: usize,
+    pub failure_events: usize,
+    pub final_inertia: f64,
+    /// Simulated wall time of the whole run.
+    pub sim_total_s: f64,
+    /// ... of the core clustering loop (compute + allreduce) — "k-means
+    /// loop" in Fig 5.
+    pub sim_kmeans_loop_s: f64,
+    /// ... spent in ReStore functions (submit + loads) — "Restore
+    /// overhead" in Fig 5.
+    pub sim_restore_s: f64,
+    /// ... spent in MPI/ULFM recovery + load balancing — the rest of the
+    /// "overall" bar in Fig 5.
+    pub sim_mpi_recovery_s: f64,
+    /// Real wall-clock seconds spent in PJRT kernel executions.
+    pub wall_compute_s: f64,
+    pub final_centers: Vec<f32>,
+    /// Order-independent hash of the multiset of all survivors' points.
+    /// Identical across runs iff recovery reproduced the data bit-exactly
+    /// (k-means inertia itself is chaotic under f32 reordering).
+    pub points_checksum: u64,
+}
+
+/// Per-PE working state (execution mode).
+struct PeWork {
+    /// Flat point coordinates, `dims`-major per point.
+    points: Vec<f32>,
+}
+
+/// Generate PE `pe`'s shard: points drawn around `k` well-separated true
+/// centers (mixture of Gaussians), deterministic in (seed, pe).
+pub fn generate_points(seed: u64, pe: usize, n: usize, dims: usize, k: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed ^ (pe as u64).wrapping_mul(0x9E37_79B9));
+    let mut true_centers = vec![0f32; k * dims];
+    let mut crng = Rng::seed_from_u64(seed); // shared across PEs
+    for c in true_centers.iter_mut() {
+        *c = crng.gen_range_f32(-8.0, 8.0);
+    }
+    let mut out = Vec::with_capacity(n * dims);
+    for _ in 0..n {
+        let c = rng.gen_index(k);
+        for d in 0..dims {
+            out.push(true_centers[c * dims + d] + rng.gen_range_f32(-0.5, 0.5));
+        }
+    }
+    out
+}
+
+/// Shared random starting centers (identical on every PE, as in the paper).
+pub fn starting_centers(seed: u64, k: usize, dims: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xCE17E55);
+    (0..k * dims).map(|_| rng.gen_range_f32(-8.0, 8.0)).collect()
+}
+
+/// Run fault-tolerant k-means in **execution mode**: real points, real
+/// PJRT kernels, real recovery, on the (small) simulated cluster.
+pub fn run_execution(
+    cluster: &mut Cluster,
+    engine: &mut Engine,
+    restore_cfg: &RestoreConfig,
+    params: &KmeansParams,
+) -> Result<KmeansReport> {
+    let p = cluster.world();
+    let dims = params.dims;
+    let n_art = engine.entry(&params.step_variant)?.args[0].shape[0];
+    let bs = restore_cfg.block_size;
+    let floats_per_pe = params.points_per_pe * dims;
+    let bytes_per_pe = floats_per_pe * 4;
+    if restore_cfg.blocks_per_pe * bs != bytes_per_pe {
+        return Err(Error::Config(format!(
+            "restore config holds {} B/PE but k-means needs {bytes_per_pe} B/PE",
+            restore_cfg.blocks_per_pe * bs
+        )));
+    }
+    // record alignment: the load balancer may never split a point
+    let point_bytes = dims * 4;
+    if bs % point_bytes != 0 && point_bytes % bs != 0 {
+        return Err(Error::Config(format!(
+            "block size {bs} incompatible with {point_bytes} B points"
+        )));
+    }
+    let align = (point_bytes / bs).max(1) as u64;
+
+    let mut report = KmeansReport::default();
+    let mut rng = Rng::seed_from_u64(params.seed ^ 0xFA11);
+    let schedule = ExpDecaySchedule::new(params.failure_fraction.max(0.0).min(0.999), params.iterations);
+
+    // --- generate input + submit to ReStore --------------------------------
+    let mut work: Vec<PeWork> = (0..p)
+        .map(|pe| PeWork {
+            points: generate_points(params.seed, pe, params.points_per_pe, dims, params.k),
+        })
+        .collect();
+    let shards: Vec<Vec<u8>> = work.iter().map(|w| f32s_to_blocks(&w.points, bs)).collect();
+    let mut store = ReStore::new(restore_cfg.clone(), cluster)?;
+    let t0 = cluster.now();
+    let submit = store.submit(cluster, &shards)?;
+    report.sim_restore_s += submit.cost.sim_time_s;
+    drop(shards);
+
+    let mut centers = starting_centers(params.seed, params.k, dims);
+    let mut ownership = Ownership::identity(p, restore_cfg.blocks_per_pe as u64);
+
+    // exact padding correction: a zero point's distance² to each center
+    let pad_assign = |centers: &[f32]| -> (usize, f32) {
+        let mut best = (0usize, f32::INFINITY);
+        for c in 0..params.k {
+            let d2: f32 = centers[c * dims..(c + 1) * dims].iter().map(|v| v * v).sum();
+            if d2 < best.1 {
+                best = (c, d2);
+            }
+        }
+        best
+    };
+
+    for iter in 0..params.iterations {
+        // ---- compute phase: every alive PE runs the PJRT kernel ----------
+        let loop_t0 = cluster.now();
+        let mut partials: Vec<Vec<f32>> = Vec::new(); // per-PE [sums|counts|inertia]
+        let mut max_pe_compute = 0f64;
+        for pe in cluster.survivors() {
+            let w = &work[pe];
+            let n_pts = w.points.len() / dims;
+            let passes = n_pts.div_ceil(n_art).max(1);
+            let mut sums = vec![0f32; params.k * dims];
+            let mut counts = vec![0f32; params.k];
+            let mut inertia = 0f32;
+            let wall0 = engine.exec_seconds;
+            for pass in 0..passes {
+                let lo = pass * n_art * dims;
+                let hi = ((pass + 1) * n_art * dims).min(w.points.len());
+                let mut buf = w.points[lo..hi].to_vec();
+                let pad_pts = n_art - (hi - lo) / dims;
+                buf.resize(n_art * dims, 0.0);
+                let out = engine.execute_f32(&params.step_variant, &[&buf, &centers])?;
+                for (s, v) in sums.iter_mut().zip(&out[0]) {
+                    *s += v;
+                }
+                for (c, v) in counts.iter_mut().zip(&out[1]) {
+                    *c += v;
+                }
+                inertia += out[2][0];
+                if pad_pts > 0 {
+                    let (c0, d20) = pad_assign(&centers);
+                    counts[c0] -= pad_pts as f32;
+                    inertia -= pad_pts as f32 * d20;
+                    // zero points add nothing to sums
+                }
+            }
+            max_pe_compute = max_pe_compute.max(engine.exec_seconds - wall0);
+            let mut flat = sums;
+            flat.extend_from_slice(&counts);
+            flat.push(inertia);
+            partials.push(flat);
+        }
+        // PEs run in parallel on the real machine: charge the slowest PE.
+        cluster.tick_compute(max_pe_compute);
+
+        // ---- allreduce + center update ------------------------------------
+        let refs: Vec<&[f32]> = partials.iter().map(|v| v.as_slice()).collect();
+        let (reduced, _cost) = cluster.allreduce_f32(&refs)?;
+        let sums = &reduced[..params.k * dims];
+        let counts = &reduced[params.k * dims..params.k * dims + params.k];
+        report.final_inertia = reduced[params.k * dims + params.k] as f64;
+        let upd = engine.execute_f32(&params.update_variant, &[sums, counts, &centers])?;
+        centers = upd.into_iter().next().unwrap();
+        report.sim_kmeans_loop_s += cluster.now() - loop_t0;
+
+        // ---- failure injection + recovery ---------------------------------
+        let dead = schedule.sample(&mut rng, &cluster.survivors());
+        let dead: Vec<usize> =
+            dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
+        if !dead.is_empty() {
+            report.failures += dead.len();
+            report.failure_events += 1;
+            cluster.kill(&dead);
+
+            // MPI/ULFM recovery (agree + shrink) — the non-ReStore overhead
+            let mpi_t0 = cluster.now();
+            let (_failed, _map, _cost) = ulfm::recover(cluster);
+            report.sim_mpi_recovery_s += cluster.now() - mpi_t0;
+
+            // load balancer: deal the dead PEs' owned ranges to survivors
+            let survivors = cluster.survivors();
+            let gained = ownership.rebalance(&dead, &survivors, align);
+
+            // ReStore scattered load of the lost ranges
+            let rs_t0 = cluster.now();
+            let requests: Vec<LoadRequest> = gained
+                .iter()
+                .map(|(pe, set)| LoadRequest { pe: *pe, ranges: set.clone() })
+                .collect();
+            let out = store.load(cluster, &requests)?;
+            for (req, shard) in requests.iter().zip(&out.shards) {
+                let bytes = shard.bytes.as_ref().expect("execution mode");
+                let floats = blocks_to_f32s(bytes, (req.ranges.total_blocks() as usize * bs) / 4);
+                work[req.pe].points.extend_from_slice(&floats);
+            }
+            report.sim_restore_s += cluster.now() - rs_t0;
+        }
+        report.iterations_run = iter + 1;
+    }
+
+    report.sim_total_s = cluster.now() - t0;
+    report.wall_compute_s = engine.exec_seconds;
+    report.final_centers = centers;
+    report.points_checksum = points_checksum(
+        cluster.survivors().iter().map(|&pe| work[pe].points.as_slice()),
+        dims,
+    );
+    Ok(report)
+}
+
+/// Order-independent multiset hash over points (each point hashed from its
+/// coordinate bit patterns, then wrapping-summed).
+pub fn points_checksum<'a>(shards: impl Iterator<Item = &'a [f32]>, dims: usize) -> u64 {
+    use crate::restore::hashing::splitmix64;
+    let mut acc = 0u64;
+    for shard in shards {
+        for point in shard.chunks(dims) {
+            let mut h = 0xC0FFEE_u64;
+            for v in point {
+                h = splitmix64(h ^ v.to_bits() as u64);
+            }
+            acc = acc.wrapping_add(h);
+        }
+    }
+    acc
+}
+
+/// Run fault-tolerant k-means in **cost-model mode** at arbitrary `p`:
+/// identical control flow and communication schedules, but compute time is
+/// `compute_s_per_iter` (calibrate once with [`run_execution`]) and no
+/// point data is materialized.
+pub fn run_cost_model(
+    cluster: &mut Cluster,
+    restore_cfg: &RestoreConfig,
+    params: &KmeansParams,
+    compute_s_per_iter: f64,
+) -> Result<KmeansReport> {
+    let p = cluster.world();
+    let mut report = KmeansReport::default();
+    let mut rng = Rng::seed_from_u64(params.seed ^ 0xFA11);
+    let schedule = ExpDecaySchedule::new(params.failure_fraction.max(0.0).min(0.999), params.iterations);
+
+    let mut store = ReStore::new(restore_cfg.clone(), cluster)?;
+    let t0 = cluster.now();
+    let submit = store.submit_virtual(cluster)?;
+    report.sim_restore_s += submit.cost.sim_time_s;
+    let mut ownership = Ownership::identity(p, restore_cfg.blocks_per_pe as u64);
+
+    let reduce_bytes = ((params.k * params.dims + params.k + 1) * 4) as u64;
+    for iter in 0..params.iterations {
+        let loop_t0 = cluster.now();
+        cluster.tick_compute(compute_s_per_iter);
+        cluster.allreduce_cost_only(reduce_bytes);
+        report.sim_kmeans_loop_s += cluster.now() - loop_t0;
+
+        let dead = schedule.sample(&mut rng, &cluster.survivors());
+        let dead: Vec<usize> =
+            dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
+        if !dead.is_empty() {
+            report.failures += dead.len();
+            report.failure_events += 1;
+            cluster.kill(&dead);
+            let mpi_t0 = cluster.now();
+            ulfm::recover(cluster);
+            report.sim_mpi_recovery_s += cluster.now() - mpi_t0;
+
+            let survivors = cluster.survivors();
+            let gained = ownership.rebalance(&dead, &survivors, 1);
+            let rs_t0 = cluster.now();
+            let requests = scatter_requests_for_ranges(&gained);
+            store.load(cluster, &requests)?;
+            report.sim_restore_s += cluster.now() - rs_t0;
+        }
+        report.iterations_run = iter + 1;
+    }
+    report.sim_total_s = cluster.now() - t0;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_points_deterministic_and_shaped() {
+        let a = generate_points(1, 3, 128, 8, 4);
+        let b = generate_points(1, 3, 128, 8, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 128 * 8);
+        let c = generate_points(1, 4, 128, 8, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn starting_centers_shared() {
+        assert_eq!(starting_centers(9, 4, 8), starting_centers(9, 4, 8));
+    }
+
+    #[test]
+    fn cost_model_run_with_failures_completes() {
+        let mut cluster = Cluster::new_execution(48, 48);
+        let cfg = RestoreConfig::builder(48, 64, 4096)
+            .replicas(4)
+            .perm_range_bytes(Some(16 * 1024))
+            .build()
+            .unwrap();
+        let mut params = KmeansParams::tiny(50);
+        params.failure_fraction = 0.1;
+        params.seed = 7;
+        let rep = run_cost_model(&mut cluster, &cfg, &params, 1e-3).unwrap();
+        assert_eq!(rep.iterations_run, 50);
+        assert!(rep.sim_total_s > 50.0 * 1e-3);
+        assert!(rep.sim_restore_s > 0.0);
+        if rep.failures > 0 {
+            assert!(rep.sim_mpi_recovery_s > 0.0);
+        }
+    }
+
+    // Execution-mode tests live in rust/tests/integration_apps.rs (need
+    // artifacts).
+}

@@ -1,0 +1,154 @@
+//! The paper's fault-tolerant applications (§VI-C).
+//!
+//! * [`kmeans`] — the k-means clustering benchmark of Fig 5: PJRT-executed
+//!   assignment kernel, allreduce of partials, ReStore-backed shrinking
+//!   recovery under the §VI-C exponential-decay failure schedule.
+//! * [`raxml`] — the FT-RAxML-NG proxy of Fig 6: a phylogenetic
+//!   likelihood evaluation loop whose per-PE MSA site shards are reloaded
+//!   through ReStore (vs. the RBA-file-on-PFS baseline) after failures.
+//! * [`pagerank`] — the third application the paper names (§IV-C): a
+//!   vertex-partitioned PageRank whose edge shards live in ReStore.
+//!
+//! All three share the same skeleton: generate per-PE input, `submit` once,
+//! iterate compute + allreduce, and on failure run the ULFM recovery
+//! (`agree` + `shrink`), rebalance the lost shards over the survivors with
+//! a scattered `load`, and keep going — the paper's shrinking strategy.
+
+pub mod kmeans;
+pub mod pagerank;
+pub mod raxml;
+
+use crate::restore::block::{BlockRange, RangeSet};
+
+/// Per-PE ownership ledger: which *original* block ranges each PE is
+/// currently working on. Starts as the identity partition (PE i owns its
+/// own shard) and is updated by the load balancer after every failure.
+#[derive(Debug, Clone)]
+pub struct Ownership {
+    /// Indexed by original rank; dead PEs keep their (now stale) entry.
+    pub owned: Vec<Vec<BlockRange>>,
+}
+
+impl Ownership {
+    pub fn identity(world: usize, blocks_per_pe: u64) -> Self {
+        Ownership {
+            owned: (0..world as u64)
+                .map(|pe| vec![BlockRange::new(pe * blocks_per_pe, (pe + 1) * blocks_per_pe)])
+                .collect(),
+        }
+    }
+
+    /// The simple even load balancer the paper's k-means uses: collect the
+    /// ranges owned by `failed` PEs and deal them out evenly (by block
+    /// count) over `survivors`, in order. Returns the per-survivor gained
+    /// ranges and records them in the ledger.
+    ///
+    /// `align` is the application's record size in blocks (e.g. a 32-dim
+    /// f32 point is two 64 B blocks): split boundaries are multiples of it
+    /// so no survivor ever receives a fraction of a record. All owned
+    /// ranges must already be `align`-multiples (true when `blocks_per_pe`
+    /// is).
+    pub fn rebalance(
+        &mut self,
+        failed: &[usize],
+        survivors: &[usize],
+        align: u64,
+    ) -> Vec<(usize, RangeSet)> {
+        assert!(align > 0);
+        let mut lost: Vec<BlockRange> = Vec::new();
+        for &f in failed {
+            lost.append(&mut self.owned[f]);
+        }
+        let lost = RangeSet::new(lost);
+        let total: u64 = lost.total_blocks();
+        let ns = survivors.len() as u64;
+        if ns == 0 || total == 0 {
+            return Vec::new();
+        }
+        debug_assert_eq!(total % align, 0, "lost ranges must be record-aligned");
+        let units = total / align;
+        // walk the lost ranges, cutting them into ns contiguous portions of
+        // whole `align`-block records
+        let mut out: Vec<(usize, RangeSet)> = Vec::new();
+        let mut iter = lost.ranges().iter().copied();
+        let mut cur = iter.next();
+        for (j, &pe) in survivors.iter().enumerate() {
+            let want_start = (j as u64 * units) / ns * align;
+            let want_end = ((j as u64 + 1) * units) / ns * align;
+            let mut need = want_end - want_start;
+            let mut mine: Vec<BlockRange> = Vec::new();
+            while need > 0 {
+                let Some(r) = cur else { break };
+                let take = need.min(r.len());
+                mine.push(BlockRange::new(r.start, r.start + take));
+                need -= take;
+                cur = if take == r.len() {
+                    iter.next()
+                } else {
+                    Some(BlockRange::new(r.start + take, r.end))
+                };
+            }
+            if !mine.is_empty() {
+                let set = RangeSet::new(mine);
+                self.owned[pe].extend(set.ranges().iter().copied());
+                out.push((pe, set));
+            }
+        }
+        out
+    }
+
+    /// Total blocks owned by `pe`.
+    pub fn blocks_of(&self, pe: usize) -> u64 {
+        self.owned[pe].iter().map(BlockRange::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_partition() {
+        let o = Ownership::identity(4, 100);
+        assert_eq!(o.owned[2], vec![BlockRange::new(200, 300)]);
+        assert_eq!(o.blocks_of(3), 100);
+    }
+
+    #[test]
+    fn rebalance_splits_evenly_and_conserves_blocks() {
+        let mut o = Ownership::identity(5, 100);
+        let gained = o.rebalance(&[1], &[0, 2, 3, 4], 1);
+        let total: u64 = gained.iter().map(|(_, s)| s.total_blocks()).sum();
+        assert_eq!(total, 100);
+        for (_, s) in &gained {
+            assert_eq!(s.total_blocks(), 25);
+        }
+        assert_eq!(o.blocks_of(0), 125);
+        assert_eq!(o.owned[1], Vec::<BlockRange>::new()); // emptied
+    }
+
+    #[test]
+    fn rebalance_handles_cascading_failures() {
+        let mut o = Ownership::identity(4, 100);
+        o.rebalance(&[1], &[0, 2, 3], 1);
+        // now PE 2 (owning ~133 blocks) dies too
+        let gained = o.rebalance(&[2], &[0, 3], 1);
+        let total: u64 = gained.iter().map(|(_, s)| s.total_blocks()).sum();
+        // PE 2 owned 100 own blocks + ~33 gained from PE 1
+        assert!((132..=135).contains(&total), "redistributed {total}");
+        assert!(o.blocks_of(2) == 0);
+        // all 400 blocks still owned by survivors
+        assert_eq!(o.blocks_of(0) + o.blocks_of(3), 400);
+    }
+
+    #[test]
+    fn rebalance_uneven_counts_differ_by_at_most_one_block() {
+        let mut o = Ownership::identity(4, 100);
+        let gained = o.rebalance(&[0], &[1, 2, 3], 1);
+        let counts: Vec<u64> = gained.iter().map(|(_, s)| s.total_blocks()).collect();
+        assert_eq!(counts.iter().sum::<u64>(), 100);
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+}

@@ -1,0 +1,257 @@
+//! FT-RAxML-NG proxy (§VI-C, Fig 6).
+//!
+//! RAxML-NG distributes the columns ("sites") of a multiple-sequence
+//! alignment over the PEs; each PE evaluates the likelihood of its site
+//! shard and the per-tree log-likelihood is the allreduce-sum over shards.
+//! After a failure FT-RAxML-NG *redistributes the input data among all
+//! surviving PEs* — which is why the paper deactivates permutation ranges
+//! for this application (a load-all-style pattern, §VI-C) — and compares
+//! ReStore against re-reading the RBA binary file from the PFS
+//! (cached/uncached).
+//!
+//! The proxy keeps the real compute (the `phylo_step` Pallas artifact —
+//! Felsenstein CLV update + log-likelihood) and the real recovery paths;
+//! the tree search itself is out of scope (Fig 6 measures only data
+//! loading). Per-site payload: 2 child CLVs (4 f32 each) + weight
+//! = 36 B/site, padded to 64 B blocks: 1 site = 1 block, which conveniently
+//! matches the paper's 64 B block granularity.
+
+use crate::config::{PfsConfig, RestoreConfig};
+use crate::error::Result;
+use crate::pfs::{CacheState, Pfs, PfsMethod};
+use crate::restore::load::scatter_requests_for_ranges;
+use crate::restore::ReStore;
+use crate::runtime::Engine;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::ulfm;
+use crate::util::rng::Rng;
+
+/// Bytes of payload per MSA site (2 CLVs × 4 f32 + 1 f32 weight).
+pub const SITE_PAYLOAD_F32S: usize = 9;
+
+/// A named dataset: sites per PE (the paper's Fig 6a datasets are defined
+/// by their per-PE input volume).
+#[derive(Debug, Clone)]
+pub struct PhyloDataset {
+    pub name: String,
+    pub pes: usize,
+    pub bytes_per_pe: u64,
+}
+
+impl PhyloDataset {
+    /// The empirical datasets of Fig 6a (name, PEs, input per PE) and the
+    /// 19.1 GiB synthetic dataset of Fig 6b. Volumes follow the paper's
+    /// axis labels.
+    pub fn paper_datasets() -> Vec<PhyloDataset> {
+        let mib = 1024.0 * 1024.0;
+        let datasets = [
+            ("AminoAcid (1.2 GiB)", 1024usize, 1.2 * 1024.0 * mib / 1024.0),
+            ("DNA (0.5 GiB)", 512, 0.5 * 1024.0 * mib / 512.0),
+            ("SyntheticDNA (19.1 GiB)", 6144, 19.1 * 1024.0 * mib / 6144.0),
+        ];
+        datasets
+            .iter()
+            .map(|(n, p, b)| PhyloDataset {
+                name: n.to_string(),
+                pes: *p,
+                bytes_per_pe: *b as u64,
+            })
+            .collect()
+    }
+}
+
+/// Fig 6 measurement for one configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryTimes {
+    /// ReStore submit (one-time).
+    pub restore_submit_s: f64,
+    /// ReStore load after a failure (redistribution to all survivors).
+    pub restore_load_s: f64,
+    /// RBA file from PFS, OS cache cold.
+    pub pfs_uncached_s: f64,
+    /// RBA file from PFS, OS cache warm.
+    pub pfs_cached_s: f64,
+}
+
+/// Generate one PE's site data: CLVs in (0,1], integer weights.
+pub fn generate_sites(seed: u64, pe: usize, sites: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed ^ (pe as u64).wrapping_mul(0x51AB));
+    let mut out = Vec::with_capacity(sites * SITE_PAYLOAD_F32S);
+    for _ in 0..sites {
+        for _ in 0..8 {
+            out.push(rng.gen_range_f32(0.05, 1.0));
+        }
+        out.push(rng.gen_range_f32(1.0, 4.0).floor());
+    }
+    out
+}
+
+/// Row-stochastic 4×4 transition matrix (expm(Qt)-like) for the proxy.
+pub fn transition_matrix(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut m = vec![0f32; 16];
+    for row in 0..4 {
+        let mut sum = 0f32;
+        for col in 0..4 {
+            let v: f32 = if row == col { rng.gen_range_f32(3.0, 6.0) } else { rng.gen_range_f32(0.1, 1.0) };
+            m[row * 4 + col] = v;
+            sum += v;
+        }
+        for col in 0..4 {
+            m[row * 4 + col] /= sum;
+        }
+    }
+    m
+}
+
+/// Execution-mode likelihood evaluation over all survivors (one round),
+/// returning the global log-likelihood. `sites_per_pe` must match the
+/// artifact's site count in shape (padding handled via zero weights).
+pub fn evaluate_loglik(
+    cluster: &mut Cluster,
+    engine: &mut Engine,
+    variant: &str,
+    site_data: &[Vec<f32>],
+) -> Result<f64> {
+    let s_art = engine.entry(variant)?.args[0].shape[0];
+    let p_l = transition_matrix(17);
+    let p_r = transition_matrix(23);
+    let freqs = vec![0.25f32; 4];
+    let mut partials: Vec<Vec<f32>> = Vec::new();
+    let mut max_pe = 0f64;
+    for pe in cluster.survivors() {
+        let data = &site_data[pe];
+        let n_sites = data.len() / SITE_PAYLOAD_F32S;
+        let passes = n_sites.div_ceil(s_art).max(1);
+        let mut ll = 0f64;
+        let wall0 = engine.exec_seconds;
+        for pass in 0..passes {
+            let lo = pass * s_art;
+            let hi = ((pass + 1) * s_art).min(n_sites);
+            let mut clv_l = vec![1f32; s_art * 4];
+            let mut clv_r = vec![1f32; s_art * 4];
+            let mut weights = vec![0f32; s_art]; // zero weight = exact pad
+            for (i, s) in (lo..hi).enumerate() {
+                let base = s * SITE_PAYLOAD_F32S;
+                clv_l[i * 4..i * 4 + 4].copy_from_slice(&data[base..base + 4]);
+                clv_r[i * 4..i * 4 + 4].copy_from_slice(&data[base + 4..base + 8]);
+                weights[i] = data[base + 8];
+            }
+            let out =
+                engine.execute_f32(variant, &[&clv_l, &clv_r, &p_l, &p_r, &freqs, &weights])?;
+            ll += out[1][0] as f64;
+        }
+        max_pe = max_pe.max(engine.exec_seconds - wall0);
+        partials.push(vec![ll as f32]);
+    }
+    cluster.tick_compute(max_pe);
+    let refs: Vec<&[f32]> = partials.iter().map(|v| v.as_slice()).collect();
+    let (total, _) = cluster.allreduce_f32(&refs)?;
+    Ok(total[0] as f64)
+}
+
+/// The Fig 6 experiment (cost-model mode): submit once, fail `kill_count`
+/// PEs, redistribute their data over all survivors via ReStore, and
+/// compare against re-reading the per-PE input from the PFS.
+pub fn measure_recovery(
+    world: usize,
+    pes_per_node: usize,
+    bytes_per_pe: u64,
+    kill_count: usize,
+    pfs_cfg: &PfsConfig,
+    seed: u64,
+) -> Result<RecoveryTimes> {
+    let block = 64usize;
+    let blocks_per_pe = (bytes_per_pe as usize).div_ceil(block);
+    // FT-RAxML-NG redistributes among all survivors -> permutation off §VI-C
+    let cfg = RestoreConfig::builder(world, block, blocks_per_pe)
+        .replicas(4.min(world))
+        .perm_range_blocks(None)
+        .seed(seed)
+        .build()?;
+    let mut cluster = Cluster::new_execution(world, pes_per_node);
+    let mut store = ReStore::new(cfg.clone(), &cluster)?;
+    let t0 = cluster.now();
+    store.submit_virtual(&mut cluster)?;
+    let submit_s = cluster.now() - t0;
+
+    let dead: Vec<usize> = (0..kill_count.min(world - 1)).map(|i| i * 7 % world).collect();
+    let dead: Vec<usize> = {
+        let mut d = dead;
+        d.sort_unstable();
+        d.dedup();
+        d
+    };
+    cluster.kill(&dead);
+    ulfm::recover(&mut cluster);
+
+    // redistribute the lost shards evenly over all survivors
+    let mut ownership = crate::apps::Ownership::identity(world, cfg.blocks_per_pe as u64);
+    let gained = ownership.rebalance(&dead, &cluster.survivors(), 1);
+    let t1 = cluster.now();
+    store.load(&mut cluster, &scatter_requests_for_ranges(&gained))?;
+    let load_s = cluster.now() - t1;
+
+    // PFS baseline: after the failure *every* survivor re-reads its (new)
+    // partition from the RBA file — FT-RAxML-NG's current mechanism reloads
+    // the required subset on all ranks.
+    let pfs = Pfs::new(pfs_cfg.clone());
+    let survivors = cluster.n_alive();
+    let pfs_bytes = bytes_per_pe * dead.len() as u64 / survivors as u64;
+    let uncached = pfs.read_time_s(PfsMethod::IfStream, CacheState::Uncached, survivors, pfs_bytes);
+    let cached = pfs.read_time_s(PfsMethod::IfStream, CacheState::Cached, survivors, pfs_bytes);
+
+    Ok(RecoveryTimes {
+        restore_submit_s: submit_s,
+        restore_load_s: load_s,
+        pfs_uncached_s: uncached,
+        pfs_cached_s: cached,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_data_deterministic() {
+        assert_eq!(generate_sites(1, 2, 64), generate_sites(1, 2, 64));
+        assert_eq!(generate_sites(1, 2, 64).len(), 64 * SITE_PAYLOAD_F32S);
+    }
+
+    #[test]
+    fn transition_matrix_is_row_stochastic() {
+        let m = transition_matrix(5);
+        for row in 0..4 {
+            let s: f32 = m[row * 4..row * 4 + 4].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m[row * 4 + row] > 0.5, "diagonally dominant");
+        }
+    }
+
+    #[test]
+    fn recovery_measurement_restore_beats_uncached_pfs() {
+        // Fig 6's headline: ReStore load is faster than the RBA/PFS reload,
+        // often by more than an order of magnitude.
+        let times = measure_recovery(
+            1536,
+            48,
+            16 * 1024 * 1024,
+            15,
+            &PfsConfig::default(),
+            3,
+        )
+        .unwrap();
+        assert!(times.restore_load_s < times.pfs_uncached_s / 10.0,
+            "load {} vs pfs {}", times.restore_load_s, times.pfs_uncached_s);
+        assert!(times.restore_load_s > 0.0);
+        assert!(times.restore_submit_s > 0.0);
+    }
+
+    #[test]
+    fn paper_datasets_listed() {
+        let ds = PhyloDataset::paper_datasets();
+        assert_eq!(ds.len(), 3);
+        assert!(ds.iter().any(|d| d.name.contains("19.1")));
+    }
+}

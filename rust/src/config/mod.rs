@@ -1,0 +1,312 @@
+//! Configuration system: typed configs with paper defaults, TOML loading,
+//! and CLI override hooks (see `main.rs`).
+//!
+//! Paper defaults (§VI-A/§VI-B): 64 B blocks, 16 MiB per PE, `r = 4`
+//! replicas, 256 KiB permutation ranges, 48 PEs per node, OmniPath-class
+//! 100 Gbit/s interconnect.
+
+mod toml_file;
+
+pub use toml_file::{AppConfig, AppKind, ExperimentFile};
+
+use crate::error::{Error, Result};
+
+/// Paper default: block size in bytes (§VI-B2).
+pub const DEFAULT_BLOCK_SIZE: usize = 64;
+/// Paper default: checkpoint payload per PE (§VI-B2).
+pub const DEFAULT_BYTES_PER_PE: usize = 16 * 1024 * 1024;
+/// Paper default: replication level chosen in §VI-B1.
+pub const DEFAULT_REPLICAS: usize = 4;
+/// Paper default: permutation range size chosen in §VI-B2.
+pub const DEFAULT_PERM_RANGE_BYTES: usize = 256 * 1024;
+/// SuperMUC-NG: 48 cores (PEs) per node (§VI-A).
+pub const DEFAULT_PES_PER_NODE: usize = 48;
+
+/// How the load path picks the serving PE among surviving replica holders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServerSelection {
+    /// Paper policy (§IV-A): a seeded-random surviving holder, with
+    /// consecutive blocks served by the same PE where possible.
+    #[default]
+    Random,
+    /// Greedy least-loaded holder (ablation).
+    LeastLoaded,
+    /// Always the lowest-index surviving copy (ablation; worst bottleneck).
+    Primary,
+}
+
+/// Configuration of one `ReStore` instance.
+#[derive(Debug, Clone)]
+pub struct RestoreConfig {
+    /// World size `p` at submit time.
+    pub world: usize,
+    /// Serialized block size in bytes.
+    pub block_size: usize,
+    /// Number of data blocks each PE submits (`n = world * blocks_per_pe`).
+    pub blocks_per_pe: usize,
+    /// Replication level `r` (§IV-A); must divide `world`.
+    pub replicas: usize,
+    /// Blocks per permutation range `s_pr` (§IV-B); `None` disables the ID
+    /// permutation (recommended by the paper for load-all recovery).
+    pub perm_range_blocks: Option<usize>,
+    /// Seed for the range permutation and server selection.
+    pub seed: u64,
+    /// Serving-PE selection policy.
+    pub server_selection: ServerSelection,
+    /// Constant rank offset added to every copy's placement:
+    /// `L(x,k) = ⌊π(x)p/n⌋ + k·p/r + offset (mod p)`. With `r = 1` an
+    /// offset of 1 stores the single copy on the *neighbouring* rank (the
+    /// partner-copy scheme of Fenix, §VI-D.2) instead of the submitting
+    /// rank itself. 0 (paper default) reproduces §IV-A exactly.
+    pub placement_offset: usize,
+}
+
+impl RestoreConfig {
+    /// Start building a config for `world` PEs submitting `blocks_per_pe`
+    /// blocks of `block_size` bytes each.
+    pub fn builder(world: usize, block_size: usize, blocks_per_pe: usize) -> RestoreConfigBuilder {
+        RestoreConfigBuilder {
+            cfg: RestoreConfig {
+                world,
+                block_size,
+                blocks_per_pe,
+                replicas: DEFAULT_REPLICAS,
+                perm_range_blocks: None,
+                seed: 0x5e5705e,
+                server_selection: ServerSelection::default(),
+                placement_offset: 0,
+            },
+        }
+    }
+
+    /// Paper-default config: 16 MiB of 64 B blocks per PE, r=4, 256 KiB
+    /// permutation ranges.
+    pub fn paper_default(world: usize) -> Result<Self> {
+        Self::builder(world, DEFAULT_BLOCK_SIZE, DEFAULT_BYTES_PER_PE / DEFAULT_BLOCK_SIZE)
+            .replicas(DEFAULT_REPLICAS)
+            .perm_range_bytes(Some(DEFAULT_PERM_RANGE_BYTES))
+            .build()
+    }
+
+    /// Total number of blocks `n`.
+    pub fn n_blocks(&self) -> u64 {
+        self.world as u64 * self.blocks_per_pe as u64
+    }
+
+    /// Number of permutation ranges per PE shard (1 if permutation is off —
+    /// the whole shard is a single contiguous unit then).
+    pub fn ranges_per_pe(&self) -> usize {
+        match self.perm_range_blocks {
+            Some(s) => self.blocks_per_pe / s,
+            None => 1,
+        }
+    }
+
+    /// Bytes each PE stores for the replicated storage: `r * n/p` blocks
+    /// (§IV-C memory analysis).
+    pub fn replica_bytes_per_pe(&self) -> usize {
+        self.replicas * self.blocks_per_pe * self.block_size
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if self.world == 0 || self.block_size == 0 || self.blocks_per_pe == 0 {
+            return err("world, block_size, blocks_per_pe must be positive".into());
+        }
+        if self.replicas == 0 || self.replicas > self.world {
+            return err(format!(
+                "replicas r={} must be in [1, world={}]",
+                self.replicas, self.world
+            ));
+        }
+        // r | p: the §IV-D group analysis and the copy-offset placement
+        // k*p/r both assume it (reasonable on even-cored dual-socket nodes).
+        if self.world % self.replicas != 0 {
+            return err(format!(
+                "replicas r={} must divide world p={}",
+                self.replicas, self.world
+            ));
+        }
+        if let Some(s) = self.perm_range_blocks {
+            if s == 0 || self.blocks_per_pe % s != 0 {
+                return err(format!(
+                    "perm range of {s} blocks must divide blocks_per_pe={}",
+                    self.blocks_per_pe
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`RestoreConfig`].
+pub struct RestoreConfigBuilder {
+    cfg: RestoreConfig,
+}
+
+impl RestoreConfigBuilder {
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.cfg.replicas = r;
+        self
+    }
+
+    /// Set the permutation range size in *blocks*.
+    pub fn perm_range_blocks(mut self, s: Option<usize>) -> Self {
+        self.cfg.perm_range_blocks = s;
+        self
+    }
+
+    /// Set the permutation range size in *bytes* (must be a multiple of the
+    /// block size); the paper quotes range sizes in bytes (Fig 4a).
+    pub fn perm_range_bytes(mut self, bytes: Option<usize>) -> Self {
+        self.cfg.perm_range_blocks = bytes.map(|b| b / self.cfg.block_size);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn server_selection(mut self, s: ServerSelection) -> Self {
+        self.cfg.server_selection = s;
+        self
+    }
+
+    /// See [`RestoreConfig::placement_offset`].
+    pub fn placement_offset(mut self, o: usize) -> Self {
+        self.cfg.placement_offset = o;
+        self
+    }
+
+    pub fn build(self) -> Result<RestoreConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+/// Network model parameters (DESIGN.md §1: α-β with a shared per-node NIC).
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    /// Per-message latency in seconds (OmniPath-class: ~2 µs).
+    pub alpha_s: f64,
+    /// Per-node NIC bandwidth, bytes/s (100 Gbit/s = 12.5 GB/s). Send and
+    /// receive share it (half-duplex effective, which calibrates to the
+    /// paper's §VI-D.2 submit numbers).
+    pub node_bw_bytes_per_s: f64,
+    /// Per-PE in-memory copy bandwidth, bytes/s (local (de)serialization).
+    pub pe_mem_bw_bytes_per_s: f64,
+    /// PEs per node (share the NIC).
+    pub pes_per_node: usize,
+    /// Fragmentation/congestion coefficient: the effective NIC bandwidth
+    /// of a node handling an average of `m` messages per PE degrades by
+    /// `1 + γ·ln(1 + m)` (packet interleaving, MPI matching, rendezvous
+    /// round-trips). Calibrated so the §VI-D.2 submit ratios and the
+    /// Fig 4b dense-pattern slowdowns match the paper (EXPERIMENTS.md
+    /// §Calibration). 0 disables the term (pure α-β).
+    pub frag_gamma: f64,
+    /// Per-fragment handling cost in seconds: every non-contiguous piece
+    /// a PE packs (send side) or unpacks (receive side) costs a fixed CPU
+    /// overhead (scattered 64 B memcpys, MPI datatype/descriptor work).
+    /// This is what blows up the left edge of Fig 4a: tiny permutation
+    /// ranges fragment every message into thousands of pieces.
+    pub fragment_cost_s: f64,
+    /// Effective global-traffic efficiency factor: phases moving large
+    /// total volume are bounded by `total_bytes / (node_bw·nodes/this)`.
+    /// Captures fat-tree pruning (SuperMUC-NG prunes 1:4 between islands)
+    /// plus the routing losses of real global all-to-alls; calibrated to
+    /// the paper's §VI-D.2 submit times (2.0). 0 disables the term.
+    pub bisection_oversubscription: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            alpha_s: 2e-6,
+            node_bw_bytes_per_s: 12.5e9,
+            pe_mem_bw_bytes_per_s: 8e9,
+            pes_per_node: DEFAULT_PES_PER_NODE,
+            frag_gamma: 0.12,
+            fragment_cost_s: 1.0e-6,
+            bisection_oversubscription: 2.0,
+        }
+    }
+}
+
+/// Parallel-file-system model parameters (Fig 6/7 baseline; Lustre-class).
+#[derive(Debug, Clone)]
+pub struct PfsConfig {
+    /// Aggregate read bandwidth of the file system, bytes/s.
+    pub aggregate_bw_bytes_per_s: f64,
+    /// Per-client achievable stream bandwidth, bytes/s.
+    pub per_client_bw_bytes_per_s: f64,
+    /// Metadata/open latency per file open, seconds.
+    pub open_latency_s: f64,
+    /// Number of object storage targets (stripes) contended for.
+    pub osts: usize,
+    /// Node page-cache read bandwidth for the "cached" series of Fig 6.
+    pub page_cache_bw_bytes_per_s: f64,
+}
+
+impl Default for PfsConfig {
+    fn default() -> Self {
+        PfsConfig {
+            aggregate_bw_bytes_per_s: 50e9,
+            per_client_bw_bytes_per_s: 1.2e9,
+            open_latency_s: 2e-3,
+            osts: 256,
+            page_cache_bw_bytes_per_s: 6e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_valid() {
+        let cfg = RestoreConfig::paper_default(48).unwrap();
+        assert_eq!(cfg.block_size, 64);
+        assert_eq!(cfg.blocks_per_pe, 262_144);
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.perm_range_blocks, Some(4096));
+        assert_eq!(cfg.ranges_per_pe(), 64); // 16 MiB / 256 KiB (§VI-B2)
+        assert_eq!(cfg.replica_bytes_per_pe(), 4 * 16 * 1024 * 1024);
+    }
+
+    #[test]
+    fn replicas_must_divide_world() {
+        assert!(RestoreConfig::builder(10, 64, 1024).replicas(4).build().is_err());
+        assert!(RestoreConfig::builder(12, 64, 1024).replicas(4).build().is_ok());
+    }
+
+    #[test]
+    fn perm_range_must_divide_shard() {
+        let b = |s| {
+            RestoreConfig::builder(4, 64, 1024)
+                .replicas(2)
+                .perm_range_blocks(Some(s))
+                .build()
+        };
+        assert!(b(100).is_err());
+        assert!(b(128).is_ok());
+    }
+
+    #[test]
+    fn perm_range_bytes_converts() {
+        let cfg = RestoreConfig::builder(4, 64, 1024)
+            .replicas(2)
+            .perm_range_bytes(Some(8192))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.perm_range_blocks, Some(128));
+    }
+
+    #[test]
+    fn zero_sizes_rejected() {
+        assert!(RestoreConfig::builder(0, 64, 1).build().is_err());
+        assert!(RestoreConfig::builder(4, 0, 1).build().is_err());
+        assert!(RestoreConfig::builder(4, 64, 0).build().is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! TOML experiment files: a complete description of a run (cluster +
+//! ReStore + app parameters) loadable by the `restore` CLI launcher.
+//! Parsed with the in-tree TOML subset parser (`util::toml`).
+
+use crate::config::{NetworkConfig, PfsConfig, RestoreConfig, ServerSelection};
+use crate::error::{Error, Result};
+use crate::util::toml::{escape_str, TomlDoc};
+
+/// App selector for the launcher.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AppKind {
+    Kmeans,
+    Raxml,
+    Pagerank,
+}
+
+impl AppKind {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "kmeans" => Ok(AppKind::Kmeans),
+            "raxml" => Ok(AppKind::Raxml),
+            "pagerank" => Ok(AppKind::Pagerank),
+            other => Err(Error::Config(format!("unknown app kind '{other}'"))),
+        }
+    }
+
+    fn as_str(&self) -> &'static str {
+        match self {
+            AppKind::Kmeans => "kmeans",
+            AppKind::Raxml => "raxml",
+            AppKind::Pagerank => "pagerank",
+        }
+    }
+}
+
+/// App-level knobs shared by the launchable applications.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub kind: AppKind,
+    /// Iterations (k-means/pagerank) or likelihood evaluations (raxml).
+    pub iterations: usize,
+    /// Expected fraction of PEs failing over the run (§VI-C uses 1 %),
+    /// injected with the paper's discrete exponential decay schedule.
+    pub failure_fraction: f64,
+    /// RNG seed for data generation and the failure schedule.
+    pub seed: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig { kind: AppKind::Kmeans, iterations: 500, failure_fraction: 0.01, seed: 42 }
+    }
+}
+
+/// A full experiment description (what a SLURM job file is to the paper).
+#[derive(Debug, Clone)]
+pub struct ExperimentFile {
+    /// World size `p`.
+    pub world: usize,
+    /// PEs per node (failure domains / NIC sharing).
+    pub pes_per_node: usize,
+    pub restore: RestoreConfig,
+    pub network: NetworkConfig,
+    pub pfs: PfsConfig,
+    pub app: AppConfig,
+}
+
+impl ExperimentFile {
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text).map_err(|e| match e {
+            Error::Config(m) => Error::Config(format!("{path}: {m}")),
+            Error::Parse(m) => Error::Parse(format!("{path}: {m}")),
+            other => other,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let world = doc
+            .get_usize("world")
+            .ok_or_else(|| Error::Config("missing 'world'".into()))?;
+        let pes_per_node =
+            doc.get_usize("pes_per_node").unwrap_or(crate::config::DEFAULT_PES_PER_NODE);
+
+        // [restore]
+        let block_size =
+            doc.get_usize("restore.block_size").unwrap_or(crate::config::DEFAULT_BLOCK_SIZE);
+        let blocks_per_pe = doc.get_usize("restore.blocks_per_pe").unwrap_or(
+            crate::config::DEFAULT_BYTES_PER_PE / crate::config::DEFAULT_BLOCK_SIZE,
+        );
+        let mut b = RestoreConfig::builder(world, block_size, blocks_per_pe)
+            .replicas(doc.get_usize("restore.replicas").unwrap_or(crate::config::DEFAULT_REPLICAS))
+            .seed(doc.get_usize("restore.seed").unwrap_or(0x5e5705e) as u64);
+        if let Some(bytes) = doc.get_usize("restore.perm_range_bytes") {
+            b = b.perm_range_bytes(Some(bytes));
+        } else if doc.get_bool("restore.permutation") == Some(true) {
+            b = b.perm_range_bytes(Some(crate::config::DEFAULT_PERM_RANGE_BYTES));
+        }
+        if let Some(sel) = doc.get_str("restore.server_selection") {
+            b = b.server_selection(match sel {
+                "random" => ServerSelection::Random,
+                "least_loaded" => ServerSelection::LeastLoaded,
+                "primary" => ServerSelection::Primary,
+                other => {
+                    return Err(Error::Config(format!("unknown server_selection '{other}'")))
+                }
+            });
+        }
+        let restore = b.build()?;
+
+        // [network]
+        let mut network = NetworkConfig { pes_per_node, ..NetworkConfig::default() };
+        if let Some(v) = doc.get_f64("network.alpha_s") {
+            network.alpha_s = v;
+        }
+        if let Some(v) = doc.get_f64("network.node_bw_bytes_per_s") {
+            network.node_bw_bytes_per_s = v;
+        }
+        if let Some(v) = doc.get_f64("network.pe_mem_bw_bytes_per_s") {
+            network.pe_mem_bw_bytes_per_s = v;
+        }
+
+        // [pfs]
+        let mut pfs = PfsConfig::default();
+        if let Some(v) = doc.get_f64("pfs.aggregate_bw_bytes_per_s") {
+            pfs.aggregate_bw_bytes_per_s = v;
+        }
+        if let Some(v) = doc.get_f64("pfs.per_client_bw_bytes_per_s") {
+            pfs.per_client_bw_bytes_per_s = v;
+        }
+        if let Some(v) = doc.get_f64("pfs.open_latency_s") {
+            pfs.open_latency_s = v;
+        }
+        if let Some(v) = doc.get_usize("pfs.osts") {
+            pfs.osts = v;
+        }
+
+        // [app]
+        let mut app = AppConfig::default();
+        if let Some(kind) = doc.get_str("app.kind") {
+            app.kind = AppKind::from_str(kind)?;
+        }
+        if let Some(v) = doc.get_usize("app.iterations") {
+            app.iterations = v;
+        }
+        if let Some(v) = doc.get_f64("app.failure_fraction") {
+            app.failure_fraction = v;
+        }
+        if let Some(v) = doc.get_usize("app.seed") {
+            app.seed = v as u64;
+        }
+
+        Ok(ExperimentFile { world, pes_per_node, restore, network, pfs, app })
+    }
+
+    /// Serialize back to TOML (used to generate example experiment files).
+    pub fn to_toml(&self) -> String {
+        let r = &self.restore;
+        let mut out = String::new();
+        out.push_str(&format!("world = {}\npes_per_node = {}\n\n", self.world, self.pes_per_node));
+        out.push_str("[restore]\n");
+        out.push_str(&format!("block_size = {}\n", r.block_size));
+        out.push_str(&format!("blocks_per_pe = {}\n", r.blocks_per_pe));
+        out.push_str(&format!("replicas = {}\n", r.replicas));
+        if let Some(s) = r.perm_range_blocks {
+            out.push_str(&format!("perm_range_bytes = {}\n", s * r.block_size));
+        }
+        out.push_str(&format!("seed = {}\n", r.seed));
+        out.push_str(&format!(
+            "server_selection = {}\n\n",
+            escape_str(match r.server_selection {
+                ServerSelection::Random => "random",
+                ServerSelection::LeastLoaded => "least_loaded",
+                ServerSelection::Primary => "primary",
+            })
+        ));
+        out.push_str("[network]\n");
+        out.push_str(&format!("alpha_s = {}\n", self.network.alpha_s));
+        out.push_str(&format!("node_bw_bytes_per_s = {}\n\n", self.network.node_bw_bytes_per_s));
+        out.push_str("[app]\n");
+        out.push_str(&format!("kind = {}\n", escape_str(self.app.kind.as_str())));
+        out.push_str(&format!("iterations = {}\n", self.app.iterations));
+        out.push_str(&format!("failure_fraction = {}\n", self.app.failure_fraction));
+        out.push_str(&format!("seed = {}\n", self.app.seed));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentFile {
+        ExperimentFile {
+            world: 48,
+            pes_per_node: 48,
+            restore: RestoreConfig::paper_default(48).unwrap(),
+            network: NetworkConfig::default(),
+            pfs: PfsConfig::default(),
+            app: AppConfig::default(),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_toml() {
+        let f = sample();
+        let back = ExperimentFile::parse(&f.to_toml()).unwrap();
+        assert_eq!(back.world, 48);
+        assert_eq!(back.restore.blocks_per_pe, f.restore.blocks_per_pe);
+        assert_eq!(back.restore.perm_range_blocks, f.restore.perm_range_blocks);
+        assert_eq!(back.app.iterations, 500);
+        assert_eq!(back.app.kind, AppKind::Kmeans);
+    }
+
+    #[test]
+    fn minimal_file_gets_paper_defaults() {
+        let f = ExperimentFile::parse("world = 96").unwrap();
+        assert_eq!(f.restore.block_size, 64);
+        assert_eq!(f.restore.replicas, 4);
+        assert_eq!(f.restore.perm_range_blocks, None); // off unless asked
+        assert_eq!(f.pes_per_node, 48);
+    }
+
+    #[test]
+    fn permutation_flag_enables_paper_default_range() {
+        let f = ExperimentFile::parse("world = 48\n[restore]\npermutation = true").unwrap();
+        assert_eq!(f.restore.perm_range_blocks, Some(256 * 1024 / 64));
+    }
+
+    #[test]
+    fn invalid_app_kind_rejected() {
+        let err = ExperimentFile::parse("world = 4\n[app]\nkind = \"tetris\"").unwrap_err();
+        assert!(format!("{err}").contains("tetris"));
+    }
+
+    #[test]
+    fn invalid_restore_config_rejected() {
+        // replicas must divide world
+        assert!(ExperimentFile::parse("world = 10\n[restore]\nreplicas = 4").is_err());
+    }
+}

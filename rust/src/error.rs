@@ -1,0 +1,68 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ReStore library and its substrates.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid configuration (divisibility constraints, zero sizes, ...).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// An operation referenced a PE rank outside the world.
+    #[error("rank {rank} out of range (world size {world})")]
+    RankOutOfRange { rank: usize, world: usize },
+
+    /// The data for a requested block range is irrecoverably lost: all `r`
+    /// replicas resided on failed PEs (the paper's IDL event, §IV-D).
+    #[error("irrecoverable data loss: all replicas of blocks [{start}, {end}) failed")]
+    IrrecoverableDataLoss { start: u64, end: u64 },
+
+    /// submit() called more than once. The paper's library supports
+    /// submitting data exactly once (§V); so does this reproduction.
+    #[error("ReStore::submit may only be called once per instance")]
+    AlreadySubmitted,
+
+    /// load() called before submit().
+    #[error("ReStore::load called before submit")]
+    NotSubmitted,
+
+    /// A collective was attempted on a dead PE.
+    #[error("PE {0} is dead")]
+    DeadPe(usize),
+
+    /// PJRT / XLA runtime error.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Artifact registry problems (missing manifest, unknown variant...).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Config/manifest text could not be parsed.
+    #[error("parse: {0}")]
+    Parse(String),
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Parse(e.to_string())
+    }
+}
+
+impl From<crate::util::toml::TomlError> for Error {
+    fn from(e: crate::util::toml::TomlError) -> Self {
+        Error::Parse(e.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

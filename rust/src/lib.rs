@@ -1,0 +1,62 @@
+//! # ReStore — in-memory replicated storage for rapid recovery
+//!
+//! A Rust + JAX/Pallas reproduction of *ReStore: In-Memory REplicated
+//! STORagE for Rapid Recovery in Fault-Tolerant Algorithms* (Hübner, Hespe,
+//! Sanders, Stamatakis — FTXS @ SC 2022).
+//!
+//! The crate is organised in the paper's own layers:
+//!
+//! * [`simnet`] — the fault-tolerant cluster substrate the paper runs on
+//!   (MPI + ULFM on SuperMUC-NG in the paper; a simulated cluster with an
+//!   exact-schedule α-β transport model here — see `DESIGN.md §1`).
+//! * [`restore`] — the paper's contribution: replica placement `L(x,k)`,
+//!   permutation ranges, the `submit`/`load` sparse all-to-all paths, the
+//!   irrecoverable-data-loss (IDL) analysis of §IV-D, and the §IV-E replica
+//!   repair distributions.
+//! * [`pfs`] — the parallel-file-system baseline every disk-based
+//!   checkpointing library bottoms out in (Fig 6/7 comparisons).
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs on the recovery path.
+//! * [`apps`] — the paper's fault-tolerant applications: k-means (§VI-C,
+//!   Fig 5), an FT-RAxML-NG-style phylogenetic proxy (Fig 6), and PageRank.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use restore::config::RestoreConfig;
+//! use restore::simnet::cluster::Cluster;
+//! use restore::restore::ReStore;
+//!
+//! // 16 PEs, 1 MiB of 64 B blocks per PE, 4 replicas, 256 KiB perm ranges.
+//! let cfg = RestoreConfig::builder(16, 64, 16 * 1024)
+//!     .replicas(4)
+//!     .perm_range_bytes(Some(256 * 1024))
+//!     .build()
+//!     .unwrap();
+//! let mut cluster = Cluster::new_execution(16, 48);
+//! let mut store = ReStore::new(cfg, &cluster).unwrap();
+//!
+//! // Every PE submits its local shard once...
+//! let shards: Vec<Vec<u8>> = (0..16u8).map(|i| vec![i; 1024 * 1024]).collect();
+//! store.submit(&mut cluster, &shards).unwrap();
+//!
+//! // ...a PE fails...
+//! cluster.kill(&[3]);
+//!
+//! // ...and the survivors reload the lost shard, scattered across them.
+//! let requests = restore::restore::load::scatter_requests(&store, &cluster, &[3]);
+//! let loaded = store.load(&mut cluster, &requests).unwrap();
+//! assert!(loaded.cost.sim_time_s < 0.1);
+//! ```
+
+pub mod apps;
+pub mod config;
+pub mod error;
+pub mod metrics;
+pub mod pfs;
+pub mod restore;
+pub mod runtime;
+pub mod simnet;
+pub mod util;
+
+pub use error::{Error, Result};

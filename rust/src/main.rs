@@ -1,0 +1,215 @@
+//! `restore` — launcher CLI for the ReStore reproduction.
+//!
+//! ```text
+//! restore run --config exp.toml     launch a fault-tolerant app run
+//! restore idl [--p N] [--r R] [--f F]...   §IV-D IDL probabilities
+//! restore smoke                     end-to-end self-check
+//! restore gen-config PATH           write a paper-default experiment file
+//! ```
+//!
+//! The figure benches live in `benches/` (`cargo bench --bench fig…`).
+
+use anyhow::{bail, ensure, Context, Result};
+
+use restore::apps::{kmeans, pagerank};
+use restore::config::{AppKind, ExperimentFile};
+use restore::metrics::fmt_time;
+use restore::restore::idl;
+use restore::runtime::Engine;
+use restore::simnet::cluster::Cluster;
+
+const USAGE: &str = "usage: restore <run|idl|smoke|gen-config> [options]
+  run --config <exp.toml>
+  idl [--p <pes>] [--r <replicas>] [--f <failures>]...
+  smoke
+  gen-config <path>";
+
+/// Tiny argv parser: `--key value` pairs plus positionals.
+struct Args {
+    flags: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val =
+                    it.next().with_context(|| format!("--{key} needs a value"))?.clone();
+                flags.push((key.to_string(), val));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "run" => run_app(args.get("config").context("run needs --config <exp.toml>")?),
+        "idl" => {
+            let p: u64 = args.get("p").unwrap_or("24576").parse()?;
+            let r: u64 = args.get("r").unwrap_or("4").parse()?;
+            let fs: Vec<u64> = args
+                .get_all("f")
+                .iter()
+                .map(|s| s.parse::<u64>())
+                .collect::<std::result::Result<_, _>>()?;
+            print_idl(p, r, &fs);
+            Ok(())
+        }
+        "smoke" => smoke(),
+        "gen-config" => {
+            let path = args.positional.first().context("gen-config needs a path")?;
+            let exp = ExperimentFile {
+                world: 48,
+                pes_per_node: 48,
+                restore: restore::config::RestoreConfig::paper_default(48)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                network: Default::default(),
+                pfs: Default::default(),
+                app: Default::default(),
+            };
+            std::fs::write(path, exp.to_toml())?;
+            println!("wrote {path}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn run_app(path: &str) -> Result<()> {
+    let exp = ExperimentFile::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cluster = Cluster::with_network(exp.world, exp.pes_per_node, exp.network.clone());
+    match exp.app.kind {
+        AppKind::Kmeans => {
+            let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut params = kmeans::KmeansParams::tiny(exp.app.iterations);
+            params.failure_fraction = exp.app.failure_fraction;
+            params.seed = exp.app.seed;
+            // derive point shape from the restore config payload
+            let floats = exp.restore.blocks_per_pe * exp.restore.block_size / 4;
+            params.points_per_pe = floats / params.dims;
+            let rep = kmeans::run_execution(&mut cluster, &mut engine, &exp.restore, &params)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("k-means: {} iterations, {} failures", rep.iterations_run, rep.failures);
+            println!("  final inertia      {:.3}", rep.final_inertia);
+            println!("  sim total          {}", fmt_time(rep.sim_total_s));
+            println!("  k-means loop       {}", fmt_time(rep.sim_kmeans_loop_s));
+            println!("  ReStore overhead   {}", fmt_time(rep.sim_restore_s));
+            println!("  MPI recovery       {}", fmt_time(rep.sim_mpi_recovery_s));
+            println!("  PJRT wall compute  {}", fmt_time(rep.wall_compute_s));
+        }
+        AppKind::Pagerank => {
+            let mut params = pagerank::PagerankParams {
+                iterations: exp.app.iterations,
+                failure_fraction: exp.app.failure_fraction,
+                seed: exp.app.seed,
+                ..Default::default()
+            };
+            let bs = exp.restore.block_size;
+            params.vertices_per_pe =
+                exp.restore.blocks_per_pe * bs / (8 * params.edges_per_vertex);
+            let rep = pagerank::run(&mut cluster, &exp.restore, &params)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("pagerank: {} iterations, {} failures", rep.iterations_run, rep.failures);
+            println!("  final delta        {:.3e}", rep.final_delta);
+            println!("  sim total          {}", fmt_time(rep.sim_total_s));
+            println!("  ReStore overhead   {}", fmt_time(rep.sim_restore_s));
+        }
+        AppKind::Raxml => {
+            let times = restore::apps::raxml::measure_recovery(
+                exp.world,
+                exp.pes_per_node,
+                (exp.restore.blocks_per_pe * exp.restore.block_size) as u64,
+                (exp.world as f64 * exp.app.failure_fraction).ceil() as usize,
+                &exp.pfs,
+                exp.app.seed,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("raxml recovery (p={}):", exp.world);
+            println!("  ReStore submit     {}", fmt_time(times.restore_submit_s));
+            println!("  ReStore load       {}", fmt_time(times.restore_load_s));
+            println!("  PFS uncached       {}", fmt_time(times.pfs_uncached_s));
+            println!("  PFS cached         {}", fmt_time(times.pfs_cached_s));
+        }
+    }
+    Ok(())
+}
+
+fn print_idl(p: u64, r: u64, failures: &[u64]) {
+    let fs: Vec<u64> = if failures.is_empty() {
+        (0..).map(|i| 1u64 << i).take_while(|&f| f <= p).collect()
+    } else {
+        failures.to_vec()
+    };
+    println!("p={p} r={r} (g={} groups)", p / r);
+    println!("{:>12} {:>14} {:>14}", "failures", "P_IDL<=(f)", "approx");
+    for f in fs {
+        println!(
+            "{:>12} {:>14.6e} {:>14.6e}",
+            f,
+            idl::p_idl_leq(p, r, f),
+            idl::p_idl_approx(p, r, f)
+        );
+    }
+    println!(
+        "E[failures until IDL] = {:.1} ({:.2} % of p)",
+        idl::expected_failures_until_idl(p, r),
+        100.0 * idl::expected_failures_until_idl(p, r) / p as f64
+    );
+}
+
+fn smoke() -> Result<()> {
+    use restore::config::RestoreConfig;
+    use restore::restore::load::scatter_requests;
+    use restore::restore::ReStore;
+
+    // 1. artifacts + PJRT
+    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let points = kmeans::generate_points(1, 0, 256, 8, 4);
+    let centers = kmeans::starting_centers(1, 4, 8);
+    let out = engine
+        .execute_f32("kmeans_step_tiny", &[&points, &centers])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let total: f32 = out[1].iter().sum();
+    ensure!(total == 256.0, "kernel counts {total} != 256");
+    println!("PJRT kernel OK ({} exec in {})", engine.exec_calls, fmt_time(engine.exec_seconds));
+
+    // 2. store round trip under failures
+    let cfg = RestoreConfig::builder(16, 64, 1024)
+        .replicas(4)
+        .perm_range_bytes(Some(4096))
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cluster = Cluster::new_execution(16, 4);
+    let mut store = ReStore::new(cfg, &cluster).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let shards: Vec<Vec<u8>> = (0..16).map(|pe| vec![pe as u8; 64 * 1024]).collect();
+    store.submit(&mut cluster, &shards).map_err(|e| anyhow::anyhow!("{e}"))?;
+    cluster.kill(&[3, 7]);
+    let reqs = scatter_requests(&store, &cluster, &[3, 7]);
+    let out = store.load(&mut cluster, &reqs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let bytes: usize = out.shards.iter().map(|s| s.bytes.as_ref().unwrap().len()).sum();
+    ensure!(bytes == 2 * 64 * 1024, "recovered {bytes} bytes");
+    println!("ReStore recovery OK ({} in sim time)", fmt_time(out.cost.sim_time_s));
+    println!("smoke OK");
+    Ok(())
+}

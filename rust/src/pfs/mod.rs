@@ -1,0 +1,152 @@
+//! Parallel-file-system baseline (Fig 6/7).
+//!
+//! "Loading from the PFS is a lower bound for all checkpointing libraries
+//! that have to read their data from disk" (§VI-D1). The paper measures two
+//! access methods on SuperMUC-NG's Lustre:
+//!
+//! * **ifstream** — one file per reading PE, a private POSIX stream.
+//! * **MPI I/O** — one shared file, `MPI_File_read_at_all` collective.
+//!
+//! The model charges (a) per-open metadata latency with contention
+//! (metadata servers serialize opens; collective open amortizes it),
+//! (b) per-client stream bandwidth, and (c) the aggregate PFS bandwidth
+//! shared by all clients — whichever bound binds. The "cached" variant
+//! (Fig 6's dashed series) reads from the node page cache instead.
+//! Constants live in [`PfsConfig`](crate::config::PfsConfig) and are
+//! calibrated in EXPERIMENTS.md §Calibration.
+
+use crate::config::PfsConfig;
+
+/// PFS access method, matching the paper's two measured series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PfsMethod {
+    /// One file per PE, C++ `ifstream`-style.
+    IfStream,
+    /// One shared file, `MPI_File_read_at_all`.
+    MpiIo,
+}
+
+/// Cache state of the input file(s) (Fig 6 distinguishes first/repeat read).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheState {
+    Uncached,
+    Cached,
+}
+
+/// The modeled PFS.
+#[derive(Debug, Clone)]
+pub struct Pfs {
+    cfg: PfsConfig,
+}
+
+impl Pfs {
+    pub fn new(cfg: PfsConfig) -> Self {
+        Pfs { cfg }
+    }
+
+    /// Seconds for `clients` PEs to each read `bytes_per_client` bytes.
+    pub fn read_time_s(
+        &self,
+        method: PfsMethod,
+        cache: CacheState,
+        clients: usize,
+        bytes_per_client: u64,
+    ) -> f64 {
+        if clients == 0 || bytes_per_client == 0 {
+            return 0.0;
+        }
+        let c = &self.cfg;
+        let total = clients as f64 * bytes_per_client as f64;
+
+        // Metadata/open phase. Independent opens contend on the metadata
+        // servers (we charge sqrt-contention: MDS scale out, but not
+        // linearly); a collective open costs one open + a barrier-ish term.
+        // Cached re-reads hit warm dentries: one uncontended open.
+        let open = match (method, cache) {
+            (_, CacheState::Cached) => c.open_latency_s,
+            (PfsMethod::IfStream, _) => c.open_latency_s * (clients as f64).sqrt(),
+            (PfsMethod::MpiIo, _) => {
+                c.open_latency_s * (clients as f64).log2().max(1.0) * 0.1 + c.open_latency_s
+            }
+        };
+
+        let transfer = match cache {
+            CacheState::Cached => {
+                // Page-cache read: per-node memory bandwidth, no PFS limits.
+                bytes_per_client as f64 / c.page_cache_bw_bytes_per_s
+            }
+            CacheState::Uncached => {
+                // Per-client stream bound and aggregate bound; MPI I/O's
+                // collective buffering reaches a higher fraction of the
+                // aggregate (fewer, larger, aligned stripes; ifstream
+                // clients fight for OSTs once clients >> OSTs).
+                let per_client = bytes_per_client as f64 / c.per_client_bw_bytes_per_s;
+                let eff_aggregate = match method {
+                    PfsMethod::MpiIo => c.aggregate_bw_bytes_per_s,
+                    PfsMethod::IfStream => {
+                        let contention =
+                            1.0 + (clients as f64 / c.osts as f64).max(0.0).sqrt();
+                        c.aggregate_bw_bytes_per_s / contention
+                    }
+                };
+                per_client.max(total / eff_aggregate)
+            }
+        };
+        open + transfer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pfs() -> Pfs {
+        Pfs::new(PfsConfig::default())
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        assert_eq!(pfs().read_time_s(PfsMethod::IfStream, CacheState::Uncached, 0, 1), 0.0);
+        assert_eq!(pfs().read_time_s(PfsMethod::MpiIo, CacheState::Cached, 10, 0), 0.0);
+    }
+
+    #[test]
+    fn cached_faster_than_uncached() {
+        let p = pfs();
+        let mib16 = 16 * 1024 * 1024;
+        for &clients in &[48usize, 1536, 24576] {
+            let cold = p.read_time_s(PfsMethod::IfStream, CacheState::Uncached, clients, mib16);
+            let warm = p.read_time_s(PfsMethod::IfStream, CacheState::Cached, clients, mib16);
+            assert!(warm < cold, "clients={clients}: warm {warm} !< cold {cold}");
+        }
+    }
+
+    #[test]
+    fn aggregate_bandwidth_binds_at_scale() {
+        // Fig 7's shape: PFS time grows roughly linearly once aggregate
+        // bandwidth saturates, while at small scale the per-client stream
+        // dominates.
+        let p = pfs();
+        let mib16 = 16 * 1024 * 1024u64;
+        let t_small = p.read_time_s(PfsMethod::MpiIo, CacheState::Uncached, 48, mib16);
+        let t_big = p.read_time_s(PfsMethod::MpiIo, CacheState::Uncached, 24576, mib16);
+        assert!(t_big > t_small * 50.0, "t_big {t_big} vs t_small {t_small}");
+    }
+
+    #[test]
+    fn mpiio_beats_ifstream_at_scale() {
+        // Fig 7: MPI I/O is faster than per-PE ifstream at high PE counts.
+        let p = pfs();
+        let mib16 = 16 * 1024 * 1024u64;
+        let ifs = p.read_time_s(PfsMethod::IfStream, CacheState::Uncached, 24576, mib16);
+        let mio = p.read_time_s(PfsMethod::MpiIo, CacheState::Uncached, 24576, mib16);
+        assert!(mio < ifs);
+    }
+
+    #[test]
+    fn open_latency_visible_for_tiny_reads() {
+        let p = pfs();
+        let t = p.read_time_s(PfsMethod::IfStream, CacheState::Cached, 4096, 64);
+        assert!(t > PfsConfig::default().open_latency_s);
+    }
+}

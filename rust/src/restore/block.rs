@@ -1,0 +1,159 @@
+//! Block identifiers and ranges.
+//!
+//! ReStore addresses user data as `n` fixed-size serialized *blocks* with
+//! dense IDs `0..n` (§IV-A). The API works on half-open ID ranges — the
+//! paper's load interface takes "a list of ranges of block identifiers"
+//! (§V) — so ranges, not single blocks, are the unit everything below
+//! operates on. This is also what lets the implementation scale: schedules
+//! are O(ranges), never O(blocks).
+
+/// A half-open range of block IDs `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockRange {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl BlockRange {
+    pub fn new(start: u64, end: u64) -> Self {
+        assert!(start <= end, "inverted range [{start}, {end})");
+        BlockRange { start, end }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.start <= id && id < self.end
+    }
+
+    pub fn intersect(&self, other: &BlockRange) -> Option<BlockRange> {
+        let s = self.start.max(other.start);
+        let e = self.end.min(other.end);
+        (s < e).then(|| BlockRange::new(s, e))
+    }
+
+    /// Split into subranges aligned to multiples of `chunk` (the
+    /// permutation-range decomposition of §IV-B).
+    pub fn chunks(&self, chunk: u64) -> impl Iterator<Item = BlockRange> + '_ {
+        assert!(chunk > 0);
+        let mut cur = self.start;
+        let end = self.end;
+        std::iter::from_fn(move || {
+            if cur >= end {
+                return None;
+            }
+            let next = ((cur / chunk) + 1) * chunk;
+            let stop = next.min(end);
+            let out = BlockRange::new(cur, stop);
+            cur = stop;
+            Some(out)
+        })
+    }
+}
+
+/// A normalized set of block ranges: sorted, non-overlapping, non-adjacent.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RangeSet {
+    ranges: Vec<BlockRange>,
+}
+
+impl RangeSet {
+    pub fn new(mut ranges: Vec<BlockRange>) -> Self {
+        ranges.retain(|r| !r.is_empty());
+        ranges.sort();
+        let mut out: Vec<BlockRange> = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            match out.last_mut() {
+                Some(last) if r.start <= last.end => last.end = last.end.max(r.end),
+                _ => out.push(r),
+            }
+        }
+        RangeSet { ranges: out }
+    }
+
+    pub fn ranges(&self) -> &[BlockRange] {
+        &self.ranges
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.ranges.iter().map(BlockRange::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_basics() {
+        let r = BlockRange::new(10, 20);
+        assert_eq!(r.len(), 10);
+        assert!(r.contains(10) && r.contains(19) && !r.contains(20));
+        assert!(!r.is_empty());
+        assert!(BlockRange::new(5, 5).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "inverted")]
+    fn inverted_range_panics() {
+        BlockRange::new(5, 4);
+    }
+
+    #[test]
+    fn intersect() {
+        let a = BlockRange::new(0, 10);
+        assert_eq!(a.intersect(&BlockRange::new(5, 15)), Some(BlockRange::new(5, 10)));
+        assert_eq!(a.intersect(&BlockRange::new(10, 15)), None);
+        assert_eq!(a.intersect(&BlockRange::new(2, 3)), Some(BlockRange::new(2, 3)));
+    }
+
+    #[test]
+    fn chunks_align_to_boundaries() {
+        let r = BlockRange::new(5, 23);
+        let cs: Vec<_> = r.chunks(8).collect();
+        assert_eq!(
+            cs,
+            vec![
+                BlockRange::new(5, 8),
+                BlockRange::new(8, 16),
+                BlockRange::new(16, 23)
+            ]
+        );
+        assert_eq!(cs.iter().map(BlockRange::len).sum::<u64>(), r.len());
+    }
+
+    #[test]
+    fn chunks_exact_fit() {
+        let r = BlockRange::new(16, 32);
+        let cs: Vec<_> = r.chunks(8).collect();
+        assert_eq!(cs, vec![BlockRange::new(16, 24), BlockRange::new(24, 32)]);
+    }
+
+    #[test]
+    fn rangeset_normalizes() {
+        let s = RangeSet::new(vec![
+            BlockRange::new(10, 20),
+            BlockRange::new(0, 5),
+            BlockRange::new(15, 25),
+            BlockRange::new(5, 5),
+        ]);
+        assert_eq!(s.ranges(), &[BlockRange::new(0, 5), BlockRange::new(10, 25)]);
+        assert_eq!(s.total_blocks(), 20);
+    }
+
+    #[test]
+    fn rangeset_merges_adjacent() {
+        let s = RangeSet::new(vec![BlockRange::new(0, 5), BlockRange::new(5, 10)]);
+        assert_eq!(s.ranges(), &[BlockRange::new(0, 10)]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Replica placement: the paper's data distribution (§IV-A, §IV-B).
+//!
+//! Copy `k` of the block with ID `x` lives on PE
+//!
+//! ```text
+//! L(x, k) = ⌊π(x)·p/n⌋ + k·p/r   (mod p)
+//! ```
+//!
+//! where `π` permutes *permutation ranges* of `s_pr` consecutive blocks
+//! (identity when permutation is disabled). Because `n = p · blocks_per_pe`,
+//! `⌊y·p/n⌋ = ⌊y / blocks_per_pe⌋` — the permuted ID space is divided into
+//! `p` contiguous *slices* of `blocks_per_pe` blocks, and every PE stores
+//! `r` whole slices (one per copy). The PEs `{ i ≡ g (mod p/r) }` store
+//! identical data — the §IV-D *groups* whose simultaneous failure is the
+//! only irrecoverable event.
+
+use std::sync::Arc;
+
+use crate::config::RestoreConfig;
+use crate::restore::block::BlockRange;
+use crate::restore::permutation::{Feistel, Identity, RangePermutation};
+
+/// A contiguous piece of a request after mapping to the permuted ID space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PermutedPiece {
+    /// Start in permuted block ID space.
+    pub perm_start: u64,
+    /// Corresponding start in original block ID space.
+    pub orig_start: u64,
+    /// Piece length in blocks. Never crosses a permutation-range boundary
+    /// or (after [`Distribution::split_at_slices`]) a slice boundary.
+    pub len: u64,
+}
+
+/// The placement function shared by submit, load, and repair.
+#[derive(Clone)]
+pub struct Distribution {
+    p: usize,
+    r: usize,
+    offset: usize,
+    blocks_per_pe: u64,
+    /// Permutation unit in blocks (= blocks_per_pe when permutation is off,
+    /// so the whole shard is one unit).
+    s_pr: u64,
+    perm: Arc<dyn RangePermutation>,
+}
+
+impl Distribution {
+    pub fn new(cfg: &RestoreConfig) -> Self {
+        let bpp = cfg.blocks_per_pe as u64;
+        let (s_pr, perm): (u64, Arc<dyn RangePermutation>) = match cfg.perm_range_blocks {
+            Some(s) => {
+                let domain = cfg.n_blocks() / s as u64;
+                (s as u64, Arc::new(Feistel::new(domain, cfg.seed)))
+            }
+            None => {
+                let domain = cfg.world as u64; // one unit per PE shard
+                (bpp, Arc::new(Identity { domain }))
+            }
+        };
+        Distribution {
+            p: cfg.world,
+            r: cfg.replicas,
+            offset: cfg.placement_offset % cfg.world,
+            blocks_per_pe: bpp,
+            s_pr,
+            perm,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.p
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.r
+    }
+
+    pub fn blocks_per_pe(&self) -> u64 {
+        self.blocks_per_pe
+    }
+
+    /// Permutation-unit size in blocks.
+    pub fn perm_range_blocks(&self) -> u64 {
+        self.s_pr
+    }
+
+    pub fn n_blocks(&self) -> u64 {
+        self.p as u64 * self.blocks_per_pe
+    }
+
+    /// Group offset `p/r` between successive copies (§IV-A).
+    pub fn copy_stride(&self) -> usize {
+        self.p / self.r
+    }
+
+    /// The configured constant placement offset (see `RestoreConfig`).
+    pub fn placement_offset(&self) -> usize {
+        self.offset
+    }
+
+    /// §IV-D group of a PE: all PEs with equal `pe mod p/r` store the same
+    /// slices.
+    pub fn group_of(&self, pe: usize) -> usize {
+        pe % self.copy_stride()
+    }
+
+    /// Permuted position of original block `x`.
+    pub fn permute_block(&self, x: u64) -> u64 {
+        let unit = x / self.s_pr;
+        let off = x % self.s_pr;
+        self.perm.apply(unit) * self.s_pr + off
+    }
+
+    /// Original position of permuted block `y`.
+    pub fn unpermute_block(&self, y: u64) -> u64 {
+        let unit = y / self.s_pr;
+        let off = y % self.s_pr;
+        self.perm.invert(unit) * self.s_pr + off
+    }
+
+    /// PE owning the *primary* (k = 0) copy of permuted block `y`.
+    pub fn primary_of_permuted(&self, y: u64) -> usize {
+        debug_assert!(y < self.n_blocks());
+        (y / self.blocks_per_pe) as usize
+    }
+
+    /// PE holding copy `k` of permuted block `y`: `L` of the paper
+    /// (plus the configurable constant placement offset).
+    pub fn holder(&self, y: u64, k: usize) -> usize {
+        debug_assert!(k < self.r);
+        (self.primary_of_permuted(y) + k * self.copy_stride() + self.offset) % self.p
+    }
+
+    /// All `r` holders of permuted block `y`.
+    pub fn holders(&self, y: u64) -> Vec<usize> {
+        (0..self.r).map(|k| self.holder(y, k)).collect()
+    }
+
+    /// The permuted slice `[start, end)` stored by `pe` as copy `k`.
+    pub fn stored_slice(&self, pe: usize, k: usize) -> BlockRange {
+        debug_assert!(pe < self.p && k < self.r);
+        let primary =
+            (pe + 2 * self.p - (k * self.copy_stride() + self.offset) % self.p) % self.p;
+        let start = primary as u64 * self.blocks_per_pe;
+        BlockRange::new(start, start + self.blocks_per_pe)
+    }
+
+    /// Original block range submitted by `pe` (the application's shard).
+    pub fn shard_of(&self, pe: usize) -> BlockRange {
+        let start = pe as u64 * self.blocks_per_pe;
+        BlockRange::new(start, start + self.blocks_per_pe)
+    }
+
+    /// Decompose an *original* block range into permuted pieces, each fully
+    /// inside one permutation unit AND one permuted slice (so each piece
+    /// has a single well-defined holder set).
+    pub fn permuted_pieces(&self, range: BlockRange, out: &mut Vec<PermutedPiece>) {
+        for unit_piece in range.chunks(self.s_pr) {
+            let perm_start = self.permute_block(unit_piece.start);
+            // A piece inside one permutation unit maps contiguously; it can
+            // still straddle a slice boundary if s_pr does not divide
+            // blocks_per_pe alignment of the permuted start — split there.
+            let piece = PermutedPiece {
+                perm_start,
+                orig_start: unit_piece.start,
+                len: unit_piece.len(),
+            };
+            self.split_at_slices(piece, out);
+        }
+    }
+
+    fn split_at_slices(&self, piece: PermutedPiece, out: &mut Vec<PermutedPiece>) {
+        let mut start = piece.perm_start;
+        let mut orig = piece.orig_start;
+        let end = piece.perm_start + piece.len;
+        while start < end {
+            let slice_end = (start / self.blocks_per_pe + 1) * self.blocks_per_pe;
+            let stop = slice_end.min(end);
+            out.push(PermutedPiece { perm_start: start, orig_start: orig, len: stop - start });
+            orig += stop - start;
+            start = stop;
+        }
+    }
+}
+
+impl std::fmt::Debug for Distribution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Distribution")
+            .field("p", &self.p)
+            .field("r", &self.r)
+            .field("blocks_per_pe", &self.blocks_per_pe)
+            .field("s_pr", &self.s_pr)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+
+    fn dist(p: usize, bpp: usize, r: usize, s_pr: Option<usize>) -> Distribution {
+        let cfg = RestoreConfig::builder(p, 64, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .build()
+            .unwrap();
+        Distribution::new(&cfg)
+    }
+
+    #[test]
+    fn paper_figure1_layout() {
+        // Fig 1: p=4, n=16, r=2, no permutation. Copy 1 of block x on PE
+        // ⌊x/4⌋, copy 2 on PE ⌊x/4⌋+2 mod 4.
+        let d = dist(4, 4, 2, None);
+        for x in 0..16u64 {
+            assert_eq!(d.permute_block(x), x); // identity
+            assert_eq!(d.holder(x, 0), (x / 4) as usize);
+            assert_eq!(d.holder(x, 1), ((x / 4 + 2) % 4) as usize);
+        }
+        // PE 0 stores its own slice (copy 1) and PE 2's slice (copy 2).
+        assert_eq!(d.stored_slice(0, 0), BlockRange::new(0, 4));
+        assert_eq!(d.stored_slice(0, 1), BlockRange::new(8, 12));
+        assert_eq!(d.stored_slice(2, 1), BlockRange::new(0, 4));
+    }
+
+    #[test]
+    fn holders_are_distinct_and_stride_separated() {
+        let d = dist(16, 64, 4, Some(8));
+        for y in (0..d.n_blocks()).step_by(37) {
+            let hs = d.holders(y);
+            let set: std::collections::HashSet<_> = hs.iter().collect();
+            assert_eq!(set.len(), 4);
+            for w in hs.windows(2) {
+                assert_eq!((w[1] + 16 - w[0]) % 16, 4); // stride p/r = 4
+            }
+        }
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let d = dist(8, 64, 2, Some(8));
+        for x in 0..d.n_blocks() {
+            assert_eq!(d.unpermute_block(d.permute_block(x)), x);
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_offsets_within_unit() {
+        let d = dist(8, 64, 2, Some(8));
+        for x in (0..d.n_blocks()).step_by(8) {
+            let base = d.permute_block(x);
+            for off in 1..8 {
+                assert_eq!(d.permute_block(x + off), base + off);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_slice_inverts_holder() {
+        let d = dist(12, 48, 3, Some(4));
+        for pe in 0..12 {
+            for k in 0..3 {
+                let slice = d.stored_slice(pe, k);
+                // every permuted block in that slice has pe as its k-holder
+                for y in slice.start..slice.end {
+                    assert_eq!(d.holder(y, k), pe);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pieces_cover_request_and_respect_boundaries() {
+        let d = dist(8, 64, 2, Some(8));
+        let req = BlockRange::new(5, 200);
+        let mut pieces = Vec::new();
+        d.permuted_pieces(req, &mut pieces);
+        // total length preserved
+        assert_eq!(pieces.iter().map(|p| p.len).sum::<u64>(), req.len());
+        let mut orig = req.start;
+        for p in &pieces {
+            assert_eq!(p.orig_start, orig, "pieces in request order");
+            orig += p.len;
+            // no piece crosses a slice boundary
+            let first_slice = p.perm_start / 64;
+            let last_slice = (p.perm_start + p.len - 1) / 64;
+            assert_eq!(first_slice, last_slice);
+            // mapping is consistent with permute_block
+            assert_eq!(d.permute_block(p.orig_start), p.perm_start);
+        }
+    }
+
+    #[test]
+    fn groups_store_identical_data() {
+        let d = dist(8, 16, 2, Some(4));
+        // group stride p/r = 4: PEs 1 and 5 are in the same group
+        let slices =
+            |pe: usize| -> Vec<BlockRange> { (0..2).map(|k| d.stored_slice(pe, k)).collect() };
+        let a = slices(1);
+        let b = slices(5);
+        let sa: std::collections::HashSet<_> = a.into_iter().collect();
+        let sb: std::collections::HashSet<_> = b.into_iter().collect();
+        assert_eq!(sa, sb);
+        assert_eq!(d.group_of(1), d.group_of(5));
+        assert_ne!(d.group_of(1), d.group_of(2));
+    }
+
+    #[test]
+    fn no_permutation_keeps_shard_contiguous() {
+        let d = dist(4, 16, 2, None);
+        let mut pieces = Vec::new();
+        d.permuted_pieces(BlockRange::new(16, 32), &mut pieces);
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].perm_start, 16);
+    }
+}

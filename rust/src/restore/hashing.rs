@@ -1,0 +1,106 @@
+//! Hashing utilities shared by the permutation and repair distributions.
+//!
+//! The paper's Appendix builds its replica-repair probing sequences from
+//! "fast-to-compute hash functions that avoid collisions" plus coprimality
+//! checks against the prime factors of `p` (Distribution A) and a Feistel
+//! network with cycle walking (Distribution B). This module provides those
+//! primitives.
+
+/// SplitMix64 — a fast, well-mixed 64-bit hash (the paper's `f` / `h_s`).
+/// The seed parametrizes the family, `h_s(x) = splitmix64(x ^ mix(s))`.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// Seeded hash family.
+#[inline]
+pub fn seeded_hash(seed: u64, x: u64) -> u64 {
+    splitmix64(x ^ splitmix64(seed))
+}
+
+/// Prime factorization by trial division (run once per program start on the
+/// node count `p` — the paper's Appendix; Erdős–Kac: ~3 distinct factors
+/// for p < 10^9, so this is trivially fast for any realistic node count).
+pub fn prime_factors(mut n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = 2u64;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Is `x` coprime to the number whose distinct prime factors are `factors`?
+/// (The Appendix's "< m·1.65 divisions" check.)
+#[inline]
+pub fn coprime_to_factors(x: u64, factors: &[u64]) -> bool {
+    if x == 0 {
+        return false;
+    }
+    factors.iter().all(|&f| x % f != 0)
+}
+
+/// GCD (for tests / the slow path).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_spreads() {
+        assert_eq!(splitmix64(1), splitmix64(1));
+        assert_ne!(splitmix64(1), splitmix64(2));
+        // Low bits must vary too (used mod p).
+        let lows: std::collections::HashSet<u64> =
+            (0..1000u64).map(|x| splitmix64(x) % 64).collect();
+        assert!(lows.len() > 32);
+    }
+
+    #[test]
+    fn factors_of_500() {
+        // Paper's Appendix example: p = 500 has prime factors 2 and 5.
+        assert_eq!(prime_factors(500), vec![2, 5]);
+        assert_eq!(prime_factors(1), Vec::<u64>::new());
+        assert_eq!(prime_factors(97), vec![97]);
+        assert_eq!(prime_factors(24576), vec![2, 3]);
+    }
+
+    #[test]
+    fn coprimality_matches_gcd() {
+        let p = 500u64;
+        let fs = prime_factors(p);
+        for x in 1..200u64 {
+            assert_eq!(coprime_to_factors(x, &fs), gcd(x, p) == 1, "x={x}");
+        }
+        assert!(!coprime_to_factors(0, &fs));
+    }
+
+    #[test]
+    fn appendix_example_coprimality() {
+        // h_s(x)=3 coprime to 500; h_s(y)=20 not; h_s'(y)=7 coprime.
+        let fs = prime_factors(500);
+        assert!(coprime_to_factors(3, &fs));
+        assert!(!coprime_to_factors(20, &fs));
+        assert!(coprime_to_factors(7, &fs));
+    }
+}

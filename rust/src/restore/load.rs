@@ -1,0 +1,515 @@
+//! The load (recovery) path — what runs after every failure (§IV-A/§V).
+//!
+//! Two-phase protocol, the paper's preferred API mode 2 ("providing exactly
+//! those ID ranges each individual PE needs on exactly that PE"):
+//!
+//! 1. **Request resolution + request all-to-all.** Each requester maps its
+//!    block ranges to permuted pieces, picks one *serving PE* per piece
+//!    among the surviving replica holders (successive blocks with the same
+//!    holder set get the same server — minimizing the bottleneck number of
+//!    messages, §IV-A), and sends each chosen server one request message.
+//! 2. **Data sparse all-to-all.** Servers answer with one coalesced data
+//!    message per requester.
+//!
+//! The request-pattern helpers at the bottom generate the paper's three
+//! benchmark operations (§VI-B2) and the two recovery styles of §VI-D.2
+//! (single-target substitute-style and scattered shrinking-style).
+
+use std::collections::HashMap;
+
+use crate::config::ServerSelection;
+use crate::error::{Error, Result};
+use crate::restore::block::{BlockRange, RangeSet};
+use crate::restore::distribution::PermutedPiece;
+use crate::restore::hashing::seeded_hash;
+use crate::restore::{LoadOutput, LoadRequest, LoadedShard, ReStore};
+use crate::simnet::cluster::Cluster;
+
+/// Bytes per piece descriptor in a request message (perm_start, len, dest
+/// offset — what the sparse all-to-all of §V carries).
+const REQUEST_HEADER_BYTES: u64 = 24;
+
+/// A piece with its chosen server, requester, and output offset.
+#[derive(Debug, Clone, Copy)]
+struct RoutedPiece {
+    piece: PermutedPiece,
+    requester: usize,
+    /// Index into the `requests` slice (a PE may appear in several
+    /// requests; assembly is per-request, messaging per-PE).
+    req_idx: usize,
+    server: usize,
+    /// Byte offset in the request's output buffer.
+    out_offset: u64,
+}
+
+impl ReStore {
+    /// Load data after failures. `requests` lists, per requesting PE, the
+    /// original block ID ranges it needs (PEs with no needs may be absent).
+    ///
+    /// Returns the loaded bytes per requester (execution mode) and the
+    /// phase costs. Errors with [`Error::IrrecoverableDataLoss`] if all
+    /// `r` holders of some requested range are dead — the caller then falls
+    /// back to reloading input from disk, as the paper prescribes (§VI-B1).
+    pub fn load(&mut self, cluster: &mut Cluster, requests: &[LoadRequest]) -> Result<LoadOutput> {
+        self.ensure_submitted()?;
+        let dist = self.dist.clone();
+        let bs = self.cfg.block_size as u64;
+
+        // --- Phase 1a: request resolution (local, per requester) --------
+        let mut routed: Vec<RoutedPiece> = Vec::new();
+        let mut pieces: Vec<PermutedPiece> = Vec::new();
+        // Greedy per-server load for the LeastLoaded policy.
+        let mut server_load: HashMap<usize, u64> = HashMap::new();
+
+        for (req_idx, req) in requests.iter().enumerate() {
+            if !cluster.is_alive(req.pe) {
+                return Err(Error::DeadPe(req.pe));
+            }
+            let mut out_offset = 0u64;
+            for range in req.ranges.ranges() {
+                pieces.clear();
+                dist.permuted_pieces(*range, &mut pieces);
+                for piece in &pieces {
+                    let server =
+                        self.pick_server(cluster, req.pe, piece, &mut server_load)?;
+                    routed.push(RoutedPiece {
+                        piece: *piece,
+                        requester: req.pe,
+                        req_idx,
+                        server,
+                        out_offset,
+                    });
+                    out_offset += piece.len * bs;
+                }
+            }
+        }
+
+        // --- Phase 1b: request sparse all-to-all -------------------------
+        // One message per distinct (requester, server) pair carrying the
+        // piece descriptors.
+        let mut req_msgs: HashMap<(usize, usize), u64> = HashMap::new();
+        for rp in &routed {
+            *req_msgs.entry((rp.requester, rp.server)).or_insert(0) += REQUEST_HEADER_BYTES;
+        }
+        let request_cost =
+            cluster.charge_phase(req_msgs.iter().map(|(&(s, d), &b)| (s, d, b)))?;
+
+        // --- Phase 2: data sparse all-to-all ------------------------------
+        let mut data_msgs: HashMap<(usize, usize), u64> = HashMap::new();
+        for rp in &routed {
+            *data_msgs.entry((rp.server, rp.requester)).or_insert(0) += rp.piece.len * bs;
+        }
+        let mut phase = cluster.phase();
+        for (&(s, d), &b) in &data_msgs {
+            phase.add(s, d, b)?;
+        }
+        // every piece is a pack fragment on the server and an unpack
+        // fragment on the requester
+        for rp in &routed {
+            if rp.server != rp.requester {
+                phase.frag(rp.server, 1);
+                phase.frag(rp.requester, 1);
+            }
+        }
+        let data_cost = phase.commit();
+
+        // --- Assemble outputs (execution mode) ---------------------------
+        let execution = self
+            .stores
+            .iter()
+            .any(|st| st.slices().first().is_some_and(|s| matches!(s.buf, crate::restore::store::SliceBuf::Real(_))));
+        let mut shards: Vec<LoadedShard> = requests
+            .iter()
+            .map(|r| LoadedShard {
+                pe: r.pe,
+                bytes: execution
+                    .then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]),
+            })
+            .collect();
+        if execution {
+            for rp in &routed {
+                let src = self.stores[rp.server]
+                    .read(rp.piece.perm_start, rp.piece.len)
+                    .expect("execution-mode store must hold real bytes");
+                let dst = shards[rp.req_idx].bytes.as_mut().unwrap();
+                let off = rp.out_offset as usize;
+                dst[off..off + src.len()].copy_from_slice(src);
+            }
+        }
+
+        Ok(LoadOutput {
+            shards,
+            request_cost,
+            data_cost,
+            cost: request_cost.then(data_cost),
+        })
+    }
+
+    /// Pick the serving PE for one piece among the surviving holders.
+    fn pick_server(
+        &self,
+        cluster: &Cluster,
+        requester: usize,
+        piece: &PermutedPiece,
+        server_load: &mut HashMap<usize, u64>,
+    ) -> Result<usize> {
+        let dist = &self.dist;
+        let mut alive: Vec<usize> = (0..dist.replicas())
+            .map(|k| dist.holder(piece.perm_start, k))
+            .filter(|&pe| cluster.is_alive(pe))
+            .collect();
+        if alive.is_empty() {
+            // All deterministic §IV-A holders are dead — consult replicas
+            // re-created by §IV-E repair (in the paper's design a repaired
+            // placement is recomputable from the probing sequence; the
+            // simulator checks the stores directly, which is equivalent).
+            alive = cluster
+                .survivors()
+                .into_iter()
+                .filter(|&pe| self.stores[pe].holds(piece.perm_start, piece.len))
+                .collect();
+        }
+        if alive.is_empty() {
+            let orig = dist.unpermute_block(piece.perm_start);
+            return Err(Error::IrrecoverableDataLoss { start: orig, end: orig + piece.len });
+        }
+        let chosen = match self.cfg.server_selection {
+            ServerSelection::Random => {
+                // Same (requester, slice, epoch) -> same server: successive
+                // blocks with the same holder set share one sender (§IV-A).
+                let slice = piece.perm_start / dist.blocks_per_pe();
+                let h = seeded_hash(
+                    self.cfg.seed ^ cluster.epoch,
+                    ((requester as u64) << 32) ^ slice,
+                );
+                alive[(h % alive.len() as u64) as usize]
+            }
+            ServerSelection::LeastLoaded => *alive
+                .iter()
+                .min_by_key(|pe| server_load.get(pe).copied().unwrap_or(0))
+                .unwrap(),
+            ServerSelection::Primary => alive[0],
+        };
+        *server_load.entry(chosen).or_insert(0) += piece.len * self.cfg.block_size as u64;
+        Ok(chosen)
+    }
+}
+
+/// Requests that redistribute the `failed` PEs' shards evenly over the
+/// survivors — the *shrinking* recovery of §IV-B: survivor number `j` (in
+/// survivor order) receives blocks
+/// `[i·n/p + j·n/(p·(p-1)), i·n/p + (j+1)·n/(p·(p-1)))` of failed PE `i`.
+pub fn scatter_requests(store: &ReStore, cluster: &Cluster, failed: &[usize]) -> Vec<LoadRequest> {
+    let dist = store.distribution();
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    if ns == 0 {
+        return Vec::new();
+    }
+    let mut per_pe: Vec<Vec<BlockRange>> = vec![Vec::new(); survivors.len()];
+    for &dead in failed {
+        let shard = dist.shard_of(dead);
+        let len = shard.len();
+        for (j, ranges) in per_pe.iter_mut().enumerate() {
+            let start = shard.start + (j as u64 * len) / ns;
+            let end = shard.start + ((j as u64 + 1) * len) / ns;
+            if start < end {
+                ranges.push(BlockRange::new(start, end));
+            }
+        }
+    }
+    survivors
+        .iter()
+        .zip(per_pe)
+        .filter(|(_, ranges)| !ranges.is_empty())
+        .map(|(&pe, ranges)| LoadRequest { pe, ranges: RangeSet::new(ranges) })
+        .collect()
+}
+
+/// Wrap a load-balancer output (per-PE gained range sets) into requests.
+pub fn scatter_requests_for_ranges(gained: &[(usize, RangeSet)]) -> Vec<LoadRequest> {
+    gained
+        .iter()
+        .filter(|(_, set)| !set.is_empty())
+        .map(|(pe, set)| LoadRequest { pe: *pe, ranges: set.clone() })
+        .collect()
+}
+
+/// Requests that send the `failed` PEs' whole shards to a single `target`
+/// PE — the *substitute*-style recovery benchmarked in §VI-D.2.
+pub fn single_target_requests(
+    store: &ReStore,
+    failed: &[usize],
+    target: usize,
+) -> Vec<LoadRequest> {
+    let dist = store.distribution();
+    let ranges: Vec<BlockRange> = failed.iter().map(|&pe| dist.shard_of(pe)).collect();
+    vec![LoadRequest { pe: target, ranges: RangeSet::new(ranges) }]
+}
+
+/// The paper's *load 1 % data* benchmark op (§VI-B2): the contiguous data
+/// of 1 % of the PEs (starting at a random PE `i`), spread evenly over all
+/// alive PEs.
+pub fn load_percent_requests(
+    store: &ReStore,
+    cluster: &Cluster,
+    percent: f64,
+    start_pe: usize,
+) -> Vec<LoadRequest> {
+    let dist = store.distribution();
+    let p = dist.world();
+    let bpp = dist.blocks_per_pe();
+    let blocks = ((p as f64 * percent / 100.0) * bpp as f64).round() as u64;
+    let start = (start_pe as u64 * bpp) % dist.n_blocks();
+    let end = (start + blocks).min(dist.n_blocks());
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    let len = end - start;
+    survivors
+        .iter()
+        .enumerate()
+        .filter_map(|(j, &pe)| {
+            let s = start + (j as u64 * len) / ns;
+            let e = start + ((j as u64 + 1) * len) / ns;
+            (s < e).then(|| LoadRequest {
+                pe,
+                ranges: RangeSet::new(vec![BlockRange::new(s, e)]),
+            })
+        })
+        .collect()
+}
+
+/// The paper's *load all data* benchmark op (§VI-B2): all data, evenly
+/// distributed, "in a way that no PE loads the same data it originally
+/// submitted" — survivor `j` loads the shard-rotated region starting one
+/// whole shard after its own.
+pub fn load_all_requests(store: &ReStore, cluster: &Cluster) -> Vec<LoadRequest> {
+    let dist = store.distribution();
+    let n = dist.n_blocks();
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    // Rotate the even partition of [0, n) by exactly one shard: with all
+    // PEs alive, survivor j loads precisely PE j+1's shard — never its own.
+    let shift = dist.blocks_per_pe() % n;
+    survivors
+        .iter()
+        .enumerate()
+        .map(|(j, &pe)| {
+            let s = (j as u64 * n) / ns;
+            let e = ((j as u64 + 1) * n) / ns;
+            let (rs, re) = ((s + shift) % n, (e + shift) % n);
+            let ranges = if rs < re || e == s {
+                vec![BlockRange::new(rs, re.max(rs))]
+            } else {
+                vec![BlockRange::new(rs, n), BlockRange::new(0, re)]
+            };
+            LoadRequest { pe, ranges: RangeSet::new(ranges) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+
+    fn setup(
+        p: usize,
+        bpp: usize,
+        r: usize,
+        s_pr: Option<usize>,
+    ) -> (Cluster, ReStore, Vec<Vec<u8>>) {
+        let cfg = RestoreConfig::builder(p, 8, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4.min(p));
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards: Vec<Vec<u8>> = (0..p)
+            .map(|pe| (0..bpp * 8).map(|i| (pe * 131 + i * 7) as u8).collect())
+            .collect();
+        rs.submit(&mut cluster, &shards).unwrap();
+        (cluster, rs, shards)
+    }
+
+    fn expected_bytes(shards: &[Vec<u8>], ranges: &RangeSet, bpp: u64) -> Vec<u8> {
+        let mut out = Vec::new();
+        for r in ranges.ranges() {
+            for x in r.start..r.end {
+                let pe = (x / bpp) as usize;
+                let off = ((x % bpp) * 8) as usize;
+                out.extend_from_slice(&shards[pe][off..off + 8]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn scattered_recovery_restores_exact_bytes() {
+        let (mut cluster, mut rs, shards) = setup(8, 64, 4, Some(16));
+        cluster.kill(&[3]);
+        let reqs = scatter_requests(&rs, &cluster, &[3]);
+        assert_eq!(reqs.len(), 7);
+        let total: u64 = reqs.iter().map(|r| r.ranges.total_blocks()).sum();
+        assert_eq!(total, 64); // the whole lost shard
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            assert_eq!(shard.pe, req.pe);
+            assert_eq!(
+                shard.bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &req.ranges, 64),
+                "PE {}",
+                req.pe
+            );
+        }
+    }
+
+    #[test]
+    fn single_target_recovery_restores_exact_bytes() {
+        let (mut cluster, mut rs, shards) = setup(8, 64, 4, None);
+        cluster.kill(&[5]);
+        let reqs = single_target_requests(&rs, &[5], 0);
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        assert_eq!(
+            out.shards[0].bytes.as_deref().unwrap(),
+            expected_bytes(&shards, &reqs[0].ranges, 64)
+        );
+    }
+
+    #[test]
+    fn load_survives_r_minus_1_failures_of_a_group() {
+        let (mut cluster, mut rs, shards) = setup(8, 64, 4, Some(16));
+        // group stride p/r = 2; PEs {1, 3, 5, 7} form a group. Kill 3 of 4.
+        cluster.kill(&[1, 3, 5]);
+        let reqs = scatter_requests(&rs, &cluster, &[1, 3, 5]);
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        let total: usize = out.shards.iter().map(|s| s.bytes.as_ref().unwrap().len()).sum();
+        assert_eq!(total, 3 * 64 * 8);
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            assert_eq!(
+                shard.bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &req.ranges, 64)
+            );
+        }
+    }
+
+    #[test]
+    fn idl_detected_when_whole_group_dies() {
+        let (mut cluster, mut rs, _) = setup(8, 64, 4, Some(16));
+        cluster.kill(&[1, 3, 5, 7]); // an entire §IV-D group
+        let reqs = scatter_requests(&rs, &cluster, &[1]);
+        match rs.load(&mut cluster, &reqs) {
+            Err(Error::IrrecoverableDataLoss { .. }) => {}
+            other => panic!("expected IDL, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_before_submit_fails() {
+        let cfg = RestoreConfig::builder(4, 8, 16).replicas(2).build().unwrap();
+        let mut cluster = Cluster::new_execution(4, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        assert!(matches!(
+            rs.load(&mut cluster, &[]),
+            Err(Error::NotSubmitted)
+        ));
+    }
+
+    #[test]
+    fn dead_requester_rejected() {
+        let (mut cluster, mut rs, _) = setup(4, 16, 2, None);
+        cluster.kill(&[2]);
+        let reqs = vec![LoadRequest {
+            pe: 2,
+            ranges: RangeSet::new(vec![BlockRange::new(0, 4)]),
+        }];
+        assert!(matches!(rs.load(&mut cluster, &reqs), Err(Error::DeadPe(2))));
+    }
+
+    #[test]
+    fn permutation_spreads_servers_for_contiguous_request() {
+        // §IV-B: with permutation, a failed PE's shard is served by many
+        // senders; without, by at most r (minus failures).
+        let (mut c1, mut rs1, _) = setup(16, 256, 4, Some(8));
+        let (mut c2, mut rs2, _) = setup(16, 256, 4, None);
+        c1.kill(&[0]);
+        c2.kill(&[0]);
+        let r1 = scatter_requests(&rs1, &c1, &[0]);
+        let r2 = scatter_requests(&rs2, &c2, &[0]);
+        let o1 = rs1.load(&mut c1, &r1).unwrap();
+        let o2 = rs2.load(&mut c2, &r2).unwrap();
+        assert!(
+            o1.data_cost.total_msgs > o2.data_cost.total_msgs,
+            "perm {} !> plain {}",
+            o1.data_cost.total_msgs,
+            o2.data_cost.total_msgs
+        );
+        // ...and the permuted bottleneck volume is lower
+        assert!(o1.data_cost.bottleneck_bytes <= o2.data_cost.bottleneck_bytes);
+    }
+
+    #[test]
+    fn load_percent_requests_cover_expected_volume() {
+        let (cluster, rs, _) = setup(16, 256, 4, Some(8));
+        // 25 % of 16 PEs = 4 shards' worth of blocks
+        let reqs = load_percent_requests(&rs, &cluster, 25.0, 3);
+        let total: u64 = reqs.iter().map(|r| r.ranges.total_blocks()).sum();
+        assert_eq!(total, 4 * 256);
+    }
+
+    #[test]
+    fn load_all_covers_everything_and_avoids_own_shard() {
+        let (mut cluster, mut rs, shards) = setup(8, 64, 4, None);
+        let reqs = load_all_requests(&rs, &cluster);
+        let total: u64 = reqs.iter().map(|r| r.ranges.total_blocks()).sum();
+        assert_eq!(total, 8 * 64);
+        // no PE requests its own shard
+        for req in &reqs {
+            let own = rs.distribution().shard_of(req.pe);
+            for r in req.ranges.ranges() {
+                assert!(r.intersect(&own).is_none(), "PE {} loads own data", req.pe);
+            }
+        }
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            assert_eq!(
+                shard.bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &req.ranges, 64)
+            );
+        }
+    }
+
+    #[test]
+    fn server_selection_policies_all_recover() {
+        for policy in [
+            ServerSelection::Random,
+            ServerSelection::LeastLoaded,
+            ServerSelection::Primary,
+        ] {
+            let cfg = RestoreConfig::builder(8, 8, 64, )
+                .replicas(4)
+                .perm_range_blocks(Some(16))
+                .server_selection(policy)
+                .build();
+            let cfg = match cfg {
+                Ok(c) => c,
+                Err(e) => panic!("{e}"),
+            };
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            let shards: Vec<Vec<u8>> =
+                (0..8).map(|pe| vec![pe as u8; 64 * 8]).collect();
+            rs.submit(&mut cluster, &shards).unwrap();
+            cluster.kill(&[2]);
+            let reqs = scatter_requests(&rs, &cluster, &[2]);
+            let out = rs.load(&mut cluster, &reqs).unwrap();
+            let total: usize =
+                out.shards.iter().map(|s| s.bytes.as_ref().unwrap().len()).sum();
+            assert_eq!(total, 64 * 8, "policy {policy:?}");
+            for s in &out.shards {
+                assert!(s.bytes.as_ref().unwrap().iter().all(|&b| b == 2));
+            }
+        }
+    }
+}

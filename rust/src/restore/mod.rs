@@ -1,0 +1,138 @@
+//! The ReStore library core (§IV + §V of the paper).
+//!
+//! * [`block`] — block IDs, ranges, range sets.
+//! * [`distribution`] — the placement function `L(x,k)` with permutation
+//!   ranges.
+//! * [`permutation`] — Feistel range permutation (and identity).
+//! * [`store`] — per-PE in-memory replica storage.
+//! * [`submit`] — the one-time checkpoint creation path.
+//! * [`load`] — the recovery path (request resolution + sparse all-to-all),
+//!   plus the request-pattern helpers for the paper's three benchmark
+//!   operations (*load 1 %*, *load all*, scattered/single-target recovery).
+//! * [`idl`] — §IV-D irrecoverable-data-loss probabilities (exact
+//!   inclusion–exclusion, the small-f approximation, and the Monte-Carlo
+//!   failure simulator behind Fig 3).
+//! * [`repair`] — §IV-E replica re-creation after failures (Appendix
+//!   Distributions A and B).
+//! * [`serialize`] — typed helpers to move `f32`/`u64` app data in and out
+//!   of block payloads.
+
+pub mod block;
+pub mod distribution;
+pub mod hashing;
+pub mod idl;
+pub mod load;
+pub mod permutation;
+pub mod repair;
+pub mod serialize;
+pub mod store;
+pub mod submit;
+
+use crate::config::RestoreConfig;
+use crate::error::{Error, Result};
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+
+use block::RangeSet;
+use distribution::Distribution;
+use store::PeStore;
+
+/// A per-PE load request: the *original* block ID ranges this PE wants.
+/// (The paper's preferred API mode: "providing exactly those ID ranges each
+/// individual PE needs on exactly that PE", §V.)
+#[derive(Debug, Clone)]
+pub struct LoadRequest {
+    pub pe: usize,
+    pub ranges: RangeSet,
+}
+
+/// Data loaded for one requesting PE, in request order.
+#[derive(Debug, Clone)]
+pub struct LoadedShard {
+    pub pe: usize,
+    /// `Some(bytes)` in execution mode, `None` in cost-model mode.
+    pub bytes: Option<Vec<u8>>,
+}
+
+/// Result of a [`ReStore::load`].
+#[derive(Debug, Clone)]
+pub struct LoadOutput {
+    pub shards: Vec<LoadedShard>,
+    /// Cost of the request sparse all-to-all (phase 1).
+    pub request_cost: PhaseCost,
+    /// Cost of the data sparse all-to-all (phase 2).
+    pub data_cost: PhaseCost,
+    /// Total (= request + data).
+    pub cost: PhaseCost,
+}
+
+/// Result of a [`ReStore::submit`].
+#[derive(Debug, Clone)]
+pub struct SubmitReport {
+    pub cost: PhaseCost,
+}
+
+/// The replicated in-memory storage over a (simulated) cluster.
+///
+/// One `ReStore` instance owns the stores of *all* PEs — the simulator's
+/// global view of what, in the paper's C++ library, is one instance per MPI
+/// rank. All placement, routing and scheduling decisions are computed
+/// per-PE exactly as each rank would compute them locally.
+pub struct ReStore {
+    cfg: RestoreConfig,
+    dist: Distribution,
+    stores: Vec<PeStore>,
+    submitted: bool,
+}
+
+impl ReStore {
+    /// Create an instance sized for `cluster`'s world.
+    pub fn new(cfg: RestoreConfig, cluster: &Cluster) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.world != cluster.world() {
+            return Err(Error::Config(format!(
+                "config world {} != cluster world {}",
+                cfg.world,
+                cluster.world()
+            )));
+        }
+        let dist = Distribution::new(&cfg);
+        let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
+        Ok(ReStore { cfg, dist, stores, submitted: false })
+    }
+
+    pub fn config(&self) -> &RestoreConfig {
+        &self.cfg
+    }
+
+    pub fn distribution(&self) -> &Distribution {
+        &self.dist
+    }
+
+    pub fn stores(&self) -> &[PeStore] {
+        &self.stores
+    }
+
+    pub fn is_submitted(&self) -> bool {
+        self.submitted
+    }
+
+    pub(crate) fn stores_mut(&mut self) -> &mut Vec<PeStore> {
+        &mut self.stores
+    }
+
+    pub(crate) fn mark_submitted(&mut self) -> Result<()> {
+        if self.submitted {
+            return Err(Error::AlreadySubmitted);
+        }
+        self.submitted = true;
+        Ok(())
+    }
+
+    pub(crate) fn ensure_submitted(&self) -> Result<()> {
+        if !self.submitted {
+            return Err(Error::NotSubmitted);
+        }
+        Ok(())
+    }
+}

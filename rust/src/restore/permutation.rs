@@ -1,0 +1,188 @@
+//! Pseudorandom permutations of permutation-range indices (§IV-B).
+//!
+//! The paper permutes the IDs of *permutation ranges* (groups of `s_pr`
+//! blocks) so that a failed PE's data is scattered over many senders during
+//! recovery. The permutation must be computable by every PE without
+//! communication and invertible in O(1) — we use a 4-round Feistel network
+//! with cycle walking (exactly the construction the paper's own Appendix
+//! proposes as "Data Distribution B").
+
+use crate::restore::hashing::seeded_hash;
+
+/// An invertible permutation over `[0, domain)`.
+pub trait RangePermutation: Send + Sync {
+    fn domain(&self) -> u64;
+    /// Forward map (original range index -> permuted slot).
+    fn apply(&self, idx: u64) -> u64;
+    /// Inverse map (permuted slot -> original range index).
+    fn invert(&self, idx: u64) -> u64;
+}
+
+/// The identity permutation (permutation ranges disabled).
+#[derive(Debug, Clone, Copy)]
+pub struct Identity {
+    pub domain: u64,
+}
+
+impl RangePermutation for Identity {
+    fn domain(&self) -> u64 {
+        self.domain
+    }
+
+    fn apply(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.domain);
+        idx
+    }
+
+    fn invert(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.domain);
+        idx
+    }
+}
+
+const ROUNDS: usize = 4;
+
+/// Feistel-network permutation over `[0, domain)` via cycle walking.
+///
+/// A balanced Feistel over `half_bits × 2` bits is a bijection on
+/// `[0, 2^(2·half_bits))`; values landing `>= domain` are re-encrypted
+/// until they fall inside (cycle walking). Expected walks `< 4` since the
+/// power-of-two envelope is at most 4× the domain.
+#[derive(Debug, Clone)]
+pub struct Feistel {
+    domain: u64,
+    half_bits: u32,
+    keys: [u64; ROUNDS],
+}
+
+impl Feistel {
+    pub fn new(domain: u64, seed: u64) -> Self {
+        assert!(domain > 0);
+        // envelope = smallest even-bit power of two >= domain
+        let bits = 64 - (domain.max(2) - 1).leading_zeros();
+        let half_bits = bits.div_ceil(2);
+        let mut keys = [0u64; ROUNDS];
+        for (i, k) in keys.iter_mut().enumerate() {
+            *k = seeded_hash(seed, i as u64 ^ 0xFE157E1);
+        }
+        Feistel { domain, half_bits, keys }
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        (1u64 << self.half_bits) - 1
+    }
+
+    #[inline]
+    fn round(&self, key: u64, x: u64) -> u64 {
+        seeded_hash(key, x) & self.mask()
+    }
+
+    #[inline]
+    fn encrypt_once(&self, v: u64) -> u64 {
+        let mut l = v >> self.half_bits;
+        let mut r = v & self.mask();
+        for k in self.keys {
+            let nl = r;
+            let nr = l ^ self.round(k, r);
+            l = nl;
+            r = nr;
+        }
+        (l << self.half_bits) | r
+    }
+
+    #[inline]
+    fn decrypt_once(&self, v: u64) -> u64 {
+        let mut l = v >> self.half_bits;
+        let mut r = v & self.mask();
+        for k in self.keys.iter().rev() {
+            let nr = l;
+            let nl = r ^ self.round(*k, l);
+            l = nl;
+            r = nr;
+        }
+        (l << self.half_bits) | r
+    }
+}
+
+impl RangePermutation for Feistel {
+    fn domain(&self) -> u64 {
+        self.domain
+    }
+
+    fn apply(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.domain);
+        let mut v = self.encrypt_once(idx);
+        while v >= self.domain {
+            v = self.encrypt_once(v);
+        }
+        v
+    }
+
+    fn invert(&self, idx: u64) -> u64 {
+        debug_assert!(idx < self.domain);
+        let mut v = self.decrypt_once(idx);
+        while v >= self.domain {
+            v = self.decrypt_once(v);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let p = Identity { domain: 100 };
+        assert_eq!(p.apply(42), 42);
+        assert_eq!(p.invert(42), 42);
+    }
+
+    #[test]
+    fn feistel_is_a_bijection_small_domains() {
+        for domain in [1u64, 2, 3, 7, 64, 100, 257, 4096, 5000] {
+            let f = Feistel::new(domain, 0xABCD);
+            let mut seen = vec![false; domain as usize];
+            for i in 0..domain {
+                let y = f.apply(i);
+                assert!(y < domain, "domain {domain}: {i} -> {y}");
+                assert!(!seen[y as usize], "collision at {y}");
+                seen[y as usize] = true;
+                assert_eq!(f.invert(y), i, "inverse mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn feistel_differs_by_seed() {
+        let a = Feistel::new(1024, 1);
+        let b = Feistel::new(1024, 2);
+        let same = (0..1024).filter(|&i| a.apply(i) == b.apply(i)).count();
+        assert!(same < 32, "seeds produce near-identical permutations");
+    }
+
+    #[test]
+    fn feistel_scatters_consecutive_indices() {
+        // The whole point of §IV-B: consecutive ranges must not stay
+        // consecutive. Check mean displacement is large.
+        let n = 1u64 << 16;
+        let f = Feistel::new(n, 7);
+        let mut adjacent = 0;
+        for i in 0..n - 1 {
+            if f.apply(i + 1).abs_diff(f.apply(i)) == 1 {
+                adjacent += 1;
+            }
+        }
+        assert!(adjacent < 8, "{adjacent} adjacent pairs survived");
+    }
+
+    #[test]
+    fn feistel_large_domain_roundtrip() {
+        let f = Feistel::new(1 << 40, 99);
+        for i in [0u64, 1, 12345, (1 << 40) - 1, 987654321] {
+            assert_eq!(f.invert(f.apply(i)), i);
+        }
+    }
+}

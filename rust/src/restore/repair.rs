@@ -1,0 +1,358 @@
+//! Replica repair after failures (§IV-E + Appendix).
+//!
+//! The paper proposes (as future work — "currently unimplemented" in their
+//! C++ library; we implement it) restoring the replication level after a
+//! failure *without* moving surviving replicas: each block (or permutation
+//! range) `x` has an unbounded probing sequence `ρ_x` of PEs; its replicas
+//! live on the first `r` alive entries. When a PE dies, each replica it
+//! held is re-created on the next alive PE of that replica's sequence.
+//!
+//! Two sequence constructions from the Appendix:
+//!
+//! * **Distribution A** — double hashing: `ρ_x(k) = (f(x) + k·h_s(x)) mod p`
+//!   with `h_s(x)` forced coprime to `p` by seed-retry (expected ≈ 1.65
+//!   tries, checked against the paper's own √ formula in tests). Coprime
+//!   step ⇒ the probe sequence visits all `p` PEs before repeating.
+//! * **Distribution B** — a seeded Feistel permutation of `[0, p)` walked
+//!   in order (independent per block).
+//!
+//! Both support the refined §IV-E hybrid: the first `r` placements follow
+//! the §IV-A deterministic layout (perfect balance), the probing sequence
+//! only takes over for replacements — `O(r + f)` time, `O(1)` space.
+
+use std::collections::HashMap;
+
+use crate::restore::hashing::{coprime_to_factors, prime_factors, seeded_hash};
+use crate::restore::permutation::{Feistel, RangePermutation};
+
+/// Appendix probing-sequence constructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepairScheme {
+    /// Double hashing with coprime steps.
+    DoubleHashing,
+    /// Per-block seeded Feistel permutation of `[0, p)`.
+    FeistelWalk,
+}
+
+/// Probing-sequence generator for a world of `p` PEs.
+pub struct ProbeSequences {
+    p: u64,
+    seed: u64,
+    scheme: RepairScheme,
+    factors: Vec<u64>,
+    /// Stats: seed retries performed while searching coprime step values
+    /// (to validate the Appendix's expected ≈1.65 evaluations).
+    pub seed_trials: std::cell::Cell<u64>,
+    pub seed_calls: std::cell::Cell<u64>,
+}
+
+impl ProbeSequences {
+    pub fn new(p: usize, seed: u64, scheme: RepairScheme) -> Self {
+        ProbeSequences {
+            p: p as u64,
+            seed,
+            scheme,
+            factors: prime_factors(p as u64),
+            seed_trials: std::cell::Cell::new(0),
+            seed_calls: std::cell::Cell::new(0),
+        }
+    }
+
+    /// `ρ_x(k)`: the k-th PE in block `x`'s probing sequence.
+    pub fn probe(&self, x: u64, k: u64) -> usize {
+        match self.scheme {
+            RepairScheme::DoubleHashing => {
+                let f0 = seeded_hash(self.seed, x) % self.p;
+                let step = self.coprime_step(x);
+                ((f0 + (k % self.p) * step) % self.p) as usize
+            }
+            RepairScheme::FeistelWalk => {
+                let perm = Feistel::new(self.p, seeded_hash(self.seed, x));
+                perm.apply(k % self.p) as usize
+            }
+        }
+    }
+
+    /// Step value coprime to `p`, found by retrying seeds (Appendix A.1).
+    fn coprime_step(&self, x: u64) -> u64 {
+        self.seed_calls.set(self.seed_calls.get() + 1);
+        if self.p == 1 {
+            return 0;
+        }
+        for trial in 0.. {
+            self.seed_trials.set(self.seed_trials.get() + 1);
+            let h = seeded_hash(self.seed ^ (0xC0FFEE + trial), x) % self.p;
+            if h != 0 && coprime_to_factors(h, &self.factors) {
+                return h;
+            }
+        }
+        unreachable!()
+    }
+
+    /// First `r` alive PEs of `x`'s sequence under the §IV-E *hybrid*
+    /// placement: positions `k < r` come from the deterministic §IV-A
+    /// layout (`deterministic(k)`), later positions from the probing
+    /// sequence, skipping dead PEs and duplicates.
+    pub fn replica_homes(
+        &self,
+        x: u64,
+        r: usize,
+        alive: impl Fn(usize) -> bool,
+        deterministic: impl Fn(usize) -> usize,
+    ) -> Vec<usize> {
+        let mut homes = Vec::with_capacity(r);
+        for k in 0..r {
+            let pe = deterministic(k);
+            if alive(pe) && !homes.contains(&pe) {
+                homes.push(pe);
+            }
+        }
+        let mut k = 0u64;
+        while homes.len() < r && (k as usize) < 4 * self.p as usize {
+            let pe = self.probe(x, k);
+            if alive(pe) && !homes.contains(&pe) {
+                homes.push(pe);
+            }
+            k += 1;
+        }
+        homes
+    }
+}
+
+/// A repair transfer: copy the permuted range starting at `perm_start`
+/// (length `blocks`) from surviving holder `src` to new holder `dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepairTransfer {
+    pub perm_start: u64,
+    pub blocks: u64,
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Plan the repair of all replicas lost with the `newly_dead` PEs.
+///
+/// `units` enumerates the (permuted) storage units as
+/// `(unit_id, perm_start, blocks)`; `holders_of` returns the *current*
+/// (pre-repair) surviving holders of a unit; `old_homes`/`new_homes` are
+/// the replica home sets before/after marking the PEs dead. The planner
+/// emits one transfer per (unit, lost replica), sourcing round-robin from
+/// the survivors.
+pub fn plan_repairs(
+    units: &[(u64, u64, u64)],
+    old_homes: impl Fn(u64) -> Vec<usize>,
+    new_homes: impl Fn(u64) -> Vec<usize>,
+) -> Vec<RepairTransfer> {
+    let mut out = Vec::new();
+    let mut rr: HashMap<u64, usize> = HashMap::new();
+    for &(unit, perm_start, blocks) in units {
+        let old = old_homes(unit);
+        let new = new_homes(unit);
+        let survivors: Vec<usize> =
+            old.iter().copied().filter(|pe| new.contains(pe)).collect();
+        if survivors.is_empty() {
+            continue; // IDL: nothing to repair from
+        }
+        for &home in &new {
+            if !old.contains(&home) {
+                let idx = rr.entry(unit).or_insert(0);
+                let src = survivors[*idx % survivors.len()];
+                *idx += 1;
+                out.push(RepairTransfer { perm_start, blocks, src, dst: home });
+            }
+        }
+    }
+    out
+}
+
+/// Report of a [`ReStore::repair_replicas`] run.
+#[derive(Debug, Clone, Default)]
+pub struct RepairReport {
+    /// Transfers executed (one per re-created replica unit).
+    pub transfers: usize,
+    /// Units whose replicas were ALL lost (unrepairable; the §IV-D IDL
+    /// event — the caller should fall back to reloading from disk).
+    pub unrepairable: usize,
+    /// Network cost of the repair phase.
+    pub cost: crate::simnet::network::PhaseCost,
+}
+
+impl crate::restore::ReStore {
+    /// §IV-E: re-create the replicas lost with the currently-dead PEs on
+    /// the next alive PE of each unit's probing sequence, leaving all
+    /// surviving replicas in place. Uses the *hybrid* placement: the first
+    /// `r` homes are the deterministic §IV-A layout, replacements come
+    /// from `scheme`'s probing sequence. Permutation-range granularity
+    /// (§IV-E last paragraph): one unit per stored slice.
+    ///
+    /// Idempotent: repairing twice after the same failures moves nothing
+    /// the second time.
+    pub fn repair_replicas(
+        &mut self,
+        cluster: &mut crate::simnet::cluster::Cluster,
+        scheme: RepairScheme,
+    ) -> crate::error::Result<RepairReport> {
+        use crate::restore::store::SliceBuf;
+
+        self.ensure_submitted()?;
+        let dist = self.distribution().clone();
+        let p = dist.world();
+        let r = dist.replicas();
+        let seqs = ProbeSequences::new(p, self.config().seed ^ 0x4E9A12_u64, scheme);
+        let bs = self.config().block_size as u64;
+
+        // units = permuted slices (grouped per primary slice owner)
+        let alive = |pe: usize| cluster.is_alive(pe);
+        let stride = dist.copy_stride();
+        let offset = dist.placement_offset();
+        let mut transfers: Vec<RepairTransfer> = Vec::new();
+        let mut unrepairable = 0usize;
+        for primary in 0..p {
+            let det = |k: usize| (primary + k * stride + offset) % p;
+            let unit = primary as u64;
+            let homes = seqs.replica_homes(unit, r, alive, det);
+            if homes.is_empty() {
+                unrepairable += 1;
+                continue;
+            }
+            if homes.len() < r {
+                // fewer than r alive PEs overall; keep what we can
+            }
+            let slice_start = unit * dist.blocks_per_pe();
+            let len = dist.blocks_per_pe();
+            // current alive holders of this slice
+            let holders: Vec<usize> = (0..p)
+                .filter(|&pe| alive(pe) && self.stores()[pe].holds(slice_start, len))
+                .collect();
+            if holders.is_empty() {
+                unrepairable += 1;
+                continue;
+            }
+            for (i, &home) in homes.iter().enumerate() {
+                if !self.stores()[home].holds(slice_start, len) {
+                    transfers.push(RepairTransfer {
+                        perm_start: slice_start,
+                        blocks: len,
+                        src: holders[i % holders.len()],
+                        dst: home,
+                    });
+                }
+            }
+        }
+
+        // charge + execute
+        let mut phase = cluster.phase();
+        for t in &transfers {
+            phase.add(t.src, t.dst, t.blocks * bs)?;
+        }
+        let cost = phase.commit();
+        for t in &transfers {
+            let buf = match self.stores()[t.src].read(t.perm_start, t.blocks) {
+                Some(bytes) => SliceBuf::Real(bytes.to_vec()),
+                None => SliceBuf::Virtual(t.blocks * bs),
+            };
+            let range = crate::restore::block::BlockRange::new(
+                t.perm_start,
+                t.perm_start + t.blocks,
+            );
+            self.stores_mut()[t.dst].insert(range, buf);
+        }
+
+        Ok(RepairReport { transfers: transfers.len(), unrepairable, cost })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn double_hashing_visits_all_pes() {
+        // coprime step => the sequence is a full cycle over [0, p)
+        let p = 500usize; // Appendix example: factors {2, 5}
+        let seqs = ProbeSequences::new(p, 7, RepairScheme::DoubleHashing);
+        for x in [0u64, 1, 42, 9999] {
+            let seen: HashSet<usize> = (0..p as u64).map(|k| seqs.probe(x, k)).collect();
+            assert_eq!(seen.len(), p, "x={x} sequence is not a full cycle");
+        }
+    }
+
+    #[test]
+    fn feistel_walk_visits_all_pes() {
+        let p = 97usize;
+        let seqs = ProbeSequences::new(p, 7, RepairScheme::FeistelWalk);
+        for x in [0u64, 5, 1234] {
+            let seen: HashSet<usize> = (0..p as u64).map(|k| seqs.probe(x, k)).collect();
+            assert_eq!(seen.len(), p);
+        }
+    }
+
+    #[test]
+    fn expected_seed_trials_near_paper_value() {
+        // Appendix: E[trials] = 7/6·(π²−6) ≈ 1.65 for random p. For
+        // p = 500 (factors 2, 5): P(coprime) = 1/2·4/5 = 0.4 ⇒ E = 2.5.
+        let seqs = ProbeSequences::new(500, 99, RepairScheme::DoubleHashing);
+        for x in 0..2000u64 {
+            seqs.probe(x, 1);
+        }
+        let avg = seqs.seed_trials.get() as f64 / seqs.seed_calls.get() as f64;
+        assert!((avg - 2.5).abs() < 0.2, "avg trials {avg}");
+    }
+
+    #[test]
+    fn replica_homes_prefers_deterministic_when_alive() {
+        let seqs = ProbeSequences::new(16, 3, RepairScheme::DoubleHashing);
+        let det = |k: usize| (2 + k * 4) % 16; // §IV-A layout for PE 2, r=4
+        let homes = seqs.replica_homes(77, 4, |_| true, det);
+        assert_eq!(homes, vec![2, 6, 10, 14]);
+    }
+
+    #[test]
+    fn replica_homes_replaces_only_dead() {
+        let seqs = ProbeSequences::new(16, 3, RepairScheme::DoubleHashing);
+        let det = |k: usize| (2 + k * 4) % 16;
+        let dead: HashSet<usize> = [6].into();
+        let homes = seqs.replica_homes(77, 4, |pe| !dead.contains(&pe), det);
+        assert_eq!(homes.len(), 4);
+        assert!(homes.contains(&2) && homes.contains(&10) && homes.contains(&14));
+        assert!(!homes.contains(&6));
+        // stability: killing an unrelated PE must not move this block's
+        // surviving replicas (the whole point of §IV-E)
+        let dead2: HashSet<usize> = [6, 9].into();
+        let homes2 = seqs.replica_homes(77, 4, |pe| !dead2.contains(&pe), det);
+        if !homes.contains(&9) {
+            assert_eq!(homes, homes2);
+        }
+    }
+
+    #[test]
+    fn repair_plan_restores_replication() {
+        let seqs = ProbeSequences::new(8, 1, RepairScheme::DoubleHashing);
+        let det = |k: usize| (k * 2) % 8; // homes of the unit: 0,2,4,6
+        let units = vec![(0u64, 0u64, 4u64)];
+        let alive_before = |_pe: usize| true;
+        let dead: HashSet<usize> = [2].into();
+        let alive_after = move |pe: usize| !dead.contains(&pe);
+        let old = |u: u64| seqs.replica_homes(u, 4, alive_before, det);
+        let new = |u: u64| seqs.replica_homes(u, 4, &alive_after, det);
+        let plan = plan_repairs(&units, old, new);
+        assert_eq!(plan.len(), 1);
+        let t = plan[0];
+        assert!(alive_after(t.src) && alive_after(t.dst));
+        assert!([0usize, 4, 6].contains(&t.src));
+        assert!(new(0).contains(&t.dst));
+        assert!(!old(0).contains(&t.dst));
+    }
+
+    #[test]
+    fn repair_plan_skips_idl_units() {
+        let seqs = ProbeSequences::new(4, 1, RepairScheme::FeistelWalk);
+        let det = |k: usize| k; // homes 0..r
+        let units = vec![(0u64, 0u64, 1u64)];
+        let old = |u: u64| seqs.replica_homes(u, 2, |pe| pe < 2, det);
+        // everyone dead now
+        let new = |u: u64| seqs.replica_homes(u, 2, |_| false, det);
+        let plan = plan_repairs(&units, old, new);
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,93 @@
+//! Typed serialization helpers: app data ⇄ block payloads.
+//!
+//! The paper's API has applications write "their serialized data blocks to
+//! a memory location supplied by the library" (§V). These helpers cover the
+//! formats our applications use: dense `f32` matrices (k-means points,
+//! MSA/CLV columns) and `u64` edge lists (PageRank).
+
+/// Serialize a flat `f32` slice into a whole number of `block_size`-byte
+/// blocks, zero-padding the tail block.
+pub fn f32s_to_blocks(data: &[f32], block_size: usize) -> Vec<u8> {
+    assert!(block_size > 0 && block_size % 4 == 0);
+    let bytes = data.len() * 4;
+    let padded = bytes.div_ceil(block_size) * block_size;
+    let mut out = Vec::with_capacity(padded);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.resize(padded, 0);
+    out
+}
+
+/// Deserialize `count` `f32` values from block bytes.
+pub fn blocks_to_f32s(bytes: &[u8], count: usize) -> Vec<f32> {
+    assert!(bytes.len() >= count * 4);
+    bytes[..count * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Serialize a `u64` slice into blocks (PageRank edge lists).
+pub fn u64s_to_blocks(data: &[u64], block_size: usize) -> Vec<u8> {
+    assert!(block_size > 0 && block_size % 8 == 0);
+    let bytes = data.len() * 8;
+    let padded = bytes.div_ceil(block_size) * block_size;
+    let mut out = Vec::with_capacity(padded);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.resize(padded, 0);
+    out
+}
+
+/// Deserialize `count` `u64` values from block bytes.
+pub fn blocks_to_u64s(bytes: &[u8], count: usize) -> Vec<u64> {
+    assert!(bytes.len() >= count * 8);
+    bytes[..count * 8]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Number of blocks needed to hold `n` f32 values.
+pub fn f32_blocks_needed(n: usize, block_size: usize) -> usize {
+    (n * 4).div_ceil(block_size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_exact_fit() {
+        let data: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let blocks = f32s_to_blocks(&data, 64); // 128 bytes = 2 blocks
+        assert_eq!(blocks.len(), 128);
+        assert_eq!(blocks_to_f32s(&blocks, 32), data);
+    }
+
+    #[test]
+    fn f32_roundtrip_with_padding() {
+        let data = vec![1.5f32, -2.25, 3.75];
+        let blocks = f32s_to_blocks(&data, 64);
+        assert_eq!(blocks.len(), 64);
+        assert_eq!(blocks_to_f32s(&blocks, 3), data);
+        assert!(blocks[12..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn u64_roundtrip() {
+        let data = vec![u64::MAX, 0, 42, 1 << 40];
+        let blocks = u64s_to_blocks(&data, 64);
+        assert_eq!(blocks.len(), 64);
+        assert_eq!(blocks_to_u64s(&blocks, 4), data);
+    }
+
+    #[test]
+    fn blocks_needed() {
+        assert_eq!(f32_blocks_needed(16, 64), 1);
+        assert_eq!(f32_blocks_needed(17, 64), 2);
+        assert_eq!(f32_blocks_needed(0, 64), 0);
+    }
+}

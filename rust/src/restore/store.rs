@@ -1,0 +1,164 @@
+//! Per-PE in-memory replica storage.
+//!
+//! Each PE stores `r` permuted *slices* (one per copy level, see
+//! [`Distribution::stored_slice`]). A slice is a contiguous interval of the
+//! permuted block ID space, so the store is just `r` flat buffers plus
+//! interval arithmetic — block lookup is O(r), and the per-PE memory is
+//! exactly the `r·n/p` blocks of the paper's §IV-C analysis (asserted in
+//! tests and the `ablation_memory` bench).
+
+use crate::restore::block::BlockRange;
+use crate::restore::distribution::Distribution;
+
+/// Storage payload of one slice.
+#[derive(Debug, Clone)]
+pub enum SliceBuf {
+    /// Execution mode: the actual serialized blocks.
+    Real(Vec<u8>),
+    /// Cost-model mode: byte length only.
+    Virtual(u64),
+}
+
+impl SliceBuf {
+    pub fn len(&self) -> u64 {
+        match self {
+            SliceBuf::Real(v) => v.len() as u64,
+            SliceBuf::Virtual(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One stored slice: its permuted interval and the bytes.
+#[derive(Debug, Clone)]
+pub struct StoredSlice {
+    pub range: BlockRange,
+    pub buf: SliceBuf,
+}
+
+/// The replica store of a single PE.
+#[derive(Debug, Clone, Default)]
+pub struct PeStore {
+    slices: Vec<StoredSlice>,
+    block_size: usize,
+}
+
+impl PeStore {
+    pub fn new(block_size: usize) -> Self {
+        PeStore { slices: Vec::new(), block_size }
+    }
+
+    pub fn insert(&mut self, range: BlockRange, buf: SliceBuf) {
+        debug_assert_eq!(buf.len(), range.len() * self.block_size as u64);
+        self.slices.push(StoredSlice { range, buf });
+    }
+
+    pub fn slices(&self) -> &[StoredSlice] {
+        &self.slices
+    }
+
+    /// Total bytes resident in this PE's replica store (§IV-C accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        self.slices.iter().map(|s| s.buf.len()).sum()
+    }
+
+    /// Read `len` blocks starting at permuted block `start`; returns the
+    /// bytes (execution mode) or None (cost-model mode). Panics if the
+    /// range is not stored — callers must route via the distribution.
+    pub fn read(&self, start: u64, len: u64) -> Option<&[u8]> {
+        let want = BlockRange::new(start, start + len);
+        for s in &self.slices {
+            if s.range.intersect(&want) == Some(want) {
+                return match &s.buf {
+                    SliceBuf::Real(v) => {
+                        let off = ((start - s.range.start) * self.block_size as u64) as usize;
+                        let n = (len * self.block_size as u64) as usize;
+                        Some(&v[off..off + n])
+                    }
+                    SliceBuf::Virtual(_) => None,
+                };
+            }
+        }
+        panic!("PeStore::read: permuted range [{start}, {}) not stored", start + len);
+    }
+
+    /// Does this PE hold the given permuted range?
+    pub fn holds(&self, start: u64, len: u64) -> bool {
+        let want = BlockRange::new(start, start + len);
+        self.slices.iter().any(|s| s.range.intersect(&want) == Some(want))
+    }
+
+    /// Write bytes into an already-inserted slice (repair path).
+    pub fn write(&mut self, start: u64, bytes_or_len: &SliceBuf) {
+        let len = match bytes_or_len {
+            SliceBuf::Real(v) => v.len() as u64 / self.block_size as u64,
+            SliceBuf::Virtual(n) => n / self.block_size as u64,
+        };
+        let want = BlockRange::new(start, start + len);
+        for s in &mut self.slices {
+            if s.range.intersect(&want) == Some(want) {
+                if let (SliceBuf::Real(dst), SliceBuf::Real(src)) = (&mut s.buf, bytes_or_len) {
+                    let off = ((start - s.range.start) * self.block_size as u64) as usize;
+                    dst[off..off + src.len()].copy_from_slice(src);
+                }
+                return;
+            }
+        }
+        panic!("PeStore::write: permuted range [{start}, {}) not stored", start + len);
+    }
+}
+
+/// Verify the §IV-C memory formula for a fully submitted store set:
+/// every PE holds exactly `r * n/p` blocks.
+pub fn assert_memory_invariant(stores: &[PeStore], dist: &Distribution) {
+    let expect = dist.replicas() as u64 * dist.blocks_per_pe();
+    for (pe, st) in stores.iter().enumerate() {
+        let blocks: u64 = st.slices().iter().map(|s| s.range.len()).sum();
+        assert_eq!(blocks, expect, "PE {pe}: stores {blocks} blocks, expected {expect}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_from_slice() {
+        let mut st = PeStore::new(4);
+        let bytes: Vec<u8> = (0..32).collect();
+        st.insert(BlockRange::new(8, 16), SliceBuf::Real(bytes));
+        assert_eq!(st.read(8, 1), Some(&[0u8, 1, 2, 3][..]));
+        assert_eq!(st.read(10, 2), Some(&[8u8, 9, 10, 11, 12, 13, 14, 15][..]));
+        assert!(st.holds(8, 8));
+        assert!(!st.holds(7, 2));
+        assert!(!st.holds(15, 2));
+        assert_eq!(st.resident_bytes(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "not stored")]
+    fn read_missing_panics() {
+        let st = PeStore::new(4);
+        st.read(0, 1);
+    }
+
+    #[test]
+    fn virtual_slice_counts_bytes() {
+        let mut st = PeStore::new(64);
+        st.insert(BlockRange::new(0, 100), SliceBuf::Virtual(6400));
+        assert_eq!(st.read(50, 10), None);
+        assert_eq!(st.resident_bytes(), 6400);
+        assert!(st.holds(0, 100));
+    }
+
+    #[test]
+    fn write_updates_slice() {
+        let mut st = PeStore::new(2);
+        st.insert(BlockRange::new(0, 4), SliceBuf::Real(vec![0; 8]));
+        st.write(1, &SliceBuf::Real(vec![9, 9, 7, 7]));
+        assert_eq!(st.read(0, 4).unwrap(), &[0, 0, 9, 9, 7, 7, 0, 0]);
+    }
+}

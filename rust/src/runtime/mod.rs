@@ -1,0 +1,223 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (the only Python invocation in the whole system) lowers
+//! the L2 models to **HLO text** in `artifacts/` plus a `manifest.json`
+//! describing every variant's shapes. This module loads that manifest,
+//! compiles each artifact on the PJRT CPU client on first use, and executes
+//! it with `f32` tensors from the Rust hot path — Python never runs here.
+//!
+//! HLO *text* (not serialized protos) is the interchange format because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see DESIGN.md and python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Tensor spec from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub name: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+    pub sha256: Option<String>,
+}
+
+fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let bad = || Error::Artifact("malformed tensor spec in manifest".into());
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(bad)?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(bad))
+        .collect::<Result<Vec<usize>>>()?;
+    Ok(TensorSpec {
+        shape,
+        dtype: v.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+        name: v.get("name").and_then(Json::as_str).map(str::to_string),
+    })
+}
+
+fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactEntry>> {
+    let root = Json::parse(text)?;
+    let obj = root
+        .as_obj()
+        .ok_or_else(|| Error::Artifact("manifest root must be an object".into()))?;
+    let mut out = HashMap::new();
+    for (name, v) in obj {
+        let bad = |w: &str| Error::Artifact(format!("manifest entry '{name}': missing {w}"));
+        let file =
+            v.get("file").and_then(Json::as_str).ok_or_else(|| bad("file"))?.to_string();
+        let args = v
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("args"))?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let results = v
+            .get("results")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("results"))?
+            .iter()
+            .map(parse_tensor_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let sha256 = v.get("sha256").and_then(Json::as_str).map(str::to_string);
+        out.insert(name.clone(), ArtifactEntry { file, args, results, sha256 });
+    }
+    Ok(out)
+}
+
+/// The PJRT execution engine: one compiled executable per model variant.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactEntry>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative wall-clock seconds spent inside PJRT `execute` calls.
+    pub exec_seconds: f64,
+    /// Number of `execute` calls.
+    pub exec_calls: u64,
+}
+
+impl Engine {
+    /// Load the artifact manifest from `dir` (e.g. `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                mpath.display()
+            ))
+        })?;
+        let manifest = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+            exec_seconds: 0.0,
+            exec_calls: 0,
+        })
+    }
+
+    /// Default artifact directory: `$RESTORE_ARTIFACTS` or `artifacts/`.
+    pub fn load_default() -> Result<Engine> {
+        let dir =
+            std::env::var("RESTORE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Engine::load(dir)
+    }
+
+    pub fn manifest(&self) -> &HashMap<String, ArtifactEntry> {
+        &self.manifest
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact variant '{name}'")))
+    }
+
+    /// Compile `name` if not yet compiled (idempotent).
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.entry(name)?.clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute variant `name` with `f32` inputs; returns the flattened
+    /// `f32` outputs in manifest order.
+    ///
+    /// Inputs are validated against the manifest's shapes — a mismatch is
+    /// an immediate error rather than an XLA crash.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let entry = self.entry(name)?.clone();
+        if inputs.len() != entry.args.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: got {} inputs, expected {}",
+                inputs.len(),
+                entry.args.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, spec)) in inputs.iter().zip(&entry.args).enumerate() {
+            if data.len() != spec.elements() {
+                return Err(Error::Artifact(format!(
+                    "{name}: input {i} has {} elems, expected {} (shape {:?})",
+                    data.len(),
+                    spec.elements(),
+                    spec.shape
+                )));
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &spec.shape,
+                bytes,
+            )?);
+        }
+        let exe = self.compiled.get(name).expect("ensured above");
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.exec_calls += 1;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != entry.results.len() {
+            return Err(Error::Artifact(format!(
+                "{name}: got {} results, expected {}",
+                parts.len(),
+                entry.results.len()
+            )));
+        }
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_a_helpful_error() {
+        let msg = match Engine::load("/nonexistent-dir") {
+            Err(e) => format!("{e}"),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    // Execution tests against real artifacts live in rust/tests/
+    // integration_runtime.rs (they need `make artifacts` to have run).
+}

@@ -1,0 +1,365 @@
+//! The simulated world: alive set, message exchange, collectives, clock.
+//!
+//! `Cluster` plays the role MPI plays for the paper's C++ library. It
+//! supports two payload modes:
+//!
+//! * **Execution mode** ([`Payload::Real`]): every message really carries
+//!   its bytes; replica data is physically placed and moved, so tests can
+//!   verify bit-exact recovery.
+//! * **Cost-model mode** ([`Payload::Virtual`]): messages carry only their
+//!   length. The *schedule* (who sends what to whom) is identical — only
+//!   the byte buffers are elided, which is what lets the figure benches
+//!   scale to the paper's 24 576-PE configurations on one machine.
+//!
+//! Either way every phase is charged to the simulated clock through the
+//! [`network`](crate::simnet::network) model, and failures are injected by
+//! [`Cluster::kill`] exactly like the paper's `MPI_Comm_split` methodology
+//! (§VI-A).
+
+use crate::config::NetworkConfig;
+use crate::error::{Error, Result};
+use crate::simnet::network::{allreduce_cost, Accumulator, PhaseCost};
+use crate::simnet::topology::Topology;
+
+/// Message payload: real bytes (execution mode) or a byte count only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Payload {
+    Real(Vec<u8>),
+    Virtual(u64),
+}
+
+impl Payload {
+    pub fn len(&self) -> u64 {
+        match self {
+            Payload::Real(v) => v.len() as u64,
+            Payload::Virtual(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self, Payload::Real(_))
+    }
+
+    /// Real bytes, or an error in cost-model mode.
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match self {
+            Payload::Real(v) => Some(v),
+            Payload::Virtual(_) => None,
+        }
+    }
+}
+
+/// One point-to-point message.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub src: usize,
+    pub dst: usize,
+    /// Caller-defined routing tag (ReStore uses the permuted block offset).
+    pub tag: u64,
+    pub payload: Payload,
+}
+
+/// The simulated cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    topo: Topology,
+    net: NetworkConfig,
+    alive: Vec<bool>,
+    n_alive: usize,
+    clock_s: f64,
+    /// Communicator epoch; bumped by `ulfm::shrink`.
+    pub epoch: u64,
+}
+
+impl Cluster {
+    /// A cluster with default (OmniPath-class) network parameters.
+    pub fn new_execution(pes: usize, pes_per_node: usize) -> Self {
+        Self::with_network(pes, pes_per_node, NetworkConfig::default())
+    }
+
+    pub fn with_network(pes: usize, pes_per_node: usize, mut net: NetworkConfig) -> Self {
+        net.pes_per_node = pes_per_node;
+        Cluster {
+            topo: Topology::new(pes, pes_per_node),
+            net,
+            alive: vec![true; pes],
+            n_alive: pes,
+            clock_s: 0.0,
+            epoch: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn network(&self) -> &NetworkConfig {
+        &self.net
+    }
+
+    /// World size `p` at program start (dead PEs keep their rank).
+    pub fn world(&self) -> usize {
+        self.topo.pes()
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.n_alive
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive.get(rank).copied().unwrap_or(false)
+    }
+
+    /// Alive ranks in increasing order.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.world()).filter(|&r| self.alive[r]).collect()
+    }
+
+    /// Ranks killed so far.
+    pub fn failed(&self) -> Vec<usize> {
+        (0..self.world()).filter(|&r| !self.alive[r]).collect()
+    }
+
+    /// Simulated elapsed seconds.
+    pub fn now(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Inject failures (the paper's simulated `MPI_Comm_split` methodology).
+    /// Killing an already-dead PE is a no-op.
+    pub fn kill(&mut self, ranks: &[usize]) {
+        for &r in ranks {
+            if r < self.alive.len() && self.alive[r] {
+                self.alive[r] = false;
+                self.n_alive -= 1;
+            }
+        }
+    }
+
+    /// Advance the simulated clock by an externally computed cost.
+    pub fn advance(&mut self, cost: &PhaseCost) {
+        self.clock_s += cost.sim_time_s;
+    }
+
+    /// Charge local computation time (e.g. a PJRT kernel execution that in
+    /// the real cluster runs on every PE in parallel).
+    pub fn tick_compute(&mut self, seconds: f64) {
+        self.clock_s += seconds;
+    }
+
+    /// Sparse all-to-all: deliver `msgs`, charge the phase to the clock.
+    ///
+    /// All endpoints must be alive — ReStore's schedules are computed
+    /// against the survivor set, so a dead endpoint is a routing bug and
+    /// surfaces as an error rather than silent loss.
+    pub fn exchange(&mut self, msgs: Vec<Msg>) -> Result<(Vec<Msg>, PhaseCost)> {
+        let mut acc = Accumulator::new(&self.net, &self.topo);
+        for m in &msgs {
+            if m.src >= self.world() || m.dst >= self.world() {
+                return Err(Error::RankOutOfRange {
+                    rank: m.src.max(m.dst),
+                    world: self.world(),
+                });
+            }
+            if !self.alive[m.src] {
+                return Err(Error::DeadPe(m.src));
+            }
+            if !self.alive[m.dst] {
+                return Err(Error::DeadPe(m.dst));
+            }
+            acc.msg(m.src, m.dst, m.payload.len());
+        }
+        let cost = acc.finish();
+        self.clock_s += cost.sim_time_s;
+        let mut delivered = msgs;
+        // Deterministic delivery order: by (dst, src, tag).
+        delivered.sort_by_key(|m| (m.dst, m.src, m.tag));
+        Ok((delivered, cost))
+    }
+
+    /// Begin an incrementally-built communication phase (for schedules too
+    /// large to materialize as a message list — submit at high `p`). All
+    /// messages added to the builder belong to ONE concurrent phase.
+    pub fn phase(&mut self) -> PhaseBuilder<'_> {
+        let acc = Accumulator::new(&self.net, &self.topo);
+        PhaseBuilder { cluster: self, acc }
+    }
+
+    /// Charge a communication phase given as `(src, dst, bytes)` triples
+    /// *without* moving payload bytes — the schedule-driven fast path used
+    /// by ReStore's submit/load, whose data movement happens directly
+    /// between the in-process stores. Endpoint liveness is validated the
+    /// same way as in [`Cluster::exchange`].
+    pub fn charge_phase<I>(&mut self, msgs: I) -> Result<PhaseCost>
+    where
+        I: IntoIterator<Item = (usize, usize, u64)>,
+    {
+        let mut acc = Accumulator::new(&self.net, &self.topo);
+        for (src, dst, bytes) in msgs {
+            if src >= self.world() || dst >= self.world() {
+                return Err(Error::RankOutOfRange { rank: src.max(dst), world: self.world() });
+            }
+            if !self.alive[src] {
+                return Err(Error::DeadPe(src));
+            }
+            if !self.alive[dst] {
+                return Err(Error::DeadPe(dst));
+            }
+            acc.msg(src, dst, bytes);
+        }
+        let cost = acc.finish();
+        self.clock_s += cost.sim_time_s;
+        Ok(cost)
+    }
+
+    /// Cost-only barrier over the survivors.
+    pub fn barrier(&mut self) -> PhaseCost {
+        let rounds = (self.n_alive.max(2) as f64).log2().ceil() as u64 * 2;
+        let cost = PhaseCost::latency(&self.net, rounds);
+        self.clock_s += cost.sim_time_s;
+        cost
+    }
+
+    /// Allreduce of `elems` f32 values over the survivors: really reduces
+    /// the per-PE `contributions` (execution mode) and charges the
+    /// binomial-tree cost. `contributions` must hold one slice per survivor.
+    pub fn allreduce_f32(&mut self, contributions: &[&[f32]]) -> Result<(Vec<f32>, PhaseCost)> {
+        let elems = contributions.first().map(|c| c.len()).unwrap_or(0);
+        for c in contributions {
+            if c.len() != elems {
+                return Err(Error::Config("allreduce: ragged contributions".into()));
+            }
+        }
+        let mut out = vec![0f32; elems];
+        for c in contributions {
+            for (o, v) in out.iter_mut().zip(c.iter()) {
+                *o += *v;
+            }
+        }
+        let cost = allreduce_cost(&self.net, self.n_alive, (elems * 4) as u64);
+        self.clock_s += cost.sim_time_s;
+        Ok((out, cost))
+    }
+
+    /// Cost-only allreduce (for cost-model app runs at large `p`).
+    pub fn allreduce_cost_only(&mut self, bytes: u64) -> PhaseCost {
+        let cost = allreduce_cost(&self.net, self.n_alive, bytes);
+        self.clock_s += cost.sim_time_s;
+        cost
+    }
+}
+
+/// Incremental builder for one concurrent communication phase.
+pub struct PhaseBuilder<'a> {
+    cluster: &'a mut Cluster,
+    acc: Accumulator,
+}
+
+impl<'a> PhaseBuilder<'a> {
+    /// Register one message; endpoints must be alive.
+    pub fn add(&mut self, src: usize, dst: usize, bytes: u64) -> Result<()> {
+        if src >= self.cluster.world() || dst >= self.cluster.world() {
+            return Err(Error::RankOutOfRange {
+                rank: src.max(dst),
+                world: self.cluster.world(),
+            });
+        }
+        if !self.cluster.alive[src] {
+            return Err(Error::DeadPe(src));
+        }
+        if !self.cluster.alive[dst] {
+            return Err(Error::DeadPe(dst));
+        }
+        self.acc.msg(src, dst, bytes);
+        Ok(())
+    }
+
+    /// Charge `count` fragments handled by `pe` (see `Accumulator::frag`).
+    pub fn frag(&mut self, pe: usize, count: u64) {
+        self.acc.frag(pe, count);
+    }
+
+    /// Finish the phase: charge it to the clock and return its cost.
+    pub fn commit(self) -> PhaseCost {
+        let cost = self.acc.finish();
+        self.cluster.clock_s += cost.sim_time_s;
+        cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(src: usize, dst: usize, bytes: &[u8]) -> Msg {
+        Msg { src, dst, tag: 0, payload: Payload::Real(bytes.to_vec()) }
+    }
+
+    #[test]
+    fn exchange_delivers_real_bytes() {
+        let mut c = Cluster::new_execution(4, 2);
+        let (got, cost) = c
+            .exchange(vec![msg(0, 3, b"hello"), msg(1, 2, b"world")])
+            .unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].dst, 2); // sorted by destination
+        assert_eq!(got[1].payload.bytes().unwrap(), b"hello");
+        assert!(cost.sim_time_s > 0.0);
+        assert_eq!(c.now(), cost.sim_time_s);
+    }
+
+    #[test]
+    fn exchange_rejects_dead_endpoints() {
+        let mut c = Cluster::new_execution(4, 2);
+        c.kill(&[3]);
+        assert!(matches!(
+            c.exchange(vec![msg(0, 3, b"x")]),
+            Err(Error::DeadPe(3))
+        ));
+        assert!(matches!(
+            c.exchange(vec![msg(3, 0, b"x")]),
+            Err(Error::DeadPe(3))
+        ));
+        assert!(matches!(
+            c.exchange(vec![msg(0, 9, b"x")]),
+            Err(Error::RankOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn kill_is_idempotent() {
+        let mut c = Cluster::new_execution(8, 4);
+        c.kill(&[1, 1, 2]);
+        assert_eq!(c.n_alive(), 6);
+        c.kill(&[1]);
+        assert_eq!(c.n_alive(), 6);
+        assert_eq!(c.survivors(), vec![0, 3, 4, 5, 6, 7]);
+        assert_eq!(c.failed(), vec![1, 2]);
+    }
+
+    #[test]
+    fn allreduce_sums_contributions() {
+        let mut c = Cluster::new_execution(3, 3);
+        let a = [1.0f32, 2.0];
+        let b = [10.0f32, 20.0];
+        let d = [100.0f32, 200.0];
+        let (out, cost) = c.allreduce_f32(&[&a, &b, &d]).unwrap();
+        assert_eq!(out, vec![111.0, 222.0]);
+        assert!(cost.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn virtual_payload_costs_like_real() {
+        let mut c1 = Cluster::new_execution(4, 2);
+        let mut c2 = Cluster::new_execution(4, 2);
+        let (_, real) = c1.exchange(vec![msg(0, 3, &[0u8; 4096])]).unwrap();
+        let (_, virt) = c2
+            .exchange(vec![Msg { src: 0, dst: 3, tag: 0, payload: Payload::Virtual(4096) }])
+            .unwrap();
+        assert_eq!(real, virt);
+    }
+}

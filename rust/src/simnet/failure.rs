@@ -1,0 +1,106 @@
+//! Failure schedules.
+//!
+//! The paper's application experiments (§VI-C) "simulate an expected failure
+//! of 1 % of all nodes distributed uniformly at random during these
+//! iterations ... by determining a suitable probability for each PE to fail
+//! in each iteration" (a discrete exponential decay). Fig 3 kills PEs
+//! uniformly at random one by one. Node-correlated failures (whole node
+//! dies, taking its 48 PEs) are the failure mode the placement's
+//! node-spreading argument (§IV-A) defends against — provided here for the
+//! ablation benches.
+
+use crate::simnet::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Discrete exponential-decay schedule: each alive PE fails independently
+/// with probability `q` per iteration, with `q` chosen so that the expected
+/// surviving fraction after `iterations` equals `1 - total_fraction`.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpDecaySchedule {
+    pub per_iteration_prob: f64,
+}
+
+impl ExpDecaySchedule {
+    pub fn new(total_fraction: f64, iterations: usize) -> Self {
+        assert!((0.0..1.0).contains(&total_fraction));
+        assert!(iterations > 0);
+        // (1 - q)^iterations = 1 - total_fraction
+        let q = 1.0 - (1.0 - total_fraction).powf(1.0 / iterations as f64);
+        ExpDecaySchedule { per_iteration_prob: q }
+    }
+
+    /// Sample the ranks failing this iteration from `alive`.
+    pub fn sample(&self, rng: &mut Rng, alive: &[usize]) -> Vec<usize> {
+        alive
+            .iter()
+            .copied()
+            .filter(|_| rng.gen_bool(self.per_iteration_prob))
+            .collect()
+    }
+}
+
+/// Kill `count` PEs chosen uniformly at random from `alive` (Fig 3 setup).
+pub fn uniform_kills(rng: &mut Rng, alive: &[usize], count: usize) -> Vec<usize> {
+    let mut pool: Vec<usize> = alive.to_vec();
+    rng.shuffle(&mut pool);
+    pool.truncate(count.min(pool.len()));
+    pool
+}
+
+/// Whole-node failure: all PEs of `node` die together.
+pub fn node_failure(topo: &Topology, node: usize) -> Vec<usize> {
+    topo.ranks_on_node(node).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_decay_hits_target_fraction_in_expectation() {
+        let sched = ExpDecaySchedule::new(0.01, 500);
+        // survival after 500 iterations = (1-q)^500 = 0.99
+        let survive = (1.0 - sched.per_iteration_prob).powi(500);
+        assert!((survive - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_decay_samples_roughly_one_percent() {
+        let mut rng = Rng::seed_from_u64(7);
+        let sched = ExpDecaySchedule::new(0.01, 500);
+        let mut alive: Vec<usize> = (0..24576).collect();
+        for _ in 0..500 {
+            let dead = sched.sample(&mut rng, &alive);
+            alive.retain(|r| !dead.contains(r));
+        }
+        let frac = 1.0 - alive.len() as f64 / 24576.0;
+        // paper observed "up to 262 PEs failing" at 24576 (≈1.07 %)
+        assert!(frac > 0.005 && frac < 0.02, "fraction {frac}");
+    }
+
+    #[test]
+    fn uniform_kills_are_distinct_and_alive() {
+        let mut rng = Rng::seed_from_u64(1);
+        let alive: Vec<usize> = (0..100).step_by(2).collect();
+        let k = uniform_kills(&mut rng, &alive, 10);
+        assert_eq!(k.len(), 10);
+        let set: std::collections::HashSet<_> = k.iter().collect();
+        assert_eq!(set.len(), 10);
+        for r in &k {
+            assert!(alive.contains(r));
+        }
+    }
+
+    #[test]
+    fn uniform_kills_caps_at_pool() {
+        let mut rng = Rng::seed_from_u64(2);
+        assert_eq!(uniform_kills(&mut rng, &[1, 2, 3], 10).len(), 3);
+    }
+
+    #[test]
+    fn node_failure_kills_whole_node() {
+        let topo = Topology::new(100, 48);
+        assert_eq!(node_failure(&topo, 1), (48..96).collect::<Vec<_>>());
+        assert_eq!(node_failure(&topo, 2), (96..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,27 @@
+//! Simulated fault-tolerant cluster substrate.
+//!
+//! The paper runs on MPI + ULFM on SuperMUC-NG and — because ULFM itself was
+//! too unstable for benchmarks — *simulates failures* by removing processes
+//! from the computation (`MPI_Comm_split`) and replacing recovery calls with
+//! functionally similar ones (§VI-A). We reproduce exactly that methodology
+//! in-process:
+//!
+//! * [`topology`] — nodes / PEs / failure domains (48 PEs share a node+NIC).
+//! * [`network`] — the α-β(-NIC) cost model that converts *exact* per-PE
+//!   message/byte schedules into simulated time (DESIGN.md §1).
+//! * [`cluster`] — the world: alive set, message exchange (really moving
+//!   bytes in execution mode), collectives, the simulated clock.
+//! * [`ulfm`] — failure detection + agreement + communicator shrinking,
+//!   mirroring `MPIX_Comm_agree` / `MPIX_Comm_shrink`.
+//! * [`failure`] — failure schedules (uniform, the paper's §VI-C discrete
+//!   exponential decay, node-correlated).
+
+pub mod cluster;
+pub mod failure;
+pub mod network;
+pub mod topology;
+pub mod ulfm;
+
+pub use cluster::{Cluster, Payload};
+pub use network::PhaseCost;
+pub use topology::Topology;

@@ -1,0 +1,82 @@
+//! Cluster topology: which PEs share a node (and therefore a NIC and a
+//! failure domain).
+//!
+//! SuperMUC-NG (§VI-A): 48 PEs per node. The paper's placement argument
+//! (§IV-A) is that the `r` copies of a block land on PEs that are far apart
+//! in rank space and therefore (block cyclic job placement) on different
+//! nodes/racks — `Topology` lets tests verify that property.
+
+/// Node/PE topology of the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pes: usize,
+    pes_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(pes: usize, pes_per_node: usize) -> Self {
+        assert!(pes > 0 && pes_per_node > 0);
+        Topology { pes, pes_per_node }
+    }
+
+    /// Total number of PEs.
+    pub fn pes(&self) -> usize {
+        self.pes
+    }
+
+    /// PEs sharing one node (and its NIC).
+    pub fn pes_per_node(&self) -> usize {
+        self.pes_per_node
+    }
+
+    /// Number of nodes (last node may be partially filled).
+    pub fn nodes(&self) -> usize {
+        self.pes.div_ceil(self.pes_per_node)
+    }
+
+    /// Node hosting `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.pes_per_node
+    }
+
+    /// All ranks on `node`.
+    pub fn ranks_on_node(&self, node: usize) -> std::ops::Range<usize> {
+        let lo = node * self.pes_per_node;
+        lo..(lo + self.pes_per_node).min(self.pes)
+    }
+
+    /// Do two ranks share a node (= a failure domain)?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_mapping() {
+        let t = Topology::new(100, 48);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(47), 0);
+        assert_eq!(t.node_of(48), 1);
+        assert_eq!(t.ranks_on_node(2), 96..100);
+        assert!(t.same_node(0, 47));
+        assert!(!t.same_node(47, 48));
+    }
+
+    #[test]
+    fn paper_placement_spreads_copies_across_nodes() {
+        // r=4 copies of PE i's shard live on i + k*p/r — different nodes for
+        // any p >= r * pes_per_node (the paper's §IV-A claim).
+        let p = 4 * 48 * 4;
+        let t = Topology::new(p, 48);
+        for i in 0..p {
+            let nodes: std::collections::HashSet<_> =
+                (0..4).map(|k| t.node_of((i + k * p / 4) % p)).collect();
+            assert_eq!(nodes.len(), 4);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! ULFM-style fault-tolerance operations over the simulated cluster.
+//!
+//! Mirrors the recovery sequence of the paper's applications (§VI-A/§VI-C):
+//! after a failure is detected, the survivors run an *agreement* on the set
+//! of failed ranks (`MPIX_Comm_agree`-like) and then *shrink* the
+//! communicator (`MPIX_Comm_shrink`-like), producing a dense re-ranking.
+//! The paper could not benchmark real ULFM (it was too unstable — they
+//! filed the bug) and replaced these with functionally similar MPI calls;
+//! we model their cost with a latency term that matches the observation in
+//! §VI-C that "the overall running time increases ... mainly due to MPI
+//! operations used to restore a functioning communicator".
+
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+
+/// Fixed agreement/shrink overhead (connection teardown, group bookkeeping).
+pub const SHRINK_BASE_S: f64 = 1.0e-3;
+/// Per-log2(p) cost of the agreement + shrink collectives.
+pub const SHRINK_PER_LOG_S: f64 = 1.5e-3;
+
+/// Rank translation between the pre-failure and post-shrink communicators.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankMap {
+    /// old rank -> new rank (None for failed PEs).
+    pub old_to_new: Vec<Option<usize>>,
+    /// new rank -> old rank.
+    pub new_to_old: Vec<usize>,
+}
+
+impl RankMap {
+    /// Identity map over `p` alive ranks.
+    pub fn identity(p: usize) -> Self {
+        RankMap {
+            old_to_new: (0..p).map(Some).collect(),
+            new_to_old: (0..p).collect(),
+        }
+    }
+
+    pub fn new_world(&self) -> usize {
+        self.new_to_old.len()
+    }
+}
+
+/// Agreement on the failed set: every survivor learns which PEs died.
+/// Cost: a fault-tolerant allreduce over a bitmap (3 log p rounds — the
+/// two-phase commit structure of `MPIX_Comm_agree`).
+pub fn agree(cluster: &mut Cluster) -> (Vec<usize>, PhaseCost) {
+    let p = cluster.n_alive().max(2) as f64;
+    let rounds = 3 * p.log2().ceil() as u64;
+    let cost = PhaseCost::latency(cluster.network(), rounds);
+    cluster.advance(&cost);
+    (cluster.failed(), cost)
+}
+
+/// Shrink the communicator: survivors get dense new ranks preserving the
+/// old order (exactly what `MPI_Comm_split(comm, alive, old_rank)` does in
+/// the paper's simulation methodology).
+pub fn shrink(cluster: &mut Cluster) -> (RankMap, PhaseCost) {
+    let world = cluster.world();
+    let mut old_to_new = vec![None; world];
+    let mut new_to_old = Vec::with_capacity(cluster.n_alive());
+    for old in 0..world {
+        if cluster.is_alive(old) {
+            old_to_new[old] = Some(new_to_old.len());
+            new_to_old.push(old);
+        }
+    }
+    let p = cluster.n_alive().max(2) as f64;
+    let cost = PhaseCost {
+        sim_time_s: SHRINK_BASE_S + SHRINK_PER_LOG_S * p.log2(),
+        bottleneck_msgs: 2 * p.log2().ceil() as u64,
+        ..Default::default()
+    };
+    cluster.advance(&cost);
+    cluster.epoch += 1;
+    (RankMap { old_to_new, new_to_old }, cost)
+}
+
+/// Full recovery sequence after failures are noticed: agree + shrink.
+pub fn recover(cluster: &mut Cluster) -> (Vec<usize>, RankMap, PhaseCost) {
+    let (failed, c1) = agree(cluster);
+    let (map, c2) = shrink(cluster);
+    (failed, map, c1.then(c2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrink_densifies_ranks_in_order() {
+        let mut c = Cluster::new_execution(8, 4);
+        c.kill(&[2, 5]);
+        let (map, cost) = shrink(&mut c);
+        assert_eq!(map.new_world(), 6);
+        assert_eq!(map.new_to_old, vec![0, 1, 3, 4, 6, 7]);
+        assert_eq!(map.old_to_new[2], None);
+        assert_eq!(map.old_to_new[3], Some(2));
+        assert_eq!(map.old_to_new[7], Some(5));
+        assert!(cost.sim_time_s > SHRINK_BASE_S);
+        assert_eq!(c.epoch, 1);
+    }
+
+    #[test]
+    fn agree_reports_failed_set() {
+        let mut c = Cluster::new_execution(16, 4);
+        c.kill(&[0, 15]);
+        let (failed, cost) = agree(&mut c);
+        assert_eq!(failed, vec![0, 15]);
+        assert!(cost.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn recover_composes_costs() {
+        let mut c = Cluster::new_execution(16, 4);
+        c.kill(&[3]);
+        let t0 = c.now();
+        let (failed, map, cost) = recover(&mut c);
+        assert_eq!(failed, vec![3]);
+        assert_eq!(map.new_world(), 15);
+        assert!((c.now() - t0 - cost.sim_time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_map() {
+        let m = RankMap::identity(4);
+        assert_eq!(m.old_to_new[3], Some(3));
+        assert_eq!(m.new_world(), 4);
+    }
+
+    #[test]
+    fn shrink_cost_grows_slowly_with_p() {
+        let mut small = Cluster::new_execution(48, 48);
+        let mut big = Cluster::new_execution(24576, 48);
+        let (_, cs) = shrink(&mut small);
+        let (_, cb) = shrink(&mut big);
+        assert!(cb.sim_time_s > cs.sim_time_s);
+        assert!(cb.sim_time_s < cs.sim_time_s * 4.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Micro-bench harness — in-tree replacement for `criterion`, used by the
+//! `benches/` binaries (`harness = false`).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! mean/median/p10/p90 like the paper's plots (§VI-A: 10 repetitions,
+//! mean with 10th/90th percentile error bars).
+
+use std::time::Instant;
+
+use crate::metrics::{fmt_time, Stats};
+
+/// One timed measurement series.
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} mean {:>12}  p10 {:>12}  p90 {:>12}  (n={})",
+            self.name,
+            fmt_time(self.stats.mean),
+            fmt_time(self.stats.p10),
+            fmt_time(self.stats.p90),
+            self.stats.n
+        )
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` unmeasured calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    BenchResult { name: name.to_string(), stats: Stats::from(&samples) }
+}
+
+/// Collect repeated *simulated-time* samples (for cost-model benches the
+/// measurement is the simulated clock, not wall time).
+pub fn sim_samples<F: FnMut(u64) -> f64>(reps: usize, mut f: F) -> Stats {
+    let samples: Vec<f64> = (0..reps.max(1) as u64).map(&mut f).collect();
+    Stats::from(&samples)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench("noop", 2, 5, || {
+            count += 1;
+            black_box(count);
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(r.stats.n, 5);
+        assert!(r.stats.mean >= 0.0);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn sim_samples_passes_rep_index() {
+        let s = sim_samples(4, |rep| rep as f64);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 1.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree replacements for the crates.io staples unavailable in this
+//! offline environment (see Cargo.toml): a deterministic RNG, minimal JSON
+//! and TOML parsers, and a micro-bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,236 @@
+//! Minimal TOML parser — in-tree replacement for the `toml` crate,
+//! sufficient for the experiment files: `[table]` / `[a.b]` headers and
+//! `key = value` lines with string / integer / float / bool values, plus
+//! `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: dotted-path -> value (`[restore]` + `seed = 1`
+/// becomes `"restore.seed"`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: String| TomlError { line: lineno + 1, msg };
+            if let Some(table) = line.strip_prefix('[') {
+                let table = table
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated table header".into()))?
+                    .trim();
+                if table.is_empty() {
+                    return Err(err("empty table name".into()));
+                }
+                prefix = format!("{table}.");
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| err(format!("expected key = value, got '{line}'")))?;
+                let key = format!("{prefix}{}", k.trim());
+                let value = parse_value(v.trim())
+                    .ok_or_else(|| err(format!("bad value '{}'", v.trim())))?;
+                doc.values.insert(key, value);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(TomlValue::as_usize)
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(TomlValue::as_str)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(TomlValue::as_bool)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if let Some(stripped) = v.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        return Some(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+/// Serialize helper used by `ExperimentFile::to_toml`.
+pub fn escape_str(s: &str) -> String {
+    format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_like_file() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment
+            world = 48
+            pes_per_node = 48
+
+            [restore]
+            block_size = 64        # bytes
+            replicas = 4
+            perm_range_bytes = 262144
+            permutation = true
+            seed = 0x_invalid_is_not_here = no
+            "#,
+        );
+        // the bogus line should error
+        assert!(doc.is_err());
+
+        let doc = TomlDoc::parse(
+            r#"
+            world = 48
+            [restore]
+            block_size = 64
+            replicas = 4
+            failure_fraction = 0.01
+            label = "paper default"
+            permutation = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_usize("world"), Some(48));
+        assert_eq!(doc.get_usize("restore.block_size"), Some(64));
+        assert_eq!(doc.get_f64("restore.failure_fraction"), Some(0.01));
+        assert_eq!(doc.get_str("restore.label"), Some("paper default"));
+        assert_eq!(doc.get_bool("restore.permutation"), Some(true));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = TomlDoc::parse("a = 1_000_000 # one million\nb = \"x # y\"").unwrap();
+        assert_eq!(doc.get_usize("a"), Some(1_000_000));
+        assert_eq!(doc.get_str("b"), Some("x # y"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("i = 3\nf = 3.5\nneg = -2").unwrap();
+        assert_eq!(doc.get("i"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("f"), Some(&TomlValue::Float(3.5)));
+        assert_eq!(doc.get("neg"), Some(&TomlValue::Int(-2)));
+        assert_eq!(doc.get_f64("i"), Some(3.0)); // int coerces to f64
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = TomlDoc::parse("[unclosed").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        let doc = TomlDoc::parse(&format!("s = {}", escape_str("a\"b\\c"))).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a\"b\\c"));
+    }
+}

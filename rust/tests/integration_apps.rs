@@ -1,0 +1,166 @@
+//! Integration: the fault-tolerant applications run end-to-end over the
+//! simulated cluster with real PJRT compute, and failures do not change
+//! the computation's results (the paper's §VI-C correctness claim: the
+//! shrinking recovery reloads *exactly* the lost input).
+
+use restore::apps::kmeans::{self, KmeansParams};
+use restore::config::RestoreConfig;
+use restore::runtime::Engine;
+use restore::simnet::cluster::Cluster;
+
+fn load_engine() -> Engine {
+    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+fn kmeans_cfg(p: usize, params: &KmeansParams) -> RestoreConfig {
+    let bytes = params.points_per_pe * params.dims * 4;
+    RestoreConfig::builder(p, 64, bytes / 64)
+        .replicas(4.min(p))
+        .perm_range_bytes(Some(1024))
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn kmeans_execution_without_failures_converges() {
+    let mut engine = load_engine();
+    let mut cluster = Cluster::new_execution(4, 2);
+    let params = KmeansParams { iterations: 8, ..KmeansParams::tiny(8) };
+    let cfg = kmeans_cfg(4, &params);
+    let rep = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &params).unwrap();
+    assert_eq!(rep.iterations_run, 8);
+    assert_eq!(rep.failures, 0);
+    assert!(rep.final_inertia > 0.0 && rep.final_inertia.is_finite());
+    // Lloyd's algorithm monotonically decreases inertia: an 8-iteration run
+    // must end at most as high as a 1-iteration run (the paper's random
+    // shared starting centers can still land in a poor local optimum, so no
+    // absolute bound).
+    let mut one_iter = params.clone();
+    one_iter.iterations = 1;
+    let mut engine2 = load_engine();
+    let mut cluster2 = Cluster::new_execution(4, 2);
+    let first = kmeans::run_execution(&mut cluster2, &mut engine2, &cfg, &one_iter).unwrap();
+    assert!(
+        rep.final_inertia <= first.final_inertia * (1.0 + 1e-5),
+        "inertia rose: {} -> {}",
+        first.final_inertia,
+        rep.final_inertia
+    );
+    assert!(rep.wall_compute_s > 0.0);
+    assert!(rep.sim_kmeans_loop_s > 0.0);
+}
+
+#[test]
+fn kmeans_recovery_preserves_clustering_results() {
+    // Run once without failures and once with a mid-run failure; the
+    // recovered run must produce (nearly) identical centers — same points,
+    // same math, only the partial-sum grouping differs (f32 ordering).
+    let params = KmeansParams { iterations: 6, seed: 11, ..KmeansParams::tiny(6) };
+    let cfg = kmeans_cfg(8, &params);
+
+    let mut e1 = load_engine();
+    let mut c1 = Cluster::new_execution(8, 4);
+    let clean = kmeans::run_execution(&mut c1, &mut e1, &cfg, &params).unwrap();
+
+    let mut failing = params.clone();
+    failing.failure_fraction = 0.3; // aggressive: expect ~2-3 failures
+    let mut e2 = load_engine();
+    let mut c2 = Cluster::new_execution(8, 4);
+    let faulty = kmeans::run_execution(&mut c2, &mut e2, &cfg, &failing).unwrap();
+
+    assert!(faulty.failures > 0, "0.3 failure fraction over 6 iters should kill someone");
+    let rel = (faulty.final_inertia - clean.final_inertia).abs() / clean.final_inertia;
+    assert!(rel < 1e-3, "inertia diverged by {rel} after recovery");
+    for (a, b) in faulty.final_centers.iter().zip(&clean.final_centers) {
+        assert!((a - b).abs() < 1e-2, "center coord {a} vs {b}");
+    }
+    // failure run must be slower in simulated time and attribute the extra
+    // cost to restore + MPI recovery
+    assert!(faulty.sim_total_s > clean.sim_total_s);
+    assert!(faulty.sim_restore_s > clean.sim_restore_s);
+    assert!(faulty.sim_mpi_recovery_s > 0.0);
+}
+
+#[test]
+fn kmeans_survives_cascading_failures_down_to_few_pes() {
+    let params = KmeansParams {
+        iterations: 10,
+        seed: 3,
+        failure_fraction: 0.6,
+        ..KmeansParams::tiny(10)
+    };
+    let cfg = kmeans_cfg(8, &params);
+    let mut e = load_engine();
+    let mut cluster = Cluster::new_execution(8, 4);
+    let rep = kmeans::run_execution(&mut cluster, &mut e, &cfg, &params).unwrap();
+    assert_eq!(rep.iterations_run, 10);
+    assert!(rep.failures >= 2);
+    assert!(cluster.n_alive() >= 1);
+    // all 8*256 points still clustered: counts sum preserved through the
+    // padding-corrected multi-pass compute
+    assert!(rep.final_inertia.is_finite());
+}
+
+#[test]
+fn raxml_likelihood_identical_after_site_redistribution() {
+    use restore::apps::raxml;
+    use restore::apps::Ownership;
+    use restore::restore::load::scatter_requests_for_ranges;
+    use restore::restore::serialize::blocks_to_f32s;
+    use restore::restore::ReStore;
+
+    let mut e = load_engine();
+    let p = 4;
+    let sites_per_pe = 512;
+    let mut cluster = Cluster::new_execution(p, 2);
+    let mut site_data: Vec<Vec<f32>> =
+        (0..p).map(|pe| raxml::generate_sites(5, pe, sites_per_pe)).collect();
+
+    // baseline loglik with everyone alive
+    let ll_before =
+        raxml::evaluate_loglik(&mut cluster, &mut e, "phylo_step_small", &site_data).unwrap();
+    assert!(ll_before.is_finite() && ll_before < 0.0);
+
+    // submit sites (one 64 B block per site: 36 B payload + padding, the
+    // layout raxml.rs documents), kill a PE, redistribute via ReStore
+    let bs = 64;
+    let spf = raxml::SITE_PAYLOAD_F32S;
+    let blocks_per_pe = sites_per_pe; // 1 site = 1 block
+    let cfg = RestoreConfig::builder(p, bs, blocks_per_pe).replicas(2).build().unwrap();
+    let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+    let shards: Vec<Vec<u8>> = site_data
+        .iter()
+        .map(|d| {
+            let mut out = Vec::with_capacity(sites_per_pe * bs);
+            for site in d.chunks(spf) {
+                for v in site {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.resize(out.len() + bs - spf * 4, 0);
+            }
+            out
+        })
+        .collect();
+    store.submit(&mut cluster, &shards).unwrap();
+
+    cluster.kill(&[2]);
+    let mut ownership = Ownership::identity(p, blocks_per_pe as u64);
+    let gained = ownership.rebalance(&[2], &cluster.survivors(), 1);
+    let reqs = scatter_requests_for_ranges(&gained);
+    let out = store.load(&mut cluster, &reqs).unwrap();
+    // append recovered sites (one per block) to each survivor
+    for (req, shard) in reqs.iter().zip(&out.shards) {
+        let bytes = shard.bytes.as_ref().unwrap();
+        for block in bytes.chunks(bs) {
+            site_data[req.pe].extend(blocks_to_f32s(block, spf));
+        }
+    }
+    site_data[2].clear();
+
+    let ll_after =
+        raxml::evaluate_loglik(&mut cluster, &mut e, "phylo_step_small", &site_data).unwrap();
+    // identical site multiset modulo f32 summation order
+    let rel = (ll_after - ll_before).abs() / ll_before.abs();
+    assert!(rel < 1e-5, "loglik {ll_before} -> {ll_after} (rel {rel})");
+}

@@ -1,0 +1,118 @@
+//! Integration: §IV-E replica repair through the full ReStore store, and
+//! node-correlated failure resilience of the placement.
+
+use restore::config::RestoreConfig;
+use restore::restore::load::scatter_requests;
+use restore::restore::repair::RepairScheme;
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::simnet::failure::node_failure;
+
+fn setup(p: usize, r: usize) -> (Cluster, ReStore, Vec<Vec<u8>>) {
+    let cfg = RestoreConfig::builder(p, 8, 64).replicas(r).build().unwrap();
+    let mut cluster = Cluster::new_execution(p, 4);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    let shards: Vec<Vec<u8>> =
+        (0..p).map(|pe| (0..64 * 8).map(|i| (pe * 17 + i) as u8).collect()).collect();
+    store.submit(&mut cluster, &shards).unwrap();
+    (cluster, store, shards)
+}
+
+#[test]
+fn repair_restores_replication_level_and_data() {
+    // The scenario §IV-E exists for: group {1,5,9,13} (stride p/r = 4)
+    // loses two members, gets repaired, then loses the other two. Without
+    // repair that is a certain IDL; with repair the re-created copies
+    // (placed on PEs outside the dying group for these seeds) keep the
+    // data recoverable.
+    for scheme in [RepairScheme::DoubleHashing, RepairScheme::FeistelWalk] {
+        // counterfactual: same four failures, no repair -> IDL
+        let (mut c0, mut s0, _) = setup(16, 4);
+        c0.kill(&[1, 5, 9, 13]);
+        let reqs0 = scatter_requests(&s0, &c0, &[1]);
+        assert!(
+            s0.load(&mut c0, &reqs0).is_err(),
+            "without repair, losing a whole group must be an IDL"
+        );
+
+        let (mut cluster, mut store, shards) = setup(16, 4);
+        cluster.kill(&[1, 5]);
+        let rep = store.repair_replicas(&mut cluster, scheme).unwrap();
+        assert!(rep.transfers > 0, "{scheme:?}: something must move");
+        assert_eq!(rep.unrepairable, 0);
+        assert!(rep.cost.sim_time_s > 0.0);
+
+        // every slice has >= r alive holders again
+        for primary in 0..16usize {
+            let start = primary as u64 * 64;
+            let holders = (0..16)
+                .filter(|&pe| cluster.is_alive(pe) && store.stores()[pe].holds(start, 64))
+                .count();
+            assert!(holders >= 4, "{scheme:?}: slice {primary} has {holders} alive holders");
+        }
+
+        // finish off the group; repaired copies must keep slice 1 loadable
+        cluster.kill(&[9, 13]);
+        let reqs = scatter_requests(&store, &cluster, &[1]);
+        let out = store
+            .load(&mut cluster, &reqs)
+            .unwrap_or_else(|e| panic!("{scheme:?}: repaired data not found: {e}"));
+        let mut recovered = 0usize;
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            let bytes = shard.bytes.as_ref().unwrap();
+            recovered += bytes.len();
+            let mut off = 0;
+            for range in req.ranges.ranges() {
+                for x in range.start..range.end {
+                    let pe = (x / 64) as usize;
+                    let boff = ((x % 64) * 8) as usize;
+                    assert_eq!(&bytes[off..off + 8], &shards[pe][boff..boff + 8]);
+                    off += 8;
+                }
+            }
+        }
+        assert_eq!(recovered, 64 * 8, "{scheme:?}");
+    }
+}
+
+#[test]
+fn repair_is_idempotent() {
+    let (mut cluster, mut store, _) = setup(16, 4);
+    cluster.kill(&[2]);
+    let first = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+    let second = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+    assert!(first.transfers > 0);
+    assert_eq!(second.transfers, 0, "second repair must be a no-op");
+}
+
+#[test]
+fn repair_without_failures_moves_nothing() {
+    let (mut cluster, mut store, _) = setup(8, 2);
+    let rep = store.repair_replicas(&mut cluster, RepairScheme::FeistelWalk).unwrap();
+    assert_eq!(rep.transfers, 0);
+    assert_eq!(rep.unrepairable, 0);
+}
+
+#[test]
+fn whole_node_failure_is_survivable_by_construction() {
+    // §IV-A: the r copies of any block land on PEs far apart in rank space
+    // -> different nodes. Killing any ONE whole node must never cause IDL.
+    let p = 64;
+    let (mut cluster, mut store, _) = setup(p, 4);
+    let topo = cluster.topology().clone();
+    let dead = node_failure(&topo, 2); // PEs 8..12 (4 per node)
+    cluster.kill(&dead);
+    let reqs = scatter_requests(&store, &cluster, &dead);
+    let out = store.load(&mut cluster, &reqs).unwrap();
+    let total: usize = out.shards.iter().map(|s| s.bytes.as_ref().unwrap().len()).sum();
+    assert_eq!(total, dead.len() * 64 * 8);
+}
+
+#[test]
+fn repair_reports_unrepairable_units_on_total_group_loss() {
+    let (mut cluster, mut store, _) = setup(8, 2);
+    // group stride p/r = 4: kill the whole group of PE 1 -> slices lost
+    cluster.kill(&[1, 5]);
+    let rep = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+    assert!(rep.unrepairable > 0, "losing a full group must be reported");
+}

@@ -1,0 +1,156 @@
+//! Integration: PJRT runtime executes the AOT artifacts with correct
+//! numerics (Rust-side oracles recompute the kernels' results).
+//!
+//! Requires `make artifacts` to have run; tests locate the artifact
+//! directory relative to the workspace root.
+
+use restore::runtime::Engine;
+use restore::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before `cargo test`")
+}
+
+/// Rust oracle for the k-means assignment step.
+fn kmeans_oracle(points: &[f32], centers: &[f32], d: usize, k: usize) -> (Vec<f32>, Vec<f32>, f32) {
+    let n = points.len() / d;
+    let mut sums = vec![0f32; k * d];
+    let mut counts = vec![0f32; k];
+    let mut inertia = 0f32;
+    for i in 0..n {
+        let x = &points[i * d..(i + 1) * d];
+        let (mut best_c, mut best_d2) = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let ctr = &centers[c * d..(c + 1) * d];
+            let d2: f32 = x.iter().zip(ctr).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d2 < best_d2 {
+                best_c = c;
+                best_d2 = d2;
+            }
+        }
+        for (s, v) in sums[best_c * d..(best_c + 1) * d].iter_mut().zip(x) {
+            *s += v;
+        }
+        counts[best_c] += 1.0;
+        inertia += best_d2;
+    }
+    (sums, counts, inertia)
+}
+
+fn random_f32s(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_range_f32(lo, hi)).collect()
+}
+
+#[test]
+fn kmeans_tiny_artifact_matches_rust_oracle() {
+    let mut engine = engine();
+    let mut rng = Rng::seed_from_u64(7);
+    let points = random_f32s(&mut rng, 256 * 8, -4.0, 4.0);
+    let centers = random_f32s(&mut rng, 4 * 8, -4.0, 4.0);
+    let out = engine.execute_f32("kmeans_step_tiny", &[&points, &centers]).unwrap();
+    let (sums, counts, inertia) = kmeans_oracle(&points, &centers, 8, 4);
+    assert_eq!(out[1], counts, "counts must match exactly");
+    for (a, b) in out[0].iter().zip(&sums) {
+        assert!((a - b).abs() < 1e-3, "sums {a} vs {b}");
+    }
+    assert!((out[2][0] - inertia).abs() / inertia.max(1.0) < 1e-4);
+}
+
+#[test]
+fn kmeans_update_artifact_keeps_empty_clusters() {
+    let mut engine = engine();
+    let sums = vec![0f32; 4 * 8];
+    let mut counts = vec![0f32; 4];
+    counts[1] = 2.0;
+    let old: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    let out = engine.execute_f32("kmeans_update_tiny", &[&sums, &counts, &old]).unwrap();
+    let new = &out[0];
+    // cluster 1 has count 2, sums 0 -> moves to origin; others keep old
+    for d in 0..8 {
+        assert_eq!(new[8 + d], 0.0);
+        assert_eq!(new[d], old[d]);
+        assert_eq!(new[16 + d], old[16 + d]);
+    }
+}
+
+#[test]
+fn phylo_small_artifact_matches_rust_oracle() {
+    let mut engine = engine();
+    let mut rng = Rng::seed_from_u64(9);
+    let s = 1024;
+    let clv_l = random_f32s(&mut rng, s * 4, 0.05, 1.0);
+    let clv_r = random_f32s(&mut rng, s * 4, 0.05, 1.0);
+    let p_l = restore::apps::raxml::transition_matrix(17);
+    let p_r = restore::apps::raxml::transition_matrix(23);
+    let freqs = vec![0.25f32; 4];
+    let weights = vec![1.0f32; s];
+    let out = engine
+        .execute_f32("phylo_step_small", &[&clv_l, &clv_r, &p_l, &p_r, &freqs, &weights])
+        .unwrap();
+
+    // oracle
+    let mut ll = 0f64;
+    for site in 0..s {
+        let mut clv = [0f32; 4];
+        for i in 0..4 {
+            let mut left = 0f32;
+            let mut right = 0f32;
+            for j in 0..4 {
+                left += p_l[i * 4 + j] * clv_l[site * 4 + j];
+                right += p_r[i * 4 + j] * clv_r[site * 4 + j];
+            }
+            clv[i] = left * right;
+            assert!(
+                (out[0][site * 4 + i] - clv[i]).abs() < 1e-5,
+                "clv mismatch at site {site}"
+            );
+        }
+        let site_lik: f32 = clv.iter().map(|v| v * 0.25).sum();
+        ll += (site_lik.max(f32::MIN_POSITIVE)).ln() as f64;
+    }
+    assert!((out[1][0] as f64 - ll).abs() < 0.05 * ll.abs().max(1.0), "{} vs {ll}", out[1][0]);
+}
+
+#[test]
+fn manifest_lists_all_paper_variants() {
+    let engine = engine();
+    for name in [
+        "kmeans_step",
+        "kmeans_step_small",
+        "kmeans_step_tiny",
+        "kmeans_update",
+        "kmeans_update_tiny",
+        "phylo_step",
+        "phylo_step_small",
+    ] {
+        let entry = engine.entry(name).unwrap();
+        assert!(!entry.args.is_empty());
+        assert!(!entry.results.is_empty());
+    }
+    // the paper-scale shapes
+    let km = engine.entry("kmeans_step").unwrap();
+    assert_eq!(km.args[0].shape, vec![65536, 32]);
+    assert_eq!(km.args[1].shape, vec![20, 32]);
+}
+
+#[test]
+fn shape_mismatch_is_rejected_before_xla() {
+    let mut engine = engine();
+    let bad = vec![0f32; 3];
+    let err = engine.execute_f32("kmeans_step_tiny", &[&bad, &bad]).unwrap_err();
+    assert!(format!("{err}").contains("expected"));
+}
+
+#[test]
+fn zero_weights_make_phylo_loglik_zero() {
+    // the padding trick the raxml proxy relies on
+    let mut engine = engine();
+    let s = 1024;
+    let clv = vec![0.5f32; s * 4];
+    let p = restore::apps::raxml::transition_matrix(3);
+    let freqs = vec![0.25f32; 4];
+    let weights = vec![0f32; s];
+    let out = engine.execute_f32("phylo_step_small", &[&clv, &clv, &p, &p, &freqs, &weights]).unwrap();
+    assert_eq!(out[1][0], 0.0);
+}

@@ -1,0 +1,254 @@
+//! Property-based tests over randomized configurations (in-tree generator;
+//! the environment has no proptest — see Cargo.toml note). Each property
+//! runs against many random (p, r, blocks, s_pr, failures) tuples and
+//! shrinks nothing but prints the failing seed, which reproduces exactly.
+
+use restore::config::{RestoreConfig, ServerSelection};
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::distribution::Distribution;
+use restore::restore::load::{load_all_requests, scatter_requests};
+use restore::restore::permutation::{Feistel, RangePermutation};
+use restore::restore::store::assert_memory_invariant;
+use restore::restore::{LoadRequest, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::util::rng::Rng;
+
+/// Random valid config: p in [2, 32], r | p, block size in {4..64},
+/// perm ranges on/off.
+fn random_config(rng: &mut Rng) -> RestoreConfig {
+    loop {
+        let p = 2 + rng.gen_index(31);
+        let divisors: Vec<usize> = (1..=p).filter(|r| p % r == 0 && *r <= 8).collect();
+        let r = divisors[rng.gen_index(divisors.len())];
+        let bs = [4usize, 8, 16, 64][rng.gen_index(4)];
+        let bpp_choices = [16usize, 32, 64, 96, 256];
+        let bpp = bpp_choices[rng.gen_index(bpp_choices.len())];
+        let s_pr = if rng.gen_bool(0.5) {
+            let divs: Vec<usize> = (1..=bpp).filter(|s| bpp % s == 0).collect();
+            Some(divs[rng.gen_index(divs.len())])
+        } else {
+            None
+        };
+        let sel = [ServerSelection::Random, ServerSelection::LeastLoaded, ServerSelection::Primary]
+            [rng.gen_index(3)];
+        if let Ok(cfg) = RestoreConfig::builder(p, bs, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .seed(rng.next_u64())
+            .server_selection(sel)
+            .build()
+        {
+            return cfg;
+        }
+    }
+}
+
+fn shards_for(cfg: &RestoreConfig, rng: &mut Rng) -> Vec<Vec<u8>> {
+    (0..cfg.world)
+        .map(|_| {
+            (0..cfg.blocks_per_pe * cfg.block_size).map(|_| rng.next_u64() as u8).collect()
+        })
+        .collect()
+}
+
+fn expected_bytes(shards: &[Vec<u8>], ranges: &RangeSet, cfg: &RestoreConfig) -> Vec<u8> {
+    let bpp = cfg.blocks_per_pe as u64;
+    let bs = cfg.block_size;
+    let mut out = Vec::new();
+    for r in ranges.ranges() {
+        for x in r.start..r.end {
+            let pe = (x / bpp) as usize;
+            let off = ((x % bpp) as usize) * bs;
+            out.extend_from_slice(&shards[pe][off..off + bs]);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_submit_satisfies_memory_invariant() {
+    let mut rng = Rng::seed_from_u64(0xA11CE);
+    for trial in 0..40 {
+        let cfg = random_config(&mut rng);
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        let dist = Distribution::new(&cfg);
+        assert_memory_invariant(store.stores(), &dist);
+    }
+}
+
+#[test]
+fn prop_arbitrary_requests_roundtrip_bitexact_under_failures() {
+    let mut rng = Rng::seed_from_u64(0xB0B);
+    for trial in 0..25 {
+        let cfg = random_config(&mut rng);
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        let shards = shards_for(&cfg, &mut rng);
+        store.submit(&mut cluster, &shards).unwrap();
+
+        // kill up to r-1 PEs of each group — never an IDL
+        let stride = cfg.world / cfg.replicas;
+        let mut dead = Vec::new();
+        for g in 0..stride {
+            let kills = rng.gen_index(cfg.replicas); // 0..r-1
+            for k in 0..kills {
+                dead.push(g + k * stride);
+            }
+        }
+        let dead: Vec<usize> =
+            dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
+        cluster.kill(&dead);
+
+        // random requests from random alive PEs
+        let survivors = cluster.survivors();
+        let n = cfg.n_blocks();
+        let n_reqs = 1 + rng.gen_index(4);
+        let mut reqs: Vec<LoadRequest> = Vec::new();
+        for _ in 0..n_reqs {
+            let pe = survivors[rng.gen_index(survivors.len())];
+            let n_ranges = 1 + rng.gen_index(3);
+            let mut ranges: Vec<BlockRange> = Vec::new();
+            for _ in 0..n_ranges {
+                let a = rng.gen_u64_below(n);
+                let len = 1 + rng.gen_u64_below((n - a).min(cfg.blocks_per_pe as u64 * 2));
+                ranges.push(BlockRange::new(a, a + len));
+            }
+            reqs.push(LoadRequest { pe, ranges: RangeSet::new(ranges) });
+        }
+
+        let out = store
+            .load(&mut cluster, &reqs)
+            .unwrap_or_else(|e| panic!("trial {trial} (p={}, r={}): {e}", cfg.world, cfg.replicas));
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            assert_eq!(
+                shard.bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &req.ranges, &cfg),
+                "trial {trial}: wrong bytes for PE {}",
+                req.pe
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scatter_recovery_covers_lost_shards_exactly() {
+    let mut rng = Rng::seed_from_u64(0xC0C0A);
+    for trial in 0..25 {
+        let cfg = random_config(&mut rng);
+        if cfg.replicas < 2 {
+            continue;
+        }
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+
+        // kill a random set of < r PEs from distinct groups
+        let stride = cfg.world / cfg.replicas;
+        let mut dead: Vec<usize> = Vec::new();
+        for g in 0..stride {
+            if rng.gen_bool(0.3) {
+                dead.push(g + rng.gen_index(cfg.replicas) * stride);
+            }
+        }
+        dead.dedup();
+        let dead: Vec<usize> =
+            dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
+        if dead.is_empty() {
+            continue;
+        }
+        cluster.kill(&dead);
+
+        let reqs = scatter_requests(&store, &cluster, &dead);
+        let requested: u64 = reqs.iter().map(|r| r.ranges.total_blocks()).sum();
+        assert_eq!(
+            requested,
+            dead.len() as u64 * cfg.blocks_per_pe as u64,
+            "trial {trial}: scatter must request exactly the lost blocks"
+        );
+        // requests must be disjoint and land only on survivors
+        let mut all: Vec<BlockRange> = Vec::new();
+        for r in &reqs {
+            assert!(cluster.is_alive(r.pe));
+            all.extend(r.ranges.ranges().iter().copied());
+        }
+        let merged = RangeSet::new(all.clone());
+        assert_eq!(merged.total_blocks(), requested, "trial {trial}: overlapping requests");
+        store.load(&mut cluster, &reqs).unwrap();
+    }
+}
+
+#[test]
+fn prop_load_all_partitions_whole_id_space() {
+    let mut rng = Rng::seed_from_u64(0xDEAD);
+    for _trial in 0..30 {
+        let cfg = random_config(&mut rng);
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        let reqs = load_all_requests(&store, &cluster);
+        let all: Vec<BlockRange> =
+            reqs.iter().flat_map(|r| r.ranges.ranges().iter().copied()).collect();
+        let merged = RangeSet::new(all);
+        assert_eq!(merged.total_blocks(), cfg.n_blocks());
+        assert_eq!(merged.ranges().len(), 1, "must be a seamless partition");
+        store.load(&mut cluster, &reqs).unwrap();
+    }
+}
+
+#[test]
+fn prop_feistel_bijection_random_domains() {
+    let mut rng = Rng::seed_from_u64(0xFE15);
+    for _ in 0..50 {
+        let domain = 1 + rng.gen_u64_below(1 << 14);
+        let f = Feistel::new(domain, rng.next_u64());
+        // spot-check bijection by sampling (full check for small domains)
+        if domain <= 512 {
+            let mut seen = vec![false; domain as usize];
+            for i in 0..domain {
+                let y = f.apply(i);
+                assert!(y < domain && !seen[y as usize]);
+                seen[y as usize] = true;
+            }
+        } else {
+            for _ in 0..200 {
+                let i = rng.gen_u64_below(domain);
+                let y = f.apply(i);
+                assert!(y < domain);
+                assert_eq!(f.invert(y), i);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_distribution_holder_consistency() {
+    // stored_slice and holder must be inverse views of each other for
+    // random configs.
+    let mut rng = Rng::seed_from_u64(0x90D);
+    for _ in 0..40 {
+        let cfg = random_config(&mut rng);
+        let dist = Distribution::new(&cfg);
+        for _ in 0..50 {
+            let y = rng.gen_u64_below(dist.n_blocks());
+            for k in 0..dist.replicas() {
+                let pe = dist.holder(y, k);
+                assert!(dist.stored_slice(pe, k).contains(y));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_idl_simulation_never_below_r() {
+    let mut rng = Rng::seed_from_u64(0x1D1);
+    for _ in 0..30 {
+        let r = 1 + rng.gen_u64_below(4);
+        let groups = 1 + rng.gen_u64_below(64);
+        let p = r * groups;
+        let f = restore::restore::idl::simulate_failures_until_idl(p, r, &mut rng);
+        assert!(f >= r, "IDL after {f} failures with r={r}");
+        assert!(f <= p);
+    }
+}
