@@ -6,6 +6,9 @@
 //! * load-1% request resolution + routing,
 //! * Monte-Carlo IDL simulation step,
 //! * PJRT kernel execution latency (tiny + small k-means artifacts).
+//!
+//! Paper-scale (p = 24576) load-path numbers live in
+//! `benches/load_scale.rs`.
 
 use restore::config::RestoreConfig;
 use restore::metrics::fmt_time;

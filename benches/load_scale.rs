@@ -1,0 +1,52 @@
+//! Load-path scaling benchmarks (EXPERIMENTS.md §Perf).
+//!
+//! Resolve + route + cost throughput of the paper's benchmark operations
+//! (§VI-B2) in cost-model mode at p = 1536 (the hotpath baseline scale)
+//! and p = 24576 (the paper's largest configuration): *load 1 %*,
+//! *load all*, and the scattered shrink-style recovery of §VI-D.2 after a
+//! full-node (48 PE) failure. These are the workloads the load pipeline's
+//! scratch reuse, run coalescing, and placement index target; compare the
+//! `p=1536` line against `benches/hotpath.rs`'s seed baseline.
+
+use restore::config::RestoreConfig;
+use restore::restore::load::{load_all_requests, load_percent_requests, scatter_requests};
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::{bench, black_box};
+
+fn run_scale(p: usize, reps: usize) {
+    println!("--- p = {p} (cost-model) ---");
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let mut cluster = Cluster::new_execution(p, 48);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+
+    let mut rep = 0usize;
+    let r = bench(&format!("load-1% resolve+route p={p}"), 1, reps, || {
+        rep += 1;
+        let reqs = load_percent_requests(&store, &cluster, 1.0, rep % p);
+        black_box(store.load(&mut cluster, &reqs).unwrap());
+    });
+    println!("{}", r.line());
+
+    let r = bench(&format!("load-all resolve+route p={p}"), 1, reps.div_ceil(2), || {
+        let reqs = load_all_requests(&store, &cluster);
+        black_box(store.load(&mut cluster, &reqs).unwrap());
+    });
+    println!("{}", r.line());
+
+    // one full node fails; the survivors shrink-load its shards
+    let failed: Vec<usize> = (0..48).collect();
+    cluster.kill(&failed);
+    let r = bench(&format!("scattered-recovery resolve+route p={p}"), 1, reps, || {
+        let reqs = scatter_requests(&store, &cluster, &failed);
+        black_box(store.load(&mut cluster, &reqs).unwrap());
+    });
+    println!("{}", r.line());
+}
+
+fn main() {
+    println!("=== load-path scaling benchmarks ===\n");
+    run_scale(1536, 10);
+    run_scale(24576, 3);
+}

@@ -13,6 +13,25 @@
 //! `r` whole slices (one per copy). The PEs `{ i ≡ g (mod p/r) }` store
 //! identical data — the §IV-D *groups* whose simultaneous failure is the
 //! only irrecoverable event.
+//!
+//! ## The placement index (perf)
+//!
+//! `π` is a 4-round Feistel cipher with cycle walking — ~16 hash rounds per
+//! unit mapping, paid by *every* `permute_block` call. Submit touches every
+//! unit once, but the load path re-maps the requested units on **every**
+//! recovery, so the cipher cost recurs per failure. When the unit domain is
+//! small enough ([`UNIT_INDEX_MAX_UNITS`]) the constructor precomputes the
+//! whole unit→slot table once — one `Vec<u32>` shared (via `Arc`) by
+//! submit, load, and repair — turning the per-unit mapping into one L1/L2
+//! array read.
+//!
+//! Trade-off: 4 bytes per permutation unit of *global* memory. At the
+//! paper's defaults (256 KiB ranges, 16 MiB/PE ⇒ 64 units/PE) that is
+//! 256 B/PE — 6 MiB for the full p = 24 576 system, negligible next to the
+//! 64 MiB/PE of replica payload. At pathological unit counts (tiny ranges ×
+//! huge worlds) the table is skipped and the cipher is evaluated on demand,
+//! so memory stays bounded; the inverse direction (`unpermute_block`, only
+//! used on cold error paths) always uses the cipher.
 
 use std::sync::Arc;
 
@@ -32,6 +51,11 @@ pub struct PermutedPiece {
     pub len: u64,
 }
 
+/// Largest unit domain for which the precomputed unit→slot placement index
+/// is built (4 bytes per unit ⇒ ≤ 64 MiB of index). See the module docs
+/// for the memory-vs-Feistel-throughput trade-off.
+pub const UNIT_INDEX_MAX_UNITS: u64 = 1 << 24;
+
 /// The placement function shared by submit, load, and repair.
 #[derive(Clone)]
 pub struct Distribution {
@@ -43,6 +67,10 @@ pub struct Distribution {
     /// so the whole shard is one unit).
     s_pr: u64,
     perm: Arc<dyn RangePermutation>,
+    /// Precomputed `unit → permuted slot` table (forward direction of
+    /// `perm`), built once at construction when the domain is small enough.
+    /// `None` ⇒ evaluate the cipher on demand.
+    unit_index: Option<Arc<Vec<u32>>>,
 }
 
 impl Distribution {
@@ -58,6 +86,13 @@ impl Distribution {
                 (bpp, Arc::new(Identity { domain }))
             }
         };
+        // Placement index: only worth materializing for a real permutation
+        // (the identity maps units for free) and a bounded domain.
+        let unit_index = (cfg.perm_range_blocks.is_some()
+            && perm.domain() <= UNIT_INDEX_MAX_UNITS)
+            .then(|| {
+                Arc::new((0..perm.domain()).map(|u| perm.apply(u) as u32).collect::<Vec<u32>>())
+            });
         Distribution {
             p: cfg.world,
             r: cfg.replicas,
@@ -65,6 +100,7 @@ impl Distribution {
             blocks_per_pe: bpp,
             s_pr,
             perm,
+            unit_index,
         }
     }
 
@@ -105,11 +141,27 @@ impl Distribution {
         pe % self.copy_stride()
     }
 
+    /// Is the precomputed unit→slot placement index active?
+    pub fn has_unit_index(&self) -> bool {
+        self.unit_index.is_some()
+    }
+
+    /// Permuted slot of permutation unit `unit` — one array read when the
+    /// placement index is built, a Feistel evaluation otherwise.
+    #[inline]
+    pub fn unit_slot(&self, unit: u64) -> u64 {
+        match &self.unit_index {
+            Some(ix) => ix[unit as usize] as u64,
+            None => self.perm.apply(unit),
+        }
+    }
+
     /// Permuted position of original block `x`.
+    #[inline]
     pub fn permute_block(&self, x: u64) -> u64 {
         let unit = x / self.s_pr;
         let off = x % self.s_pr;
-        self.perm.apply(unit) * self.s_pr + off
+        self.unit_slot(unit) * self.s_pr + off
     }
 
     /// Original position of permuted block `y`.
@@ -191,6 +243,7 @@ impl std::fmt::Debug for Distribution {
             .field("r", &self.r)
             .field("blocks_per_pe", &self.blocks_per_pe)
             .field("s_pr", &self.s_pr)
+            .field("unit_index", &self.unit_index.as_ref().map(|ix| ix.len()))
             .finish()
     }
 }
@@ -305,6 +358,30 @@ mod tests {
         assert_eq!(sa, sb);
         assert_eq!(d.group_of(1), d.group_of(5));
         assert_ne!(d.group_of(1), d.group_of(2));
+    }
+
+    #[test]
+    fn unit_index_matches_cipher() {
+        // The precomputed table must agree with the Feistel cipher exactly
+        // (one entry per unit, forward direction).
+        let cfg = RestoreConfig::builder(8, 64, 64)
+            .replicas(2)
+            .perm_range_blocks(Some(8))
+            .build()
+            .unwrap();
+        let d = Distribution::new(&cfg);
+        assert!(d.has_unit_index());
+        let f = Feistel::new(cfg.n_blocks() / 8, cfg.seed);
+        for u in 0..(cfg.n_blocks() / 8) {
+            assert_eq!(d.unit_slot(u), f.apply(u), "unit {u}");
+        }
+    }
+
+    #[test]
+    fn identity_distribution_skips_unit_index() {
+        let d = dist(4, 16, 2, None);
+        assert!(!d.has_unit_index());
+        assert_eq!(d.permute_block(17), 17);
     }
 
     #[test]

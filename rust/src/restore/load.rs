@@ -11,11 +11,45 @@
 //! 2. **Data sparse all-to-all.** Servers answer with one coalesced data
 //!    message per requester.
 //!
+//! ## The routing pipeline (perf)
+//!
+//! Recovery latency is the paper's headline number ("in the range of
+//! milliseconds on up to 24 576 processors"), so the simulator's load path
+//! must not be dominated by its own bookkeeping. The pipeline performs no
+//! per-piece heap allocation in steady state — all per-piece intermediate
+//! state lives in a [`LoadScratch`] owned by the `ReStore` instance and
+//! reused across calls (the remaining per-call allocations are the output
+//! shards and the two per-phase cost `Accumulator`s; reusing the latter is
+//! a ROADMAP open item):
+//!
+//! * **Resolve** — block ranges → [`PermutedPiece`]s via the precomputed
+//!   placement index ([`crate::restore::distribution`]), no Feistel work on
+//!   the hot path.
+//! * **Route** — `pick_server` walks the ≤ `r` holders through a
+//!   fixed-size stack buffer (no per-piece `Vec`), tracking per-server load
+//!   for the `LeastLoaded` policy in a dense per-PE table.
+//! * **Coalesce** — adjacent routed pieces with the same (requester,
+//!   server) and contiguous permuted ranges inside one slice merge into
+//!   single *runs*: one memcpy and one pack/unpack fragment each, matching
+//!   the paper's "one coalesced message per pair" semantics. Byte and
+//!   bottleneck totals are unchanged by construction (each run still
+//!   carries one 24-byte descriptor *per merged piece* and the sum of its
+//!   pieces' payload bytes); only fragment counts can drop. Merges require
+//!   consecutive units to land on adjacent permuted slots in one slice, so
+//!   they are rare under the Feistel permutation — the guaranteed wins are
+//!   the scratch reuse and the sort-based aggregation below.
+//! * **Aggregate** — runs are sorted by (requester, server) and both
+//!   message phases are charged by run-length grouping over that order —
+//!   no tuple-keyed hash maps.
+//! * **Assemble** — each run resolves its source slice once via the sorted
+//!   binary-searched [`crate::restore::store::PeStore`] and performs a
+//!   single contiguous copy.
+//!
 //! The request-pattern helpers at the bottom generate the paper's three
 //! benchmark operations (§VI-B2) and the two recovery styles of §VI-D.2
 //! (single-target substitute-style and scattered shrinking-style).
-
-use std::collections::HashMap;
+//! Throughput is tracked by `benches/hotpath.rs` and `benches/
+//! load_scale.rs`; before/after numbers live in `EXPERIMENTS.md §Perf`.
 
 use crate::config::ServerSelection;
 use crate::error::{Error, Result};
@@ -28,6 +62,11 @@ use crate::simnet::cluster::Cluster;
 /// Bytes per piece descriptor in a request message (perm_start, len, dest
 /// offset — what the sparse all-to-all of §V carries).
 const REQUEST_HEADER_BYTES: u64 = 24;
+
+/// Replication levels up to this route through a fixed-size stack buffer
+/// in `pick_server`; larger `r` (and the rare post-repair fallback) use a
+/// reusable scratch vector instead.
+const INLINE_HOLDERS: usize = 16;
 
 /// A piece with its chosen server, requester, and output offset.
 #[derive(Debug, Clone, Copy)]
@@ -42,6 +81,36 @@ struct RoutedPiece {
     out_offset: u64,
 }
 
+/// A maximal merge of adjacent routed pieces with the same (requester,
+/// server) and contiguous permuted positions inside one slice: one memcpy,
+/// one pack fragment, one unpack fragment.
+#[derive(Debug, Clone, Copy)]
+struct Run {
+    requester: usize,
+    req_idx: usize,
+    server: usize,
+    perm_start: u64,
+    /// Length in blocks.
+    len: u64,
+    /// Number of request descriptors merged into this run (cost accounting
+    /// stays per-piece so totals are identical to the uncoalesced schedule).
+    pieces: u64,
+    out_offset: u64,
+}
+
+/// Reusable buffers for [`ReStore::load`]: steady-state calls perform no
+/// per-piece heap allocation — only the output shards are allocated.
+#[derive(Debug, Default)]
+pub(crate) struct LoadScratch {
+    routed: Vec<RoutedPiece>,
+    pieces: Vec<PermutedPiece>,
+    runs: Vec<Run>,
+    /// Dense per-PE byte counters for the `LeastLoaded` policy.
+    server_load: Vec<u64>,
+    /// Holder list for `r > INLINE_HOLDERS` and the repair fallback.
+    holders: Vec<usize>,
+}
+
 impl ReStore {
     /// Load data after failures. `requests` lists, per requesting PE, the
     /// original block ID ranges it needs (PEs with no needs may be absent).
@@ -52,28 +121,47 @@ impl ReStore {
     /// back to reloading input from disk, as the paper prescribes (§VI-B1).
     pub fn load(&mut self, cluster: &mut Cluster, requests: &[LoadRequest]) -> Result<LoadOutput> {
         self.ensure_submitted()?;
-        let dist = self.dist.clone();
+        // Detach the scratch so `&self` stays free for routing lookups; it
+        // is returned (with its grown capacity) even on error.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let result = self.load_with_scratch(cluster, requests, &mut scratch);
+        self.scratch = scratch;
+        result
+    }
+
+    fn load_with_scratch(
+        &self,
+        cluster: &mut Cluster,
+        requests: &[LoadRequest],
+        scratch: &mut LoadScratch,
+    ) -> Result<LoadOutput> {
+        let dist = &self.dist;
         let bs = self.cfg.block_size as u64;
+        let bpp = dist.blocks_per_pe();
 
         // --- Phase 1a: request resolution (local, per requester) --------
-        let mut routed: Vec<RoutedPiece> = Vec::new();
-        let mut pieces: Vec<PermutedPiece> = Vec::new();
-        // Greedy per-server load for the LeastLoaded policy.
-        let mut server_load: HashMap<usize, u64> = HashMap::new();
-
+        scratch.routed.clear();
+        scratch.server_load.clear();
+        scratch.server_load.resize(dist.world(), 0);
         for (req_idx, req) in requests.iter().enumerate() {
             if !cluster.is_alive(req.pe) {
                 return Err(Error::DeadPe(req.pe));
             }
             let mut out_offset = 0u64;
             for range in req.ranges.ranges() {
-                pieces.clear();
-                dist.permuted_pieces(*range, &mut pieces);
-                for piece in &pieces {
-                    let server =
-                        self.pick_server(cluster, req.pe, piece, &mut server_load)?;
-                    routed.push(RoutedPiece {
-                        piece: *piece,
+                scratch.pieces.clear();
+                dist.permuted_pieces(*range, &mut scratch.pieces);
+                for i in 0..scratch.pieces.len() {
+                    let piece = scratch.pieces[i];
+                    let server = self.pick_server(
+                        cluster,
+                        req.pe,
+                        &piece,
+                        &mut scratch.server_load,
+                        &mut scratch.holders,
+                    )?;
+                    scratch.routed.push(RoutedPiece {
+                        piece,
                         requester: req.pe,
                         req_idx,
                         server,
@@ -84,55 +172,102 @@ impl ReStore {
             }
         }
 
+        // --- Run coalescing ---------------------------------------------
+        // Merge adjacent pieces with the same (request, server) that are
+        // contiguous in both the permuted space (within one slice, so a
+        // single stored buffer covers the run) and the output buffer.
+        scratch.runs.clear();
+        for rp in &scratch.routed {
+            if let Some(last) = scratch.runs.last_mut() {
+                if last.req_idx == rp.req_idx
+                    && last.server == rp.server
+                    && last.perm_start + last.len == rp.piece.perm_start
+                    && last.perm_start / bpp == rp.piece.perm_start / bpp
+                    && last.out_offset + last.len * bs == rp.out_offset
+                {
+                    last.len += rp.piece.len;
+                    last.pieces += 1;
+                    continue;
+                }
+            }
+            scratch.runs.push(Run {
+                requester: rp.requester,
+                req_idx: rp.req_idx,
+                server: rp.server,
+                perm_start: rp.piece.perm_start,
+                len: rp.piece.len,
+                pieces: 1,
+                out_offset: rp.out_offset,
+            });
+        }
+
+        // Group runs per (requester, server) pair by sorting; both message
+        // phases below are single run-length passes over this order.
+        scratch.runs.sort_unstable_by_key(|r| (r.requester, r.server));
+
         // --- Phase 1b: request sparse all-to-all -------------------------
         // One message per distinct (requester, server) pair carrying the
-        // piece descriptors.
-        let mut req_msgs: HashMap<(usize, usize), u64> = HashMap::new();
-        for rp in &routed {
-            *req_msgs.entry((rp.requester, rp.server)).or_insert(0) += REQUEST_HEADER_BYTES;
+        // per-piece descriptors.
+        let mut phase = cluster.phase();
+        let mut i = 0;
+        while i < scratch.runs.len() {
+            let (requester, server) = (scratch.runs[i].requester, scratch.runs[i].server);
+            let mut bytes = 0u64;
+            while i < scratch.runs.len()
+                && scratch.runs[i].requester == requester
+                && scratch.runs[i].server == server
+            {
+                bytes += scratch.runs[i].pieces * REQUEST_HEADER_BYTES;
+                i += 1;
+            }
+            phase.add(requester, server, bytes)?;
         }
-        let request_cost =
-            cluster.charge_phase(req_msgs.iter().map(|(&(s, d), &b)| (s, d, b)))?;
+        let request_cost = phase.commit();
 
         // --- Phase 2: data sparse all-to-all ------------------------------
-        let mut data_msgs: HashMap<(usize, usize), u64> = HashMap::new();
-        for rp in &routed {
-            *data_msgs.entry((rp.server, rp.requester)).or_insert(0) += rp.piece.len * bs;
-        }
+        // One message per (server, requester) pair; every run is one pack
+        // fragment on the server and one unpack fragment on the requester.
         let mut phase = cluster.phase();
-        for (&(s, d), &b) in &data_msgs {
-            phase.add(s, d, b)?;
-        }
-        // every piece is a pack fragment on the server and an unpack
-        // fragment on the requester
-        for rp in &routed {
-            if rp.server != rp.requester {
-                phase.frag(rp.server, 1);
-                phase.frag(rp.requester, 1);
+        let mut i = 0;
+        while i < scratch.runs.len() {
+            let (requester, server) = (scratch.runs[i].requester, scratch.runs[i].server);
+            let start = i;
+            let mut bytes = 0u64;
+            while i < scratch.runs.len()
+                && scratch.runs[i].requester == requester
+                && scratch.runs[i].server == server
+            {
+                bytes += scratch.runs[i].len * bs;
+                i += 1;
+            }
+            phase.add(server, requester, bytes)?;
+            if server != requester {
+                phase.frag(server, (i - start) as u64);
+                phase.frag(requester, (i - start) as u64);
             }
         }
         let data_cost = phase.commit();
 
         // --- Assemble outputs (execution mode) ---------------------------
-        let execution = self
-            .stores
-            .iter()
-            .any(|st| st.slices().first().is_some_and(|s| matches!(s.buf, crate::restore::store::SliceBuf::Real(_))));
+        let execution = self.stores.iter().any(|st| {
+            st.slices()
+                .first()
+                .is_some_and(|s| matches!(s.buf, crate::restore::store::SliceBuf::Real(_)))
+        });
         let mut shards: Vec<LoadedShard> = requests
             .iter()
             .map(|r| LoadedShard {
                 pe: r.pe,
-                bytes: execution
-                    .then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]),
+                bytes: execution.then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]),
             })
             .collect();
         if execution {
-            for rp in &routed {
-                let src = self.stores[rp.server]
-                    .read(rp.piece.perm_start, rp.piece.len)
+            for run in &scratch.runs {
+                let src = self.stores[run.server]
+                    .read(run.perm_start, run.len)
                     .expect("execution-mode store must hold real bytes");
-                let dst = shards[rp.req_idx].bytes.as_mut().unwrap();
-                let off = rp.out_offset as usize;
+                let dst = shards[run.req_idx].bytes.as_mut().unwrap();
+                let off = run.out_offset as usize;
                 dst[off..off + src.len()].copy_from_slice(src);
             }
         }
@@ -146,33 +281,63 @@ impl ReStore {
     }
 
     /// Pick the serving PE for one piece among the surviving holders.
+    ///
+    /// The ≤ `r` deterministic §IV-A holders are walked through a
+    /// fixed-size stack buffer; `holders_scratch` only backs oversized `r`
+    /// and the repair fallback, so the steady state allocates nothing.
     fn pick_server(
         &self,
         cluster: &Cluster,
         requester: usize,
         piece: &PermutedPiece,
-        server_load: &mut HashMap<usize, u64>,
+        server_load: &mut [u64],
+        holders_scratch: &mut Vec<usize>,
     ) -> Result<usize> {
         let dist = &self.dist;
-        let mut alive: Vec<usize> = (0..dist.replicas())
-            .map(|k| dist.holder(piece.perm_start, k))
-            .filter(|&pe| cluster.is_alive(pe))
-            .collect();
-        if alive.is_empty() {
+        let r = dist.replicas();
+        let mut inline = [0usize; INLINE_HOLDERS];
+        let use_inline = r <= INLINE_HOLDERS;
+        if !use_inline {
+            holders_scratch.clear();
+        }
+        let mut n_alive = 0usize;
+        for k in 0..r {
+            let pe = dist.holder(piece.perm_start, k);
+            if cluster.is_alive(pe) {
+                if use_inline {
+                    inline[n_alive] = pe;
+                } else {
+                    holders_scratch.push(pe);
+                }
+                n_alive += 1;
+            }
+        }
+        let alive: &[usize] = if n_alive > 0 {
+            if use_inline {
+                &inline[..n_alive]
+            } else {
+                holders_scratch.as_slice()
+            }
+        } else {
             // All deterministic §IV-A holders are dead — consult replicas
             // re-created by §IV-E repair (in the paper's design a repaired
             // placement is recomputable from the probing sequence; the
             // simulator checks the stores directly, which is equivalent).
-            alive = cluster
-                .survivors()
-                .into_iter()
-                .filter(|&pe| self.stores[pe].holds(piece.perm_start, piece.len))
-                .collect();
-        }
-        if alive.is_empty() {
-            let orig = dist.unpermute_block(piece.perm_start);
-            return Err(Error::IrrecoverableDataLoss { start: orig, end: orig + piece.len });
-        }
+            holders_scratch.clear();
+            for pe in 0..dist.world() {
+                if cluster.is_alive(pe) && self.stores[pe].holds(piece.perm_start, piece.len) {
+                    holders_scratch.push(pe);
+                }
+            }
+            if holders_scratch.is_empty() {
+                let orig = dist.unpermute_block(piece.perm_start);
+                return Err(Error::IrrecoverableDataLoss {
+                    start: orig,
+                    end: orig + piece.len,
+                });
+            }
+            holders_scratch.as_slice()
+        };
         let chosen = match self.cfg.server_selection {
             ServerSelection::Random => {
                 // Same (requester, slice, epoch) -> same server: successive
@@ -184,13 +349,20 @@ impl ReStore {
                 );
                 alive[(h % alive.len() as u64) as usize]
             }
-            ServerSelection::LeastLoaded => *alive
-                .iter()
-                .min_by_key(|pe| server_load.get(pe).copied().unwrap_or(0))
-                .unwrap(),
+            ServerSelection::LeastLoaded => {
+                // Mirrors `Iterator::min_by_key`: on ties the FIRST minimal
+                // holder wins (keeps parity with the reference router).
+                let mut best = alive[0];
+                for &pe in &alive[1..] {
+                    if server_load[pe] < server_load[best] {
+                        best = pe;
+                    }
+                }
+                best
+            }
             ServerSelection::Primary => alive[0],
         };
-        *server_load.entry(chosen).or_insert(0) += piece.len * self.cfg.block_size as u64;
+        server_load[chosen] += piece.len * self.cfg.block_size as u64;
         Ok(chosen)
     }
 }
@@ -511,5 +683,340 @@ mod tests {
                 assert!(s.bytes.as_ref().unwrap().iter().all(|&b| b == 2));
             }
         }
+    }
+
+    #[test]
+    fn scatter_requests_for_ranges_filters_and_maps() {
+        let gained = vec![
+            (3usize, RangeSet::new(vec![BlockRange::new(0, 4), BlockRange::new(10, 12)])),
+            (5, RangeSet::new(vec![])), // no gained data -> no request
+            (0, RangeSet::new(vec![BlockRange::new(4, 10)])),
+        ];
+        let reqs = scatter_requests_for_ranges(&gained);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].pe, 3);
+        assert_eq!(reqs[0].ranges.total_blocks(), 6);
+        assert_eq!(
+            reqs[0].ranges.ranges(),
+            &[BlockRange::new(0, 4), BlockRange::new(10, 12)]
+        );
+        assert_eq!(reqs[1].pe, 0);
+        assert_eq!(reqs[1].ranges.ranges(), &[BlockRange::new(4, 10)]);
+    }
+
+    #[test]
+    fn scatter_requests_for_ranges_feeds_load() {
+        let (mut cluster, mut rs, shards) = setup(8, 64, 4, Some(16));
+        cluster.kill(&[3]);
+        // a load balancer handed PE 0 and PE 4 halves of the lost shard
+        let lost = rs.distribution().shard_of(3);
+        let mid = lost.start + lost.len() / 2;
+        let gained = vec![
+            (0usize, RangeSet::new(vec![BlockRange::new(lost.start, mid)])),
+            (4, RangeSet::new(vec![BlockRange::new(mid, lost.end)])),
+        ];
+        let reqs = scatter_requests_for_ranges(&gained);
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            assert_eq!(
+                shard.bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &req.ranges, 64)
+            );
+        }
+    }
+}
+
+/// Golden parity suite: the optimized pipeline must be byte- and
+/// cost-identical to a straightforward per-piece reference implementation
+/// (fragment counts — hence simulated time — may only decrease).
+#[cfg(test)]
+mod golden {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::restore::repair::RepairScheme;
+    use crate::restore::store::SliceBuf;
+    use crate::simnet::network::{Accumulator, PhaseCost};
+    use std::collections::HashMap;
+
+    struct RefLoad {
+        shards: Vec<Option<Vec<u8>>>,
+        request_cost: PhaseCost,
+        data_cost: PhaseCost,
+        /// Data bytes per (server, requester) pair — includes self-pairs.
+        data_pairs: HashMap<(usize, usize), u64>,
+    }
+
+    /// The seed implementation, kept verbatim as the oracle: per-piece
+    /// routing with a freshly allocated holder `Vec`, tuple-keyed hash-map
+    /// message aggregation, per-piece fragments and per-piece copies.
+    fn reference_load(rs: &ReStore, cluster: &Cluster, requests: &[LoadRequest]) -> RefLoad {
+        struct Routed {
+            piece: PermutedPiece,
+            requester: usize,
+            req_idx: usize,
+            server: usize,
+            out_offset: u64,
+        }
+        let dist = rs.distribution();
+        let cfg = rs.config();
+        let bs = cfg.block_size as u64;
+
+        let mut routed: Vec<Routed> = Vec::new();
+        let mut server_load: HashMap<usize, u64> = HashMap::new();
+        let mut pieces: Vec<PermutedPiece> = Vec::new();
+        for (req_idx, req) in requests.iter().enumerate() {
+            assert!(cluster.is_alive(req.pe));
+            let mut out_offset = 0u64;
+            for range in req.ranges.ranges() {
+                pieces.clear();
+                dist.permuted_pieces(*range, &mut pieces);
+                for piece in &pieces {
+                    let mut alive: Vec<usize> = (0..dist.replicas())
+                        .map(|k| dist.holder(piece.perm_start, k))
+                        .filter(|&pe| cluster.is_alive(pe))
+                        .collect();
+                    if alive.is_empty() {
+                        alive = cluster
+                            .survivors()
+                            .into_iter()
+                            .filter(|&pe| rs.stores()[pe].holds(piece.perm_start, piece.len))
+                            .collect();
+                    }
+                    assert!(!alive.is_empty(), "reference hit IDL");
+                    let server = match cfg.server_selection {
+                        ServerSelection::Random => {
+                            let slice = piece.perm_start / dist.blocks_per_pe();
+                            let h = seeded_hash(
+                                cfg.seed ^ cluster.epoch,
+                                ((req.pe as u64) << 32) ^ slice,
+                            );
+                            alive[(h % alive.len() as u64) as usize]
+                        }
+                        ServerSelection::LeastLoaded => *alive
+                            .iter()
+                            .min_by_key(|&&pe| server_load.get(&pe).copied().unwrap_or(0))
+                            .unwrap(),
+                        ServerSelection::Primary => alive[0],
+                    };
+                    *server_load.entry(server).or_insert(0) += piece.len * bs;
+                    routed.push(Routed {
+                        piece: *piece,
+                        requester: req.pe,
+                        req_idx,
+                        server,
+                        out_offset,
+                    });
+                    out_offset += piece.len * bs;
+                }
+            }
+        }
+
+        let mut req_msgs: HashMap<(usize, usize), u64> = HashMap::new();
+        for rp in &routed {
+            *req_msgs.entry((rp.requester, rp.server)).or_insert(0) += REQUEST_HEADER_BYTES;
+        }
+        let mut acc = Accumulator::new(cluster.network(), cluster.topology());
+        for (&(s, d), &b) in &req_msgs {
+            acc.msg(s, d, b);
+        }
+        let request_cost = acc.finish();
+
+        let mut data_pairs: HashMap<(usize, usize), u64> = HashMap::new();
+        for rp in &routed {
+            *data_pairs.entry((rp.server, rp.requester)).or_insert(0) += rp.piece.len * bs;
+        }
+        let mut acc = Accumulator::new(cluster.network(), cluster.topology());
+        for (&(s, d), &b) in &data_pairs {
+            acc.msg(s, d, b);
+        }
+        for rp in &routed {
+            if rp.server != rp.requester {
+                acc.frag(rp.server, 1);
+                acc.frag(rp.requester, 1);
+            }
+        }
+        let data_cost = acc.finish();
+
+        let execution = rs.stores().iter().any(|st| {
+            st.slices().first().is_some_and(|s| matches!(s.buf, SliceBuf::Real(_)))
+        });
+        let mut shards: Vec<Option<Vec<u8>>> = requests
+            .iter()
+            .map(|r| execution.then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]))
+            .collect();
+        if execution {
+            for rp in &routed {
+                let src = rs.stores()[rp.server]
+                    .read(rp.piece.perm_start, rp.piece.len)
+                    .expect("execution-mode store must hold real bytes");
+                let dst = shards[rp.req_idx].as_mut().unwrap();
+                let off = rp.out_offset as usize;
+                dst[off..off + src.len()].copy_from_slice(src);
+            }
+        }
+
+        RefLoad { shards, request_cost, data_cost, data_pairs }
+    }
+
+    fn assert_parity(rs: &mut ReStore, cluster: &mut Cluster, reqs: &[LoadRequest], tag: &str) {
+        let reference = reference_load(rs, cluster, reqs);
+        let out = rs.load(cluster, reqs).unwrap();
+        // bytes
+        for (i, (got, want)) in out.shards.iter().zip(&reference.shards).enumerate() {
+            assert_eq!(got.bytes.as_deref(), want.as_deref(), "{tag}: shard {i} bytes");
+        }
+        // request phase: no fragments are charged, so the whole cost —
+        // including simulated time — must match exactly
+        assert_eq!(out.request_cost, reference.request_cost, "{tag}: request cost");
+        // data phase: byte/message totals and bottlenecks identical;
+        // coalescing may only reduce fragment charges, i.e. simulated time
+        let (o, r) = (&out.data_cost, &reference.data_cost);
+        assert_eq!(o.total_bytes, r.total_bytes, "{tag}: data total bytes");
+        assert_eq!(o.bottleneck_bytes, r.bottleneck_bytes, "{tag}: data bottleneck bytes");
+        assert_eq!(o.total_msgs, r.total_msgs, "{tag}: data total msgs");
+        assert_eq!(o.bottleneck_msgs, r.bottleneck_msgs, "{tag}: data bottleneck msgs");
+        assert!(
+            o.sim_time_s <= r.sim_time_s + 1e-15,
+            "{tag}: optimized data phase slower ({} > {})",
+            o.sim_time_s,
+            r.sim_time_s
+        );
+    }
+
+    fn build(
+        p: usize,
+        bpp: usize,
+        r: usize,
+        s_pr: Option<usize>,
+        policy: ServerSelection,
+    ) -> (Cluster, ReStore) {
+        let cfg = RestoreConfig::builder(p, 8, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .server_selection(policy)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4.min(p));
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards: Vec<Vec<u8>> = (0..p)
+            .map(|pe| (0..bpp * 8).map(|i| (pe * 131 + i * 7) as u8).collect())
+            .collect();
+        rs.submit(&mut cluster, &shards).unwrap();
+        (cluster, rs)
+    }
+
+    const POLICIES: [ServerSelection; 3] = [
+        ServerSelection::Random,
+        ServerSelection::LeastLoaded,
+        ServerSelection::Primary,
+    ];
+
+    #[test]
+    fn parity_across_policies_perms_and_failures() {
+        for policy in POLICIES {
+            for s_pr in [Some(16), None] {
+                let tag = |name: &str| format!("{policy:?}/{s_pr:?}/{name}");
+
+                // no failures: the load-all benchmark op
+                let (mut cluster, mut rs) = build(8, 64, 4, s_pr, policy);
+                let reqs = load_all_requests(&rs, &cluster);
+                assert_parity(&mut rs, &mut cluster, &reqs, &tag("load-all"));
+
+                // single failure: scattered shrink-style recovery
+                let (mut cluster, mut rs) = build(8, 64, 4, s_pr, policy);
+                cluster.kill(&[3]);
+                let reqs = scatter_requests(&rs, &cluster, &[3]);
+                assert_parity(&mut rs, &mut cluster, &reqs, &tag("scatter-1"));
+
+                // r-1 failures of one §IV-D group
+                let (mut cluster, mut rs) = build(8, 64, 4, s_pr, policy);
+                cluster.kill(&[1, 3, 5]);
+                let reqs = scatter_requests(&rs, &cluster, &[1, 3, 5]);
+                assert_parity(&mut rs, &mut cluster, &reqs, &tag("scatter-group"));
+
+                // substitute-style recovery onto a single target
+                let (mut cluster, mut rs) = build(8, 64, 4, s_pr, policy);
+                cluster.kill(&[5]);
+                let reqs = single_target_requests(&rs, &[5], 0);
+                assert_parity(&mut rs, &mut cluster, &reqs, &tag("single-target"));
+            }
+        }
+    }
+
+    #[test]
+    fn parity_through_repair_fallback() {
+        // Kill a PE, repair its replicas onto probing-sequence homes, then
+        // kill the remaining deterministic holder: serving now depends on
+        // the repair-created replicas (the store-scan fallback), which must
+        // stay in parity too.
+        for policy in POLICIES {
+            for s_pr in [Some(8), None] {
+                let (mut cluster, mut rs) = build(4, 32, 2, s_pr, policy);
+                cluster.kill(&[2]);
+                rs.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+                cluster.kill(&[0]);
+                let reqs = scatter_requests(&rs, &cluster, &[0, 2]);
+                assert_parity(
+                    &mut rs,
+                    &mut cluster,
+                    &reqs,
+                    &format!("{policy:?}/{s_pr:?}/repair-fallback"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_scattered_recovery() {
+        // Greedy LeastLoaded with many small pieces must keep the maximum
+        // per-server data volume within 2x of the mean over active servers.
+        let (mut cluster, mut rs) = build(16, 256, 4, Some(8), ServerSelection::LeastLoaded);
+        cluster.kill(&[3, 6]);
+        let reqs = scatter_requests(&rs, &cluster, &[3, 6]);
+        let reference = reference_load(&rs, &cluster, &reqs);
+        // parity first: the reference pair map then describes the real run
+        assert_parity(&mut rs, &mut cluster, &reqs, "LeastLoaded/balance");
+        let mut sent: HashMap<usize, u64> = HashMap::new();
+        for (&(server, _), &bytes) in &reference.data_pairs {
+            *sent.entry(server).or_insert(0) += bytes;
+        }
+        let max = sent.values().copied().max().unwrap();
+        let mean = sent.values().copied().sum::<u64>() as f64 / sent.len() as f64;
+        assert!(
+            (max as f64) <= 2.0 * mean,
+            "LeastLoaded imbalance: max {max} > 2x mean {mean:.1} over {} servers",
+            sent.len()
+        );
+    }
+
+    #[test]
+    fn steady_state_load_reuses_scratch_capacity() {
+        // After a warm-up call, repeated identical loads must not grow the
+        // scratch buffers (the allocation-free steady-state contract).
+        let (mut cluster, mut rs) = build(8, 64, 4, Some(16), ServerSelection::Random);
+        cluster.kill(&[3]);
+        let reqs = scatter_requests(&rs, &cluster, &[3]);
+        rs.load(&mut cluster, &reqs).unwrap();
+        let caps = (
+            rs.scratch.routed.capacity(),
+            rs.scratch.pieces.capacity(),
+            rs.scratch.runs.capacity(),
+            rs.scratch.server_load.capacity(),
+            rs.scratch.holders.capacity(),
+        );
+        for _ in 0..5 {
+            rs.load(&mut cluster, &reqs).unwrap();
+        }
+        assert_eq!(
+            caps,
+            (
+                rs.scratch.routed.capacity(),
+                rs.scratch.pieces.capacity(),
+                rs.scratch.runs.capacity(),
+                rs.scratch.server_load.capacity(),
+                rs.scratch.holders.capacity(),
+            ),
+            "scratch buffers grew across identical steady-state loads"
+        );
     }
 }

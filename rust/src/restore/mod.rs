@@ -2,7 +2,8 @@
 //!
 //! * [`block`] — block IDs, ranges, range sets.
 //! * [`distribution`] — the placement function `L(x,k)` with permutation
-//!   ranges.
+//!   ranges and the precomputed unit→slot placement index shared by
+//!   submit, load, and repair.
 //! * [`permutation`] — Feistel range permutation (and identity).
 //! * [`store`] — per-PE in-memory replica storage.
 //! * [`submit`] — the one-time checkpoint creation path.
@@ -83,6 +84,9 @@ pub struct ReStore {
     dist: Distribution,
     stores: Vec<PeStore>,
     submitted: bool,
+    /// Reusable buffers for the load pipeline — grown on first use, then
+    /// reused so steady-state `load()` calls allocate nothing per piece.
+    scratch: load::LoadScratch,
 }
 
 impl ReStore {
@@ -98,7 +102,13 @@ impl ReStore {
         }
         let dist = Distribution::new(&cfg);
         let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
-        Ok(ReStore { cfg, dist, stores, submitted: false })
+        Ok(ReStore {
+            cfg,
+            dist,
+            stores,
+            submitted: false,
+            scratch: load::LoadScratch::default(),
+        })
     }
 
     pub fn config(&self) -> &RestoreConfig {

@@ -219,7 +219,9 @@ impl crate::restore::ReStore {
             }
             let slice_start = unit * dist.blocks_per_pe();
             let len = dist.blocks_per_pe();
-            // current alive holders of this slice
+            // current alive holders of this slice (`holds` is a binary
+            // search over the sorted slice list, so this sweep is
+            // O(p log(r + f)) per unit rather than O(p·(r + f)))
             let holders: Vec<usize> = (0..p)
                 .filter(|&pe| alive(pe) && self.stores()[pe].holds(slice_start, len))
                 .collect();

@@ -1,11 +1,14 @@
 //! Per-PE in-memory replica storage.
 //!
 //! Each PE stores `r` permuted *slices* (one per copy level, see
-//! [`Distribution::stored_slice`]). A slice is a contiguous interval of the
-//! permuted block ID space, so the store is just `r` flat buffers plus
-//! interval arithmetic — block lookup is O(r), and the per-PE memory is
-//! exactly the `r·n/p` blocks of the paper's §IV-C analysis (asserted in
-//! tests and the `ablation_memory` bench).
+//! [`Distribution::stored_slice`]) plus any replicas re-created by §IV-E
+//! repair. A slice is a contiguous interval of the permuted block ID space,
+//! so the store is just flat buffers plus interval arithmetic; the slice
+//! list is kept **sorted by start** so `read`/`write`/`holds` are a single
+//! binary search — O(log(r + f)) with `f` repair-added slices — instead of
+//! the former linear scan. The per-PE memory is exactly the `r·n/p` blocks
+//! of the paper's §IV-C analysis (asserted in tests and the
+//! `ablation_memory` bench).
 
 use crate::restore::block::BlockRange;
 use crate::restore::distribution::Distribution;
@@ -51,13 +54,39 @@ impl PeStore {
         PeStore { slices: Vec::new(), block_size }
     }
 
+    /// Insert a slice, keeping the list sorted by `range.start` (callers
+    /// never insert overlapping slices — submit places disjoint stored
+    /// slices, repair checks `holds` first).
     pub fn insert(&mut self, range: BlockRange, buf: SliceBuf) {
         debug_assert_eq!(buf.len(), range.len() * self.block_size as u64);
-        self.slices.push(StoredSlice { range, buf });
+        let at = self.slices.partition_point(|s| s.range.start < range.start);
+        self.slices.insert(at, StoredSlice { range, buf });
     }
 
+    /// Stored slices, sorted by permuted start.
     pub fn slices(&self) -> &[StoredSlice] {
         &self.slices
+    }
+
+    /// Index of the stored slice fully containing `[start, start + len)`,
+    /// found by binary search over the sorted slice list.
+    #[inline]
+    fn find_idx(&self, start: u64, len: u64) -> Option<usize> {
+        if len == 0 {
+            return None;
+        }
+        // Last slice starting at or before `start` is the only candidate:
+        // slices are disjoint, so any container must start there.
+        let i = self.slices.partition_point(|s| s.range.start <= start);
+        let s = &self.slices[i.checked_sub(1)?];
+        (start + len <= s.range.end).then_some(i - 1)
+    }
+
+    /// The stored slice fully containing `[start, start + len)`, if any —
+    /// the slice-cursor API: the load path resolves each coalesced run's
+    /// source slice once instead of scanning per piece.
+    pub fn find_slice(&self, start: u64, len: u64) -> Option<&StoredSlice> {
+        self.find_idx(start, len).map(|i| &self.slices[i])
     }
 
     /// Total bytes resident in this PE's replica store (§IV-C accounting).
@@ -69,26 +98,22 @@ impl PeStore {
     /// bytes (execution mode) or None (cost-model mode). Panics if the
     /// range is not stored — callers must route via the distribution.
     pub fn read(&self, start: u64, len: u64) -> Option<&[u8]> {
-        let want = BlockRange::new(start, start + len);
-        for s in &self.slices {
-            if s.range.intersect(&want) == Some(want) {
-                return match &s.buf {
-                    SliceBuf::Real(v) => {
-                        let off = ((start - s.range.start) * self.block_size as u64) as usize;
-                        let n = (len * self.block_size as u64) as usize;
-                        Some(&v[off..off + n])
-                    }
-                    SliceBuf::Virtual(_) => None,
-                };
+        let Some(s) = self.find_slice(start, len) else {
+            panic!("PeStore::read: permuted range [{start}, {}) not stored", start + len);
+        };
+        match &s.buf {
+            SliceBuf::Real(v) => {
+                let off = ((start - s.range.start) * self.block_size as u64) as usize;
+                let n = (len * self.block_size as u64) as usize;
+                Some(&v[off..off + n])
             }
+            SliceBuf::Virtual(_) => None,
         }
-        panic!("PeStore::read: permuted range [{start}, {}) not stored", start + len);
     }
 
     /// Does this PE hold the given permuted range?
     pub fn holds(&self, start: u64, len: u64) -> bool {
-        let want = BlockRange::new(start, start + len);
-        self.slices.iter().any(|s| s.range.intersect(&want) == Some(want))
+        self.find_idx(start, len).is_some()
     }
 
     /// Write bytes into an already-inserted slice (repair path).
@@ -97,17 +122,14 @@ impl PeStore {
             SliceBuf::Real(v) => v.len() as u64 / self.block_size as u64,
             SliceBuf::Virtual(n) => n / self.block_size as u64,
         };
-        let want = BlockRange::new(start, start + len);
-        for s in &mut self.slices {
-            if s.range.intersect(&want) == Some(want) {
-                if let (SliceBuf::Real(dst), SliceBuf::Real(src)) = (&mut s.buf, bytes_or_len) {
-                    let off = ((start - s.range.start) * self.block_size as u64) as usize;
-                    dst[off..off + src.len()].copy_from_slice(src);
-                }
-                return;
-            }
+        let Some(i) = self.find_idx(start, len) else {
+            panic!("PeStore::write: permuted range [{start}, {}) not stored", start + len);
+        };
+        let s = &mut self.slices[i];
+        if let (SliceBuf::Real(dst), SliceBuf::Real(src)) = (&mut s.buf, bytes_or_len) {
+            let off = ((start - s.range.start) * self.block_size as u64) as usize;
+            dst[off..off + src.len()].copy_from_slice(src);
         }
-        panic!("PeStore::write: permuted range [{start}, {}) not stored", start + len);
     }
 }
 
@@ -152,6 +174,30 @@ mod tests {
         assert_eq!(st.read(50, 10), None);
         assert_eq!(st.resident_bytes(), 6400);
         assert!(st.holds(0, 100));
+    }
+
+    #[test]
+    fn inserts_keep_slices_sorted_and_searchable() {
+        // out-of-order inserts (as submit produces for k > 0 copies and
+        // repair produces for re-created replicas) must stay binary-search
+        // correct
+        let mut st = PeStore::new(1);
+        for (s, e) in [(40u64, 50u64), (0, 10), (20, 30), (70, 75)] {
+            st.insert(BlockRange::new(s, e), SliceBuf::Virtual(e - s));
+        }
+        let starts: Vec<u64> = st.slices().iter().map(|s| s.range.start).collect();
+        assert_eq!(starts, vec![0, 20, 40, 70]);
+        for (s, e) in [(40u64, 50u64), (0, 10), (20, 30), (70, 75)] {
+            assert!(st.holds(s, e - s));
+            assert!(st.holds(s + 1, e - s - 1));
+            assert!(!st.holds(s, e - s + 1)); // crosses the slice end
+        }
+        assert!(!st.holds(10, 5)); // gap
+        assert!(!st.holds(15, 10)); // straddles a gap into a slice
+        let f = st.find_slice(42, 3).unwrap();
+        assert_eq!(f.range, BlockRange::new(40, 50));
+        assert!(st.find_slice(42, 0).is_none());
+        assert!(st.find_slice(30, 1).is_none());
     }
 
     #[test]

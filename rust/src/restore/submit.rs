@@ -85,10 +85,11 @@ impl ReStore {
         // Placement schedule: ONE concurrent sparse all-to-all phase.
         // Messages to the same destination are coalesced per source. The
         // holder of copy k is (slot_pe + k·stride + offset) mod p, so we
-        // only count units per *slot PE* (one Feistel application per unit)
-        // and expand the r copies when emitting — no per-copy hashing.
-        // (§Perf: 8x faster schedule construction than the HashMap version;
-        // see EXPERIMENTS.md §Perf.)
+        // only count units per *slot PE* (one unit→slot lookup per unit,
+        // served by the Distribution's precomputed placement index where
+        // built) and expand the r copies when emitting — no per-copy
+        // hashing. (§Perf: 8x faster schedule construction than the
+        // HashMap version; see EXPERIMENTS.md §Perf.)
         let unit_bytes = s_pr * bs;
         let units_per_pe = (dist.blocks_per_pe() / s_pr) as usize;
         let stride = dist.copy_stride();
