@@ -17,11 +17,12 @@ use restore::restore::permutation::{Feistel, RangePermutation};
 use restore::restore::ReStore;
 use restore::runtime::Engine;
 use restore::simnet::cluster::Cluster;
-use restore::util::bench::{bench, black_box};
+use restore::util::bench::{bench, black_box, write_json_artifact, BenchResult};
 use restore::util::rng::Rng;
 
 fn main() {
     println!("=== hot-path micro-benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // Feistel throughput
     let f = Feistel::new(1_572_864, 0xF00D); // 24576 PEs * 64 ranges
@@ -31,6 +32,7 @@ fn main() {
         black_box(f.apply(i));
     });
     println!("{}", r.line());
+    results.push(r);
 
     // submit schedule, p=1536, paper default (64 units/PE * r=4)
     let r = bench("submit schedule p=1536 16MiB/PE r=4 perm", 1, 5, || {
@@ -40,6 +42,7 @@ fn main() {
         black_box(store.submit_virtual(&mut cluster).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     // submit schedule at tiny ranges (the fig4a stress case)
     let r = bench("submit schedule p=384 16MiB/PE 1KiB ranges", 1, 3, || {
@@ -53,6 +56,25 @@ fn main() {
         black_box(store.submit_virtual(&mut cluster).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
+
+    // execution-mode submit: schedule + the zero-copy store writes
+    // (formerly one Vec per unit × replica)
+    let shards: Vec<Vec<u8>> = (0..48)
+        .map(|pe| (0..16_384 * 64).map(|i| (pe * 31 + i) as u8).collect())
+        .collect();
+    let r = bench("submit execute p=48 1MiB/PE r=4 perm", 1, 5, || {
+        let cfg = RestoreConfig::builder(48, 64, 16_384)
+            .replicas(4)
+            .perm_range_bytes(Some(64 * 1024))
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(48, 48);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        black_box(store.submit(&mut cluster, &shards).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
 
     // load-1% end to end (schedule + routing + cost)
     let cfg = RestoreConfig::paper_default(1536).unwrap();
@@ -66,6 +88,7 @@ fn main() {
         black_box(store.load(&mut cluster, &reqs).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     // IDL Monte-Carlo step
     let mut rng = Rng::seed_from_u64(1);
@@ -73,6 +96,7 @@ fn main() {
         black_box(restore::restore::idl::simulate_failures_until_idl(1 << 20, 4, &mut rng));
     });
     println!("{}", r.line());
+    results.push(r);
 
     // PJRT execution latency
     match Engine::load_default() {
@@ -83,6 +107,7 @@ fn main() {
                 black_box(engine.execute_f32("kmeans_step_tiny", &[&points, &centers]).unwrap());
             });
             println!("{}", r.line());
+            results.push(r);
 
             let points = restore::apps::kmeans::generate_points(1, 0, 4096, 32, 20);
             let centers = restore::apps::kmeans::starting_centers(1, 20, 32);
@@ -90,6 +115,7 @@ fn main() {
                 black_box(engine.execute_f32("kmeans_step_small", &[&points, &centers]).unwrap());
             });
             println!("{}", r.line());
+            results.push(r);
 
             let points = restore::apps::kmeans::generate_points(1, 0, 65536, 32, 20);
             let centers = restore::apps::kmeans::starting_centers(1, 20, 32);
@@ -97,6 +123,7 @@ fn main() {
                 black_box(engine.execute_f32("kmeans_step", &[&points, &centers]).unwrap());
             });
             println!("{}", r.line());
+            results.push(r);
             println!(
                 "\nPJRT totals: {} calls, {} cumulative",
                 engine.exec_calls,
@@ -105,4 +132,8 @@ fn main() {
         }
         Err(e) => println!("PJRT benches skipped: {e}"),
     }
+
+    // machine-readable perf artifact for CI's cross-PR trajectory
+    write_json_artifact("BENCH_hotpath.json", &results).expect("write BENCH_hotpath.json");
+    println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
 }

@@ -12,9 +12,9 @@ use restore::config::RestoreConfig;
 use restore::restore::load::{load_all_requests, load_percent_requests, scatter_requests};
 use restore::restore::ReStore;
 use restore::simnet::cluster::Cluster;
-use restore::util::bench::{bench, black_box};
+use restore::util::bench::{bench, black_box, write_json_artifact, BenchResult};
 
-fn run_scale(p: usize, reps: usize) {
+fn run_scale(p: usize, reps: usize, results: &mut Vec<BenchResult>) {
     println!("--- p = {p} (cost-model) ---");
     let cfg = RestoreConfig::paper_default(p).unwrap();
     let mut cluster = Cluster::new_execution(p, 48);
@@ -28,12 +28,14 @@ fn run_scale(p: usize, reps: usize) {
         black_box(store.load(&mut cluster, &reqs).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     let r = bench(&format!("load-all resolve+route p={p}"), 1, reps.div_ceil(2), || {
         let reqs = load_all_requests(&store, &cluster);
         black_box(store.load(&mut cluster, &reqs).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 
     // one full node fails; the survivors shrink-load its shards
     let failed: Vec<usize> = (0..48).collect();
@@ -43,10 +45,15 @@ fn run_scale(p: usize, reps: usize) {
         black_box(store.load(&mut cluster, &reqs).unwrap());
     });
     println!("{}", r.line());
+    results.push(r);
 }
 
 fn main() {
     println!("=== load-path scaling benchmarks ===\n");
-    run_scale(1536, 10);
-    run_scale(24576, 3);
+    let mut results: Vec<BenchResult> = Vec::new();
+    run_scale(1536, 10, &mut results);
+    run_scale(24576, 3, &mut results);
+    // machine-readable perf artifact for CI's cross-PR trajectory
+    write_json_artifact("BENCH_load_scale.json", &results).expect("write BENCH_load_scale.json");
+    println!("\nwrote BENCH_load_scale.json ({} entries)", results.len());
 }

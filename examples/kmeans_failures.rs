@@ -20,7 +20,7 @@ use restore::metrics::fmt_time;
 use restore::runtime::Engine;
 use restore::simnet::cluster::Cluster;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let p = 16;
     let params = KmeansParams {
         points_per_pe: 4096,
@@ -36,8 +36,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = RestoreConfig::builder(p, 64, bytes_per_pe / 64)
         .replicas(4)
         .perm_range_bytes(Some(64 * 1024))
-        .build()
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .build()?;
 
     println!(
         "k-means end-to-end: p={p}, {} points x {} dims per PE ({} KiB), k={}, {} iterations",
@@ -49,19 +48,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- failure-free control run ------------------------------------------
-    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut engine = Engine::load_default()?;
     let mut cluster = Cluster::new_execution(p, 4);
     let mut control = params.clone();
     control.failure_fraction = 0.0;
-    let clean = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &control)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let clean = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &control)?;
     println!("\ncontrol (no failures): inertia {:.1}", clean.final_inertia);
 
     // --- the fault-tolerant run ---------------------------------------------
-    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut engine = Engine::load_default()?;
     let mut cluster = Cluster::new_execution(p, 4);
-    let rep = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &params)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rep = kmeans::run_execution(&mut cluster, &mut engine, &cfg, &params)?;
 
     println!(
         "with failures: {} PEs failed in {} events, {} survivors finished",
@@ -103,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     let rel = (rep.final_inertia - clean.final_inertia).abs() / clean.final_inertia;
     println!("inertia difference vs control: {rel:.2e} (informational: f32-order chaos)");
     if rep.points_checksum != clean.points_checksum {
-        anyhow::bail!("recovered data diverged from control");
+        return Err("recovered data diverged from control".into());
     }
     Ok(())
 }

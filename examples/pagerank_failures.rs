@@ -13,7 +13,7 @@ use restore::config::RestoreConfig;
 use restore::metrics::fmt_time;
 use restore::simnet::cluster::Cluster;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let p = 16;
     let params = PagerankParams {
         vertices_per_pe: 512,
@@ -27,8 +27,7 @@ fn main() -> anyhow::Result<()> {
     let blocks = params.vertices_per_pe * params.edges_per_vertex * 8 / bs;
     let cfg = RestoreConfig::builder(p, bs, blocks)
         .replicas(4)
-        .build()
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .build()?;
 
     println!(
         "pagerank: p={p}, {} vertices/PE x {} edges, {} iterations, 30 % failures",
@@ -36,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut c1 = Cluster::new_execution(p, 4);
-    let faulty = pagerank::run(&mut c1, &cfg, &params).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let faulty = pagerank::run(&mut c1, &cfg, &params)?;
     println!(
         "faulty run:  {} failures, survivors {}, delta {:.2e}, sim {} (ReStore {})",
         faulty.failures,
@@ -48,7 +47,7 @@ fn main() -> anyhow::Result<()> {
 
     let control = PagerankParams { failure_fraction: 0.0, ..params };
     let mut c2 = Cluster::new_execution(p, 4);
-    let clean = pagerank::run(&mut c2, &cfg, &control).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let clean = pagerank::run(&mut c2, &cfg, &control)?;
     println!(
         "control run: 0 failures, delta {:.2e}, sim {}",
         clean.final_delta,
@@ -63,8 +62,12 @@ fn main() -> anyhow::Result<()> {
         .fold(0.0f64, f64::max);
     let mass: f64 = faulty.ranks.iter().sum();
     println!("rank mass {mass:.12} (must be 1); max |Δrank| vs control {max_diff:.2e}");
-    anyhow::ensure!((mass - 1.0).abs() < 1e-9, "rank mass leaked");
-    anyhow::ensure!(max_diff < 1e-12, "ranks diverged after recovery");
+    if (mass - 1.0).abs() >= 1e-9 {
+        return Err("rank mass leaked".into());
+    }
+    if max_diff >= 1e-12 {
+        return Err(format!("ranks diverged after recovery: {max_diff:.2e}").into());
+    }
     println!("ranks identical after recovering {} failed PEs — recovery is exact", faulty.failures);
     Ok(())
 }

@@ -13,7 +13,7 @@ use restore::restore::ReStore;
 use restore::simnet::cluster::Cluster;
 use restore::simnet::ulfm;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A cluster of 16 PEs, 4 per node (so each node is a failure domain).
     let mut cluster = Cluster::new_execution(16, 4);
 
@@ -22,14 +22,13 @@ fn main() -> anyhow::Result<()> {
     let cfg = RestoreConfig::builder(16, 64, 16 * 1024)
         .replicas(4)
         .perm_range_bytes(Some(16 * 1024))
-        .build()
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .build()?;
 
     // Every PE submits its serialized shard once.
     let shards: Vec<Vec<u8>> =
         (0..16u32).map(|pe| (0..1024 * 1024).map(|i| (pe as usize + i) as u8).collect()).collect();
-    let mut store = ReStore::new(cfg, &cluster).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let submit = store.submit(&mut cluster, &shards).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut store = ReStore::new(cfg, &cluster)?;
+    let submit = store.submit(&mut cluster, &shards)?;
     println!(
         "submit: {} over the simulated network ({} messages, {} total)",
         fmt_time(submit.cost.sim_time_s),
@@ -48,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let requests = scatter_requests(&store, &cluster, &failed);
-    let out = store.load(&mut cluster, &requests).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = store.load(&mut cluster, &requests)?;
     println!(
         "recovery: {} ({} request phase + {} data phase)",
         fmt_time(out.cost.sim_time_s),

@@ -17,28 +17,25 @@ use restore::runtime::Engine;
 use restore::simnet::cluster::Cluster;
 use restore::simnet::ulfm;
 
-fn main() -> anyhow::Result<()> {
-    let err = |e: restore::Error| anyhow::anyhow!("{e}");
-
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- Part 1: execution mode — real likelihood kernel, real recovery ----
     let p = 8;
     let sites_per_pe = 1024;
     println!("FT-RAxML-NG proxy: p={p}, {sites_per_pe} sites/PE, 4-state DNA model");
 
-    let mut engine = Engine::load_default().map_err(err)?;
+    let mut engine = Engine::load_default()?;
     let mut cluster = Cluster::new_execution(p, 4);
     let mut site_data: Vec<Vec<f32>> =
         (0..p).map(|pe| raxml::generate_sites(7, pe, sites_per_pe)).collect();
 
-    let ll0 = raxml::evaluate_loglik(&mut cluster, &mut engine, "phylo_step_small", &site_data)
-        .map_err(err)?;
+    let ll0 = raxml::evaluate_loglik(&mut cluster, &mut engine, "phylo_step_small", &site_data)?;
     println!("log-likelihood (all PEs alive): {ll0:.3}");
 
     // submit one site per 64 B block
     let bs = 64;
     let spf = raxml::SITE_PAYLOAD_F32S;
-    let cfg = RestoreConfig::builder(p, bs, sites_per_pe).replicas(4).build().map_err(err)?;
-    let mut store = ReStore::new(cfg, &cluster).map_err(err)?;
+    let cfg = RestoreConfig::builder(p, bs, sites_per_pe).replicas(4).build()?;
+    let mut store = ReStore::new(cfg, &cluster)?;
     let shards: Vec<Vec<u8>> = site_data
         .iter()
         .map(|d| {
@@ -52,7 +49,7 @@ fn main() -> anyhow::Result<()> {
             out
         })
         .collect();
-    let submit = store.submit(&mut cluster, &shards).map_err(err)?;
+    let submit = store.submit(&mut cluster, &shards)?;
     println!("submitted input to ReStore in {}", fmt_time(submit.cost.sim_time_s));
 
     // two nodes' worth of failures
@@ -61,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let mut ownership = Ownership::identity(p, sites_per_pe as u64);
     let gained = ownership.rebalance(&failed, &cluster.survivors(), 1);
     let reqs = scatter_requests_for_ranges(&gained);
-    let out = store.load(&mut cluster, &reqs).map_err(err)?;
+    let out = store.load(&mut cluster, &reqs)?;
     println!(
         "PEs {failed:?} failed; reloaded their {} sites scattered over {} survivors in {}",
         failed.len() * sites_per_pe,
@@ -76,11 +73,12 @@ fn main() -> anyhow::Result<()> {
     for &f in &failed {
         site_data[f].clear();
     }
-    let ll1 = raxml::evaluate_loglik(&mut cluster, &mut engine, "phylo_step_small", &site_data)
-        .map_err(err)?;
+    let ll1 = raxml::evaluate_loglik(&mut cluster, &mut engine, "phylo_step_small", &site_data)?;
     println!("log-likelihood after recovery:  {ll1:.3}");
     let rel = (ll1 - ll0).abs() / ll0.abs();
-    anyhow::ensure!(rel < 1e-5, "likelihood diverged: {ll0} vs {ll1}");
+    if rel >= 1e-5 {
+        return Err(format!("likelihood diverged: {ll0} vs {ll1}").into());
+    }
     println!("identical within f32 ordering (rel {rel:.1e}) — recovery is exact\n");
 
     // --- Part 2: Fig-6-style comparison at paper scale (cost model) --------
@@ -91,8 +89,7 @@ fn main() -> anyhow::Result<()> {
     );
     for ds in PhyloDataset::paper_datasets() {
         let kill = (ds.pes / 100).max(1);
-        let t = raxml::measure_recovery(ds.pes, 48, ds.bytes_per_pe, kill, &PfsConfig::default(), 1)
-            .map_err(err)?;
+        let t = raxml::measure_recovery(ds.pes, 48, ds.bytes_per_pe, kill, &PfsConfig::default(), 1)?;
         println!(
             "{:<28} {:>8} {:>12} {:>14} {:>14} {:>14}",
             ds.name,

@@ -14,7 +14,7 @@ use restore::restore::repair::{plan_repairs, ProbeSequences, RepairScheme};
 use restore::simnet::cluster::Cluster;
 use restore::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let p = 64usize;
     let r = 4usize;
     let units: Vec<(u64, u64, u64)> =
@@ -47,8 +47,7 @@ fn main() -> anyhow::Result<()> {
             // apply: charge the transfers to the simulated network
             let t0 = cluster.now();
             let cost = cluster
-                .charge_phase(plan.iter().map(|t| (t.src, t.dst, unit_bytes)))
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .charge_phase(plan.iter().map(|t| (t.src, t.dst, unit_bytes)))?;
             total_moved += cost.total_bytes;
             total_transfers += plan.len();
 

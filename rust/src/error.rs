@@ -31,7 +31,8 @@ pub enum Error {
     #[error("PE {0} is dead")]
     DeadPe(usize),
 
-    /// PJRT / XLA runtime error.
+    /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;
+    /// the variant itself stays so error handling is feature-independent).
     #[error("xla runtime: {0}")]
     Xla(String),
 
@@ -59,6 +60,7 @@ impl From<crate::util::toml::TomlError> for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -9,14 +9,15 @@
 //!
 //! The figure benches live in `benches/` (`cargo bench --bench fig…`).
 
-use anyhow::{bail, ensure, Context, Result};
-
 use restore::apps::{kmeans, pagerank};
 use restore::config::{AppKind, ExperimentFile};
 use restore::metrics::fmt_time;
 use restore::restore::idl;
 use restore::runtime::Engine;
 use restore::simnet::cluster::Cluster;
+
+/// CLI-level result: any error bubbles up as a printable message.
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 const USAGE: &str = "usage: restore <run|idl|smoke|gen-config> [options]
   run --config <exp.toml>
@@ -38,7 +39,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let val =
-                    it.next().with_context(|| format!("--{key} needs a value"))?.clone();
+                    it.next().ok_or_else(|| format!("--{key} needs a value"))?.clone();
                 flags.push((key.to_string(), val));
             } else {
                 positional.push(a.clone());
@@ -64,7 +65,7 @@ fn main() -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        "run" => run_app(args.get("config").context("run needs --config <exp.toml>")?),
+        "run" => run_app(args.get("config").ok_or("run needs --config <exp.toml>")?),
         "idl" => {
             let p: u64 = args.get("p").unwrap_or("24576").parse()?;
             let r: u64 = args.get("r").unwrap_or("4").parse()?;
@@ -78,12 +79,11 @@ fn main() -> Result<()> {
         }
         "smoke" => smoke(),
         "gen-config" => {
-            let path = args.positional.first().context("gen-config needs a path")?;
+            let path = args.positional.first().ok_or("gen-config needs a path")?;
             let exp = ExperimentFile {
                 world: 48,
                 pes_per_node: 48,
-                restore: restore::config::RestoreConfig::paper_default(48)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                restore: restore::config::RestoreConfig::paper_default(48)?,
                 network: Default::default(),
                 pfs: Default::default(),
                 app: Default::default(),
@@ -92,24 +92,23 @@ fn main() -> Result<()> {
             println!("wrote {path}");
             Ok(())
         }
-        other => bail!("unknown command '{other}'\n{USAGE}"),
+        other => Err(format!("unknown command '{other}'\n{USAGE}").into()),
     }
 }
 
 fn run_app(path: &str) -> Result<()> {
-    let exp = ExperimentFile::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let exp = ExperimentFile::load(path)?;
     let mut cluster = Cluster::with_network(exp.world, exp.pes_per_node, exp.network.clone());
     match exp.app.kind {
         AppKind::Kmeans => {
-            let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut engine = Engine::load_default()?;
             let mut params = kmeans::KmeansParams::tiny(exp.app.iterations);
             params.failure_fraction = exp.app.failure_fraction;
             params.seed = exp.app.seed;
             // derive point shape from the restore config payload
             let floats = exp.restore.blocks_per_pe * exp.restore.block_size / 4;
             params.points_per_pe = floats / params.dims;
-            let rep = kmeans::run_execution(&mut cluster, &mut engine, &exp.restore, &params)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let rep = kmeans::run_execution(&mut cluster, &mut engine, &exp.restore, &params)?;
             println!("k-means: {} iterations, {} failures", rep.iterations_run, rep.failures);
             println!("  final inertia      {:.3}", rep.final_inertia);
             println!("  sim total          {}", fmt_time(rep.sim_total_s));
@@ -128,8 +127,7 @@ fn run_app(path: &str) -> Result<()> {
             let bs = exp.restore.block_size;
             params.vertices_per_pe =
                 exp.restore.blocks_per_pe * bs / (8 * params.edges_per_vertex);
-            let rep = pagerank::run(&mut cluster, &exp.restore, &params)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let rep = pagerank::run(&mut cluster, &exp.restore, &params)?;
             println!("pagerank: {} iterations, {} failures", rep.iterations_run, rep.failures);
             println!("  final delta        {:.3e}", rep.final_delta);
             println!("  sim total          {}", fmt_time(rep.sim_total_s));
@@ -143,8 +141,7 @@ fn run_app(path: &str) -> Result<()> {
                 (exp.world as f64 * exp.app.failure_fraction).ceil() as usize,
                 &exp.pfs,
                 exp.app.seed,
-            )
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            )?;
             println!("raxml recovery (p={}):", exp.world);
             println!("  ReStore submit     {}", fmt_time(times.restore_submit_s));
             println!("  ReStore load       {}", fmt_time(times.restore_load_s));
@@ -183,32 +180,43 @@ fn smoke() -> Result<()> {
     use restore::restore::load::scatter_requests;
     use restore::restore::ReStore;
 
-    // 1. artifacts + PJRT
-    let mut engine = Engine::load_default().map_err(|e| anyhow::anyhow!("{e}"))?;
-    let points = kmeans::generate_points(1, 0, 256, 8, 4);
-    let centers = kmeans::starting_centers(1, 4, 8);
-    let out = engine
-        .execute_f32("kmeans_step_tiny", &[&points, &centers])
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let total: f32 = out[1].iter().sum();
-    ensure!(total == 256.0, "kernel counts {total} != 256");
-    println!("PJRT kernel OK ({} exec in {})", engine.exec_calls, fmt_time(engine.exec_seconds));
+    // 1. artifacts + PJRT (skipped — not failed — when the binary was
+    // built without the `pjrt` feature or `make artifacts` has not run;
+    // the ReStore round trip below needs neither)
+    match Engine::load_default() {
+        Ok(mut engine) => {
+            let points = kmeans::generate_points(1, 0, 256, 8, 4);
+            let centers = kmeans::starting_centers(1, 4, 8);
+            let out = engine.execute_f32("kmeans_step_tiny", &[&points, &centers])?;
+            let total: f32 = out[1].iter().sum();
+            if total != 256.0 {
+                return Err(format!("kernel counts {total} != 256").into());
+            }
+            println!(
+                "PJRT kernel OK ({} exec in {})",
+                engine.exec_calls,
+                fmt_time(engine.exec_seconds)
+            );
+        }
+        Err(e) => println!("PJRT kernel check skipped: {e}"),
+    }
 
     // 2. store round trip under failures
     let cfg = RestoreConfig::builder(16, 64, 1024)
         .replicas(4)
         .perm_range_bytes(Some(4096))
-        .build()
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .build()?;
     let mut cluster = Cluster::new_execution(16, 4);
-    let mut store = ReStore::new(cfg, &cluster).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut store = ReStore::new(cfg, &cluster)?;
     let shards: Vec<Vec<u8>> = (0..16).map(|pe| vec![pe as u8; 64 * 1024]).collect();
-    store.submit(&mut cluster, &shards).map_err(|e| anyhow::anyhow!("{e}"))?;
+    store.submit(&mut cluster, &shards)?;
     cluster.kill(&[3, 7]);
     let reqs = scatter_requests(&store, &cluster, &[3, 7]);
-    let out = store.load(&mut cluster, &reqs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = store.load(&mut cluster, &reqs)?;
     let bytes: usize = out.shards.iter().map(|s| s.bytes.as_ref().unwrap().len()).sum();
-    ensure!(bytes == 2 * 64 * 1024, "recovered {bytes} bytes");
+    if bytes != 2 * 64 * 1024 {
+        return Err(format!("recovered {bytes} bytes").into());
+    }
     println!("ReStore recovery OK ({} in sim time)", fmt_time(out.cost.sim_time_s));
     println!("smoke OK");
     Ok(())

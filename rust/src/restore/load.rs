@@ -17,10 +17,11 @@
 //! milliseconds on up to 24 576 processors"), so the simulator's load path
 //! must not be dominated by its own bookkeeping. The pipeline performs no
 //! per-piece heap allocation in steady state — all per-piece intermediate
-//! state lives in a [`LoadScratch`] owned by the `ReStore` instance and
-//! reused across calls (the remaining per-call allocations are the output
-//! shards and the two per-phase cost `Accumulator`s; reusing the latter is
-//! a ROADMAP open item):
+//! state, including the per-phase cost `Accumulator` counters, lives in a
+//! [`LoadScratch`] owned by the `ReStore` instance and reused across calls
+//! (the only remaining per-call allocation is the output shards). With the
+//! `rayon` feature, request resolution additionally fans out across
+//! requesters (serial-identical by construction; see `resolve_all`):
 //!
 //! * **Resolve** — block ranges → [`PermutedPiece`]s via the precomputed
 //!   placement index ([`crate::restore::distribution`]), no Feistel work on
@@ -58,6 +59,10 @@ use crate::restore::distribution::PermutedPiece;
 use crate::restore::hashing::seeded_hash;
 use crate::restore::{LoadOutput, LoadRequest, LoadedShard, ReStore};
 use crate::simnet::cluster::Cluster;
+use crate::simnet::network::Accumulator;
+
+#[cfg(feature = "rayon")]
+use rayon::prelude::*;
 
 /// Bytes per piece descriptor in a request message (perm_start, len, dest
 /// offset — what the sparse all-to-all of §V carries).
@@ -109,6 +114,10 @@ pub(crate) struct LoadScratch {
     server_load: Vec<u64>,
     /// Holder list for `r > INLINE_HOLDERS` and the repair fallback.
     holders: Vec<usize>,
+    /// Pooled cost accumulator shared by the request and data phases
+    /// (reset-and-reused via [`Cluster::phase_pooled`]) — formerly the last
+    /// O(p) allocation per `load` call.
+    acc: Accumulator,
 }
 
 impl ReStore {
@@ -140,37 +149,15 @@ impl ReStore {
         let bpp = dist.blocks_per_pe();
 
         // --- Phase 1a: request resolution (local, per requester) --------
-        scratch.routed.clear();
-        scratch.server_load.clear();
-        scratch.server_load.resize(dist.world(), 0);
-        for (req_idx, req) in requests.iter().enumerate() {
+        for req in requests {
             if !cluster.is_alive(req.pe) {
                 return Err(Error::DeadPe(req.pe));
             }
-            let mut out_offset = 0u64;
-            for range in req.ranges.ranges() {
-                scratch.pieces.clear();
-                dist.permuted_pieces(*range, &mut scratch.pieces);
-                for i in 0..scratch.pieces.len() {
-                    let piece = scratch.pieces[i];
-                    let server = self.pick_server(
-                        cluster,
-                        req.pe,
-                        &piece,
-                        &mut scratch.server_load,
-                        &mut scratch.holders,
-                    )?;
-                    scratch.routed.push(RoutedPiece {
-                        piece,
-                        requester: req.pe,
-                        req_idx,
-                        server,
-                        out_offset,
-                    });
-                    out_offset += piece.len * bs;
-                }
-            }
         }
+        scratch.routed.clear();
+        scratch.server_load.clear();
+        scratch.server_load.resize(dist.world(), 0);
+        self.resolve_all(cluster, requests, scratch)?;
 
         // --- Run coalescing ---------------------------------------------
         // Merge adjacent pieces with the same (request, server) that are
@@ -207,8 +194,9 @@ impl ReStore {
 
         // --- Phase 1b: request sparse all-to-all -------------------------
         // One message per distinct (requester, server) pair carrying the
-        // per-piece descriptors.
-        let mut phase = cluster.phase();
+        // per-piece descriptors. Both phases run on the scratch-pooled
+        // accumulator: no O(p) counter allocation per call.
+        let mut phase = cluster.phase_pooled(&mut scratch.acc);
         let mut i = 0;
         while i < scratch.runs.len() {
             let (requester, server) = (scratch.runs[i].requester, scratch.runs[i].server);
@@ -227,7 +215,7 @@ impl ReStore {
         // --- Phase 2: data sparse all-to-all ------------------------------
         // One message per (server, requester) pair; every run is one pack
         // fragment on the server and one unpack fragment on the requester.
-        let mut phase = cluster.phase();
+        let mut phase = cluster.phase_pooled(&mut scratch.acc);
         let mut i = 0;
         while i < scratch.runs.len() {
             let (requester, server) = (scratch.runs[i].requester, scratch.runs[i].server);
@@ -280,11 +268,108 @@ impl ReStore {
         })
     }
 
+    /// Resolve every request into routed pieces appended to
+    /// `scratch.routed` in requester order.
+    ///
+    /// With the `rayon` feature enabled and a server-selection policy whose
+    /// per-piece choice is independent of other requesters (`Random`,
+    /// `Primary`), requesters are resolved in parallel and the per-requester
+    /// results are concatenated back in request order — routing, costs, and
+    /// bytes are identical to the serial path by construction (enforced by
+    /// the `golden` parity suite, which CI runs under both feature sets).
+    /// The greedy `LeastLoaded` policy reads the running per-server byte
+    /// table, so it always resolves serially.
+    fn resolve_all(
+        &self,
+        cluster: &Cluster,
+        requests: &[LoadRequest],
+        scratch: &mut LoadScratch,
+    ) -> Result<()> {
+        #[cfg(feature = "rayon")]
+        if !matches!(self.cfg.server_selection, ServerSelection::LeastLoaded)
+            && requests.len() > 1
+        {
+            let per_req: Vec<Result<Vec<RoutedPiece>>> = requests
+                .par_iter()
+                .enumerate()
+                .map(|(req_idx, req)| {
+                    let mut routed = Vec::new();
+                    let mut pieces = Vec::new();
+                    let mut holders = Vec::new();
+                    self.resolve_request(
+                        cluster,
+                        req,
+                        req_idx,
+                        &mut [],
+                        &mut pieces,
+                        &mut holders,
+                        &mut routed,
+                    )?;
+                    Ok(routed)
+                })
+                .collect();
+            // Deterministic merge: request order; the first requester's
+            // error wins, exactly as in the serial loop.
+            for r in per_req {
+                scratch.routed.extend(r?);
+            }
+            return Ok(());
+        }
+
+        for (req_idx, req) in requests.iter().enumerate() {
+            self.resolve_request(
+                cluster,
+                req,
+                req_idx,
+                &mut scratch.server_load,
+                &mut scratch.pieces,
+                &mut scratch.holders,
+                &mut scratch.routed,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Resolve one request: map its block ranges to permuted pieces and
+    /// pick a server per piece, appending to `routed`.
+    fn resolve_request(
+        &self,
+        cluster: &Cluster,
+        req: &LoadRequest,
+        req_idx: usize,
+        server_load: &mut [u64],
+        pieces: &mut Vec<PermutedPiece>,
+        holders: &mut Vec<usize>,
+        routed: &mut Vec<RoutedPiece>,
+    ) -> Result<()> {
+        let bs = self.cfg.block_size as u64;
+        let mut out_offset = 0u64;
+        for range in req.ranges.ranges() {
+            pieces.clear();
+            self.dist.permuted_pieces(*range, pieces);
+            for i in 0..pieces.len() {
+                let piece = pieces[i];
+                let server = self.pick_server(cluster, req.pe, &piece, server_load, holders)?;
+                routed.push(RoutedPiece {
+                    piece,
+                    requester: req.pe,
+                    req_idx,
+                    server,
+                    out_offset,
+                });
+                out_offset += piece.len * bs;
+            }
+        }
+        Ok(())
+    }
+
     /// Pick the serving PE for one piece among the surviving holders.
     ///
     /// The ≤ `r` deterministic §IV-A holders are walked through a
     /// fixed-size stack buffer; `holders_scratch` only backs oversized `r`
     /// and the repair fallback, so the steady state allocates nothing.
+    /// `server_load` is only touched under the `LeastLoaded` policy (the
+    /// parallel resolution path passes an empty table for the others).
     fn pick_server(
         &self,
         cluster: &Cluster,
@@ -320,12 +405,16 @@ impl ReStore {
             }
         } else {
             // All deterministic §IV-A holders are dead — consult replicas
-            // re-created by §IV-E repair (in the paper's design a repaired
-            // placement is recomputable from the probing sequence; the
-            // simulator checks the stores directly, which is equivalent).
+            // re-created by §IV-E repair through the reverse holder index
+            // (slot-granular: submit and repair both place whole slices,
+            // so slot membership implies the piece is held). Formerly an
+            // O(p) store sweep per fallback piece.
             holders_scratch.clear();
-            for pe in 0..dist.world() {
-                if cluster.is_alive(pe) && self.stores[pe].holds(piece.perm_start, piece.len) {
+            let slot = (piece.perm_start / dist.blocks_per_pe()) as usize;
+            for &pe in self.holder_index.holders_of(slot) {
+                let pe = pe as usize;
+                if cluster.is_alive(pe) {
+                    debug_assert!(self.stores[pe].holds(piece.perm_start, piece.len));
                     holders_scratch.push(pe);
                 }
             }
@@ -362,7 +451,9 @@ impl ReStore {
             }
             ServerSelection::Primary => alive[0],
         };
-        server_load[chosen] += piece.len * self.cfg.block_size as u64;
+        if matches!(self.cfg.server_selection, ServerSelection::LeastLoaded) {
+            server_load[chosen] += piece.len * self.cfg.block_size as u64;
+        }
         Ok(chosen)
     }
 }
@@ -1003,6 +1094,7 @@ mod golden {
             rs.scratch.runs.capacity(),
             rs.scratch.server_load.capacity(),
             rs.scratch.holders.capacity(),
+            rs.scratch.acc.pe_capacity(),
         );
         for _ in 0..5 {
             rs.load(&mut cluster, &reqs).unwrap();
@@ -1015,6 +1107,7 @@ mod golden {
                 rs.scratch.runs.capacity(),
                 rs.scratch.server_load.capacity(),
                 rs.scratch.holders.capacity(),
+                rs.scratch.acc.pe_capacity(),
             ),
             "scratch buffers grew across identical steady-state loads"
         );

@@ -36,7 +36,7 @@ use crate::simnet::network::PhaseCost;
 
 use block::RangeSet;
 use distribution::Distribution;
-use store::PeStore;
+use store::{HolderIndex, PeStore};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
 /// (The paper's preferred API mode: "providing exactly those ID ranges each
@@ -84,6 +84,11 @@ pub struct ReStore {
     dist: Distribution,
     stores: Vec<PeStore>,
     submitted: bool,
+    /// Reverse holder index (permuted slot → storing PEs), maintained
+    /// incrementally by submit and §IV-E repair; consulted by repair
+    /// planning and the load path's post-repair fallback instead of an
+    /// O(p) store sweep.
+    holder_index: HolderIndex,
     /// Reusable buffers for the load pipeline — grown on first use, then
     /// reused so steady-state `load()` calls allocate nothing per piece.
     scratch: load::LoadScratch,
@@ -102,11 +107,13 @@ impl ReStore {
         }
         let dist = Distribution::new(&cfg);
         let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
+        let holder_index = HolderIndex::new(cluster.world());
         Ok(ReStore {
             cfg,
             dist,
             stores,
             submitted: false,
+            holder_index,
             scratch: load::LoadScratch::default(),
         })
     }
@@ -127,8 +134,36 @@ impl ReStore {
         self.submitted
     }
 
+    /// The reverse holder index (permuted slot → storing PEs).
+    pub fn holder_index(&self) -> &HolderIndex {
+        &self.holder_index
+    }
+
+    /// Reclaim a dead PE's replica memory: drop its stored slices and
+    /// remove it from the reverse holder index. The shrink-style recovery
+    /// of §IV-B never reads a dead PE's store (routing filters on the
+    /// survivor set), so this only frees memory — but it must go through
+    /// this method, not the raw store, to keep the index consistent.
+    pub fn drop_pe(&mut self, cluster: &Cluster, pe: usize) -> Result<()> {
+        if pe >= self.cfg.world {
+            return Err(Error::RankOutOfRange { rank: pe, world: self.cfg.world });
+        }
+        if cluster.is_alive(pe) {
+            return Err(Error::Config(format!(
+                "drop_pe: PE {pe} is alive; only failed PEs' stores may be reclaimed"
+            )));
+        }
+        self.stores[pe].clear();
+        self.holder_index.drop_pe(pe);
+        Ok(())
+    }
+
     pub(crate) fn stores_mut(&mut self) -> &mut Vec<PeStore> {
         &mut self.stores
+    }
+
+    pub(crate) fn holder_index_mut(&mut self) -> &mut HolderIndex {
+        &mut self.holder_index
     }
 
     pub(crate) fn mark_submitted(&mut self) -> Result<()> {

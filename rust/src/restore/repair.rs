@@ -101,21 +101,36 @@ impl ProbeSequences {
         deterministic: impl Fn(usize) -> usize,
     ) -> Vec<usize> {
         let mut homes = Vec::with_capacity(r);
+        self.replica_homes_into(x, r, alive, deterministic, &mut homes);
+        homes
+    }
+
+    /// Allocation-free variant of [`ProbeSequences::replica_homes`]: fills
+    /// `out` (cleared first), so repair planning reuses one buffer across
+    /// all units instead of allocating a `Vec` per unit.
+    pub fn replica_homes_into(
+        &self,
+        x: u64,
+        r: usize,
+        alive: impl Fn(usize) -> bool,
+        deterministic: impl Fn(usize) -> usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
         for k in 0..r {
             let pe = deterministic(k);
-            if alive(pe) && !homes.contains(&pe) {
-                homes.push(pe);
+            if alive(pe) && !out.contains(&pe) {
+                out.push(pe);
             }
         }
         let mut k = 0u64;
-        while homes.len() < r && (k as usize) < 4 * self.p as usize {
+        while out.len() < r && (k as usize) < 4 * self.p as usize {
             let pe = self.probe(x, k);
-            if alive(pe) && !homes.contains(&pe) {
-                homes.push(pe);
+            if alive(pe) && !out.contains(&pe) {
+                out.push(pe);
             }
             k += 1;
         }
-        homes
     }
 }
 
@@ -200,16 +215,22 @@ impl crate::restore::ReStore {
         let seqs = ProbeSequences::new(p, self.config().seed ^ 0x4E9A12_u64, scheme);
         let bs = self.config().block_size as u64;
 
-        // units = permuted slices (grouped per primary slice owner)
+        // units = permuted slices (grouped per primary slice owner).
+        // Planning is allocation-free per unit: `homes` and `srcs` are
+        // reused buffers and holder discovery reads the reverse holder
+        // index — O(r + f) per unit instead of the former O(p) store
+        // sweep (O(p²) per repair at the paper's p = 24 576).
         let alive = |pe: usize| cluster.is_alive(pe);
         let stride = dist.copy_stride();
         let offset = dist.placement_offset();
         let mut transfers: Vec<RepairTransfer> = Vec::new();
         let mut unrepairable = 0usize;
+        let mut homes: Vec<usize> = Vec::with_capacity(r);
+        let mut srcs: Vec<usize> = Vec::with_capacity(r);
         for primary in 0..p {
             let det = |k: usize| (primary + k * stride + offset) % p;
             let unit = primary as u64;
-            let homes = seqs.replica_homes(unit, r, alive, det);
+            seqs.replica_homes_into(unit, r, alive, det, &mut homes);
             if homes.is_empty() {
                 unrepairable += 1;
                 continue;
@@ -219,22 +240,27 @@ impl crate::restore::ReStore {
             }
             let slice_start = unit * dist.blocks_per_pe();
             let len = dist.blocks_per_pe();
-            // current alive holders of this slice (`holds` is a binary
-            // search over the sorted slice list, so this sweep is
-            // O(p log(r + f)) per unit rather than O(p·(r + f)))
-            let holders: Vec<usize> = (0..p)
-                .filter(|&pe| alive(pe) && self.stores()[pe].holds(slice_start, len))
-                .collect();
-            if holders.is_empty() {
+            // Source candidates: the slot's alive PRE-CALL holders, read
+            // from the reverse index once before any destination for this
+            // unit is planned. A destination created this call holds no
+            // valid bytes until its own transfer executes, so the
+            // round-robin pick must never draw from one (the stale-read
+            // hazard when chained failures overlap) — capturing the
+            // pre-call set here guarantees that structurally.
+            let holders = self.holder_index().holders_of(primary);
+            srcs.clear();
+            srcs.extend(holders.iter().map(|&pe| pe as usize).filter(|&pe| alive(pe)));
+            if srcs.is_empty() {
                 unrepairable += 1;
                 continue;
             }
             for (i, &home) in homes.iter().enumerate() {
-                if !self.stores()[home].holds(slice_start, len) {
+                if holders.binary_search(&(home as u32)).is_err() {
+                    debug_assert!(!srcs.contains(&home), "repair dst picked as src");
                     transfers.push(RepairTransfer {
                         perm_start: slice_start,
                         blocks: len,
-                        src: holders[i % holders.len()],
+                        src: srcs[i % srcs.len()],
                         dst: home,
                     });
                 }
@@ -247,6 +273,7 @@ impl crate::restore::ReStore {
             phase.add(t.src, t.dst, t.blocks * bs)?;
         }
         let cost = phase.commit();
+        let bpp = dist.blocks_per_pe();
         for t in &transfers {
             let buf = match self.stores()[t.src].read(t.perm_start, t.blocks) {
                 Some(bytes) => SliceBuf::Real(bytes.to_vec()),
@@ -257,6 +284,7 @@ impl crate::restore::ReStore {
                 t.perm_start + t.blocks,
             );
             self.stores_mut()[t.dst].insert(range, buf);
+            self.holder_index_mut().insert((t.perm_start / bpp) as usize, t.dst);
         }
 
         Ok(RepairReport { transfers: transfers.len(), unrepairable, cost })
@@ -347,6 +375,18 @@ mod tests {
     }
 
     #[test]
+    fn replica_homes_into_reuses_buffer_and_matches() {
+        let seqs = ProbeSequences::new(16, 3, RepairScheme::DoubleHashing);
+        let det = |k: usize| (2 + k * 4) % 16;
+        let mut buf = Vec::new();
+        for x in [7u64, 77, 777] {
+            seqs.replica_homes_into(x, 4, |pe| pe != 6, det, &mut buf);
+            assert_eq!(buf, seqs.replica_homes(x, 4, |pe| pe != 6, det), "x={x}");
+        }
+        assert!(buf.capacity() >= 4);
+    }
+
+    #[test]
     fn repair_plan_skips_idl_units() {
         let seqs = ProbeSequences::new(4, 1, RepairScheme::FeistelWalk);
         let det = |k: usize| k; // homes 0..r
@@ -356,5 +396,160 @@ mod tests {
         let new = |u: u64| seqs.replica_homes(u, 2, |_| false, det);
         let plan = plan_repairs(&units, old, new);
         assert!(plan.is_empty());
+    }
+}
+
+/// Golden parity: the index-driven planner must produce exactly the plan
+/// (and therefore the post-repair stores, costs, and holder sets) of the
+/// seed implementation's O(p)-per-unit store sweep.
+#[cfg(test)]
+mod golden {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::restore::block::BlockRange;
+    use crate::restore::store::{HolderIndex, PeStore, SliceBuf};
+    use crate::restore::ReStore;
+    use crate::simnet::cluster::Cluster;
+
+    fn build(p: usize, r: usize, s_pr: Option<usize>) -> (Cluster, ReStore, Vec<Vec<u8>>) {
+        let cfg = RestoreConfig::builder(p, 8, 64)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards: Vec<Vec<u8>> =
+            (0..p).map(|pe| (0..64 * 8).map(|i| (pe * 29 + i * 3) as u8).collect()).collect();
+        rs.submit(&mut cluster, &shards).unwrap();
+        (cluster, rs, shards)
+    }
+
+    /// The seed planner, kept verbatim as the oracle: per-unit allocated
+    /// `replica_homes` Vec and an O(p) sweep over all PE stores for the
+    /// holder set.
+    fn reference_plan(
+        rs: &ReStore,
+        cluster: &Cluster,
+        scheme: RepairScheme,
+    ) -> Vec<RepairTransfer> {
+        let dist = rs.distribution();
+        let p = dist.world();
+        let r = dist.replicas();
+        let seqs = ProbeSequences::new(p, rs.config().seed ^ 0x4E9A12_u64, scheme);
+        let alive = |pe: usize| cluster.is_alive(pe);
+        let stride = dist.copy_stride();
+        let offset = dist.placement_offset();
+        let mut out = Vec::new();
+        for primary in 0..p {
+            let det = |k: usize| (primary + k * stride + offset) % p;
+            let homes = seqs.replica_homes(primary as u64, r, alive, det);
+            if homes.is_empty() {
+                continue;
+            }
+            let slice_start = primary as u64 * dist.blocks_per_pe();
+            let len = dist.blocks_per_pe();
+            let holders: Vec<usize> = (0..p)
+                .filter(|&pe| alive(pe) && rs.stores()[pe].holds(slice_start, len))
+                .collect();
+            if holders.is_empty() {
+                continue;
+            }
+            for (i, &home) in homes.iter().enumerate() {
+                if !rs.stores()[home].holds(slice_start, len) {
+                    out.push(RepairTransfer {
+                        perm_start: slice_start,
+                        blocks: len,
+                        src: holders[i % holders.len()],
+                        dst: home,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn index_driven_repair_matches_sweep_reference() {
+        for scheme in [RepairScheme::DoubleHashing, RepairScheme::FeistelWalk] {
+            for s_pr in [Some(16), None] {
+                let tag = format!("{scheme:?}/{s_pr:?}");
+                let (mut cluster, mut rs, _) = build(16, 4, s_pr);
+                cluster.kill(&[1, 5]);
+
+                // oracle plan + its effect on a cloned store set
+                let plan = reference_plan(&rs, &cluster, scheme);
+                let mut ref_stores: Vec<PeStore> = rs.stores().to_vec();
+                let mut ref_cluster = cluster.clone();
+                let mut phase = ref_cluster.phase();
+                for t in &plan {
+                    phase.add(t.src, t.dst, t.blocks * 8).unwrap();
+                }
+                let ref_cost = phase.commit();
+                for t in &plan {
+                    let buf = match ref_stores[t.src].read(t.perm_start, t.blocks) {
+                        Some(b) => SliceBuf::Real(b.to_vec()),
+                        None => SliceBuf::Virtual(t.blocks * 8),
+                    };
+                    let range = BlockRange::new(t.perm_start, t.perm_start + t.blocks);
+                    ref_stores[t.dst].insert(range, buf);
+                }
+
+                // a destination planned this call is never read as a source
+                // for the same unit (the chained-failure stale-read hazard)
+                for t in &plan {
+                    assert!(
+                        !plan
+                            .iter()
+                            .any(|u| u.perm_start == t.perm_start && u.dst == t.src),
+                        "{tag}: transfer sources a same-call destination"
+                    );
+                }
+
+                let report = rs.repair_replicas(&mut cluster, scheme).unwrap();
+                assert_eq!(report.transfers, plan.len(), "{tag}: plan size");
+                assert_eq!(report.cost, ref_cost, "{tag}: repair cost");
+                for pe in 0..16 {
+                    let got = rs.stores()[pe].slices();
+                    let want = ref_stores[pe].slices();
+                    assert_eq!(got.len(), want.len(), "{tag}: PE {pe} slice count");
+                    for (g, w) in got.iter().zip(want) {
+                        assert_eq!(g.range, w.range, "{tag}: PE {pe}");
+                        match (&g.buf, &w.buf) {
+                            (SliceBuf::Real(a), SliceBuf::Real(b)) => {
+                                assert_eq!(a, b, "{tag}: PE {pe} {:?}", g.range)
+                            }
+                            (SliceBuf::Virtual(a), SliceBuf::Virtual(b)) => {
+                                assert_eq!(a, b, "{tag}: PE {pe} {:?}", g.range)
+                            }
+                            _ => panic!("{tag}: PE {pe} buffer kind mismatch"),
+                        }
+                    }
+                }
+
+                // the incrementally maintained index matches a full rescan
+                assert_eq!(
+                    *rs.holder_index(),
+                    HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe()),
+                    "{tag}: holder index drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chained_repairs_stay_consistent_and_idempotent() {
+        let (mut cluster, mut rs, _) = build(16, 4, Some(16));
+        for kills in [[1usize, 5], [9, 2]] {
+            cluster.kill(&kills);
+            let first = rs.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+            assert!(first.transfers > 0);
+            let second = rs.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+            assert_eq!(second.transfers, 0, "repairing twice must move nothing");
+            assert_eq!(
+                *rs.holder_index(),
+                HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe())
+            );
+        }
     }
 }

@@ -116,6 +116,28 @@ impl PeStore {
         self.find_idx(start, len).is_some()
     }
 
+    /// Write `bytes` into an already-inserted `Real` slice straight from a
+    /// borrowed source slice — the zero-copy submit path: no intermediate
+    /// `Vec` per written unit. `bytes.len()` must be a whole number of
+    /// blocks; writing into a `Virtual` slice only validates the range.
+    pub fn write_from(&mut self, start: u64, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len() % self.block_size, 0);
+        let len = (bytes.len() / self.block_size) as u64;
+        let Some(i) = self.find_idx(start, len) else {
+            panic!("PeStore::write_from: permuted range [{start}, {}) not stored", start + len);
+        };
+        let s = &mut self.slices[i];
+        if let SliceBuf::Real(dst) = &mut s.buf {
+            let off = ((start - s.range.start) * self.block_size as u64) as usize;
+            dst[off..off + bytes.len()].copy_from_slice(bytes);
+        }
+    }
+
+    /// Drop every stored slice (shrink-mode memory reclaim for a dead PE).
+    pub fn clear(&mut self) {
+        self.slices.clear();
+    }
+
     /// Write bytes into an already-inserted slice (repair path).
     pub fn write(&mut self, start: u64, bytes_or_len: &SliceBuf) {
         let len = match bytes_or_len {
@@ -130,6 +152,74 @@ impl PeStore {
             let off = ((start - s.range.start) * self.block_size as u64) as usize;
             dst[off..off + src.len()].copy_from_slice(src);
         }
+    }
+}
+
+/// Reverse holder index: permuted *slot* (slice number, `perm_start /
+/// blocks_per_pe`) → sorted list of PEs currently storing that slot's
+/// slice.
+///
+/// Both submit and §IV-E repair place whole slices, so slot granularity is
+/// exact. The index is maintained incrementally ([`HolderIndex::insert`] on
+/// every slice placement, [`HolderIndex::drop_pe`] when a PE's store is
+/// reclaimed) and replaces the O(p)-per-unit store sweep that repair
+/// planning and the load path's post-repair fallback used to perform —
+/// O(p²) per repair at the paper's p = 24 576, now O(r + f) per unit.
+/// Consistency with a from-scratch store scan is enforced by
+/// [`HolderIndex::rebuild`]-based property tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HolderIndex {
+    slots: Vec<Vec<u32>>,
+}
+
+impl HolderIndex {
+    pub fn new(slots: usize) -> Self {
+        HolderIndex { slots: vec![Vec::new(); slots] }
+    }
+
+    /// Number of tracked slots (0 before submit).
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record that `pe` now stores slot `slot` (idempotent, keeps the
+    /// holder list sorted for deterministic iteration order).
+    pub fn insert(&mut self, slot: usize, pe: usize) {
+        let v = &mut self.slots[slot];
+        if let Err(at) = v.binary_search(&(pe as u32)) {
+            v.insert(at, pe as u32);
+        }
+    }
+
+    /// Remove `pe` from every slot's holder list (store reclaimed).
+    pub fn drop_pe(&mut self, pe: usize) {
+        for v in &mut self.slots {
+            if let Ok(at) = v.binary_search(&(pe as u32)) {
+                v.remove(at);
+            }
+        }
+    }
+
+    /// PEs currently storing `slot`, ascending.
+    pub fn holders_of(&self, slot: usize) -> &[u32] {
+        &self.slots[slot]
+    }
+
+    /// From-scratch rebuild by scanning every PE store — the O(p · slices)
+    /// reference the incremental maintenance is property-tested against.
+    pub fn rebuild(stores: &[PeStore], blocks_per_pe: u64) -> Self {
+        let slots = stores.len();
+        let mut ix = HolderIndex::new(slots);
+        for (pe, st) in stores.iter().enumerate() {
+            for s in st.slices() {
+                let first = s.range.start / blocks_per_pe;
+                let last = (s.range.end - 1) / blocks_per_pe;
+                for slot in first..=last {
+                    ix.insert(slot as usize, pe);
+                }
+            }
+        }
+        ix
     }
 }
 
@@ -206,5 +296,57 @@ mod tests {
         st.insert(BlockRange::new(0, 4), SliceBuf::Real(vec![0; 8]));
         st.write(1, &SliceBuf::Real(vec![9, 9, 7, 7]));
         assert_eq!(st.read(0, 4).unwrap(), &[0, 0, 9, 9, 7, 7, 0, 0]);
+    }
+
+    #[test]
+    fn write_from_matches_write() {
+        let mut a = PeStore::new(2);
+        let mut b = PeStore::new(2);
+        for st in [&mut a, &mut b] {
+            st.insert(BlockRange::new(4, 8), SliceBuf::Real(vec![0; 8]));
+        }
+        a.write(5, &SliceBuf::Real(vec![9, 9, 7, 7]));
+        b.write_from(5, &[9, 9, 7, 7]);
+        assert_eq!(a.read(4, 4).unwrap(), b.read(4, 4).unwrap());
+    }
+
+    #[test]
+    fn write_from_virtual_is_a_checked_noop() {
+        let mut st = PeStore::new(4);
+        st.insert(BlockRange::new(0, 8), SliceBuf::Virtual(32));
+        st.write_from(2, &[1, 2, 3, 4]); // in range: fine, nothing stored
+        assert_eq!(st.read(2, 1), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not stored")]
+    fn write_from_missing_panics() {
+        let mut st = PeStore::new(4);
+        st.insert(BlockRange::new(0, 8), SliceBuf::Virtual(32));
+        st.write_from(6, &[0u8; 12]); // [6, 9) crosses the slice end
+    }
+
+    #[test]
+    fn holder_index_insert_drop_rebuild() {
+        let mut stores: Vec<PeStore> = (0..4).map(|_| PeStore::new(1)).collect();
+        let mut ix = HolderIndex::new(4);
+        // slot layout with bpp = 8: slot s covers [8s, 8s+8)
+        for (pe, slot) in [(0usize, 0usize), (2, 0), (1, 1), (3, 3), (2, 3)] {
+            let start = slot as u64 * 8;
+            stores[pe].insert(BlockRange::new(start, start + 8), SliceBuf::Virtual(8));
+            ix.insert(slot, pe);
+        }
+        ix.insert(0, 2); // idempotent
+        assert_eq!(ix.holders_of(0), &[0, 2]);
+        assert_eq!(ix.holders_of(1), &[1]);
+        assert_eq!(ix.holders_of(2), &[] as &[u32]);
+        assert_eq!(ix.holders_of(3), &[2, 3]);
+        assert_eq!(ix, HolderIndex::rebuild(&stores, 8));
+
+        ix.drop_pe(2);
+        stores[2].clear();
+        assert_eq!(ix.holders_of(0), &[0]);
+        assert_eq!(ix.holders_of(3), &[3]);
+        assert_eq!(ix, HolderIndex::rebuild(&stores, 8));
     }
 }

@@ -64,17 +64,20 @@ impl ReStore {
         let r = dist.replicas();
         let p = dist.world();
 
-        // Pre-create every PE's r slice buffers (zeroed in execution mode).
+        // Pre-create every PE's r slice buffers (zeroed in execution mode)
+        // and register them in the reverse holder index.
         let slice_bytes = (dist.blocks_per_pe() * bs) as usize;
         for pe in 0..p {
             for k in 0..r {
                 let range = dist.stored_slice(pe, k);
+                let slot = (range.start / dist.blocks_per_pe()) as usize;
                 let buf = if shards.is_some() {
                     SliceBuf::Real(vec![0u8; slice_bytes])
                 } else {
                     SliceBuf::Virtual(slice_bytes as u64)
                 };
                 self.stores[pe].insert(range, buf);
+                self.holder_index_mut().insert(slot, pe);
             }
         }
 
@@ -107,14 +110,15 @@ impl ReStore {
                     touched.push(slot_pe as u32);
                 }
                 slot_units[slot_pe] += 1;
-                // Move the bytes (execution mode): write the unit into each
-                // copy's slice at its permuted offset.
+                // Move the bytes (execution mode): write the unit straight
+                // from the shard slice into each copy's slice at its
+                // permuted offset — zero-copy, no `Vec` per unit×replica.
                 if let Some(shards) = shards {
                     let off = (u as u64 * unit_bytes) as usize;
                     let bytes = &shards[src][off..off + unit_bytes as usize];
                     for k in 0..r {
                         let dst = (slot_pe + k * stride + offset) % p;
-                        self.stores[dst].write(perm_start, &SliceBuf::Real(bytes.to_vec()));
+                        self.stores[dst].write_from(perm_start, bytes);
                     }
                 }
             }
@@ -255,6 +259,88 @@ mod tests {
             a.cost.total_bytes + 16 * 256 * 8, // plain keeps copy 0 local
             b.cost.total_bytes + b_local_bytes(&perm, &b)
         );
+    }
+
+    /// Golden parity: the zero-copy `write_from` path must leave every
+    /// store byte-identical to the seed implementation, which materialized
+    /// one `Vec` per written unit × replica and went through
+    /// `PeStore::write`.
+    #[test]
+    fn zero_copy_submit_matches_per_unit_vec_reference() {
+        for s_pr in [Some(16), None] {
+            let cfg = cfg(8, 64, 4, s_pr);
+            let shards = make_shards(8, 64 * 8);
+
+            // optimized path
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+            let report = rs.submit(&mut cluster, &shards).unwrap();
+
+            // reference: seed write path (fresh Vec per unit × replica)
+            let dist = rs.distribution().clone();
+            let bs = 8u64;
+            let slice_bytes = (dist.blocks_per_pe() * bs) as usize;
+            let mut ref_stores: Vec<crate::restore::store::PeStore> =
+                (0..8).map(|_| crate::restore::store::PeStore::new(8)).collect();
+            for pe in 0..8 {
+                for k in 0..4 {
+                    ref_stores[pe]
+                        .insert(dist.stored_slice(pe, k), SliceBuf::Real(vec![0u8; slice_bytes]));
+                }
+            }
+            let s = dist.perm_range_blocks();
+            let unit_bytes = (s * bs) as usize;
+            for src in 0..8usize {
+                for u in 0..(dist.blocks_per_pe() / s) as usize {
+                    let orig = src as u64 * dist.blocks_per_pe() + u as u64 * s;
+                    let perm_start = dist.permute_block(orig);
+                    let off = u * unit_bytes;
+                    let bytes = shards[src][off..off + unit_bytes].to_vec();
+                    for k in 0..4 {
+                        let dst = dist.holder(perm_start, k);
+                        ref_stores[dst].write(perm_start, &SliceBuf::Real(bytes.clone()));
+                    }
+                }
+            }
+
+            for pe in 0..8 {
+                let got = rs.stores()[pe].slices();
+                let want = ref_stores[pe].slices();
+                assert_eq!(got.len(), want.len(), "s_pr {s_pr:?}: PE {pe} slice count");
+                for (g, w) in got.iter().zip(want) {
+                    assert_eq!(g.range, w.range, "s_pr {s_pr:?}: PE {pe}");
+                    let (SliceBuf::Real(gb), SliceBuf::Real(wb)) = (&g.buf, &w.buf) else {
+                        panic!("execution mode must store real bytes");
+                    };
+                    assert_eq!(gb, wb, "s_pr {s_pr:?}: PE {pe} slice {:?} bytes", g.range);
+                }
+            }
+
+            // ...and the cost must equal the schedule-only virtual run
+            let mut c2 = Cluster::new_execution(8, 4);
+            let mut rs2 = ReStore::new(cfg, &c2).unwrap();
+            let virt = rs2.submit_virtual(&mut c2).unwrap();
+            assert_eq!(report.cost, virt.cost, "s_pr {s_pr:?}");
+        }
+    }
+
+    #[test]
+    fn submit_builds_consistent_holder_index() {
+        for s_pr in [Some(16), None] {
+            let cfg = cfg(8, 64, 4, s_pr);
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            rs.submit(&mut cluster, &make_shards(8, 64 * 8)).unwrap();
+            let rebuilt = crate::restore::store::HolderIndex::rebuild(
+                rs.stores(),
+                rs.distribution().blocks_per_pe(),
+            );
+            assert_eq!(*rs.holder_index(), rebuilt, "s_pr {s_pr:?}");
+            // every slot has exactly r holders right after submit
+            for slot in 0..8 {
+                assert_eq!(rs.holder_index().holders_of(slot).len(), 4, "slot {slot}");
+            }
+        }
     }
 
     fn b_local_bytes(rs: &ReStore, _report: &SubmitReport) -> u64 {

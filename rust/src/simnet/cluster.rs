@@ -186,7 +186,17 @@ impl Cluster {
     /// messages added to the builder belong to ONE concurrent phase.
     pub fn phase(&mut self) -> PhaseBuilder<'_> {
         let acc = Accumulator::new(&self.net, &self.topo);
-        PhaseBuilder { cluster: self, acc }
+        PhaseBuilder { cluster: self, acc: PhaseAcc::Owned(acc) }
+    }
+
+    /// Like [`Cluster::phase`], but reusing a caller-pooled
+    /// [`Accumulator`] (e.g. the one in ReStore's `LoadScratch`): the
+    /// accumulator is reset against this cluster's network/topology, so a
+    /// `Default` or stale shell is fine, and `commit` leaves it zeroed for
+    /// the next phase — no O(p) counter allocation per phase.
+    pub fn phase_pooled<'a>(&'a mut self, acc: &'a mut Accumulator) -> PhaseBuilder<'a> {
+        acc.reset(&self.net, &self.topo);
+        PhaseBuilder { cluster: self, acc: PhaseAcc::Pooled(acc) }
     }
 
     /// Charge a communication phase given as `(src, dst, bytes)` triples
@@ -253,10 +263,26 @@ impl Cluster {
     }
 }
 
+/// The accumulator behind a [`PhaseBuilder`]: owned per-phase, or a
+/// caller-pooled shell (reset on entry, zeroed again on commit).
+enum PhaseAcc<'a> {
+    Owned(Accumulator),
+    Pooled(&'a mut Accumulator),
+}
+
+impl PhaseAcc<'_> {
+    fn as_mut(&mut self) -> &mut Accumulator {
+        match self {
+            PhaseAcc::Owned(a) => a,
+            PhaseAcc::Pooled(a) => a,
+        }
+    }
+}
+
 /// Incremental builder for one concurrent communication phase.
 pub struct PhaseBuilder<'a> {
     cluster: &'a mut Cluster,
-    acc: Accumulator,
+    acc: PhaseAcc<'a>,
 }
 
 impl<'a> PhaseBuilder<'a> {
@@ -274,18 +300,19 @@ impl<'a> PhaseBuilder<'a> {
         if !self.cluster.alive[dst] {
             return Err(Error::DeadPe(dst));
         }
-        self.acc.msg(src, dst, bytes);
+        self.acc.as_mut().msg(src, dst, bytes);
         Ok(())
     }
 
     /// Charge `count` fragments handled by `pe` (see `Accumulator::frag`).
     pub fn frag(&mut self, pe: usize, count: u64) {
-        self.acc.frag(pe, count);
+        self.acc.as_mut().frag(pe, count);
     }
 
-    /// Finish the phase: charge it to the clock and return its cost.
-    pub fn commit(self) -> PhaseCost {
-        let cost = self.acc.finish();
+    /// Finish the phase: charge it to the clock and return its cost. A
+    /// pooled accumulator is left zeroed for its next phase.
+    pub fn commit(mut self) -> PhaseCost {
+        let cost = self.acc.as_mut().finish_reset();
         self.cluster.clock_s += cost.sim_time_s;
         cost
     }
@@ -350,6 +377,37 @@ mod tests {
         let (out, cost) = c.allreduce_f32(&[&a, &b, &d]).unwrap();
         assert_eq!(out, vec![111.0, 222.0]);
         assert!(cost.sim_time_s > 0.0);
+    }
+
+    #[test]
+    fn pooled_phase_matches_owned_phase() {
+        let mut c1 = Cluster::new_execution(8, 4);
+        let mut c2 = Cluster::new_execution(8, 4);
+        let mut acc = Accumulator::default();
+        for round in 0..3u64 {
+            let mut p1 = c1.phase();
+            let mut p2 = c2.phase_pooled(&mut acc);
+            for (s, d, b) in [(0usize, 5usize, 4096u64), (1, 6, 64), (2, 2, 128)] {
+                p1.add(s, d, b + round).unwrap();
+                p2.add(s, d, b + round).unwrap();
+                p1.frag(d, 1);
+                p2.frag(d, 1);
+            }
+            assert_eq!(p1.commit(), p2.commit(), "round {round}");
+            assert_eq!(c1.now(), c2.now());
+        }
+    }
+
+    #[test]
+    fn pooled_phase_validates_endpoints() {
+        let mut c = Cluster::new_execution(4, 2);
+        c.kill(&[3]);
+        let mut acc = Accumulator::default();
+        let mut p = c.phase_pooled(&mut acc);
+        assert!(matches!(p.add(0, 3, 8), Err(Error::DeadPe(3))));
+        assert!(matches!(p.add(0, 9, 8), Err(Error::RankOutOfRange { .. })));
+        p.add(0, 1, 8).unwrap();
+        assert!(p.commit().sim_time_s > 0.0);
     }
 
     #[test]

@@ -82,6 +82,7 @@ impl PhaseCost {
 /// "sending" to itself, e.g. a replica that stays local) cost only memory
 /// bandwidth, no NIC or latency — matching the paper's experiments which
 /// explicitly exclude same-node copies by construction.
+#[derive(Debug)]
 pub struct Accumulator {
     net: NetworkConfig,
     topo: Topology,
@@ -93,6 +94,14 @@ pub struct Accumulator {
     local_bytes: u64,
     total_bytes: u64,
     total_msgs: u64,
+}
+
+impl Default for Accumulator {
+    /// An empty 1-PE accumulator — a placeholder shell for pooled reuse;
+    /// call [`Accumulator::reset`] against the real cluster before use.
+    fn default() -> Self {
+        Accumulator::new(&NetworkConfig::default(), &Topology::new(1, 1))
+    }
 }
 
 impl Accumulator {
@@ -109,6 +118,34 @@ impl Accumulator {
             total_bytes: 0,
             total_msgs: 0,
         }
+    }
+
+    /// Re-arm a pooled accumulator for a new phase: adopt `net`/`topo`,
+    /// zero every counter, and keep the vectors' capacity — after a warm-up
+    /// phase at the same world size this performs no heap allocation (the
+    /// last O(p) allocation of every `ReStore::load` call, pooled in its
+    /// `LoadScratch`).
+    pub fn reset(&mut self, net: &NetworkConfig, topo: &Topology) {
+        self.net = net.clone();
+        self.topo = topo.clone();
+        self.pe_msgs.clear();
+        self.pe_msgs.resize(topo.pes(), 0);
+        self.pe_frags.clear();
+        self.pe_frags.resize(topo.pes(), 0);
+        self.pe_bytes.clear();
+        self.pe_bytes.resize(topo.pes(), 0);
+        self.node_bytes.clear();
+        self.node_bytes.resize(topo.nodes(), 0);
+        self.node_msgs.clear();
+        self.node_msgs.resize(topo.nodes(), 0);
+        self.local_bytes = 0;
+        self.total_bytes = 0;
+        self.total_msgs = 0;
+    }
+
+    /// Capacity of the per-PE counter vectors (steady-state reuse tests).
+    pub fn pe_capacity(&self) -> usize {
+        self.pe_msgs.capacity()
     }
 
     /// Register one message of `bytes` from `src` to `dst`.
@@ -139,6 +176,26 @@ impl Accumulator {
     }
 
     pub fn finish(self) -> PhaseCost {
+        self.compute()
+    }
+
+    /// Compute the phase cost and zero the counters in place (keeping
+    /// vector capacity) so the accumulator is ready for the next
+    /// [`Accumulator::reset`]-free phase at the same world size.
+    pub fn finish_reset(&mut self) -> PhaseCost {
+        let cost = self.compute();
+        self.pe_msgs.fill(0);
+        self.pe_frags.fill(0);
+        self.pe_bytes.fill(0);
+        self.node_bytes.fill(0);
+        self.node_msgs.fill(0);
+        self.local_bytes = 0;
+        self.total_bytes = 0;
+        self.total_msgs = 0;
+        cost
+    }
+
+    fn compute(&self) -> PhaseCost {
         let bmsgs = self.pe_msgs.iter().copied().max().unwrap_or(0) as u64;
         let bfrags = self.pe_frags.iter().copied().max().unwrap_or(0);
         let bbytes = self.pe_bytes.iter().copied().max().unwrap_or(0);
@@ -268,6 +325,36 @@ mod tests {
         let c = acc.finish();
         assert_eq!(c.bottleneck_msgs, 4096);
         assert!(c.sim_time_s > 4096.0 * 2e-6 * 0.99);
+    }
+
+    #[test]
+    fn pooled_reset_matches_fresh_accumulator() {
+        let (net, topo) = setup(96);
+        let mut pooled = Accumulator::default();
+        for round in 0..3 {
+            pooled.reset(&net, &topo);
+            let mut fresh = Accumulator::new(&net, &topo);
+            for (s, d, b) in [(0usize, 50usize, 1_000_000u64), (3, 3, 512), (7, 60, 64)] {
+                pooled.msg(s, d, b + round);
+                fresh.msg(s, d, b + round);
+            }
+            pooled.frag(50, 2);
+            fresh.frag(50, 2);
+            assert_eq!(pooled.finish_reset(), fresh.finish(), "round {round}");
+        }
+    }
+
+    #[test]
+    fn finish_reset_leaves_a_clean_slate() {
+        let (net, topo) = setup(96);
+        let mut acc = Accumulator::new(&net, &topo);
+        acc.msg(0, 50, 4096);
+        acc.frag(0, 3);
+        let _ = acc.finish_reset();
+        let cap = acc.pe_capacity();
+        // without an intervening reset the next phase starts from zero
+        assert_eq!(acc.finish_reset(), PhaseCost::default());
+        assert_eq!(acc.pe_capacity(), cap, "capacity must be retained");
     }
 
     #[test]

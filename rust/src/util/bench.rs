@@ -3,11 +3,59 @@
 //!
 //! Measures wall-clock over warmup + timed iterations, reports
 //! mean/median/p10/p90 like the paper's plots (§VI-A: 10 repetitions,
-//! mean with 10th/90th percentile error bars).
+//! mean with 10th/90th percentile error bars). Results can additionally be
+//! emitted as machine-readable `{name, ns_per_iter}` JSON lines
+//! ([`write_json_artifact`]) — CI uploads these as `BENCH_*.json` so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Also hosts [`CountingAlloc`], the allocation-count harness behind the
+//! zero-per-unit-allocation assertions (`rust/tests/alloc_counts.rs`).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::metrics::{fmt_time, Stats};
+
+/// Global allocation counter incremented by [`CountingAlloc`].
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`]-backed global allocator that counts every allocation
+/// (`alloc` and `realloc`; frees are not counted). Register it in a
+/// dedicated test binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static A: restore::util::bench::CountingAlloc = restore::util::bench::CountingAlloc;
+/// ```
+///
+/// then bracket the code under test with [`alloc_count`] reads. Used to
+/// assert that hot paths (execution-mode submit, repair planning) perform
+/// no per-unit heap allocation.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocations counted so far (0 unless [`CountingAlloc`] is the
+/// registered global allocator). Take a before/after difference around the
+/// code under test.
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 /// One timed measurement series.
 pub struct BenchResult {
@@ -26,6 +74,26 @@ impl BenchResult {
             self.stats.n
         )
     }
+
+    /// One machine-readable JSON object: `{"name": ..., "ns_per_iter": ...}`.
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"ns_per_iter\": {:.1}}}",
+            self.name.replace('\\', "\\\\").replace('"', "\\\""),
+            self.stats.mean * 1e9
+        )
+    }
+}
+
+/// Write `results` as one JSON object per line to `path` (the CI perf
+/// artifact format — `BENCH_hotpath.json`, `BENCH_load_scale.json`).
+pub fn write_json_artifact(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut out = String::new();
+    for r in results {
+        out.push_str(&r.json_line());
+        out.push('\n');
+    }
+    std::fs::write(path, out)
 }
 
 /// Time `f` for `reps` repetitions after `warmup` unmeasured calls.
@@ -78,5 +146,29 @@ mod tests {
         let s = sim_samples(4, |rep| rep as f64);
         assert_eq!(s.n, 4);
         assert_eq!(s.mean, 1.5);
+    }
+
+    #[test]
+    fn json_line_is_machine_readable() {
+        let r = BenchResult {
+            name: "load-1% resolve+route p=1536".into(),
+            stats: Stats::from(&[1e-6, 3e-6]),
+        };
+        assert_eq!(
+            r.json_line(),
+            "{\"name\": \"load-1% resolve+route p=1536\", \"ns_per_iter\": 2000.0}"
+        );
+        // quotes in names stay valid JSON
+        let q = BenchResult { name: "a\"b".into(), stats: Stats::from(&[1e-9]) };
+        assert!(q.json_line().contains("a\\\"b"));
+    }
+
+    #[test]
+    fn alloc_count_is_monotonic() {
+        // CountingAlloc is not registered in unit tests; the counter just
+        // reads 0-or-more and never decreases.
+        let a = alloc_count();
+        let _v: Vec<u8> = Vec::with_capacity(128);
+        assert!(alloc_count() >= a);
     }
 }

@@ -8,7 +8,8 @@ use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::distribution::Distribution;
 use restore::restore::load::{load_all_requests, scatter_requests};
 use restore::restore::permutation::{Feistel, RangePermutation};
-use restore::restore::store::assert_memory_invariant;
+use restore::restore::repair::RepairScheme;
+use restore::restore::store::{assert_memory_invariant, HolderIndex};
 use restore::restore::{LoadRequest, ReStore};
 use restore::simnet::cluster::Cluster;
 use restore::util::rng::Rng;
@@ -195,6 +196,88 @@ fn prop_load_all_partitions_whole_id_space() {
         assert_eq!(merged.ranges().len(), 1, "must be a seamless partition");
         store.load(&mut cluster, &reqs).unwrap();
     }
+}
+
+#[test]
+fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
+    // After ANY sequence of kills, repairs, and dead-store reclaims, the
+    // incrementally maintained reverse holder index must exactly equal a
+    // from-scratch scan of every PE store — and a repeated repair after
+    // the same failures must move nothing (idempotence).
+    let mut rng = Rng::seed_from_u64(0x1DE7);
+    for trial in 0..20 {
+        let cfg = random_config(&mut rng);
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        let check = |store: &ReStore, when: &str| {
+            let rebuilt =
+                HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe());
+            assert_eq!(
+                *store.holder_index(),
+                rebuilt,
+                "trial {trial} (p={}, r={}): index drifted {when}",
+                cfg.world,
+                cfg.replicas
+            );
+        };
+        check(&store, "after submit");
+
+        let scheme = if rng.gen_bool(0.5) {
+            RepairScheme::DoubleHashing
+        } else {
+            RepairScheme::FeistelWalk
+        };
+        for wave in 0..3 {
+            if cluster.n_alive() <= 1 {
+                break;
+            }
+            // kill a random non-empty subset of survivors (leave one alive)
+            let survivors = cluster.survivors();
+            let kills = 1 + rng.gen_index((survivors.len() - 1).max(1));
+            let dead: Vec<usize> = (0..kills)
+                .map(|_| survivors[rng.gen_index(survivors.len())])
+                .collect();
+            let dead: Vec<usize> =
+                dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
+            cluster.kill(&dead);
+
+            // occasionally reclaim a dead PE's store before repairing
+            if rng.gen_bool(0.3) {
+                if let Some(&pe) = cluster.failed().first() {
+                    store.drop_pe(&cluster, pe).unwrap();
+                    check(&store, &format!("after drop_pe({pe}) in wave {wave}"));
+                }
+            }
+
+            let first = store.repair_replicas(&mut cluster, scheme).unwrap();
+            check(&store, &format!("after repair wave {wave}"));
+            let second = store.repair_replicas(&mut cluster, scheme).unwrap();
+            assert_eq!(
+                second.transfers, 0,
+                "trial {trial} wave {wave}: second repair moved {} units (first moved {})",
+                second.transfers, first.transfers
+            );
+            check(&store, &format!("after idempotent re-repair wave {wave}"));
+        }
+    }
+}
+
+#[test]
+fn prop_drop_pe_rejects_alive_pes_and_out_of_range() {
+    let cfg = RestoreConfig::builder(4, 8, 16).replicas(2).build().unwrap();
+    let mut cluster = Cluster::new_execution(4, 2);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+    assert!(store.drop_pe(&cluster, 1).is_err(), "alive PE must be rejected");
+    assert!(store.drop_pe(&cluster, 9).is_err(), "out-of-range PE must be rejected");
+    cluster.kill(&[1]);
+    store.drop_pe(&cluster, 1).unwrap();
+    assert_eq!(store.stores()[1].slices().len(), 0);
+    assert_eq!(
+        *store.holder_index(),
+        HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe())
+    );
 }
 
 #[test]
