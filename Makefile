@@ -1,0 +1,32 @@
+# Developer entry points. `make artifacts` is the only Python invocation in
+# the whole system: it AOT-lowers the L2 JAX/Pallas models to HLO text under
+# artifacts/ (+ manifest.json) for the Rust PJRT runtime — see
+# rust/src/runtime/mod.rs. The PJRT-gated tests and bench sections skip
+# themselves until it has run.
+
+PYTHON ?= python3
+
+.PHONY: artifacts test bench-json perf-table clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
+	@test -s artifacts/manifest.json && echo "artifacts/manifest.json OK"
+
+test:
+	cargo build --release && cargo test -q
+
+# The CI bench smoke set: emits BENCH_hotpath.json / BENCH_load_scale.json /
+# BENCH_rebalance.json ({name, ns_per_iter} JSON lines).
+bench-json:
+	cargo bench --bench hotpath
+	cargo bench --bench load_scale
+	cargo bench --bench rebalance
+
+# Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
+# (downloaded from CI's bench-json artifact, or produced by `make
+# bench-json` locally).
+perf-table:
+	$(PYTHON) tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json BENCH_rebalance.json
+
+clean-artifacts:
+	rm -rf artifacts

@@ -1,0 +1,73 @@
+//! §IV-B shrinking-rebalance benchmark (EXPERIMENTS.md §Perf).
+//!
+//! Cost-model runs of `ReStore::rebalance` at the hotpath baseline scale
+//! (p = 1536) and the paper's largest configuration (p = 24576), for
+//! failure fractions that admit the equal-slice §IV-A layout at
+//! p' = (1 - f)·p (1/3 and 1/2 — the §IV-A layout needs p' to divide the
+//! permutation-unit count). Kill patterns take at most 2 members of every
+//! §IV-D group, so no wave is an IDL.
+//!
+//! Emits three JSON entries per configuration to `BENCH_rebalance.json`
+//! (the `{name, ns_per_iter}` artifact schema; the name states the unit):
+//!
+//! * `rebalance wall ... ` — wall-clock nanoseconds of the planner +
+//!   executor (cost-model: schedule-only, no byte movement);
+//! * `rebalance sim-ns ...` — simulated time charged to the cluster clock;
+//! * `rebalance migrated-bytes ...` — bytes the minimal migration moved.
+
+use std::time::Instant;
+
+use restore::config::RestoreConfig;
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::simnet::ulfm;
+use restore::util::bench::{write_json_artifact, BenchResult};
+
+fn rebalance_at(p: usize, p_new: usize, results: &mut Vec<BenchResult>) {
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let mut cluster = Cluster::new_execution(p, 48);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+
+    // kill ranks 0..(p - p'): with p' >= p/2 and group stride p/4, every
+    // §IV-D group loses at most 2 of its 4 members — never an IDL
+    let kills: Vec<usize> = (0..p - p_new).collect();
+    cluster.kill(&kills);
+    let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+    assert!(store.can_rebalance(&cluster), "p'={p_new} must admit the layout");
+
+    let sim0 = cluster.now();
+    let wall0 = Instant::now();
+    let report = store.rebalance(&mut cluster, &map).unwrap();
+    let wall = wall0.elapsed().as_secs_f64();
+    let sim = cluster.now() - sim0;
+    let frac = (p - p_new) as f64 / p as f64;
+
+    let tag = format!("p={p} f={:.2}", frac);
+    println!(
+        "rebalance {tag}: p'={p_new}, {} transfers, {:.2} GiB migrated, sim {:.1} ms, wall {:.1} ms",
+        report.transfers,
+        report.migrated_bytes as f64 / (1u64 << 30) as f64,
+        sim * 1e3,
+        wall * 1e3,
+    );
+    results.push(BenchResult::from_value(&format!("rebalance wall {tag}"), wall * 1e9));
+    results.push(BenchResult::from_value(&format!("rebalance sim-ns {tag}"), sim * 1e9));
+    results.push(BenchResult::from_value(
+        &format!("rebalance migrated-bytes {tag}"),
+        report.migrated_bytes as f64,
+    ));
+}
+
+fn main() {
+    println!("=== shrinking-rebalance benchmarks (cost-model) ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    // p = 2^a·3 worlds: both 2/3·p and 1/2·p divide the unit count
+    for (p, targets) in [(1536usize, [1024usize, 768]), (24576, [16384, 12288])] {
+        for p_new in targets {
+            rebalance_at(p, p_new, &mut results);
+        }
+    }
+    write_json_artifact("BENCH_rebalance.json", &results).expect("write BENCH_rebalance.json");
+    println!("\nwrote BENCH_rebalance.json ({} entries)", results.len());
+}

@@ -46,6 +46,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         fmt_time(ulfm_cost.sim_time_s)
     );
 
+    // The shrink bumped the communicator epoch; the store must adopt the
+    // new world before it will route again. 14 survivors don't admit the
+    // equal-slice §IV-A layout (r = 4 does not divide 14), so this falls
+    // back to acknowledging: dead stores reclaimed, routing around holes.
+    // See examples/replica_repair.rs for the full rebalance story.
+    store.rebalance_or_acknowledge(&mut cluster, &map)?;
+
     let requests = scatter_requests(&store, &cluster, &failed);
     let out = store.load(&mut cluster, &requests)?;
     println!(

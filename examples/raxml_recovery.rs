@@ -54,7 +54,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // two nodes' worth of failures
     cluster.kill(&[2, 5]);
-    let (failed, _map, _cost) = ulfm::recover(&mut cluster);
+    let (failed, map, _cost) = ulfm::recover(&mut cluster);
+    // adopt the shrunk communicator (6 survivors can't carry the §IV-A
+    // layout with r = 4, so this acknowledges and routes around the holes)
+    store.rebalance_or_acknowledge(&mut cluster, &map)?;
     let mut ownership = Ownership::identity(p, sites_per_pe as u64);
     let gained = ownership.rebalance(&failed, &cluster.survivors(), 1);
     let reqs = scatter_requests_for_ranges(&gained);

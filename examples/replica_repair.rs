@@ -1,93 +1,219 @@
-//! §IV-E scenario: restoring the replication level after failures.
+//! §IV-B shrinking recovery, end to end: agree → shrink → rebalance → load.
 //!
-//! The paper proposes (as future work) re-creating lost replicas on the
-//! next alive PE of a per-block probing sequence, leaving all surviving
-//! replicas in place. This example drives both Appendix constructions
-//! (Distribution A: double hashing with coprime steps; Distribution B:
-//! Feistel walk) through a failure storm and shows that the replication
-//! level stays at r while only O(lost replicas) data moves.
+//! The paper: "we also support shrinking recovery instead of recovery using
+//! spare compute nodes". This example drives the full story the rebalance
+//! subsystem enables:
+//!
+//! 1. a failure wave kills half the PEs (2 of every §IV-D group, so no data
+//!    is lost);
+//! 2. the survivors run the ULFM-style `agree` + `shrink` — the shrink
+//!    bumps the communicator epoch, and the store refuses to route until it
+//!    adopts the new world (demonstrated live);
+//! 3. `ReStore::rebalance` rewrites the §IV-A layout over the `p'`
+//!    survivors, migrating only the slices whose holder set changed;
+//! 4. recovered loads verify bit-exactness, and `restore::idl` quantifies
+//!    the payoff: before the rebalance every group is down to 2 copies
+//!    (IDL risk `P(32, 2, f)`), afterwards all slots are back at r = 4 on
+//!    the new world (`P(32, 4, f)` — the fresh-replication level).
+//!
+//! A second wave repeats the cycle at p' = 32 → p'' = 16, showing that
+//! rebalances chain. A final wave then kills PEs *without* shrinking and
+//! runs §IV-E probing-sequence replica repair inside the rebalanced world
+//! — the two recovery mechanisms compose: rebalance when the survivor
+//! count admits the §IV-A layout, repair in place otherwise.
 //!
 //! Run with: `cargo run --release --example replica_repair`
 
+use restore::config::RestoreConfig;
+use restore::error::Error;
 use restore::metrics::fmt_time;
-use restore::restore::repair::{plan_repairs, ProbeSequences, RepairScheme};
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::idl;
+use restore::restore::repair::RepairScheme;
+use restore::restore::{LoadRequest, ReStore};
 use restore::simnet::cluster::Cluster;
-use restore::util::rng::Rng;
+use restore::simnet::ulfm;
+
+const P: usize = 64;
+const R: usize = 4;
+const BPP: u64 = 256; // blocks per PE at p = 64
+const BS: usize = 8;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let p = 64usize;
-    let r = 4usize;
-    let units: Vec<(u64, u64, u64)> =
-        (0..256u64).map(|u| (u, u * 4096, 4096)).collect(); // 256 KiB ranges
-    let unit_bytes = 4096 * 64u64;
-
-    for scheme in [RepairScheme::DoubleHashing, RepairScheme::FeistelWalk] {
-        println!("=== {scheme:?} ===");
-        let seqs = ProbeSequences::new(p, 0xC0DE, scheme);
-        let mut cluster = Cluster::new_execution(p, 8);
-        let mut rng = Rng::seed_from_u64(9);
-
-        // deterministic §IV-A first-r placement for each unit
-        let det = |u: u64| move |k: usize| ((u as usize) + k * (p / r)) % p;
-
-        let mut total_moved = 0u64;
-        let mut total_transfers = 0usize;
-        for wave in 0..6 {
-            // kill 4 random PEs per wave
-            let survivors = cluster.survivors();
-            let dead = restore::simnet::failure::uniform_kills(&mut rng, &survivors, 4);
-            let alive_before: Vec<bool> = (0..p).map(|pe| cluster.is_alive(pe)).collect();
-            cluster.kill(&dead);
-            let alive_after: Vec<bool> = (0..p).map(|pe| cluster.is_alive(pe)).collect();
-
-            let old = |u: u64| seqs.replica_homes(u, r, |pe| alive_before[pe], det(u));
-            let new = |u: u64| seqs.replica_homes(u, r, |pe| alive_after[pe], det(u));
-            let plan = plan_repairs(&units, old, new);
-
-            // apply: charge the transfers to the simulated network
-            let t0 = cluster.now();
-            let cost = cluster
-                .charge_phase(plan.iter().map(|t| (t.src, t.dst, unit_bytes)))?;
-            total_moved += cost.total_bytes;
-            total_transfers += plan.len();
-
-            // verify the invariant: every unit has exactly r alive homes
-            for &(u, _, _) in &units {
-                let homes = new(u);
-                assert_eq!(homes.len(), r, "unit {u} lost replication after wave {wave}");
-                for h in &homes {
-                    assert!(cluster.is_alive(*h));
-                }
-            }
-            println!(
-                "wave {wave}: killed {dead:?} -> {} transfers, {} moved, {} sim time",
-                plan.len(),
-                human(cost.total_bytes),
-                fmt_time(cluster.now() - t0)
-            );
-        }
-        let stored = units.len() as u64 * r as u64 * unit_bytes;
-        println!(
-            "after 24 failures: replication level still {r}; moved {} total over 6 repairs \
-             ({:.1} % of the {} stored)\n",
-            human(total_moved),
-            100.0 * total_moved as f64 / stored as f64,
-            human(stored),
-        );
-        let _ = total_transfers;
-    }
-
-    // The Appendix's coprime-retry estimate
-    let seqs = ProbeSequences::new(24576, 1, RepairScheme::DoubleHashing);
-    for x in 0..10_000u64 {
-        seqs.probe(x, 1);
-    }
-    let avg = seqs.seed_trials.get() as f64 / seqs.seed_calls.get() as f64;
+    let cfg = RestoreConfig::builder(P, BS, BPP as usize)
+        .replicas(R)
+        .perm_range_blocks(Some(64))
+        .build()?;
+    let mut cluster = Cluster::new_execution(P, 8);
+    let mut store = ReStore::new(cfg, &cluster)?;
+    let shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..BPP as usize * BS).map(|i| (pe * 41 + i * 3) as u8).collect())
+        .collect();
+    store.submit(&mut cluster, &shards)?;
     println!(
-        "double-hashing seed retries (p=24576, factors 2,3): {avg:.2} per block \
-         (Appendix predicts ~{:.2})",
-        // P(coprime to 2^a*3) = 1/2 * 2/3 = 1/3 -> E = 3
-        3.0
+        "submitted {} PEs x {} KiB, r = {R}, epoch {}",
+        P,
+        BPP as usize * BS / 1024,
+        store.epoch()
+    );
+
+    // --- wave 1: 64 -> 32 ---------------------------------------------------
+    // Kill ranks 0..32: every §IV-D group (stride p/r = 16) loses exactly 2
+    // of its 4 members — recoverable, but one failure away from risk.
+    let wave1: Vec<usize> = (0..32).collect();
+    run_wave(&mut cluster, &mut store, &shards, &wave1, "wave 1")?;
+
+    // --- wave 2: 32 -> 16 ---------------------------------------------------
+    // The new groups at p' = 32 have stride 8 in distribution ranks; the
+    // survivors are cluster ranks 32..64, so killing 32..48 again takes 2
+    // members of every group.
+    let wave2: Vec<usize> = (32..48).collect();
+    run_wave(&mut cluster, &mut store, &shards, &wave2, "wave 2")?;
+
+    // --- wave 3: §IV-E repair inside the rebalanced world -------------------
+    // Two more PEs die, but 14 survivors cannot carry the equal-slice
+    // layout — instead of shrinking again, re-create the lost replicas on
+    // probing-sequence homes (Appendix Distribution A), leaving every
+    // surviving replica in place. Repair composes with the rebalanced
+    // distribution: planning runs in the compact p'' = 16 rank space and
+    // translates to cluster ranks at the store/network boundary.
+    println!("\n=== wave 3: 2 PEs die; repair instead of shrink ===");
+    cluster.kill(&[48, 49]);
+    let degraded = count_slots_below_r(&store, &cluster);
+    let rep = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing)?;
+    println!(
+        "{degraded} slots were below r = {R} copies; repair moved {} slices ({} unrepairable), \
+         {} sim time",
+        rep.transfers,
+        rep.unrepairable,
+        fmt_time(rep.cost.sim_time_s)
+    );
+    assert_eq!(count_slots_below_r(&store, &cluster), 0, "repair must restore r copies");
+    println!("every slot back at {R} alive replicas without moving surviving copies");
+
+    println!("\nall waves recovered bit-exactly; layout epoch {}", store.epoch());
+    Ok(())
+}
+
+/// Slots of the current layout with fewer than `R` alive holders.
+fn count_slots_below_r(store: &ReStore, cluster: &Cluster) -> usize {
+    (0..store.distribution().world())
+        .filter(|&slot| {
+            let alive = store
+                .holder_index()
+                .holders_of(slot)
+                .iter()
+                .filter(|&&pe| cluster.is_alive(pe as usize))
+                .count();
+            alive < R
+        })
+        .count()
+}
+
+fn run_wave(
+    cluster: &mut Cluster,
+    store: &mut ReStore,
+    shards: &[Vec<u8>],
+    kills: &[usize],
+    tag: &str,
+) -> Result<(), Box<dyn std::error::Error>> {
+    println!("\n=== {tag}: killing {} PEs ===", kills.len());
+    cluster.kill(kills);
+    let (failed, c_agree) = ulfm::agree(cluster);
+    let (map, c_shrink) = ulfm::shrink(cluster);
+    let p_new = map.new_world() as u64;
+    println!(
+        "agree found {} dead ({}), shrink -> {} ranks ({}), cluster epoch {}",
+        failed.len(),
+        fmt_time(c_agree.sim_time_s),
+        p_new,
+        fmt_time(c_shrink.sim_time_s),
+        cluster.epoch()
+    );
+
+    // The store still addresses the old world: routing is refused until
+    // the shrink is adopted.
+    let probe = vec![LoadRequest {
+        pe: cluster.survivors()[0],
+        ranges: RangeSet::new(vec![BlockRange::new(0, 8)]),
+    }];
+    match store.load(cluster, &probe) {
+        Err(Error::StaleEpoch { store_epoch, cluster_epoch }) => println!(
+            "load before rebalance refused: store epoch {store_epoch} vs cluster {cluster_epoch}"
+        ),
+        other => return Err(format!("expected StaleEpoch, got {other:?}").into()),
+    }
+
+    // IDL risk for the NEXT failures, before the rebalance: every group is
+    // down to 2 surviving copies spread over p' PEs.
+    let alive_copies = {
+        // all slots have the same survivor count in this symmetric wave
+        let slot0 = store.holder_index().holders_of(0);
+        slot0.iter().filter(|&&pe| cluster.is_alive(pe as usize)).count() as u64
+    };
+    println!("surviving copies per slot before rebalance: {alive_copies}");
+    print!("P(IDL | f more failures) before:");
+    for f in [2u64, 4, 8] {
+        print!("  f={f}: {:.2e}", idl::p_idl_leq(p_new, alive_copies, f));
+    }
+    println!();
+
+    // Rebalance: fresh §IV-A layout over the survivors, minimal migration.
+    let t0 = cluster.now();
+    let report = store.rebalance(cluster, &map)?;
+    let stored: u64 = (p_new) * R as u64 * (store.distribution().blocks_per_pe() * BS as u64);
+    println!(
+        "rebalance: {} transfers moved {} ({:.1} % of the {} stored), kept {} local, {}",
+        report.transfers,
+        human(report.migrated_bytes),
+        100.0 * report.migrated_bytes as f64 / stored as f64,
+        human(stored),
+        human(report.kept_bytes),
+        fmt_time(cluster.now() - t0)
+    );
+
+    // ...and the IDL probability is back at the fresh-r level.
+    print!("P(IDL | f more failures) after: ");
+    for f in [2u64, 4, 8] {
+        print!("  f={f}: {:.2e}", idl::p_idl_leq(p_new, R as u64, f));
+    }
+    println!();
+
+    // Verify: scatter-load the killed PEs' original shards over the
+    // survivors and check every byte.
+    let survivors = cluster.survivors();
+    let reqs: Vec<LoadRequest> = kills
+        .iter()
+        .enumerate()
+        .map(|(i, &dead)| LoadRequest {
+            pe: survivors[i % survivors.len()],
+            ranges: RangeSet::new(vec![BlockRange::new(
+                dead as u64 * BPP,
+                (dead as u64 + 1) * BPP,
+            )]),
+        })
+        .collect();
+    let out = store.load(cluster, &reqs)?;
+    let mut verified = 0usize;
+    for (req, shard) in reqs.iter().zip(&out.shards) {
+        let bytes = shard.bytes.as_ref().expect("execution mode");
+        let mut off = 0usize;
+        for range in req.ranges.ranges() {
+            for x in range.start..range.end {
+                let pe = (x / BPP) as usize;
+                let boff = ((x % BPP) as usize) * BS;
+                assert_eq!(&bytes[off..off + BS], &shards[pe][boff..boff + BS]);
+                off += BS;
+            }
+        }
+        verified += bytes.len();
+    }
+    println!(
+        "reloaded the {} lost shards scattered over {} survivors in {} — {} verified bit-exact",
+        kills.len(),
+        survivors.len(),
+        fmt_time(out.cost.sim_time_s),
+        human(verified as u64)
     );
     Ok(())
 }
@@ -97,7 +223,9 @@ fn human(b: u64) -> String {
         format!("{:.1} GiB", b as f64 / (1u64 << 30) as f64)
     } else if b >= 1 << 20 {
         format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
-    } else {
+    } else if b >= 1 << 10 {
         format!("{:.1} KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
     }
 }

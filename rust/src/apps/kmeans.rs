@@ -263,15 +263,22 @@ pub fn run_execution(
 
             // MPI/ULFM recovery (agree + shrink) — the non-ReStore overhead
             let mpi_t0 = cluster.now();
-            let (_failed, _map, _cost) = ulfm::recover(cluster);
+            let (_failed, map, _cost) = ulfm::recover(cluster);
             report.sim_mpi_recovery_s += cluster.now() - mpi_t0;
+
+            // §IV-B shrinking recovery: rewrite the replica layout over the
+            // survivors when the shrunken world admits the §IV-A layout
+            // (IDL probability returns to the fresh-r level and loads keep
+            // the deterministic fast path); otherwise acknowledge the
+            // shrink — reclaim dead stores, route around the holes.
+            let rs_t0 = cluster.now();
+            store.rebalance_or_acknowledge(cluster, &map)?;
 
             // load balancer: deal the dead PEs' owned ranges to survivors
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, align);
 
             // ReStore scattered load of the lost ranges
-            let rs_t0 = cluster.now();
             let requests: Vec<LoadRequest> = gained
                 .iter()
                 .map(|(pe, set)| LoadRequest { pe: *pe, ranges: set.clone() })
@@ -350,12 +357,13 @@ pub fn run_cost_model(
             report.failure_events += 1;
             cluster.kill(&dead);
             let mpi_t0 = cluster.now();
-            ulfm::recover(cluster);
+            let (_failed, map, _cost) = ulfm::recover(cluster);
             report.sim_mpi_recovery_s += cluster.now() - mpi_t0;
 
+            let rs_t0 = cluster.now();
+            store.rebalance_or_acknowledge(cluster, &map)?;
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, 1);
-            let rs_t0 = cluster.now();
             let requests = scatter_requests_for_ranges(&gained);
             store.load(cluster, &requests)?;
             report.sim_restore_s += cluster.now() - rs_t0;

@@ -157,12 +157,15 @@ pub fn run(
             report.failures += dead.len();
             cluster.kill(&dead);
             let t_mpi = cluster.now();
-            ulfm::recover(cluster);
+            let (_failed, map, _cost) = ulfm::recover(cluster);
             report.sim_mpi_recovery_s += cluster.now() - t_mpi;
 
+            // §IV-B: rebalance the replica layout over the survivors when
+            // the shrunken world admits it; acknowledge otherwise.
+            let t_rs = cluster.now();
+            store.rebalance_or_acknowledge(cluster, &map)?;
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, 1);
-            let t_rs = cluster.now();
             let requests: Vec<LoadRequest> = scatter_requests_for_ranges(&gained);
             let out = store.load(cluster, &requests)?;
             for (req, shard) in requests.iter().zip(&out.shards) {

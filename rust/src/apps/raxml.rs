@@ -183,7 +183,11 @@ pub fn measure_recovery(
         d
     };
     cluster.kill(&dead);
-    ulfm::recover(&mut cluster);
+    let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+    // §IV-B: rewrite the layout over the survivors when the shrunken world
+    // admits the §IV-A distribution, else acknowledge and route around the
+    // holes (arbitrary 1 %-style kill counts rarely divide the block space).
+    store.rebalance_or_acknowledge(&mut cluster, &map)?;
 
     // redistribute the lost shards evenly over all survivors
     let mut ownership = crate::apps::Ownership::identity(world, cfg.blocks_per_pe as u64);

@@ -31,6 +31,18 @@ pub enum Error {
     #[error("PE {0} is dead")]
     DeadPe(usize),
 
+    /// A `ReStore` operation ran against a cluster whose communicator has
+    /// been shrunk (`ulfm::shrink` bumped the epoch) without the store
+    /// adopting the new world first. Call `ReStore::rebalance` (rewrite the
+    /// §IV-A layout over the survivors) or `ReStore::acknowledge_shrink`
+    /// (keep the dead-world layout, reclaiming dead stores) after a shrink.
+    #[error(
+        "stale storage epoch: store layout at epoch {store_epoch}, cluster at epoch \
+         {cluster_epoch}; call ReStore::rebalance or ReStore::acknowledge_shrink after \
+         ulfm::shrink"
+    )]
+    StaleEpoch { store_epoch: u64, cluster_epoch: u64 },
+
     /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;
     /// the variant itself stays so error handling is feature-independent).
     #[error("xla runtime: {0}")]

@@ -36,6 +36,7 @@
 use std::sync::Arc;
 
 use crate::config::RestoreConfig;
+use crate::error::{Error, Result};
 use crate::restore::block::BlockRange;
 use crate::restore::permutation::{Feistel, Identity, RangePermutation};
 
@@ -62,10 +63,17 @@ pub struct Distribution {
     p: usize,
     r: usize,
     offset: usize,
+    /// The raw configured placement offset (before the `mod p` reduction),
+    /// kept so [`Distribution::reshaped`] can re-reduce it at the new world
+    /// size exactly as a fresh construction would.
+    offset_cfg: usize,
     blocks_per_pe: u64,
     /// Permutation unit in blocks (= blocks_per_pe when permutation is off,
     /// so the whole shard is one unit).
     s_pr: u64,
+    /// True when the configuration disabled permutation ranges (the unit
+    /// permutation is the identity and `s_pr` tracks the slice size).
+    identity: bool,
     perm: Arc<dyn RangePermutation>,
     /// Precomputed `unit → permuted slot` table (forward direction of
     /// `perm`), built once at construction when the domain is small enough.
@@ -97,11 +105,74 @@ impl Distribution {
             p: cfg.world,
             r: cfg.replicas,
             offset: cfg.placement_offset % cfg.world,
+            offset_cfg: cfg.placement_offset,
             blocks_per_pe: bpp,
             s_pr,
+            identity: cfg.perm_range_blocks.is_none(),
             perm,
             unit_index,
         }
+    }
+
+    /// Can this layout be rewritten for a post-shrink world of `new_world`
+    /// PEs holding the same `n` blocks? The §IV-A layout needs equal slices
+    /// (`new_world | n`), `r | new_world` for the copy stride, and — with
+    /// permutation ranges on — unit-aligned slices (`s_pr | n/new_world`,
+    /// i.e. `new_world` divides the unit count) so the shared permuted ID
+    /// space carries over unchanged.
+    pub fn reshape_feasible(&self, new_world: usize) -> bool {
+        if new_world == 0 || self.n_blocks() % new_world as u64 != 0 {
+            return false;
+        }
+        if new_world % self.r != 0 {
+            return false;
+        }
+        let new_bpp = self.n_blocks() / new_world as u64;
+        self.identity || new_bpp % self.s_pr == 0
+    }
+
+    /// The same data, re-laid-out §IV-A-style over `new_world` PEs — the
+    /// core of the shrinking-recovery rebalance (§IV-B): the permuted block
+    /// ID space (permutation, seed, unit size, and therefore the
+    /// precomputed unit→slot placement index) is **shared by `Arc`** with
+    /// the old layout, only the slice partition (`blocks_per_pe`), the copy
+    /// stride `new_world/r`, and the offset reduction change. Identical to
+    /// `Distribution::new` of a fresh config at `new_world` (golden-tested),
+    /// without re-deriving Feistel keys or re-materializing the index.
+    ///
+    /// With permutation disabled the unit is the whole slice, so the
+    /// identity permutation is simply re-instantiated at the new domain.
+    pub fn reshaped(&self, new_world: usize) -> Result<Distribution> {
+        if !self.reshape_feasible(new_world) {
+            return Err(Error::Config(format!(
+                "cannot reshape layout to world {new_world}: need {new_world} | {} blocks, \
+                 r={} | {new_world}{}",
+                self.n_blocks(),
+                self.r,
+                if self.identity {
+                    String::new()
+                } else {
+                    format!(", and {new_world} | {} permutation units", self.perm.domain())
+                }
+            )));
+        }
+        let new_bpp = self.n_blocks() / new_world as u64;
+        let (s_pr, perm, unit_index): (u64, Arc<dyn RangePermutation>, _) = if self.identity {
+            (new_bpp, Arc::new(Identity { domain: new_world as u64 }), None)
+        } else {
+            (self.s_pr, Arc::clone(&self.perm), self.unit_index.clone())
+        };
+        Ok(Distribution {
+            p: new_world,
+            r: self.r,
+            offset: self.offset_cfg % new_world,
+            offset_cfg: self.offset_cfg,
+            blocks_per_pe: new_bpp,
+            s_pr,
+            identity: self.identity,
+            perm,
+            unit_index,
+        })
     }
 
     pub fn world(&self) -> usize {
@@ -382,6 +453,85 @@ mod tests {
         let d = dist(4, 16, 2, None);
         assert!(!d.has_unit_index());
         assert_eq!(d.permute_block(17), 17);
+    }
+
+    #[test]
+    fn reshaped_matches_fresh_construction() {
+        // The rebalance layout must be indistinguishable from building a
+        // new Distribution at the shrunken world from scratch — same
+        // permuted space, same holders, same slices.
+        for (s_pr, new_p) in [(Some(16usize), 8usize), (Some(16), 4), (None, 8), (None, 4)] {
+            let cfg = RestoreConfig::builder(16, 8, 64)
+                .replicas(4)
+                .perm_range_blocks(s_pr)
+                .seed(0xD157)
+                .build()
+                .unwrap();
+            let old = Distribution::new(&cfg);
+            let got = old.reshaped(new_p).unwrap();
+            let fresh_cfg = RestoreConfig::builder(new_p, 8, (cfg.n_blocks() as usize) / new_p)
+                .replicas(4)
+                .perm_range_blocks(s_pr)
+                .seed(0xD157)
+                .build()
+                .unwrap();
+            let want = Distribution::new(&fresh_cfg);
+            assert_eq!(got.world(), want.world());
+            assert_eq!(got.blocks_per_pe(), want.blocks_per_pe());
+            assert_eq!(got.perm_range_blocks(), want.perm_range_blocks());
+            assert_eq!(got.n_blocks(), old.n_blocks());
+            for y in 0..got.n_blocks() {
+                assert_eq!(got.permute_block(y), want.permute_block(y), "s_pr {s_pr:?} y {y}");
+                assert_eq!(got.unpermute_block(y), want.unpermute_block(y));
+                for k in 0..4 {
+                    assert_eq!(got.holder(y, k), want.holder(y, k), "s_pr {s_pr:?} y {y} k {k}");
+                }
+            }
+            for pe in 0..new_p {
+                for k in 0..4 {
+                    assert_eq!(got.stored_slice(pe, k), want.stored_slice(pe, k));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshape_feasibility_rules() {
+        // p=16, bpp=64, s_pr=16: n = 1024 blocks, 64 permutation units.
+        let d = dist(16, 64, 4, Some(16));
+        assert!(d.reshape_feasible(16));
+        assert!(d.reshape_feasible(8));
+        assert!(d.reshape_feasible(4));
+        assert!(!d.reshape_feasible(0));
+        assert!(!d.reshape_feasible(12), "1024 blocks are not divisible into 12 slices");
+        assert!(!d.reshape_feasible(2), "r=4 must divide the new world");
+        assert!(d.reshaped(2).is_err());
+        // identity layouts only need n % p' == 0 and r | p'
+        let id = dist(16, 64, 2, None);
+        assert!(id.reshape_feasible(8));
+        assert!(!id.reshape_feasible(10), "n % p' != 0");
+        assert!(!id.reshape_feasible(1), "r=2 must divide the new world");
+    }
+
+    #[test]
+    fn reshaped_preserves_offset_semantics() {
+        let cfg = RestoreConfig::builder(8, 8, 64)
+            .replicas(2)
+            .placement_offset(5)
+            .build()
+            .unwrap();
+        let old = Distribution::new(&cfg);
+        let got = old.reshaped(4).unwrap();
+        let fresh = RestoreConfig::builder(4, 8, 128)
+            .replicas(2)
+            .placement_offset(5)
+            .build()
+            .unwrap();
+        let want = Distribution::new(&fresh);
+        assert_eq!(got.placement_offset(), want.placement_offset());
+        for y in (0..512).step_by(13) {
+            assert_eq!(got.holder(y, 1), want.holder(y, 1));
+        }
     }
 
     #[test]

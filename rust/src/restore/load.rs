@@ -73,6 +73,13 @@ const REQUEST_HEADER_BYTES: u64 = 24;
 /// reusable scratch vector instead.
 const INLINE_HOLDERS: usize = 16;
 
+/// Below this many routed pieces (or runs) the coalesce and sort stages
+/// stay serial even with the `rayon` feature — the fork/join overhead
+/// dwarfs the work, and keeping tiny workloads serial also keeps the
+/// allocation-count assertions (`rust/tests/alloc_counts.rs`) exact.
+#[cfg(feature = "rayon")]
+const PAR_MIN_ITEMS: usize = 4096;
+
 /// A piece with its chosen server, requester, and output offset.
 #[derive(Debug, Clone, Copy)]
 struct RoutedPiece {
@@ -130,6 +137,9 @@ impl ReStore {
     /// back to reloading input from disk, as the paper prescribes (§VI-B1).
     pub fn load(&mut self, cluster: &mut Cluster, requests: &[LoadRequest]) -> Result<LoadOutput> {
         self.ensure_submitted()?;
+        // Shrink handshake: after `ulfm::shrink` the layout must first be
+        // rebalanced (or the shrink acknowledged) — §IV-B.
+        self.ensure_current_epoch(cluster)?;
         // Detach the scratch so `&self` stays free for routing lookups; it
         // is returned (with its grown capacity) even on error.
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -156,41 +166,38 @@ impl ReStore {
         }
         scratch.routed.clear();
         scratch.server_load.clear();
-        scratch.server_load.resize(dist.world(), 0);
+        // Sized by the *cluster* world, not dist.world(): the LeastLoaded
+        // table is indexed by cluster ranks, which keep their original
+        // numbering after a rebalance shrinks the distribution to p'.
+        scratch.server_load.resize(self.stores.len(), 0);
         self.resolve_all(cluster, requests, scratch)?;
 
         // --- Run coalescing ---------------------------------------------
         // Merge adjacent pieces with the same (request, server) that are
         // contiguous in both the permuted space (within one slice, so a
-        // single stored buffer covers the run) and the output buffer.
-        scratch.runs.clear();
-        for rp in &scratch.routed {
-            if let Some(last) = scratch.runs.last_mut() {
-                if last.req_idx == rp.req_idx
-                    && last.server == rp.server
-                    && last.perm_start + last.len == rp.piece.perm_start
-                    && last.perm_start / bpp == rp.piece.perm_start / bpp
-                    && last.out_offset + last.len * bs == rp.out_offset
-                {
-                    last.len += rp.piece.len;
-                    last.pieces += 1;
-                    continue;
-                }
-            }
-            scratch.runs.push(Run {
-                requester: rp.requester,
-                req_idx: rp.req_idx,
-                server: rp.server,
-                perm_start: rp.piece.perm_start,
-                len: rp.piece.len,
-                pieces: 1,
-                out_offset: rp.out_offset,
-            });
-        }
+        // single stored buffer covers the run) and the output buffer. A run
+        // never crosses a request boundary, so with the `rayon` feature the
+        // per-request segments coalesce in parallel and concatenate back in
+        // request order — byte-identical to the serial pass.
+        Self::coalesce_all(requests.len(), bpp, bs, scratch);
 
         // Group runs per (requester, server) pair by sorting; both message
-        // phases below are single run-length passes over this order.
-        scratch.runs.sort_unstable_by_key(|r| (r.requester, r.server));
+        // phases below are single run-length passes over this order. The
+        // key is a *total* order — (req_idx, out_offset) is unique per run
+        // — so serial, parallel, stable, and unstable sorts all produce
+        // the same permutation and the schedule stays byte-identical
+        // across feature sets.
+        let run_key = |r: &Run| (r.requester, r.server, r.req_idx, r.out_offset);
+        #[cfg(feature = "rayon")]
+        {
+            if scratch.runs.len() >= PAR_MIN_ITEMS {
+                scratch.runs.par_sort_unstable_by_key(run_key);
+            } else {
+                scratch.runs.sort_unstable_by_key(run_key);
+            }
+        }
+        #[cfg(not(feature = "rayon"))]
+        scratch.runs.sort_unstable_by_key(run_key);
 
         // --- Phase 1b: request sparse all-to-all -------------------------
         // One message per distinct (requester, server) pair carrying the
@@ -237,11 +244,7 @@ impl ReStore {
         let data_cost = phase.commit();
 
         // --- Assemble outputs (execution mode) ---------------------------
-        let execution = self.stores.iter().any(|st| {
-            st.slices()
-                .first()
-                .is_some_and(|s| matches!(s.buf, crate::restore::store::SliceBuf::Real(_)))
-        });
+        let execution = self.is_execution_mode();
         let mut shards: Vec<LoadedShard> = requests
             .iter()
             .map(|r| LoadedShard {
@@ -266,6 +269,46 @@ impl ReStore {
             data_cost,
             cost: request_cost.then(data_cost),
         })
+    }
+
+    /// Coalesce `scratch.routed` into `scratch.runs` (cleared first).
+    ///
+    /// Runs only ever merge pieces with equal `req_idx`, so the result of
+    /// coalescing the whole routed list equals the concatenation of
+    /// coalescing each request's segment independently — which is exactly
+    /// what the `rayon` path does for large workloads, preserving the
+    /// serial output byte for byte (CI proves it by running the golden
+    /// parity suite under both feature sets).
+    #[cfg_attr(not(feature = "rayon"), allow(unused_variables))]
+    fn coalesce_all(n_requests: usize, bpp: u64, bs: u64, scratch: &mut LoadScratch) {
+        scratch.runs.clear();
+        #[cfg(feature = "rayon")]
+        if n_requests > 1 && scratch.routed.len() >= PAR_MIN_ITEMS {
+            let routed = &scratch.routed;
+            // request segment boundaries (routed is in request order)
+            let mut bounds: Vec<(usize, usize)> = Vec::with_capacity(n_requests);
+            let mut s = 0usize;
+            for i in 1..=routed.len() {
+                if i == routed.len() || routed[i].req_idx != routed[s].req_idx {
+                    bounds.push((s, i));
+                    s = i;
+                }
+            }
+            let per_segment: Vec<Vec<Run>> = bounds
+                .par_iter()
+                .map(|&(a, b)| {
+                    let mut out = Vec::new();
+                    coalesce_runs(&routed[a..b], bpp, bs, &mut out);
+                    out
+                })
+                .collect();
+            // deterministic merge: request order, same as the serial pass
+            for seg in per_segment {
+                scratch.runs.extend(seg);
+            }
+            return;
+        }
+        coalesce_runs(&scratch.routed, bpp, bs, &mut scratch.runs);
     }
 
     /// Resolve every request into routed pieces appended to
@@ -387,7 +430,9 @@ impl ReStore {
         }
         let mut n_alive = 0usize;
         for k in 0..r {
-            let pe = dist.holder(piece.perm_start, k);
+            // Distribution ranks live in the (possibly rebalanced) compact
+            // world; translate to cluster ranks for liveness and routing.
+            let pe = self.cluster_rank(dist.holder(piece.perm_start, k));
             if cluster.is_alive(pe) {
                 if use_inline {
                     inline[n_alive] = pe;
@@ -433,7 +478,7 @@ impl ReStore {
                 // blocks with the same holder set share one sender (§IV-A).
                 let slice = piece.perm_start / dist.blocks_per_pe();
                 let h = seeded_hash(
-                    self.cfg.seed ^ cluster.epoch,
+                    self.cfg.seed ^ cluster.epoch(),
                     ((requester as u64) << 32) ^ slice,
                 );
                 alive[(h % alive.len() as u64) as usize]
@@ -458,12 +503,47 @@ impl ReStore {
     }
 }
 
+/// The serial coalescing kernel: merge adjacent routed pieces of one
+/// routed segment into maximal runs, appending to `out`. Shared by the
+/// serial whole-list pass and the rayon per-request fan-out.
+fn coalesce_runs(routed: &[RoutedPiece], bpp: u64, bs: u64, out: &mut Vec<Run>) {
+    for rp in routed {
+        if let Some(last) = out.last_mut() {
+            if last.req_idx == rp.req_idx
+                && last.server == rp.server
+                && last.perm_start + last.len == rp.piece.perm_start
+                && last.perm_start / bpp == rp.piece.perm_start / bpp
+                && last.out_offset + last.len * bs == rp.out_offset
+            {
+                last.len += rp.piece.len;
+                last.pieces += 1;
+                continue;
+            }
+        }
+        out.push(Run {
+            requester: rp.requester,
+            req_idx: rp.req_idx,
+            server: rp.server,
+            perm_start: rp.piece.perm_start,
+            len: rp.piece.len,
+            pieces: 1,
+            out_offset: rp.out_offset,
+        });
+    }
+}
+
 /// Requests that redistribute the `failed` PEs' shards evenly over the
 /// survivors — the *shrinking* recovery of §IV-B: survivor number `j` (in
 /// survivor order) receives blocks
 /// `[i·n/p + j·n/(p·(p-1)), i·n/p + (j+1)·n/(p·(p-1)))` of failed PE `i`.
+///
+/// "Shard of failed PE `i`" means the blocks `i` submitted — the
+/// *submit-time* decomposition (`config().blocks_per_pe`), which stays
+/// meaningful after a [`ReStore::rebalance`] shrank the distribution to
+/// `p'` (the current `Distribution::shard_of` would then describe the new
+/// world's slices, and a dead old rank `>= p'` has none).
 pub fn scatter_requests(store: &ReStore, cluster: &Cluster, failed: &[usize]) -> Vec<LoadRequest> {
-    let dist = store.distribution();
+    let bpp0 = store.config().blocks_per_pe as u64;
     let survivors = cluster.survivors();
     let ns = survivors.len() as u64;
     if ns == 0 {
@@ -471,7 +551,7 @@ pub fn scatter_requests(store: &ReStore, cluster: &Cluster, failed: &[usize]) ->
     }
     let mut per_pe: Vec<Vec<BlockRange>> = vec![Vec::new(); survivors.len()];
     for &dead in failed {
-        let shard = dist.shard_of(dead);
+        let shard = BlockRange::new(dead as u64 * bpp0, (dead as u64 + 1) * bpp0);
         let len = shard.len();
         for (j, ranges) in per_pe.iter_mut().enumerate() {
             let start = shard.start + (j as u64 * len) / ns;
@@ -499,14 +579,18 @@ pub fn scatter_requests_for_ranges(gained: &[(usize, RangeSet)]) -> Vec<LoadRequ
 }
 
 /// Requests that send the `failed` PEs' whole shards to a single `target`
-/// PE — the *substitute*-style recovery benchmarked in §VI-D.2.
+/// PE — the *substitute*-style recovery benchmarked in §VI-D.2. Shards are
+/// the submit-time decomposition (see [`scatter_requests`]).
 pub fn single_target_requests(
     store: &ReStore,
     failed: &[usize],
     target: usize,
 ) -> Vec<LoadRequest> {
-    let dist = store.distribution();
-    let ranges: Vec<BlockRange> = failed.iter().map(|&pe| dist.shard_of(pe)).collect();
+    let bpp0 = store.config().blocks_per_pe as u64;
+    let ranges: Vec<BlockRange> = failed
+        .iter()
+        .map(|&pe| BlockRange::new(pe as u64 * bpp0, (pe as u64 + 1) * bpp0))
+        .collect();
     vec![LoadRequest { pe: target, ranges: RangeSet::new(ranges) }]
 }
 
@@ -878,7 +962,7 @@ mod golden {
                         ServerSelection::Random => {
                             let slice = piece.perm_start / dist.blocks_per_pe();
                             let h = seeded_hash(
-                                cfg.seed ^ cluster.epoch,
+                                cfg.seed ^ cluster.epoch(),
                                 ((req.pe as u64) << 32) ^ slice,
                             );
                             alive[(h % alive.len() as u64) as usize]
@@ -1031,6 +1115,31 @@ mod golden {
                 let reqs = single_target_requests(&rs, &[5], 0);
                 assert_parity(&mut rs, &mut cluster, &reqs, &tag("single-target"));
             }
+        }
+    }
+
+    /// Parity at a piece count large enough to cross the `rayon`
+    /// coalesce/sort thresholds (PAR_MIN_ITEMS): CI runs this identical
+    /// assertion under the default, `--no-default-features`, and
+    /// `--features rayon` builds — the serial-parity matrix for the
+    /// parallel coalesce and run-sort stages.
+    #[test]
+    fn large_scale_parity_across_coalesce_and_sort() {
+        for policy in [ServerSelection::Random, ServerSelection::Primary] {
+            // 8 PEs x 8192 blocks, 8-block units -> a load-all resolves
+            // 8192 permuted pieces, comfortably past PAR_MIN_ITEMS (4096)
+            // even if some pieces coalesce before the sort
+            let (mut cluster, mut rs) = build(8, 8192, 4, Some(8), policy);
+            let reqs = load_all_requests(&rs, &cluster);
+            assert_parity(&mut rs, &mut cluster, &reqs, &format!("{policy:?}/large-load-all"));
+
+            // 6 lost shards over 2 survivors: ~6144 pieces, so the scatter
+            // pattern crosses the thresholds too (3 dead per group of 4)
+            let (mut cluster, mut rs) = build(8, 8192, 4, Some(8), policy);
+            let dead = [0usize, 2, 4, 1, 3, 5];
+            cluster.kill(&dead);
+            let reqs = scatter_requests(&rs, &cluster, &dead);
+            assert_parity(&mut rs, &mut cluster, &reqs, &format!("{policy:?}/large-scatter"));
         }
     }
 

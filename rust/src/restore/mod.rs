@@ -13,6 +13,9 @@
 //! * [`idl`] — §IV-D irrecoverable-data-loss probabilities (exact
 //!   inclusion–exclusion, the small-f approximation, and the Monte-Carlo
 //!   failure simulator behind Fig 3).
+//! * [`rebalance`] — §IV-B shrinking recovery: rewrite the layout over the
+//!   `p'` survivors after `ulfm::shrink` with a minimal migration schedule,
+//!   under a bumped communicator epoch.
 //! * [`repair`] — §IV-E replica re-creation after failures (Appendix
 //!   Distributions A and B).
 //! * [`serialize`] — typed helpers to move `f32`/`u64` app data in and out
@@ -24,6 +27,7 @@ pub mod hashing;
 pub mod idl;
 pub mod load;
 pub mod permutation;
+pub mod rebalance;
 pub mod repair;
 pub mod serialize;
 pub mod store;
@@ -84,11 +88,22 @@ pub struct ReStore {
     dist: Distribution,
     stores: Vec<PeStore>,
     submitted: bool,
-    /// Reverse holder index (permuted slot → storing PEs), maintained
-    /// incrementally by submit and §IV-E repair; consulted by repair
-    /// planning and the load path's post-repair fallback instead of an
-    /// O(p) store sweep.
+    /// Reverse holder index (permuted slot → storing PEs, in *cluster*
+    /// ranks), maintained incrementally by submit, §IV-E repair, and the
+    /// §IV-B rebalance; consulted by repair/rebalance planning and the load
+    /// path's post-repair fallback instead of an O(p) store sweep.
     holder_index: HolderIndex,
+    /// Distribution rank → cluster rank. The identity until the first
+    /// [`ReStore::rebalance`]; afterwards the shrink's dense re-ranking
+    /// (`RankMap::new_to_old`), so the `Distribution` computes the §IV-A
+    /// layout in the compact post-shrink world while stores, requests, and
+    /// the network keep addressing original cluster ranks.
+    pe_map: Vec<u32>,
+    /// Communicator epoch this layout was computed at. `submit`/`load`/
+    /// `repair` refuse to run when `ulfm::shrink` has bumped the cluster
+    /// epoch past it — the caller must `rebalance` (or
+    /// `acknowledge_shrink`) first.
+    epoch: u64,
     /// Reusable buffers for the load pipeline — grown on first use, then
     /// reused so steady-state `load()` calls allocate nothing per piece.
     scratch: load::LoadScratch,
@@ -114,6 +129,8 @@ impl ReStore {
             stores,
             submitted: false,
             holder_index,
+            pe_map: (0..cfg.world as u32).collect(),
+            epoch: cluster.epoch(),
             scratch: load::LoadScratch::default(),
         })
     }
@@ -139,23 +156,79 @@ impl ReStore {
         &self.holder_index
     }
 
-    /// Reclaim a dead PE's replica memory: drop its stored slices and
-    /// remove it from the reverse holder index. The shrink-style recovery
-    /// of §IV-B never reads a dead PE's store (routing filters on the
-    /// survivor set), so this only frees memory — but it must go through
-    /// this method, not the raw store, to keep the index consistent.
-    pub fn drop_pe(&mut self, cluster: &Cluster, pe: usize) -> Result<()> {
-        if pe >= self.cfg.world {
-            return Err(Error::RankOutOfRange { rank: pe, world: self.cfg.world });
-        }
-        if cluster.is_alive(pe) {
+    /// Communicator epoch the current layout addresses.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Cluster rank of distribution rank `dist_rank` (identity until the
+    /// first rebalance).
+    #[inline]
+    pub fn cluster_rank(&self, dist_rank: usize) -> usize {
+        self.pe_map[dist_rank] as usize
+    }
+
+    /// Does the current survivor count admit the §IV-A layout (equal
+    /// slices at `p'` — see [`Distribution::reshape_feasible`])? A pure
+    /// feasibility predicate: [`ReStore::rebalance`] additionally requires
+    /// the epoch handshake (a `ulfm::shrink` not yet adopted) and a
+    /// current [`RankMap`](crate::simnet::ulfm::RankMap) —
+    /// [`ReStore::rebalance_or_acknowledge`] packages the whole policy.
+    /// When the layout cannot hold, stay in the dead world via
+    /// [`ReStore::acknowledge_shrink`] + §IV-E repair.
+    pub fn can_rebalance(&self, cluster: &Cluster) -> bool {
+        self.submitted && self.dist.reshape_feasible(cluster.n_alive())
+    }
+
+    /// Adopt a shrunk communicator **without** rewriting the layout: the
+    /// distribution keeps addressing the original world (load falls back to
+    /// routing around dead ranks, repair re-replicates in place), but every
+    /// dead PE's replica memory is reclaimed and the store's epoch catches
+    /// up to the cluster's so submit/load/repair run again. This folds the
+    /// former standalone `drop_pe` reclaim — reclaiming must go through
+    /// here (not the raw stores) to keep the reverse holder index
+    /// consistent. Safe to call when no shrink happened (pure reclaim) and
+    /// idempotent.
+    pub fn acknowledge_shrink(&mut self, cluster: &Cluster) -> Result<()> {
+        if cluster.world() != self.stores.len() {
             return Err(Error::Config(format!(
-                "drop_pe: PE {pe} is alive; only failed PEs' stores may be reclaimed"
+                "acknowledge_shrink: cluster world {} != store world {}",
+                cluster.world(),
+                self.stores.len()
             )));
         }
-        self.stores[pe].clear();
-        self.holder_index.drop_pe(pe);
+        for pe in 0..self.stores.len() {
+            if !cluster.is_alive(pe) && !self.stores[pe].slices().is_empty() {
+                self.stores[pe].clear();
+                self.holder_index.drop_pe(pe);
+            }
+        }
+        self.epoch = cluster.epoch();
         Ok(())
+    }
+
+    /// The full §IV-B shrink handshake for applications: rewrite the layout
+    /// over the survivors when the shrunken world admits the §IV-A
+    /// distribution, otherwise stay in the dead world (reclaiming dead
+    /// stores) — either way the store ends at the cluster's epoch. Returns
+    /// the rebalance report when one ran.
+    pub fn rebalance_or_acknowledge(
+        &mut self,
+        cluster: &mut Cluster,
+        map: &crate::simnet::ulfm::RankMap,
+    ) -> Result<Option<rebalance::RebalanceReport>> {
+        // A shrink that removed no ranks leaves the layout already correct:
+        // adopting the epoch (acknowledge) is the O(1) action, not a
+        // keep-everything rebalance that re-materializes the whole store.
+        if self.submitted
+            && cluster.epoch() > self.epoch
+            && map.new_world() < self.dist.world()
+            && self.dist.reshape_feasible(map.new_world())
+        {
+            return Ok(Some(self.rebalance(cluster, map)?));
+        }
+        self.acknowledge_shrink(cluster)?;
+        Ok(None)
     }
 
     pub(crate) fn stores_mut(&mut self) -> &mut Vec<PeStore> {
@@ -164,6 +237,26 @@ impl ReStore {
 
     pub(crate) fn holder_index_mut(&mut self) -> &mut HolderIndex {
         &mut self.holder_index
+    }
+
+    /// Swap in a rebalanced layout (called by `rebalance` after the
+    /// migration executed): new distribution, rank translation, stores, and
+    /// holder index become current atomically, under the cluster's epoch.
+    pub(crate) fn install_layout(
+        &mut self,
+        cluster: &Cluster,
+        dist: Distribution,
+        pe_map: Vec<u32>,
+        stores: Vec<PeStore>,
+        holder_index: HolderIndex,
+    ) {
+        debug_assert_eq!(pe_map.len(), dist.world());
+        debug_assert_eq!(stores.len(), self.cfg.world);
+        self.dist = dist;
+        self.pe_map = pe_map;
+        self.stores = stores;
+        self.holder_index = holder_index;
+        self.epoch = cluster.epoch();
     }
 
     pub(crate) fn mark_submitted(&mut self) -> Result<()> {
@@ -179,5 +272,28 @@ impl ReStore {
             return Err(Error::NotSubmitted);
         }
         Ok(())
+    }
+
+    /// The shrink-handshake guard on every routing operation: fail with
+    /// [`Error::StaleEpoch`] when `ulfm::shrink` has produced a newer
+    /// communicator than the one this layout was computed for.
+    pub(crate) fn ensure_current_epoch(&self, cluster: &Cluster) -> Result<()> {
+        if self.epoch != cluster.epoch() {
+            return Err(Error::StaleEpoch {
+                store_epoch: self.epoch,
+                cluster_epoch: cluster.epoch(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Is any store holding real bytes (execution mode) rather than
+    /// virtual lengths (cost-model mode)?
+    pub(crate) fn is_execution_mode(&self) -> bool {
+        self.stores.iter().any(|st| {
+            st.slices()
+                .first()
+                .is_some_and(|s| matches!(s.buf, store::SliceBuf::Real(_)))
+        })
     }
 }

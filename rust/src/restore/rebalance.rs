@@ -1,0 +1,695 @@
+//! §IV-B shrinking recovery: rewrite the replica layout after a
+//! communicator shrink.
+//!
+//! The paper's headline capability beyond fast reload is *shrinking
+//! recovery* — "we also support shrinking recovery instead of recovery
+//! using spare compute nodes". Loading lost shards onto survivors
+//! ([`crate::restore::load`]) restores the *application's* data, but the
+//! *replica store* keeps addressing the dead world: failed ranks linger in
+//! the §IV-A layout, §IV-E repair re-replicates onto probing-sequence
+//! homes, and every later load pays the post-repair fallback route. This
+//! module closes the loop: after `ulfm::shrink` produces the dense
+//! re-ranking of the `p'` survivors,
+//! [`ReStore::rebalance`](crate::restore::ReStore::rebalance)
+//!
+//! 1. **reshapes** the distribution to `p'`
+//!    ([`Distribution::reshaped`]) — the permuted block ID space, the
+//!    Feistel permutation, and the precomputed unit→slot placement index
+//!    carry over by `Arc`; only the slice partition and copy stride change,
+//!    so the new layout is bit-identical to a fresh
+//!    `Distribution::new` at `p'` (golden-tested);
+//! 2. **plans a minimal migration** ([`plan_rebalance`]) in permuted-slot
+//!    space: the permuted ID range `[0, n)` is walked over the lattice of
+//!    old (`n/p`) and new (`n/p'`) slice boundaries — O(p + p') intervals —
+//!    and only intervals whose destination is **not** already an alive
+//!    current holder move; sources are drawn from the reverse
+//!    [`HolderIndex`] round-robin across the current holders (the §IV-E
+//!    Distribution-B style spread). Data already in place is retained with
+//!    a local copy, never sent;
+//! 3. **executes** the schedule zero-copy in execution mode — each interval
+//!    is written straight from the source slice into the destination's
+//!    pre-sized new slice via [`PeStore::write_from`] — and charges one
+//!    modeled sparse all-to-all [`PhaseCost`] (plus the local-copy term for
+//!    retained bytes) in both modes;
+//! 4. **atomically swaps** the new distribution, rank translation
+//!    (`RankMap::new_to_old`), stores, and holder index in under the
+//!    cluster's bumped epoch. `submit`/`load`/`repair` validate their
+//!    layout epoch against `Cluster::epoch`, so a shrink can never be
+//!    silently ignored.
+//!
+//! After a rebalance every slot again has exactly `r` replicas on *alive*
+//! PEs in §IV-A positions: the IDL probability returns to the fresh
+//! `p_idl(p', r, f)` level (§IV-D — see `examples/replica_repair.rs`) and
+//! steady-state loads take the deterministic-holder fast path with no
+//! post-repair fallback.
+//!
+//! Memory transiently doubles during the swap (old + new stores coexist),
+//! mirroring the §IV-C "doubled during submission" observation for submit.
+//!
+//! When `p'` does not admit the equal-slice layout
+//! ([`Distribution::reshape_feasible`]), applications stay in the dead
+//! world via `ReStore::acknowledge_shrink` + §IV-E repair;
+//! `ReStore::rebalance_or_acknowledge` packages that policy.
+
+use crate::error::{Error, Result};
+use crate::restore::distribution::Distribution;
+use crate::restore::store::{HolderIndex, PeStore, SliceBuf};
+use crate::restore::ReStore;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+use crate::simnet::ulfm::RankMap;
+
+/// One planned migration: copy the permuted interval
+/// `[perm_start, perm_start + blocks)` from `src` to `dst` (cluster ranks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationTransfer {
+    pub perm_start: u64,
+    pub blocks: u64,
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// Report of a [`ReStore::rebalance`].
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceReport {
+    /// World size of the new layout (`p'`).
+    pub new_world: usize,
+    /// Number of migration transfers executed (remote interval copies).
+    pub transfers: usize,
+    /// Bytes moved over the network — exactly the intervals whose new
+    /// holder was not already an alive current holder (minimality is
+    /// property-tested against a store-diff oracle).
+    pub migrated_bytes: u64,
+    /// Bytes retained in place (destination already held them; local copy
+    /// into the new slice buffer, no message).
+    pub kept_bytes: u64,
+    /// Local-copy term + the migration sparse all-to-all.
+    pub cost: PhaseCost,
+}
+
+/// Plan the minimal migration from `old_dist`'s layout (with `holders` the
+/// *current* reverse holder index, including §IV-E repair-created replicas)
+/// to `new_dist`'s layout over the survivors.
+///
+/// Walks the permuted ID space over the lattice of old and new slice
+/// boundaries. For each interval, the new holder set is
+/// `{to_cluster[new_dist.holder(·, k)]}`; destinations that are already
+/// alive current holders are reported through `on_keep(pe, perm_start,
+/// blocks)` (retained in place), every other destination becomes one
+/// [`MigrationTransfer`] pushed to `out`, sourced round-robin across the
+/// interval's alive current holders. Errors with
+/// [`Error::IrrecoverableDataLoss`] when an interval has no alive holder
+/// left.
+///
+/// Planning is allocation-frugal by construction — a fixed number of
+/// scratch vectors regardless of world size (asserted by
+/// `rust/tests/alloc_counts.rs`); `out` is caller-provided for reuse.
+pub fn plan_rebalance(
+    old_dist: &Distribution,
+    new_dist: &Distribution,
+    holders: &HolderIndex,
+    alive: impl Fn(usize) -> bool,
+    to_cluster: &[u32],
+    mut on_keep: impl FnMut(usize, u64, u64),
+    out: &mut Vec<MigrationTransfer>,
+) -> Result<()> {
+    let n = old_dist.n_blocks();
+    debug_assert_eq!(n, new_dist.n_blocks(), "rebalance must preserve the block space");
+    debug_assert_eq!(to_cluster.len(), new_dist.world());
+    debug_assert_eq!(holders.slots(), old_dist.world());
+    let ob = old_dist.blocks_per_pe();
+    let nb = new_dist.blocks_per_pe();
+    let r = new_dist.replicas();
+    // Round-robin source cursor per old slot, advanced across all of the
+    // slot's intervals and destinations, spreading migration reads evenly
+    // over the current holders.
+    let mut rr: Vec<u32> = vec![0; old_dist.world()];
+    let mut srcs: Vec<usize> = Vec::with_capacity(r + 4);
+    let mut dsts: Vec<usize> = Vec::with_capacity(r);
+    let mut cur = 0u64;
+    while cur < n {
+        let stop = ((cur / ob + 1) * ob).min((cur / nb + 1) * nb).min(n);
+        let len = stop - cur;
+        let old_slot = (cur / ob) as usize;
+        srcs.clear();
+        srcs.extend(
+            holders
+                .holders_of(old_slot)
+                .iter()
+                .map(|&pe| pe as usize)
+                .filter(|&pe| alive(pe)),
+        );
+        if srcs.is_empty() {
+            // Every current holder of this interval is dead: the §IV-D IDL
+            // event. Report the first lost permutation unit in original-ID
+            // terms, like the load path does.
+            let s_pr = old_dist.perm_range_blocks();
+            let ulen = len.min(s_pr - cur % s_pr);
+            let orig = old_dist.unpermute_block(cur);
+            return Err(Error::IrrecoverableDataLoss { start: orig, end: orig + ulen });
+        }
+        let new_start = (cur / nb) * nb;
+        dsts.clear();
+        for k in 0..r {
+            dsts.push(to_cluster[new_dist.holder(new_start, k)] as usize);
+        }
+        for &dst in &dsts {
+            // `holders_of` lists are sorted ascending and alive-filtering
+            // preserves order, so membership is a binary search.
+            if srcs.binary_search(&dst).is_ok() {
+                on_keep(dst, cur, len);
+            } else {
+                let pick = rr[old_slot] as usize % srcs.len();
+                rr[old_slot] = rr[old_slot].wrapping_add(1);
+                out.push(MigrationTransfer {
+                    perm_start: cur,
+                    blocks: len,
+                    src: srcs[pick],
+                    dst,
+                });
+            }
+        }
+        cur = stop;
+    }
+    Ok(())
+}
+
+impl ReStore {
+    /// §IV-B shrinking recovery: rewrite the layout over the `map`'s `p'`
+    /// survivors. Requires a preceding `ulfm::shrink` (the cluster epoch
+    /// must be ahead of the store's) and a feasible `p'`
+    /// ([`Distribution::reshape_feasible`]); on any error the old layout
+    /// stays fully intact (the swap is atomic-on-success).
+    pub fn rebalance(&mut self, cluster: &mut Cluster, map: &RankMap) -> Result<RebalanceReport> {
+        self.ensure_submitted()?;
+        if cluster.epoch() <= self.epoch() {
+            return Err(Error::Config(format!(
+                "rebalance requires a preceding ulfm::shrink: store epoch {}, cluster epoch {}",
+                self.epoch(),
+                cluster.epoch()
+            )));
+        }
+        map.validate_against(cluster)?;
+        let new_dist = self.distribution().reshaped(map.new_world())?;
+        let to_cluster: Vec<u32> = map.new_to_old.iter().map(|&o| o as u32).collect();
+
+        let execution = self.is_execution_mode();
+        let bs = self.config().block_size;
+        let nb = new_dist.blocks_per_pe();
+        let r = new_dist.replicas();
+        let world = self.config().world;
+        let slice_bytes = (nb * bs as u64) as usize;
+
+        // Pre-create every survivor's r new slices (zeroed in execution
+        // mode) and the new reverse holder index — exactly what a fresh
+        // submit at p' would lay out. The zero fill is redundant work in
+        // principle (the keep + migration writes below cover every byte;
+        // the minimality tests assert kept + migrated == stored), but
+        // pre-sized initialized buffers are what `write_from` requires and
+        // what submit does — trading one memset pass for not reasoning
+        // about uninitialized memory on an error path.
+        let mut new_stores: Vec<PeStore> = (0..world).map(|_| PeStore::new(bs)).collect();
+        let mut new_index = HolderIndex::new(new_dist.world());
+        for (j, &pe) in to_cluster.iter().enumerate() {
+            let pe = pe as usize;
+            for k in 0..r {
+                let range = new_dist.stored_slice(j, k);
+                let slot = (range.start / nb) as usize;
+                let buf = if execution {
+                    SliceBuf::Real(vec![0u8; slice_bytes])
+                } else {
+                    SliceBuf::Virtual(slice_bytes as u64)
+                };
+                new_stores[pe].insert(range, buf);
+                new_index.insert(slot, pe);
+            }
+        }
+
+        // Plan; retained intervals are copied into the new slices on the
+        // spot (zero-copy: one write_from straight out of the old slice).
+        let mut transfers: Vec<MigrationTransfer> = Vec::new();
+        let mut kept_bytes_per_pe: Vec<u64> = vec![0; world];
+        {
+            let old_stores = self.stores();
+            plan_rebalance(
+                self.distribution(),
+                &new_dist,
+                self.holder_index(),
+                |pe| cluster.is_alive(pe),
+                &to_cluster,
+                |pe, perm_start, blocks| {
+                    kept_bytes_per_pe[pe] += blocks * bs as u64;
+                    if execution {
+                        let bytes = old_stores[pe]
+                            .read(perm_start, blocks)
+                            .expect("execution-mode store must hold real bytes");
+                        new_stores[pe].write_from(perm_start, bytes);
+                    }
+                },
+                &mut transfers,
+            )?;
+        }
+
+        // Charge the local copies of retained bytes (the transient §IV-C
+        // style doubling: every survivor re-materializes its kept data in
+        // the new slice buffers, in parallel — bill the slowest PE).
+        let max_local = kept_bytes_per_pe.iter().copied().max().unwrap_or(0);
+        let local_cost = PhaseCost::local_copy(cluster.network(), max_local);
+        cluster.advance(&local_cost);
+
+        // ONE sparse all-to-all for the migration: coalesce per (src, dst)
+        // pair, charge pack/unpack fragments per interval like the load
+        // path's data phase.
+        transfers.sort_unstable_by_key(|t| (t.src, t.dst, t.perm_start));
+        let mut migrated = 0u64;
+        let mut phase = cluster.phase();
+        let mut i = 0;
+        while i < transfers.len() {
+            let (src, dst) = (transfers[i].src, transfers[i].dst);
+            let start = i;
+            let mut bytes = 0u64;
+            while i < transfers.len() && transfers[i].src == src && transfers[i].dst == dst {
+                bytes += transfers[i].blocks * bs as u64;
+                i += 1;
+            }
+            migrated += bytes;
+            phase.add(src, dst, bytes)?;
+            let pieces = (i - start) as u64;
+            phase.frag(src, pieces);
+            phase.frag(dst, pieces);
+        }
+        let net_cost = phase.commit();
+
+        // Execute the migration zero-copy (old stores are read-only here;
+        // destinations live in the not-yet-installed new store set, so a
+        // same-call destination can never be read as a source).
+        if execution {
+            for t in &transfers {
+                let bytes = self.stores()[t.src]
+                    .read(t.perm_start, t.blocks)
+                    .expect("execution-mode store must hold real bytes");
+                new_stores[t.dst].write_from(t.perm_start, bytes);
+            }
+        }
+
+        let report = RebalanceReport {
+            new_world: new_dist.world(),
+            transfers: transfers.len(),
+            migrated_bytes: migrated,
+            kept_bytes: kept_bytes_per_pe.iter().sum(),
+            cost: local_cost.then(net_cost),
+        };
+        // Atomic swap: distribution, rank translation, stores, and holder
+        // index become current together, under the cluster's epoch. Dead
+        // PEs' old stores are dropped with the old store set (the former
+        // standalone `drop_pe` reclaim, folded in).
+        self.install_layout(cluster, new_dist, to_cluster, new_stores, new_index);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::restore::block::{BlockRange, RangeSet};
+    use crate::restore::load::scatter_requests_for_ranges;
+    use crate::restore::LoadRequest;
+    use crate::simnet::ulfm;
+
+    fn make_shards(world: usize, bytes: usize) -> Vec<Vec<u8>> {
+        (0..world)
+            .map(|pe| (0..bytes).map(|i| (pe * 37 + i * 5) as u8).collect())
+            .collect()
+    }
+
+    fn build(
+        p: usize,
+        bpp: usize,
+        r: usize,
+        s_pr: Option<usize>,
+        execution: bool,
+    ) -> (Cluster, ReStore, Vec<Vec<u8>>) {
+        let cfg = RestoreConfig::builder(p, 8, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(p, bpp * 8);
+        if execution {
+            rs.submit(&mut cluster, &shards).unwrap();
+        } else {
+            rs.submit_virtual(&mut cluster).unwrap();
+        }
+        (cluster, rs, shards)
+    }
+
+    /// Kill 2 PEs of every group at p=16, r=4 (ranks 0..8): survivors 8..15
+    /// keep 2 alive copies per slot, and p' = 8 admits the §IV-A layout.
+    const HALF_KILLS: [usize; 8] = [0, 1, 2, 3, 4, 5, 6, 7];
+
+    /// Golden reference: fresh `Distribution::new(p')` + resubmit of the
+    /// re-sharded original data on a brand-new p'-PE cluster.
+    fn fresh_resubmit(
+        p_new: usize,
+        s_pr: Option<usize>,
+        r: usize,
+        shards: &[Vec<u8>],
+    ) -> (Cluster, ReStore) {
+        let global: Vec<u8> = shards.iter().flatten().copied().collect();
+        let shard_bytes = global.len() / p_new;
+        let new_shards: Vec<Vec<u8>> =
+            (0..p_new).map(|j| global[j * shard_bytes..(j + 1) * shard_bytes].to_vec()).collect();
+        let cfg = RestoreConfig::builder(p_new, 8, shard_bytes / 8)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p_new, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit(&mut cluster, &new_shards).unwrap();
+        (cluster, rs)
+    }
+
+    #[test]
+    fn rebalanced_stores_match_fresh_submit_at_p_prime() {
+        for s_pr in [Some(16usize), None] {
+            let (mut cluster, mut rs, shards) = build(16, 64, 4, s_pr, true);
+            cluster.kill(&HALF_KILLS);
+            let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+            let report = rs.rebalance(&mut cluster, &map).unwrap();
+            assert_eq!(report.new_world, 8, "s_pr {s_pr:?}");
+            assert!(report.migrated_bytes > 0);
+
+            let (_fc, fresh) = fresh_resubmit(8, s_pr, 4, &shards);
+            for j in 0..8usize {
+                let ours = rs.stores()[map.new_to_old[j]].slices();
+                let want = fresh.stores()[j].slices();
+                assert_eq!(ours.len(), want.len(), "s_pr {s_pr:?}: new rank {j} slice count");
+                for (g, w) in ours.iter().zip(want) {
+                    assert_eq!(g.range, w.range, "s_pr {s_pr:?}: new rank {j}");
+                    let (SliceBuf::Real(gb), SliceBuf::Real(wb)) = (&g.buf, &w.buf) else {
+                        panic!("execution mode must store real bytes");
+                    };
+                    assert_eq!(gb, wb, "s_pr {s_pr:?}: new rank {j} slice {:?}", g.range);
+                }
+            }
+            // dead PEs' stores were reclaimed with the swap
+            for &pe in &HALF_KILLS {
+                assert!(rs.stores()[pe].slices().is_empty(), "dead PE {pe} still holds data");
+            }
+            // holder index: ours (cluster ranks) == fresh (new ranks)
+            // translated through the monotone new_to_old map
+            for slot in 0..8usize {
+                let want: Vec<u32> = fresh
+                    .holder_index()
+                    .holders_of(slot)
+                    .iter()
+                    .map(|&j| map.new_to_old[j as usize] as u32)
+                    .collect();
+                assert_eq!(rs.holder_index().holders_of(slot), &want[..], "slot {slot}");
+            }
+            // ...and matches a from-scratch rebuild at the new slot count
+            assert_eq!(
+                *rs.holder_index(),
+                HolderIndex::rebuild(rs.stores(), 128, 8),
+                "s_pr {s_pr:?}: holder index drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn migration_moves_only_changed_holder_sets() {
+        for s_pr in [Some(16usize), None] {
+            let (mut cluster, mut rs, _) = build(16, 64, 4, s_pr, true);
+            cluster.kill(&HALF_KILLS);
+            // store-diff oracle: bytes each survivor must receive = its new
+            // slices minus what it already held before the rebalance
+            let pre_held: Vec<Vec<BlockRange>> = (0..16)
+                .map(|pe| rs.stores()[pe].slices().iter().map(|s| s.range).collect())
+                .collect();
+            let (_failed, map, _) = ulfm::recover(&mut cluster);
+            let report = rs.rebalance(&mut cluster, &map).unwrap();
+
+            let mut expected = 0u64;
+            for &pe in &map.new_to_old {
+                for s in rs.stores()[pe].slices() {
+                    let mut missing = s.range.len();
+                    for old in &pre_held[pe] {
+                        if let Some(overlap) = s.range.intersect(old) {
+                            missing -= overlap.len();
+                        }
+                    }
+                    expected += missing * 8;
+                }
+            }
+            assert_eq!(report.migrated_bytes, expected, "s_pr {s_pr:?}");
+            // kept + migrated account for every stored byte of the new world
+            let total = 8u64 * 4 * 128 * 8;
+            assert_eq!(report.kept_bytes + report.migrated_bytes, total, "s_pr {s_pr:?}");
+        }
+    }
+
+    #[test]
+    fn rebalance_requires_shrink_and_current_map() {
+        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
+        let map = ulfm::RankMap::identity(16);
+        // no shrink yet -> epoch gate refuses
+        assert!(matches!(rs.rebalance(&mut cluster, &map), Err(Error::Config(_))));
+
+        cluster.kill(&HALF_KILLS);
+        let (_failed, map, _) = ulfm::recover(&mut cluster);
+        // the shrink bumped the epoch: routing is now refused until the
+        // store adopts the new world
+        let reqs = vec![LoadRequest {
+            pe: 8,
+            ranges: RangeSet::new(vec![BlockRange::new(0, 16)]),
+        }];
+        assert!(matches!(
+            rs.load(&mut cluster, &reqs),
+            Err(Error::StaleEpoch { store_epoch: 0, cluster_epoch: 1 })
+        ));
+        assert!(matches!(
+            rs.repair_replicas(&mut cluster, crate::restore::repair::RepairScheme::DoubleHashing),
+            Err(Error::StaleEpoch { .. })
+        ));
+
+        // a stale map (second failure after the shrink) is rejected
+        let mut cluster2 = cluster.clone();
+        cluster2.kill(&[15]);
+        ulfm::shrink(&mut cluster2);
+        assert!(rs.rebalance(&mut cluster2, &map).is_err());
+
+        // the real map works, and routing resumes
+        rs.rebalance(&mut cluster, &map).unwrap();
+        assert_eq!(rs.epoch(), cluster.epoch());
+        rs.load(&mut cluster, &reqs).unwrap();
+    }
+
+    #[test]
+    fn post_rebalance_loads_are_exact_and_fast_path() {
+        let (mut cluster, mut rs, shards) = build(16, 64, 4, Some(16), true);
+        cluster.kill(&HALF_KILLS);
+        let (failed, map, _) = ulfm::recover(&mut cluster);
+        rs.rebalance(&mut cluster, &map).unwrap();
+
+        // fast path: every slot has exactly r alive holders in the
+        // deterministic §IV-A positions of the new layout — the load path
+        // never needs the post-repair fallback
+        let dist = rs.distribution().clone();
+        for slot in 0..dist.world() {
+            let holders = rs.holder_index().holders_of(slot);
+            assert_eq!(holders.len(), 4, "slot {slot}");
+            let start = slot as u64 * dist.blocks_per_pe();
+            let mut det: Vec<u32> =
+                (0..4).map(|k| rs.cluster_rank(dist.holder(start, k)) as u32).collect();
+            det.sort_unstable();
+            assert_eq!(holders, &det[..], "slot {slot} holders are not the §IV-A set");
+            for &pe in holders {
+                assert!(cluster.is_alive(pe as usize));
+            }
+        }
+
+        // the failed PEs' original shards load bit-exactly, scattered over
+        // the survivors
+        let survivors = cluster.survivors();
+        let mut gained: Vec<(usize, RangeSet)> = Vec::new();
+        for (i, &dead) in failed.iter().enumerate() {
+            let start = dead as u64 * 64;
+            gained.push((
+                survivors[i % survivors.len()],
+                RangeSet::new(vec![BlockRange::new(start, start + 64)]),
+            ));
+        }
+        let reqs = scatter_requests_for_ranges(&gained);
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            let mut want = Vec::new();
+            for range in req.ranges.ranges() {
+                for x in range.start..range.end {
+                    let pe = (x / 64) as usize;
+                    let off = ((x % 64) * 8) as usize;
+                    want.extend_from_slice(&shards[pe][off..off + 8]);
+                }
+            }
+            assert_eq!(shard.bytes.as_deref().unwrap(), &want[..], "PE {}", req.pe);
+        }
+    }
+
+    /// Regressions around post-rebalance loads: (a) the LeastLoaded
+    /// per-server byte table is indexed by *cluster* ranks, which keep
+    /// their original numbering after the distribution shrinks to p' —
+    /// sizing it by dist.world() panicked on the first post-rebalance
+    /// load; (b) `scatter_requests` must describe the *submit-time* shard
+    /// of a dead rank (here the dead ranks 8..16 don't even exist in the
+    /// p' = 8 world, so the current distribution's shard_of would address
+    /// past the block space). Every policy must route the lost shards
+    /// bit-exactly.
+    #[test]
+    fn post_rebalance_load_works_under_every_policy() {
+        use crate::config::ServerSelection;
+        use crate::restore::load::scatter_requests;
+        let kills: Vec<usize> = (8..16).collect(); // 2 per group; p' = 8
+        for policy in [
+            ServerSelection::Random,
+            ServerSelection::LeastLoaded,
+            ServerSelection::Primary,
+        ] {
+            let cfg = RestoreConfig::builder(16, 8, 64)
+                .replicas(4)
+                .perm_range_blocks(Some(16))
+                .server_selection(policy)
+                .build()
+                .unwrap();
+            let mut cluster = Cluster::new_execution(16, 4);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            let shards = make_shards(16, 64 * 8);
+            rs.submit(&mut cluster, &shards).unwrap();
+            cluster.kill(&kills);
+            let (failed, map, _) = ulfm::recover(&mut cluster);
+            rs.rebalance(&mut cluster, &map).unwrap();
+            let reqs = scatter_requests(&rs, &cluster, &failed);
+            let total: u64 = reqs.iter().map(|r| r.ranges.total_blocks()).sum();
+            assert_eq!(total, 8 * 64, "{policy:?}: scatter must cover the lost shards");
+            let out = rs.load(&mut cluster, &reqs).unwrap();
+            for (req, shard) in reqs.iter().zip(&out.shards) {
+                let mut want = Vec::new();
+                for range in req.ranges.ranges() {
+                    for x in range.start..range.end {
+                        let pe = (x / 64) as usize;
+                        let off = ((x % 64) * 8) as usize;
+                        want.extend_from_slice(&shards[pe][off..off + 8]);
+                    }
+                }
+                assert_eq!(shard.bytes.as_deref().unwrap(), &want[..], "{policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chained_shrinks_rebalance_repeatedly() {
+        // 16 -> 8 -> 4, verifying layout invariants and data access at
+        // every stage (including a post-rebalance §IV-E repair interop).
+        let (mut cluster, mut rs, shards) = build(16, 64, 4, Some(16), true);
+        cluster.kill(&HALF_KILLS);
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        rs.rebalance(&mut cluster, &map).unwrap();
+
+        // second wave: kill 4 of the 8 survivors (2 per new group)
+        cluster.kill(&[8, 9, 10, 11]);
+        let (_f, map2, _) = ulfm::recover(&mut cluster);
+        let report = rs.rebalance(&mut cluster, &map2).unwrap();
+        assert_eq!(report.new_world, 4);
+        assert_eq!(
+            *rs.holder_index(),
+            HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe(), 4)
+        );
+        // every survivor holds r * n/p' blocks (§IV-C at the new world)
+        for &pe in &map2.new_to_old {
+            let blocks: u64 = rs.stores()[pe].slices().iter().map(|s| s.range.len()).sum();
+            assert_eq!(blocks, 4 * 256, "PE {pe}");
+        }
+        // all data still loads bit-exactly
+        let survivors = cluster.survivors();
+        let reqs: Vec<LoadRequest> = survivors
+            .iter()
+            .enumerate()
+            .map(|(j, &pe)| LoadRequest {
+                pe,
+                ranges: RangeSet::new(vec![BlockRange::new(j as u64 * 256, (j as u64 + 1) * 256)]),
+            })
+            .collect();
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        for (req, shard) in reqs.iter().zip(&out.shards) {
+            let mut want = Vec::new();
+            for range in req.ranges.ranges() {
+                for x in range.start..range.end {
+                    let pe = (x / 64) as usize;
+                    let off = ((x % 64) * 8) as usize;
+                    want.extend_from_slice(&shards[pe][off..off + 8]);
+                }
+            }
+            assert_eq!(shard.bytes.as_deref().unwrap(), &want[..]);
+        }
+    }
+
+    #[test]
+    fn rebalance_detects_idl() {
+        // Kill a whole §IV-D group (plus fillers to keep p' = 8 feasible):
+        // group {1, 5, 9, 13} of p=16/r=4 dies entirely -> its slots have
+        // no surviving holder and the rebalance must refuse.
+        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
+        cluster.kill(&[1, 5, 9, 13, 0, 4, 2, 6]);
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        assert!(matches!(
+            rs.rebalance(&mut cluster, &map),
+            Err(Error::IrrecoverableDataLoss { .. })
+        ));
+        // the failed rebalance left the old layout fully intact
+        assert_eq!(rs.epoch(), 0);
+        assert_eq!(rs.distribution().world(), 16);
+    }
+
+    #[test]
+    fn acknowledge_shrink_reclaims_and_adopts_epoch() {
+        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
+        cluster.kill(&[3, 7]); // p' = 14: no §IV-A layout (r does not divide)
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        assert!(!rs.can_rebalance(&cluster));
+        let ran = rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+        assert!(ran.is_none(), "infeasible world must fall back to acknowledge");
+        assert_eq!(rs.epoch(), cluster.epoch());
+        assert!(rs.stores()[3].slices().is_empty());
+        assert!(rs.stores()[7].slices().is_empty());
+        assert_eq!(
+            *rs.holder_index(),
+            HolderIndex::rebuild(rs.stores(), 64, 16)
+        );
+        // dead-world routing still works (fallback path, old distribution)
+        let reqs = vec![LoadRequest {
+            pe: 0,
+            ranges: RangeSet::new(vec![BlockRange::new(3 * 64, 4 * 64)]),
+        }];
+        rs.load(&mut cluster, &reqs).unwrap();
+    }
+
+    #[test]
+    fn virtual_and_real_rebalance_share_schedule_and_cost() {
+        let run = |execution: bool| {
+            let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), execution);
+            cluster.kill(&HALF_KILLS);
+            let (_f, map, _) = ulfm::recover(&mut cluster);
+            let report = rs.rebalance(&mut cluster, &map).unwrap();
+            (report, cluster.now())
+        };
+        let (real, t_real) = run(true);
+        let (virt, t_virt) = run(false);
+        assert_eq!(real.migrated_bytes, virt.migrated_bytes);
+        assert_eq!(real.kept_bytes, virt.kept_bytes);
+        assert_eq!(real.transfers, virt.transfers);
+        assert_eq!(real.cost, virt.cost);
+        assert!((t_real - t_virt).abs() < 1e-12);
+    }
+}

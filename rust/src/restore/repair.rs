@@ -209,6 +209,9 @@ impl crate::restore::ReStore {
         use crate::restore::store::SliceBuf;
 
         self.ensure_submitted()?;
+        // Shrink handshake: after `ulfm::shrink`, rebalance (or
+        // acknowledge) before repairing — §IV-B.
+        self.ensure_current_epoch(cluster)?;
         let dist = self.distribution().clone();
         let p = dist.world();
         let r = dist.replicas();
@@ -220,7 +223,15 @@ impl crate::restore::ReStore {
         // reused buffers and holder discovery reads the reverse holder
         // index — O(r + f) per unit instead of the former O(p) store
         // sweep (O(p²) per repair at the paper's p = 24 576).
-        let alive = |pe: usize| cluster.is_alive(pe);
+        //
+        // The deterministic layout and the probing sequences both work in
+        // *distribution* ranks (the compact post-rebalance world);
+        // stores, the holder index, and the network use *cluster* ranks —
+        // `pe_map` translates at the boundary (the identity before any
+        // rebalance).
+        let pe_map: &[u32] = &self.pe_map;
+        let alive = |pe: usize| cluster.is_alive(pe); // cluster ranks
+        let alive_dist = |pe: usize| cluster.is_alive(pe_map[pe] as usize); // dist ranks
         let stride = dist.copy_stride();
         let offset = dist.placement_offset();
         let mut transfers: Vec<RepairTransfer> = Vec::new();
@@ -230,7 +241,7 @@ impl crate::restore::ReStore {
         for primary in 0..p {
             let det = |k: usize| (primary + k * stride + offset) % p;
             let unit = primary as u64;
-            seqs.replica_homes_into(unit, r, alive, det, &mut homes);
+            seqs.replica_homes_into(unit, r, alive_dist, det, &mut homes);
             if homes.is_empty() {
                 unrepairable += 1;
                 continue;
@@ -255,13 +266,14 @@ impl crate::restore::ReStore {
                 continue;
             }
             for (i, &home) in homes.iter().enumerate() {
-                if holders.binary_search(&(home as u32)).is_err() {
-                    debug_assert!(!srcs.contains(&home), "repair dst picked as src");
+                let home_c = pe_map[home] as usize; // dist rank -> cluster rank
+                if holders.binary_search(&(home_c as u32)).is_err() {
+                    debug_assert!(!srcs.contains(&home_c), "repair dst picked as src");
                     transfers.push(RepairTransfer {
                         perm_start: slice_start,
                         blocks: len,
                         src: srcs[i % srcs.len()],
-                        dst: home,
+                        dst: home_c,
                     });
                 }
             }
@@ -530,7 +542,11 @@ mod golden {
                 // the incrementally maintained index matches a full rescan
                 assert_eq!(
                     *rs.holder_index(),
-                    HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe()),
+                    HolderIndex::rebuild(
+                        rs.stores(),
+                        rs.distribution().blocks_per_pe(),
+                        rs.distribution().world(),
+                    ),
                     "{tag}: holder index drifted"
                 );
             }
@@ -548,7 +564,11 @@ mod golden {
             assert_eq!(second.transfers, 0, "repairing twice must move nothing");
             assert_eq!(
                 *rs.holder_index(),
-                HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe())
+                HolderIndex::rebuild(
+                    rs.stores(),
+                    rs.distribution().blocks_per_pe(),
+                    rs.distribution().world(),
+                )
             );
         }
     }

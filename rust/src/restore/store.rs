@@ -207,8 +207,11 @@ impl HolderIndex {
 
     /// From-scratch rebuild by scanning every PE store — the O(p · slices)
     /// reference the incremental maintenance is property-tested against.
-    pub fn rebuild(stores: &[PeStore], blocks_per_pe: u64) -> Self {
-        let slots = stores.len();
+    /// `slots` is the slot count of the *current* layout (equal to the
+    /// store count before a rebalance, `p'` after one — the rebalanced
+    /// slice partition has one slot per survivor while stores stay indexed
+    /// by original rank).
+    pub fn rebuild(stores: &[PeStore], blocks_per_pe: u64, slots: usize) -> Self {
         let mut ix = HolderIndex::new(slots);
         for (pe, st) in stores.iter().enumerate() {
             for s in st.slices() {
@@ -341,12 +344,12 @@ mod tests {
         assert_eq!(ix.holders_of(1), &[1]);
         assert_eq!(ix.holders_of(2), &[] as &[u32]);
         assert_eq!(ix.holders_of(3), &[2, 3]);
-        assert_eq!(ix, HolderIndex::rebuild(&stores, 8));
+        assert_eq!(ix, HolderIndex::rebuild(&stores, 8, 4));
 
         ix.drop_pe(2);
         stores[2].clear();
         assert_eq!(ix.holders_of(0), &[0]);
         assert_eq!(ix.holders_of(3), &[3]);
-        assert_eq!(ix, HolderIndex::rebuild(&stores, 8));
+        assert_eq!(ix, HolderIndex::rebuild(&stores, 8, 4));
     }
 }

@@ -17,6 +17,15 @@ use crate::restore::{ReStore, SubmitReport};
 use crate::simnet::cluster::Cluster;
 use crate::simnet::network::PhaseCost;
 
+#[cfg(feature = "rayon")]
+use rayon::prelude::*;
+
+/// Below this many permutation units the schedule's unit→slot precompute
+/// stays serial even with the `rayon` feature (fork/join overhead, and the
+/// allocation-count assertions stay exact at test scales).
+#[cfg(feature = "rayon")]
+const PAR_MIN_UNITS: usize = 4096;
+
 impl ReStore {
     /// Submit real data: `shards[pe]` is PE `pe`'s serialized blocks
     /// (`blocks_per_pe * block_size` bytes). Execution mode.
@@ -51,6 +60,7 @@ impl ReStore {
         cluster: &mut Cluster,
         shards: Option<&[Vec<u8>]>,
     ) -> Result<SubmitReport> {
+        self.ensure_current_epoch(cluster)?;
         self.mark_submitted()?;
         if cluster.n_alive() != self.cfg.world {
             return Err(Error::Config(
@@ -97,14 +107,40 @@ impl ReStore {
         let units_per_pe = (dist.blocks_per_pe() / s_pr) as usize;
         let stride = dist.copy_stride();
         let offset = dist.placement_offset();
+
+        // Unit→slot lookup for the schedule: the global unit id
+        // `g = src·units_per_pe + u` maps to permuted start
+        // `unit_slot(g)·s_pr` (shard starts are unit-aligned). With the
+        // `rayon` feature at large unit counts, all lookups are
+        // precomputed in parallel across sources — `collect_into_vec`
+        // preserves order, so the schedule below (and therefore every byte
+        // and cost) is identical to the serial pass. Serial builds (and
+        // small worlds) evaluate inline, with no O(units) temporary.
+        #[cfg(feature = "rayon")]
+        let unit_slots: Option<Vec<u64>> = {
+            let total_units = p * units_per_pe;
+            (total_units >= PAR_MIN_UNITS).then(|| {
+                let mut v = Vec::with_capacity(total_units);
+                (0..total_units)
+                    .into_par_iter()
+                    .map(|g| dist.unit_slot(g as u64))
+                    .collect_into_vec(&mut v);
+                v
+            })
+        };
+        #[cfg(not(feature = "rayon"))]
+        let unit_slots: Option<Vec<u64>> = None;
+        let unit_slot_of = |g: usize| match &unit_slots {
+            Some(v) => v[g],
+            None => dist.unit_slot(g as u64),
+        };
+
         let mut slot_units: Vec<u32> = vec![0; p];
         let mut touched: Vec<u32> = Vec::with_capacity(units_per_pe.min(p));
         let mut phase = cluster.phase();
         for src in 0..p {
-            let shard_start = src as u64 * dist.blocks_per_pe();
             for u in 0..units_per_pe {
-                let orig = shard_start + u as u64 * s_pr;
-                let perm_start = dist.permute_block(orig);
+                let perm_start = unit_slot_of(src * units_per_pe + u) * s_pr;
                 let slot_pe = (perm_start / dist.blocks_per_pe()) as usize;
                 if slot_units[slot_pe] == 0 {
                     touched.push(slot_pe as u32);
@@ -324,6 +360,59 @@ mod tests {
         }
     }
 
+    /// Schedule parity at a unit count large enough to cross the rayon
+    /// precompute threshold: the phase cost must equal a naive per-unit
+    /// reference schedule charged through a fresh accumulator. CI runs this
+    /// under the serial, `--no-default-features`, and `--features rayon`
+    /// builds — the serial-parity matrix for submit schedule construction.
+    #[test]
+    fn large_submit_schedule_matches_per_unit_reference() {
+        use std::collections::HashMap;
+        let cfg = RestoreConfig::builder(8, 8, 8192)
+            .replicas(4)
+            .perm_range_blocks(Some(8)) // 1024 units/PE, 8192 total
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(8, 4);
+        let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+        let report = rs.submit_virtual(&mut cluster).unwrap();
+
+        // reference: the same one-message-per-(src, slot PE, copy) schedule,
+        // rebuilt with direct permute_block calls and tuple-keyed maps
+        // (message order is irrelevant to the accumulator — every counter
+        // is a sum or a max — so only the message *granularity* must match)
+        let dist = rs.distribution();
+        let s = dist.perm_range_blocks();
+        let unit_bytes = s * 8;
+        let mut units_on: HashMap<(usize, usize), u64> = HashMap::new(); // (src, slot PE)
+        for src in 0..8usize {
+            let shard = dist.shard_of(src);
+            for orig in (shard.start..shard.end).step_by(s as usize) {
+                let y = dist.permute_block(orig);
+                let slot_pe = (y / dist.blocks_per_pe()) as usize;
+                *units_on.entry((src, slot_pe)).or_insert(0) += 1;
+            }
+        }
+        let mut acc = crate::simnet::network::Accumulator::new(
+            cluster.network(),
+            cluster.topology(),
+        );
+        let stride = dist.copy_stride();
+        for (&(src, slot_pe), &units) in &units_on {
+            for k in 0..4 {
+                let dst = (slot_pe + k * stride) % 8;
+                acc.msg(src, dst, units * unit_bytes);
+                acc.frag(src, units);
+                if dst != src {
+                    acc.frag(dst, units);
+                }
+            }
+        }
+        let want = acc.finish();
+        let ser = PhaseCost::local_copy(cluster.network(), (cfg.blocks_per_pe * 8) as u64);
+        assert_eq!(report.cost, ser.then(want));
+    }
+
     #[test]
     fn submit_builds_consistent_holder_index() {
         for s_pr in [Some(16), None] {
@@ -334,6 +423,7 @@ mod tests {
             let rebuilt = crate::restore::store::HolderIndex::rebuild(
                 rs.stores(),
                 rs.distribution().blocks_per_pe(),
+                rs.distribution().world(),
             );
             assert_eq!(*rs.holder_index(), rebuilt, "s_pr {s_pr:?}");
             // every slot has exactly r holders right after submit

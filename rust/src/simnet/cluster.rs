@@ -71,8 +71,10 @@ pub struct Cluster {
     alive: Vec<bool>,
     n_alive: usize,
     clock_s: f64,
-    /// Communicator epoch; bumped by `ulfm::shrink`.
-    pub epoch: u64,
+    /// Communicator epoch; bumped by `ulfm::shrink`. `ReStore` records the
+    /// epoch its layout was computed at and refuses to route against a
+    /// newer one (the shrink handshake: agree → shrink → rebalance → load).
+    epoch: u64,
 }
 
 impl Cluster {
@@ -127,6 +129,18 @@ impl Cluster {
     /// Simulated elapsed seconds.
     pub fn now(&self) -> f64 {
         self.clock_s
+    }
+
+    /// Current communicator epoch (0 at construction; +1 per shrink).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Advance the communicator epoch — called by `ulfm::shrink` when the
+    /// survivors establish a new communicator. Every `ReStore` instance
+    /// validates its layout epoch against this on submit/load/repair.
+    pub(crate) fn bump_epoch(&mut self) {
+        self.epoch += 1;
     }
 
     /// Inject failures (the paper's simulated `MPI_Comm_split` methodology).

@@ -10,6 +10,7 @@
 //! §VI-C that "the overall running time increases ... mainly due to MPI
 //! operations used to restore a functioning communicator".
 
+use crate::error::{Error, Result};
 use crate::simnet::cluster::Cluster;
 use crate::simnet::network::PhaseCost;
 
@@ -38,6 +39,51 @@ impl RankMap {
 
     pub fn new_world(&self) -> usize {
         self.new_to_old.len()
+    }
+
+    /// Verify this map describes `cluster`'s *current* survivor set: every
+    /// new rank maps to an alive old rank, the survivors are covered
+    /// exactly once in old-rank order, and the two directions agree. The
+    /// rebalance path calls this before rewriting a layout — a stale map
+    /// (from an earlier shrink) silently addressing dead ranks is the bug
+    /// class this guards against.
+    pub fn validate_against(&self, cluster: &Cluster) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if self.old_to_new.len() != cluster.world() {
+            return err(format!(
+                "rank map covers {} old ranks, cluster world is {}",
+                self.old_to_new.len(),
+                cluster.world()
+            ));
+        }
+        if self.new_world() != cluster.n_alive() {
+            return err(format!(
+                "rank map has {} new ranks, cluster has {} survivors (stale map?)",
+                self.new_world(),
+                cluster.n_alive()
+            ));
+        }
+        let mut prev_old: Option<usize> = None;
+        for (new, &old) in self.new_to_old.iter().enumerate() {
+            if !cluster.is_alive(old) {
+                return err(format!("rank map: new rank {new} maps to dead PE {old}"));
+            }
+            if self.old_to_new.get(old).copied().flatten() != Some(new) {
+                return err(format!("rank map: directions disagree at old rank {old}"));
+            }
+            if prev_old.is_some_and(|p| p >= old) {
+                return err("rank map: new ranks must preserve old-rank order".into());
+            }
+            prev_old = Some(old);
+        }
+        for (old, &new) in self.old_to_new.iter().enumerate() {
+            if new.is_some() != cluster.is_alive(old) {
+                return err(format!(
+                    "rank map: old rank {old} mapping disagrees with its alive state"
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -72,7 +118,7 @@ pub fn shrink(cluster: &mut Cluster) -> (RankMap, PhaseCost) {
         ..Default::default()
     };
     cluster.advance(&cost);
-    cluster.epoch += 1;
+    cluster.bump_epoch();
     (RankMap { old_to_new, new_to_old }, cost)
 }
 
@@ -98,7 +144,24 @@ mod tests {
         assert_eq!(map.old_to_new[3], Some(2));
         assert_eq!(map.old_to_new[7], Some(5));
         assert!(cost.sim_time_s > SHRINK_BASE_S);
-        assert_eq!(c.epoch, 1);
+        assert_eq!(c.epoch(), 1);
+        map.validate_against(&c).unwrap();
+    }
+
+    #[test]
+    fn stale_rank_map_is_rejected() {
+        let mut c = Cluster::new_execution(8, 4);
+        c.kill(&[2]);
+        let (map, _) = shrink(&mut c);
+        map.validate_against(&c).unwrap();
+        // a later failure makes the map stale
+        c.kill(&[5]);
+        assert!(map.validate_against(&c).is_err());
+        let (map2, _) = shrink(&mut c);
+        map2.validate_against(&c).unwrap();
+        assert_eq!(c.epoch(), 2);
+        // identity map over the wrong world
+        assert!(RankMap::identity(4).validate_against(&c).is_err());
     }
 
     #[test]

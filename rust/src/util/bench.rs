@@ -64,6 +64,15 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// A raw-metric result: `json_line` will report exactly `value` in the
+    /// `ns_per_iter` field, which for these entries is a generic metric
+    /// carrier (simulated nanoseconds, migrated bytes, ...) — the entry
+    /// name states the unit. Keeps every `BENCH_*.json` artifact on the
+    /// one-object-per-line `{name, ns_per_iter}` schema CI already parses.
+    pub fn from_value(name: &str, value: f64) -> BenchResult {
+        BenchResult { name: name.to_string(), stats: Stats::from(&[value * 1e-9]) }
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<48} mean {:>12}  p10 {:>12}  p90 {:>12}  (n={})",

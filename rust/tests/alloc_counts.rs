@@ -16,9 +16,11 @@
 
 use restore::config::{RestoreConfig, ServerSelection};
 use restore::restore::load::{load_all_requests, scatter_requests};
+use restore::restore::rebalance::{plan_rebalance, MigrationTransfer};
 use restore::restore::repair::RepairScheme;
 use restore::restore::ReStore;
 use restore::simnet::cluster::Cluster;
+use restore::simnet::ulfm;
 use restore::util::bench::{alloc_count, CountingAlloc};
 
 #[global_allocator]
@@ -39,6 +41,7 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     submit_allocations_do_not_scale_with_unit_count();
     repair_planning_allocations_do_not_scale_with_world();
     steady_state_load_allocations_do_not_scale_with_piece_count();
+    rebalance_planning_allocations_do_not_scale_with_world();
 }
 
 fn submit_allocations_do_not_scale_with_unit_count() {
@@ -94,6 +97,48 @@ fn repair_planning_allocations_do_not_scale_with_world() {
     assert_eq!(
         small, large,
         "repair planning allocation count scales with p ({small} vs {large})"
+    );
+}
+
+fn rebalance_planning_allocations_do_not_scale_with_world() {
+    // Plan an identity-world rebalance (a shrink with zero deaths: every
+    // interval is retained, nothing migrates) at two world sizes: the
+    // planner walks every slot but its allocation count is pure scratch
+    // overhead — a fixed number of vectors regardless of p (the migration
+    // output `Vec` is caller-provided and stays empty here).
+    let count_for = |p: usize| {
+        let cfg = RestoreConfig::builder(p, 8, 64)
+            .replicas(4)
+            .perm_range_blocks(Some(16))
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit_virtual(&mut cluster).unwrap();
+        let (map, _cost) = ulfm::shrink(&mut cluster);
+        let new_dist = rs.distribution().reshaped(map.new_world()).unwrap();
+        let to_cluster: Vec<u32> = map.new_to_old.iter().map(|&o| o as u32).collect();
+        let mut out: Vec<MigrationTransfer> = Vec::new();
+        let (n, ()) = allocs_during(|| {
+            plan_rebalance(
+                rs.distribution(),
+                &new_dist,
+                rs.holder_index(),
+                |pe| cluster.is_alive(pe),
+                &to_cluster,
+                |_pe, _start, _blocks| {},
+                &mut out,
+            )
+            .unwrap()
+        });
+        assert!(out.is_empty(), "identity-world rebalance must migrate nothing");
+        n
+    };
+    let small = count_for(8);
+    let large = count_for(32);
+    assert_eq!(
+        small, large,
+        "rebalance planning allocation count scales with p ({small} vs {large})"
     );
 }
 

@@ -211,8 +211,11 @@ fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
         let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
         store.submit_virtual(&mut cluster).unwrap();
         let check = |store: &ReStore, when: &str| {
-            let rebuilt =
-                HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe());
+            let rebuilt = HolderIndex::rebuild(
+                store.stores(),
+                store.distribution().blocks_per_pe(),
+                store.distribution().world(),
+            );
             assert_eq!(
                 *store.holder_index(),
                 rebuilt,
@@ -242,12 +245,12 @@ fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
                 dead.into_iter().take(cluster.n_alive().saturating_sub(1)).collect();
             cluster.kill(&dead);
 
-            // occasionally reclaim a dead PE's store before repairing
+            // occasionally reclaim the dead PEs' stores before repairing
+            // (acknowledge_shrink doubles as the pure reclaim when no
+            // shrink happened — the epoch is unchanged here)
             if rng.gen_bool(0.3) {
-                if let Some(&pe) = cluster.failed().first() {
-                    store.drop_pe(&cluster, pe).unwrap();
-                    check(&store, &format!("after drop_pe({pe}) in wave {wave}"));
-                }
+                store.acknowledge_shrink(&cluster).unwrap();
+                check(&store, &format!("after acknowledge_shrink in wave {wave}"));
             }
 
             let first = store.repair_replicas(&mut cluster, scheme).unwrap();
@@ -264,20 +267,179 @@ fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
 }
 
 #[test]
-fn prop_drop_pe_rejects_alive_pes_and_out_of_range() {
+fn prop_acknowledge_shrink_reclaims_only_dead_stores() {
     let cfg = RestoreConfig::builder(4, 8, 16).replicas(2).build().unwrap();
     let mut cluster = Cluster::new_execution(4, 2);
     let mut store = ReStore::new(cfg, &cluster).unwrap();
     store.submit_virtual(&mut cluster).unwrap();
-    assert!(store.drop_pe(&cluster, 1).is_err(), "alive PE must be rejected");
-    assert!(store.drop_pe(&cluster, 9).is_err(), "out-of-range PE must be rejected");
+    // no failures: a pure no-op (idempotent reclaim)
+    store.acknowledge_shrink(&cluster).unwrap();
+    for pe in 0..4 {
+        assert_eq!(store.stores()[pe].slices().len(), 2, "alive store must be untouched");
+    }
     cluster.kill(&[1]);
-    store.drop_pe(&cluster, 1).unwrap();
-    assert_eq!(store.stores()[1].slices().len(), 0);
+    store.acknowledge_shrink(&cluster).unwrap();
+    assert_eq!(store.stores()[1].slices().len(), 0, "dead store must be reclaimed");
+    for pe in [0usize, 2, 3] {
+        assert_eq!(store.stores()[pe].slices().len(), 2);
+    }
     assert_eq!(
         *store.holder_index(),
-        HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe())
+        HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe(), 4)
     );
+    store.acknowledge_shrink(&cluster).unwrap(); // idempotent
+    // it also adopts the communicator epoch after a shrink
+    let (_map, _cost) = restore::simnet::ulfm::shrink(&mut cluster);
+    assert_ne!(store.epoch(), cluster.epoch());
+    store.acknowledge_shrink(&cluster).unwrap();
+    assert_eq!(store.epoch(), cluster.epoch());
+}
+
+#[test]
+fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
+    // For random configurations and random feasible kill waves, the §IV-B
+    // rebalance must (a) migrate exactly the bytes whose destination did
+    // not already hold them (minimality, checked against a store-diff
+    // oracle), (b) leave the incrementally-built holder index equal to a
+    // from-scratch rebuild, (c) restore r alive holders in deterministic
+    // positions for every slot (the load fast path), and (d) keep every
+    // byte loadable.
+    let mut rng = Rng::seed_from_u64(0x5EBA1A);
+    let mut ran = 0usize;
+    for trial in 0..60 {
+        // config with divisor-rich worlds so feasible shrink targets exist
+        let p = [8usize, 12, 16, 24, 32][rng.gen_index(5)];
+        let divisors: Vec<usize> = (2..=p).filter(|r| p % r == 0 && *r <= 4).collect();
+        let r = divisors[rng.gen_index(divisors.len())];
+        let bpp = [32usize, 64, 128][rng.gen_index(3)];
+        let s_pr = if rng.gen_bool(0.5) {
+            let divs: Vec<usize> = [4usize, 8, 16, 32].iter().copied().filter(|s| bpp % s == 0).collect();
+            Some(divs[rng.gen_index(divs.len())])
+        } else {
+            None
+        };
+        let cfg = RestoreConfig::builder(p, 8, bpp)
+            .replicas(r)
+            .perm_range_blocks(s_pr)
+            .seed(rng.next_u64())
+            .build()
+            .unwrap();
+        let n = cfg.n_blocks();
+        let stride = p / r;
+
+        // feasible shrink targets: p' | units, r | p', and p' >= stride so
+        // a <= r-1 per-group kill pattern can reach it without IDL
+        let units = n / s_pr.map(|s| s as u64).unwrap_or(1);
+        let candidates: Vec<usize> = (stride.max(r)..p)
+            .filter(|&q| q % r == 0 && n % q as u64 == 0 && units % q as u64 == 0)
+            .collect();
+        if candidates.is_empty() {
+            continue;
+        }
+        let p_new = candidates[rng.gen_index(candidates.len())];
+
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+
+        // kill p - p' PEs, at most r-1 per §IV-D group (no IDL)
+        let mut per_group = vec![0usize; stride];
+        let mut killed = 0usize;
+        while killed < p - p_new {
+            let survivors = cluster.survivors();
+            let pe = survivors[rng.gen_index(survivors.len())];
+            if per_group[pe % stride] < r - 1 {
+                per_group[pe % stride] += 1;
+                cluster.kill(&[pe]);
+                killed += 1;
+            }
+        }
+
+        // store-diff oracle input: what each survivor held before
+        let pre_held: Vec<Vec<BlockRange>> = (0..p)
+            .map(|pe| store.stores()[pe].slices().iter().map(|s| s.range).collect())
+            .collect();
+
+        let (_failed, map, _cost) = restore::simnet::ulfm::recover(&mut cluster);
+        assert!(store.can_rebalance(&cluster), "trial {trial}: p'={p_new} must be feasible");
+        let report = store
+            .rebalance(&mut cluster, &map)
+            .unwrap_or_else(|e| panic!("trial {trial} (p={p}, r={r}, p'={p_new}): {e}"));
+        ran += 1;
+        assert_eq!(report.new_world, p_new);
+
+        // (a) minimality: migrated bytes == sum over survivors of new
+        // bytes they did not already hold
+        let mut expected = 0u64;
+        for &pe in &map.new_to_old {
+            for s in store.stores()[pe].slices() {
+                let mut missing = s.range.len();
+                for old in &pre_held[pe] {
+                    if let Some(overlap) = s.range.intersect(old) {
+                        missing -= overlap.len();
+                    }
+                }
+                expected += missing * 8;
+            }
+        }
+        assert_eq!(
+            report.migrated_bytes, expected,
+            "trial {trial} (p={p}, r={r}, p'={p_new}): migration is not minimal"
+        );
+
+        // (b) incremental index == from-scratch rebuild at the new world
+        let nb = store.distribution().blocks_per_pe();
+        assert_eq!(
+            *store.holder_index(),
+            HolderIndex::rebuild(store.stores(), nb, p_new),
+            "trial {trial}: holder index drifted through rebalance"
+        );
+
+        // (c) fast path: every slot has exactly r alive holders in the
+        // deterministic §IV-A positions of the new layout
+        let dist = store.distribution().clone();
+        for slot in 0..p_new {
+            let holders = store.holder_index().holders_of(slot);
+            assert_eq!(holders.len(), r, "trial {trial}: slot {slot}");
+            let mut det: Vec<u32> = (0..r)
+                .map(|k| store.cluster_rank(dist.holder(slot as u64 * nb, k)) as u32)
+                .collect();
+            det.sort_unstable();
+            assert_eq!(holders, &det[..], "trial {trial}: slot {slot} off the §IV-A set");
+            for &h in holders {
+                assert!(cluster.is_alive(h as usize));
+            }
+        }
+        // ...and dead stores were reclaimed; survivors hold r·n/p' blocks
+        for pe in 0..p {
+            let blocks: u64 = store.stores()[pe].slices().iter().map(|s| s.range.len()).sum();
+            if cluster.is_alive(pe) {
+                assert_eq!(blocks, r as u64 * nb, "trial {trial}: PE {pe}");
+            } else {
+                assert_eq!(blocks, 0, "trial {trial}: dead PE {pe} still holds data");
+            }
+        }
+
+        // (d) the whole ID space still loads (cost-model mode)
+        let survivors = cluster.survivors();
+        let ns = survivors.len() as u64;
+        let reqs: Vec<LoadRequest> = survivors
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &pe)| {
+                let s = (j as u64 * n) / ns;
+                let e = ((j as u64 + 1) * n) / ns;
+                (s < e).then(|| LoadRequest {
+                    pe,
+                    ranges: RangeSet::new(vec![BlockRange::new(s, e)]),
+                })
+            })
+            .collect();
+        store
+            .load(&mut cluster, &reqs)
+            .unwrap_or_else(|e| panic!("trial {trial}: post-rebalance load failed: {e}"));
+    }
+    assert!(ran >= 10, "only {ran} feasible rebalance trials ran — generator too narrow");
 }
 
 #[test]

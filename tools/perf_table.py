@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files.
+
+The bench binaries (and CI's bench smoke steps) emit one JSON object per
+line: {"name": ..., "ns_per_iter": ...}. Entries named `... wall/sim-ns/
+migrated-bytes ...` carry those raw metrics in the ns_per_iter field (see
+util::bench::BenchResult::from_value). This script merges any number of
+such files into a markdown table, ready to paste into (or diff against)
+EXPERIMENTS.md §Perf:
+
+    python3 tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json \
+        BENCH_rebalance.json
+
+CI's "render perf table" step runs the plain form and ships the rendered
+table as PERF_TABLE.md inside the bench-json artifact (a CI job cannot
+commit back to the repo). To land the numbers in the tree, download that
+artifact and run with --update EXPERIMENTS.md: it rewrites the block
+between the `<!-- perf-table:begin -->` / `<!-- perf-table:end -->`
+markers in place.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fmt(name: str, value: float) -> str:
+    if "migrated-bytes" in name:
+        return f"{value / 2**30:.2f} GiB"
+    # everything else is nanoseconds (wall, sim-ns, or ns_per_iter proper)
+    if value >= 1e9:
+        return f"{value / 1e9:.2f} s"
+    if value >= 1e6:
+        return f"{value / 1e6:.2f} ms"
+    if value >= 1e3:
+        return f"{value / 1e3:.2f} µs"
+    return f"{value:.0f} ns"
+
+
+def load(paths):
+    rows = []
+    for path in paths:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    obj = json.loads(line)
+                    rows.append((obj["name"], float(obj["ns_per_iter"]), path))
+        except FileNotFoundError:
+            print(f"warning: {path} not found (skipped)", file=sys.stderr)
+    return rows
+
+
+def render(rows) -> str:
+    out = ["| bench | measured | source |", "|---|---|---|"]
+    for name, value, path in rows:
+        out.append(f"| `{name}` | {fmt(name, value)} | {path} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    ap.add_argument("--update", metavar="MARKDOWN", help="rewrite the marked block in this file")
+    args = ap.parse_args()
+    table = render(load(args.json_files))
+    if not args.update:
+        print(table)
+        return 0
+    begin, end = "<!-- perf-table:begin -->", "<!-- perf-table:end -->"
+    with open(args.update, encoding="utf-8") as fh:
+        text = fh.read()
+    if begin not in text or end not in text:
+        print(f"error: {args.update} lacks {begin}/{end} markers", file=sys.stderr)
+        return 1
+    head, rest = text.split(begin, 1)
+    _, tail = rest.split(end, 1)
+    with open(args.update, "w", encoding="utf-8") as fh:
+        fh.write(f"{head}{begin}\n{table}\n{end}{tail}")
+    print(f"updated {args.update}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
