@@ -6,7 +6,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts test bench-json perf-table clean-artifacts
+.PHONY: artifacts test bench-json bench-json-short perf-table clean-artifacts
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
@@ -21,6 +21,17 @@ bench-json:
 	cargo bench --bench hotpath
 	cargo bench --bench load_scale
 	cargo bench --bench rebalance
+
+# Short mode: every bench binary runs end to end (so every BENCH_*.json
+# artifact exists) but skips the p = 24576 configurations and cuts
+# repetition counts — seconds instead of minutes. CI validates the
+# resulting artifacts line-by-line against the {name, ns_per_iter} schema
+# with tools/validate_bench_json.py so tools/perf_table.py always gets
+# parseable input.
+bench-json-short:
+	BENCH_SHORT=1 $(MAKE) bench-json
+	$(PYTHON) tools/validate_bench_json.py BENCH_hotpath.json \
+		BENCH_load_scale.json BENCH_rebalance.json
 
 # Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
 # (downloaded from CI's bench-json artifact, or produced by `make

@@ -17,17 +17,20 @@ use restore::restore::permutation::{Feistel, RangePermutation};
 use restore::restore::ReStore;
 use restore::runtime::Engine;
 use restore::simnet::cluster::Cluster;
-use restore::util::bench::{bench, black_box, write_json_artifact, BenchResult};
+use restore::util::bench::{bench, black_box, short_mode, write_json_artifact, BenchResult};
 use restore::util::rng::Rng;
 
 fn main() {
     println!("=== hot-path micro-benchmarks ===\n");
     let mut results: Vec<BenchResult> = Vec::new();
+    // `make bench-json-short` (CI schema smoke): cut repetition counts;
+    // every bench still runs once so the artifact exists and parses.
+    let reps = |full: usize| if short_mode() { full.div_ceil(10).max(1) } else { full };
 
     // Feistel throughput
     let f = Feistel::new(1_572_864, 0xF00D); // 24576 PEs * 64 ranges
     let mut i = 0u64;
-    let r = bench("feistel apply (per call)", 10_000, 200_000, || {
+    let r = bench("feistel apply (per call)", 10_000, reps(200_000), || {
         i = (i + 1) % 1_572_864;
         black_box(f.apply(i));
     });
@@ -35,7 +38,7 @@ fn main() {
     results.push(r);
 
     // submit schedule, p=1536, paper default (64 units/PE * r=4)
-    let r = bench("submit schedule p=1536 16MiB/PE r=4 perm", 1, 5, || {
+    let r = bench("submit schedule p=1536 16MiB/PE r=4 perm", 1, reps(5), || {
         let cfg = RestoreConfig::paper_default(1536).unwrap();
         let mut cluster = Cluster::new_execution(1536, 48);
         let mut store = ReStore::new(cfg, &cluster).unwrap();
@@ -45,7 +48,7 @@ fn main() {
     results.push(r);
 
     // submit schedule at tiny ranges (the fig4a stress case)
-    let r = bench("submit schedule p=384 16MiB/PE 1KiB ranges", 1, 3, || {
+    let r = bench("submit schedule p=384 16MiB/PE 1KiB ranges", 1, reps(3), || {
         let cfg = RestoreConfig::builder(384, 64, 262_144)
             .replicas(4)
             .perm_range_bytes(Some(1024))
@@ -63,7 +66,7 @@ fn main() {
     let shards: Vec<Vec<u8>> = (0..48)
         .map(|pe| (0..16_384 * 64).map(|i| (pe * 31 + i) as u8).collect())
         .collect();
-    let r = bench("submit execute p=48 1MiB/PE r=4 perm", 1, 5, || {
+    let r = bench("submit execute p=48 1MiB/PE r=4 perm", 1, reps(5), || {
         let cfg = RestoreConfig::builder(48, 64, 16_384)
             .replicas(4)
             .perm_range_bytes(Some(64 * 1024))
@@ -82,7 +85,7 @@ fn main() {
     let mut store = ReStore::new(cfg, &cluster).unwrap();
     store.submit_virtual(&mut cluster).unwrap();
     let mut rep = 0usize;
-    let r = bench("load-1% resolve+route p=1536", 2, 20, || {
+    let r = bench("load-1% resolve+route p=1536", 2, reps(20), || {
         rep += 1;
         let reqs = load_percent_requests(&store, &cluster, 1.0, rep % 1536);
         black_box(store.load(&mut cluster, &reqs).unwrap());
@@ -92,7 +95,7 @@ fn main() {
 
     // IDL Monte-Carlo step
     let mut rng = Rng::seed_from_u64(1);
-    let r = bench("IDL simulation p=2^20 r=4 (per run)", 1, 5, || {
+    let r = bench("IDL simulation p=2^20 r=4 (per run)", 1, reps(5), || {
         black_box(restore::restore::idl::simulate_failures_until_idl(1 << 20, 4, &mut rng));
     });
     println!("{}", r.line());

@@ -12,7 +12,7 @@ use restore::config::RestoreConfig;
 use restore::restore::load::{load_all_requests, load_percent_requests, scatter_requests};
 use restore::restore::ReStore;
 use restore::simnet::cluster::Cluster;
-use restore::util::bench::{bench, black_box, write_json_artifact, BenchResult};
+use restore::util::bench::{bench, black_box, short_mode, write_json_artifact, BenchResult};
 
 fn run_scale(p: usize, reps: usize, results: &mut Vec<BenchResult>) {
     println!("--- p = {p} (cost-model) ---");
@@ -51,8 +51,14 @@ fn run_scale(p: usize, reps: usize, results: &mut Vec<BenchResult>) {
 fn main() {
     println!("=== load-path scaling benchmarks ===\n");
     let mut results: Vec<BenchResult> = Vec::new();
-    run_scale(1536, 10, &mut results);
-    run_scale(24576, 3, &mut results);
+    if short_mode() {
+        // CI schema smoke (`make bench-json-short`): baseline scale only,
+        // minimal reps — the artifact still exists and parses.
+        run_scale(1536, 2, &mut results);
+    } else {
+        run_scale(1536, 10, &mut results);
+        run_scale(24576, 3, &mut results);
+    }
     // machine-readable perf artifact for CI's cross-PR trajectory
     write_json_artifact("BENCH_load_scale.json", &results).expect("write BENCH_load_scale.json");
     println!("\nwrote BENCH_load_scale.json ({} entries)", results.len());

@@ -1,11 +1,16 @@
 //! §IV-B shrinking-rebalance benchmark (EXPERIMENTS.md §Perf).
 //!
 //! Cost-model runs of `ReStore::rebalance` at the hotpath baseline scale
-//! (p = 1536) and the paper's largest configuration (p = 24576), for
-//! failure fractions that admit the equal-slice §IV-A layout at
-//! p' = (1 - f)·p (1/3 and 1/2 — the §IV-A layout needs p' to divide the
-//! permutation-unit count). Kill patterns take at most 2 members of every
-//! §IV-D group, so no wave is an IDL.
+//! (p = 1536) and the paper's largest configuration (p = 24576). The
+//! balanced unequal-slice layout admits **every** survivor count `p' ≥ r`,
+//! so next to the classic dividing fractions (1/3 and 1/2) each scale also
+//! runs a *non-dividing* `p'` — the kill waves real clusters produce,
+//! which the former equal-slice geometry had to refuse. Kill patterns are
+//! consecutive rank prefixes taking at most 2 members of every §IV-D
+//! group, so no wave is an IDL.
+//!
+//! With `BENCH_SHORT=1` only the p = 1536 configurations run (the CI
+//! schema smoke — see `make bench-json-short`).
 //!
 //! Emits three JSON entries per configuration to `BENCH_rebalance.json`
 //! (the `{name, ns_per_iter}` artifact schema; the name states the unit):
@@ -21,7 +26,7 @@ use restore::config::RestoreConfig;
 use restore::restore::ReStore;
 use restore::simnet::cluster::Cluster;
 use restore::simnet::ulfm;
-use restore::util::bench::{write_json_artifact, BenchResult};
+use restore::util::bench::{short_mode, write_json_artifact, BenchResult};
 
 fn rebalance_at(p: usize, p_new: usize, results: &mut Vec<BenchResult>) {
     let cfg = RestoreConfig::paper_default(p).unwrap();
@@ -29,8 +34,8 @@ fn rebalance_at(p: usize, p_new: usize, results: &mut Vec<BenchResult>) {
     let mut store = ReStore::new(cfg, &cluster).unwrap();
     store.submit_virtual(&mut cluster).unwrap();
 
-    // kill ranks 0..(p - p'): with p' >= p/2 and group stride p/4, every
-    // §IV-D group loses at most 2 of its 4 members — never an IDL
+    // kill ranks 0..(p - p'): with p - p' <= p/2 and group stride p/4,
+    // every §IV-D group loses at most 2 of its 4 members — never an IDL
     let kills: Vec<usize> = (0..p - p_new).collect();
     cluster.kill(&kills);
     let (_failed, map, _cost) = ulfm::recover(&mut cluster);
@@ -42,10 +47,11 @@ fn rebalance_at(p: usize, p_new: usize, results: &mut Vec<BenchResult>) {
     let wall = wall0.elapsed().as_secs_f64();
     let sim = cluster.now() - sim0;
     let frac = (p - p_new) as f64 / p as f64;
+    let dividing = if store.distribution().equal_slices() { "equal" } else { "unequal" };
 
-    let tag = format!("p={p} f={:.2}", frac);
+    let tag = format!("p={p} p'={p_new} f={:.2} {dividing}", frac);
     println!(
-        "rebalance {tag}: p'={p_new}, {} transfers, {:.2} GiB migrated, sim {:.1} ms, wall {:.1} ms",
+        "rebalance {tag}: {} transfers, {:.2} GiB migrated, sim {:.1} ms, wall {:.1} ms",
         report.transfers,
         report.migrated_bytes as f64 / (1u64 << 30) as f64,
         sim * 1e3,
@@ -62,8 +68,13 @@ fn rebalance_at(p: usize, p_new: usize, results: &mut Vec<BenchResult>) {
 fn main() {
     println!("=== shrinking-rebalance benchmarks (cost-model) ===\n");
     let mut results: Vec<BenchResult> = Vec::new();
-    // p = 2^a·3 worlds: both 2/3·p and 1/2·p divide the unit count
-    for (p, targets) in [(1536usize, [1024usize, 768]), (24576, [16384, 12288])] {
+    // p = 2^a·3 worlds. Per scale: one NON-dividing p' (balanced unequal
+    // slices — the generalized layout's new coverage) plus the two classic
+    // dividing fractions 1/3 and 1/2.
+    let configs: &[(usize, [usize; 3])] =
+        &[(1536usize, [1531usize, 1024, 768]), (24576, [23003, 16384, 12288])];
+    let configs = if short_mode() { &configs[..1] } else { configs };
+    for &(p, targets) in configs {
         for p_new in targets {
             rebalance_at(p, p_new, &mut results);
         }

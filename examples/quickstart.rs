@@ -47,11 +47,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // The shrink bumped the communicator epoch; the store must adopt the
-    // new world before it will route again. 14 survivors don't admit the
-    // equal-slice §IV-A layout (r = 4 does not divide 14), so this falls
-    // back to acknowledging: dead stores reclaimed, routing around holes.
-    // See examples/replica_repair.rs for the full rebalance story.
-    store.rebalance_or_acknowledge(&mut cluster, &map)?;
+    // new world before it will route again. With balanced unequal slices
+    // every survivor count >= r admits the §IV-B rebalance, so the 14
+    // survivors get a fresh layout (two slice sizes, ⌈n/14⌉ and ⌊n/14⌋)
+    // with full r = 4 replication — no lingering dead-rank holes. See
+    // examples/replica_repair.rs for the full story (and the repair-based
+    // alternative when the application keeps the communicator).
+    let rebalanced = store.rebalance_or_acknowledge(&mut cluster, &map)?;
+    if let Some(report) = rebalanced {
+        println!(
+            "rebalance: layout rewritten over {} survivors ({} migrated)",
+            report.new_world,
+            human_bytes(report.migrated_bytes),
+        );
+    }
 
     let requests = scatter_requests(&store, &cluster, &failed);
     let out = store.load(&mut cluster, &requests)?;

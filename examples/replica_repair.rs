@@ -1,26 +1,30 @@
 //! §IV-B shrinking recovery, end to end: agree → shrink → rebalance → load.
 //!
 //! The paper: "we also support shrinking recovery instead of recovery using
-//! spare compute nodes". This example drives the full story the rebalance
-//! subsystem enables:
+//! spare compute nodes" — on *whatever* resources survive. This example
+//! drives the full story the balanced unequal-slice rebalance enables,
+//! deliberately through survivor counts that do NOT divide the block
+//! space (the kill waves real clusters actually produce):
 //!
-//! 1. a failure wave kills half the PEs (2 of every §IV-D group, so no data
-//!    is lost);
+//! 1. a failure wave kills 19 of 64 PEs (at most 2 per §IV-D group, so no
+//!    data is lost) — p' = 45 divides neither n nor r;
 //! 2. the survivors run the ULFM-style `agree` + `shrink` — the shrink
 //!    bumps the communicator epoch, and the store refuses to route until it
 //!    adopts the new world (demonstrated live);
-//! 3. `ReStore::rebalance` rewrites the §IV-A layout over the `p'`
-//!    survivors, migrating only the slices whose holder set changed;
+//! 3. `ReStore::rebalance` rewrites the balanced §IV-A layout over the
+//!    `p'` survivors (⌊n/p'⌋/⌈n/p'⌉-block slices, closed-form
+//!    boundaries), migrating only the intervals whose holder set changed;
 //! 4. recovered loads verify bit-exactness, and `restore::idl` quantifies
-//!    the payoff: before the rebalance every group is down to 2 copies
-//!    (IDL risk `P(32, 2, f)`), afterwards all slots are back at r = 4 on
-//!    the new world (`P(32, 4, f)` — the fresh-replication level).
+//!    the payoff: before the rebalance slots are down to 2–3 copies,
+//!    afterwards all slots are back at r = 4 on the new world (the
+//!    fresh-replication level).
 //!
-//! A second wave repeats the cycle at p' = 32 → p'' = 16, showing that
-//! rebalances chain. A final wave then kills PEs *without* shrinking and
-//! runs §IV-E probing-sequence replica repair inside the rebalanced world
-//! — the two recovery mechanisms compose: rebalance when the survivor
-//! count admits the §IV-A layout, repair in place otherwise.
+//! A second wave repeats the cycle at p' = 45 → p'' = 23, showing that
+//! rebalances chain through arbitrary worlds. A final wave then kills PEs
+//! *without* shrinking and runs §IV-E probing-sequence replica repair
+//! inside the rebalanced world — the two recovery mechanisms compose:
+//! rebalance after a shrink (now feasible for every p' ≥ r), repair in
+//! place when the application keeps the communicator.
 //!
 //! Run with: `cargo run --release --example replica_repair`
 
@@ -57,28 +61,32 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         store.epoch()
     );
 
-    // --- wave 1: 64 -> 32 ---------------------------------------------------
-    // Kill ranks 0..32: every §IV-D group (stride p/r = 16) loses exactly 2
-    // of its 4 members — recoverable, but one failure away from risk.
-    let wave1: Vec<usize> = (0..32).collect();
-    run_wave(&mut cluster, &mut store, &shards, &wave1, "wave 1")?;
+    // --- wave 1: 64 -> 45 (non-dividing) ------------------------------------
+    // Kill ranks 0..19: every §IV-D group (stride p/r = 16) loses at most
+    // 2 of its 4 members — recoverable. p' = 45 is the layout the old
+    // equal-slice geometry had to refuse (45 ∤ n, 4 ∤ 45); the balanced
+    // unequal slices (364/365 blocks) carry it.
+    let wave1: Vec<usize> = (0..19).collect();
+    run_wave(&mut cluster, &mut store, &shards, &wave1, "wave 1 (64 -> 45)")?;
 
-    // --- wave 2: 32 -> 16 ---------------------------------------------------
-    // The new groups at p' = 32 have stride 8 in distribution ranks; the
-    // survivors are cluster ranks 32..64, so killing 32..48 again takes 2
-    // members of every group.
-    let wave2: Vec<usize> = (32..48).collect();
-    run_wave(&mut cluster, &mut store, &shards, &wave2, "wave 2")?;
+    // --- wave 2: 45 -> 23 (non-dividing, chained) ---------------------------
+    // Kill the 22 lowest survivors (= new ranks 0..22): holders sit at
+    // stride ⌊45/4⌋ = 11 in the rebalanced world, so a window of 22
+    // consecutive ranks takes at most 2 of any slot's 4 holders.
+    let wave2: Vec<usize> = cluster.survivors()[..22].to_vec();
+    run_wave(&mut cluster, &mut store, &shards, &wave2, "wave 2 (45 -> 23)")?;
 
     // --- wave 3: §IV-E repair inside the rebalanced world -------------------
-    // Two more PEs die, but 14 survivors cannot carry the equal-slice
-    // layout — instead of shrinking again, re-create the lost replicas on
+    // Two more PEs die. The application *could* shrink and rebalance again
+    // (21 >= r = 4 survivors admit the balanced layout) — here it instead
+    // keeps the communicator and re-creates the lost replicas on
     // probing-sequence homes (Appendix Distribution A), leaving every
     // surviving replica in place. Repair composes with the rebalanced
-    // distribution: planning runs in the compact p'' = 16 rank space and
+    // distribution: planning runs in the compact p'' = 23 rank space and
     // translates to cluster ranks at the store/network boundary.
     println!("\n=== wave 3: 2 PEs die; repair instead of shrink ===");
-    cluster.kill(&[48, 49]);
+    let extra: Vec<usize> = cluster.survivors()[..2].to_vec();
+    cluster.kill(&extra);
     let degraded = count_slots_below_r(&store, &cluster);
     let rep = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing)?;
     println!(
@@ -144,14 +152,20 @@ fn run_wave(
         other => return Err(format!("expected StaleEpoch, got {other:?}").into()),
     }
 
-    // IDL risk for the NEXT failures, before the rebalance: every group is
-    // down to 2 surviving copies spread over p' PEs.
-    let alive_copies = {
-        // all slots have the same survivor count in this symmetric wave
-        let slot0 = store.holder_index().holders_of(0);
-        slot0.iter().filter(|&&pe| cluster.is_alive(pe as usize)).count() as u64
-    };
-    println!("surviving copies per slot before rebalance: {alive_copies}");
+    // IDL risk for the NEXT failures, before the rebalance: the hardest-hit
+    // slots are down to fewer surviving copies spread over p' PEs.
+    let alive_copies = (0..store.distribution().world())
+        .map(|slot| {
+            store
+                .holder_index()
+                .holders_of(slot)
+                .iter()
+                .filter(|&&pe| cluster.is_alive(pe as usize))
+                .count() as u64
+        })
+        .min()
+        .unwrap();
+    println!("surviving copies on the hardest-hit slot before rebalance: {alive_copies}");
     print!("P(IDL | f more failures) before:");
     for f in [2u64, 4, 8] {
         print!("  f={f}: {:.2e}", idl::p_idl_leq(p_new, alive_copies, f));
@@ -161,7 +175,16 @@ fn run_wave(
     // Rebalance: fresh §IV-A layout over the survivors, minimal migration.
     let t0 = cluster.now();
     let report = store.rebalance(cluster, &map)?;
-    let stored: u64 = (p_new) * R as u64 * (store.distribution().blocks_per_pe() * BS as u64);
+    // total replicated volume is r·n·bs regardless of how p' slices it
+    let stored: u64 = R as u64 * store.distribution().n_blocks() * BS as u64;
+    let dist = store.distribution();
+    println!(
+        "balanced slices at p' = {p_new}: {} x {} blocks + {} x {} blocks",
+        dist.n_blocks() % p_new,
+        dist.max_slice_blocks(),
+        p_new - dist.n_blocks() % p_new,
+        dist.n_blocks() / p_new,
+    );
     println!(
         "rebalance: {} transfers moved {} ({:.1} % of the {} stored), kept {} local, {}",
         report.transfers,

@@ -43,6 +43,15 @@ pub enum Error {
     )]
     StaleEpoch { store_epoch: u64, cluster_epoch: u64 },
 
+    /// A `RankMap` no longer (or never) described the cluster's current
+    /// survivor set — e.g. it came from an earlier shrink and further PEs
+    /// failed since. The §IV-B policy (`ReStore::rebalance` /
+    /// `rebalance_or_acknowledge`) validates the map up front so a stale
+    /// map can never steer it into the wrong branch; re-run `ulfm::shrink`
+    /// after the latest failures to obtain a current map.
+    #[error("stale rank map: {0}; re-run ulfm::shrink after the latest failures")]
+    StaleRankMap(String),
+
     /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;
     /// the variant itself stays so error handling is feature-independent).
     #[error("xla runtime: {0}")]

@@ -1,18 +1,42 @@
-//! Replica placement: the paper's data distribution (§IV-A, §IV-B).
+//! Replica placement: the paper's data distribution (§IV-A, §IV-B),
+//! generalized to **balanced unequal slices**.
 //!
 //! Copy `k` of the block with ID `x` lives on PE
 //!
 //! ```text
-//! L(x, k) = ⌊π(x)·p/n⌋ + k·p/r   (mod p)
+//! L(x, k) = slice_of(π(x)) + k·⌊p/r⌋   (mod p)
 //! ```
 //!
 //! where `π` permutes *permutation ranges* of `s_pr` consecutive blocks
-//! (identity when permutation is disabled). Because `n = p · blocks_per_pe`,
-//! `⌊y·p/n⌋ = ⌊y / blocks_per_pe⌋` — the permuted ID space is divided into
-//! `p` contiguous *slices* of `blocks_per_pe` blocks, and every PE stores
-//! `r` whole slices (one per copy). The PEs `{ i ≡ g (mod p/r) }` store
-//! identical data — the §IV-D *groups* whose simultaneous failure is the
-//! only irrecoverable event.
+//! (identity when permutation is disabled) and `slice_of` maps a permuted
+//! block ID to its *slice*. The permuted ID space `[0, n)` is divided into
+//! `p` contiguous slices — one per PE — in the **balanced unequal**
+//! partition: the first `n mod p` slices hold `⌈n/p⌉` blocks, the rest
+//! `⌊n/p⌋`. Slice boundaries have the closed form
+//!
+//! ```text
+//! slice_start(i) = i·⌊n/p⌋ + min(i, n mod p)
+//! ```
+//!
+//! and the inverse `slice_of(y)` is one division plus one branch (big
+//! slices are a contiguous prefix). When `p | n` every slice has
+//! `n/p` blocks and `slice_of(y) = ⌊y·p/n⌋ = ⌊y / (n/p)⌋` — the paper's
+//! original equal-slice geometry, which `Distribution::new` (submit time)
+//! always produces. The unequal case is what makes §IV-B *shrinking
+//! recovery* work for **arbitrary** survivor counts: `reshaped(p')` only
+//! requires `r ≤ p' ≤ n`, so a 16 → 13 kill wave rebalances instead of
+//! lingering in the dead-rank layout.
+//!
+//! With `r ∤ p` the copy stride `⌊p/r⌋` still yields `r` pairwise distinct
+//! holders (`k·⌊p/r⌋ < p` for `k < r`), but the §IV-D *groups* (`{ i ≡ g
+//! (mod p/r) }` storing identical data) are exact only when `r | p`;
+//! group-based IDL formulas are an approximation otherwise.
+//!
+//! A piece of a request can now be misaligned against both the unit and
+//! the slice lattice, so [`Distribution::permuted_pieces`] splits at
+//! permutation-unit edges first and then at slice edges
+//! ([`Distribution::split_at_slices`]) — each final piece has a single
+//! well-defined holder set.
 //!
 //! ## The placement index (perf)
 //!
@@ -23,7 +47,8 @@
 //! small enough ([`UNIT_INDEX_MAX_UNITS`]) the constructor precomputes the
 //! whole unit→slot table once — one `Vec<u32>` shared (via `Arc`) by
 //! submit, load, and repair — turning the per-unit mapping into one L1/L2
-//! array read.
+//! array read. [`Distribution::reshaped`] shares the table (and the
+//! cipher) with the old layout by `Arc`: a rebalance re-derives nothing.
 //!
 //! Trade-off: 4 bytes per permutation unit of *global* memory. At the
 //! paper's defaults (256 KiB ranges, 16 MiB/PE ⇒ 64 units/PE) that is
@@ -67,12 +92,20 @@ pub struct Distribution {
     /// kept so [`Distribution::reshaped`] can re-reduce it at the new world
     /// size exactly as a fresh construction would.
     offset_cfg: usize,
-    blocks_per_pe: u64,
-    /// Permutation unit in blocks (= blocks_per_pe when permutation is off,
-    /// so the whole shard is one unit).
+    /// Total number of blocks `n` (invariant across reshapes).
+    n: u64,
+    /// `⌊n/p⌋` — the small-slice length.
+    q: u64,
+    /// `n mod p` — the number of big (`⌈n/p⌉`-block) slices, which form a
+    /// contiguous prefix of the slice space. 0 ⇔ the equal-slice layout.
+    rem: u64,
+    /// Permutation unit in blocks. With permutation disabled this tracks
+    /// the slice size when `p | n` (one unit per slice) and degenerates to
+    /// the whole ID space (`s_pr = n`, a single unit) otherwise — the
+    /// identity map is unaffected either way.
     s_pr: u64,
     /// True when the configuration disabled permutation ranges (the unit
-    /// permutation is the identity and `s_pr` tracks the slice size).
+    /// permutation is the identity).
     identity: bool,
     perm: Arc<dyn RangePermutation>,
     /// Precomputed `unit → permuted slot` table (forward direction of
@@ -82,83 +115,124 @@ pub struct Distribution {
 }
 
 impl Distribution {
+    /// The submit-time layout of a validated config — always equal slices
+    /// (`n = p · blocks_per_pe`), so this is just
+    /// [`Distribution::new_balanced`] at the config's world: the config
+    /// guarantees
+    /// `r ≤ p ≤ n`, `p | n`, and (with permutation on) `s_pr | n`, making
+    /// the balanced constructor infallible here. One constructor body
+    /// keeps `new`, `new_balanced`, and `reshaped` permanently in sync —
+    /// the golden "reshaped ≡ fresh balanced construction" invariant
+    /// depends on it.
     pub fn new(cfg: &RestoreConfig) -> Self {
-        let bpp = cfg.blocks_per_pe as u64;
-        let (s_pr, perm): (u64, Arc<dyn RangePermutation>) = match cfg.perm_range_blocks {
+        Distribution::new_balanced(
+            cfg.world,
+            cfg.n_blocks(),
+            cfg.replicas,
+            cfg.perm_range_blocks.map(|s| s as u64),
+            cfg.seed,
+            cfg.placement_offset,
+        )
+        .expect("RestoreConfig::validate guarantees a feasible balanced layout")
+    }
+
+    /// A from-scratch balanced (possibly unequal-slice) layout: `world` PEs
+    /// carrying `n_blocks` blocks with `replicas` copies each — the golden
+    /// reference every [`Distribution::reshaped`] must equal. Unlike
+    /// [`Distribution::new`] this does not require `world | n_blocks`; the
+    /// slice partition is the balanced ⌊n/p⌋/⌈n/p⌉ split. Requires
+    /// `replicas ≤ world ≤ n_blocks` and, with permutation ranges on,
+    /// `perm_range_blocks | n_blocks` (the shared permuted unit lattice).
+    pub fn new_balanced(
+        world: usize,
+        n_blocks: u64,
+        replicas: usize,
+        perm_range_blocks: Option<u64>,
+        seed: u64,
+        placement_offset: usize,
+    ) -> Result<Self> {
+        if world == 0 || replicas == 0 || replicas > world || (world as u64) > n_blocks {
+            return Err(Error::Config(format!(
+                "balanced layout needs 1 <= r={replicas} <= p={world} <= n={n_blocks}"
+            )));
+        }
+        let (s_pr, perm): (u64, Arc<dyn RangePermutation>) = match perm_range_blocks {
             Some(s) => {
-                let domain = cfg.n_blocks() / s as u64;
-                (s as u64, Arc::new(Feistel::new(domain, cfg.seed)))
+                if s == 0 || n_blocks % s != 0 {
+                    return Err(Error::Config(format!(
+                        "perm range of {s} blocks must divide n = {n_blocks} blocks"
+                    )));
+                }
+                (s, Arc::new(Feistel::new(n_blocks / s, seed)))
+            }
+            None if n_blocks % world as u64 == 0 => {
+                // equal slices: one identity unit per slice, exactly as
+                // `Distribution::new` lays it out
+                (n_blocks / world as u64, Arc::new(Identity { domain: world as u64 }))
             }
             None => {
-                let domain = cfg.world as u64; // one unit per PE shard
-                (bpp, Arc::new(Identity { domain }))
+                // unequal slices: the identity map needs no unit lattice;
+                // collapse to a single whole-space unit
+                (n_blocks, Arc::new(Identity { domain: 1 }))
             }
         };
-        // Placement index: only worth materializing for a real permutation
-        // (the identity maps units for free) and a bounded domain.
-        let unit_index = (cfg.perm_range_blocks.is_some()
+        let unit_index = (perm_range_blocks.is_some()
             && perm.domain() <= UNIT_INDEX_MAX_UNITS)
             .then(|| {
                 Arc::new((0..perm.domain()).map(|u| perm.apply(u) as u32).collect::<Vec<u32>>())
             });
-        Distribution {
-            p: cfg.world,
-            r: cfg.replicas,
-            offset: cfg.placement_offset % cfg.world,
-            offset_cfg: cfg.placement_offset,
-            blocks_per_pe: bpp,
+        Ok(Distribution {
+            p: world,
+            r: replicas,
+            offset: placement_offset % world,
+            offset_cfg: placement_offset,
+            n: n_blocks,
+            q: n_blocks / world as u64,
+            rem: n_blocks % world as u64,
             s_pr,
-            identity: cfg.perm_range_blocks.is_none(),
+            identity: perm_range_blocks.is_none(),
             perm,
             unit_index,
-        }
+        })
     }
 
     /// Can this layout be rewritten for a post-shrink world of `new_world`
-    /// PEs holding the same `n` blocks? The §IV-A layout needs equal slices
-    /// (`new_world | n`), `r | new_world` for the copy stride, and — with
-    /// permutation ranges on — unit-aligned slices (`s_pr | n/new_world`,
-    /// i.e. `new_world` divides the unit count) so the shared permuted ID
-    /// space carries over unchanged.
+    /// PEs holding the same `n` blocks? With balanced unequal slices the
+    /// only requirements are `r ≤ new_world` (the `r` copies must land on
+    /// distinct PEs) and `new_world ≤ n` (no empty slices): every real kill
+    /// wave that leaves at least `r` survivors admits the layout. Unit
+    /// misalignment is handled by splitting request pieces at both unit
+    /// *and* slice edges, so no divisibility constraint remains.
     pub fn reshape_feasible(&self, new_world: usize) -> bool {
-        if new_world == 0 || self.n_blocks() % new_world as u64 != 0 {
-            return false;
-        }
-        if new_world % self.r != 0 {
-            return false;
-        }
-        let new_bpp = self.n_blocks() / new_world as u64;
-        self.identity || new_bpp % self.s_pr == 0
+        new_world >= self.r && new_world as u64 <= self.n
     }
 
-    /// The same data, re-laid-out §IV-A-style over `new_world` PEs — the
-    /// core of the shrinking-recovery rebalance (§IV-B): the permuted block
-    /// ID space (permutation, seed, unit size, and therefore the
-    /// precomputed unit→slot placement index) is **shared by `Arc`** with
-    /// the old layout, only the slice partition (`blocks_per_pe`), the copy
-    /// stride `new_world/r`, and the offset reduction change. Identical to
-    /// `Distribution::new` of a fresh config at `new_world` (golden-tested),
-    /// without re-deriving Feistel keys or re-materializing the index.
+    /// The same data, re-laid-out over `new_world` PEs with balanced
+    /// ⌊n/p'⌋/⌈n/p'⌉ slices — the core of the shrinking-recovery rebalance
+    /// (§IV-B): the permuted block ID space (permutation, seed, unit size,
+    /// and therefore the precomputed unit→slot placement index) is
+    /// **shared by `Arc`** with the old layout; only the slice partition,
+    /// the copy stride `⌊p'/r⌋`, and the offset reduction change.
+    /// Identical to [`Distribution::new_balanced`] at `new_world`
+    /// (golden-tested), without re-deriving Feistel keys or
+    /// re-materializing the index.
     ///
-    /// With permutation disabled the unit is the whole slice, so the
-    /// identity permutation is simply re-instantiated at the new domain.
+    /// With permutation disabled the identity map carries over; the unit
+    /// bookkeeping is re-derived exactly as `new_balanced` would (one unit
+    /// per slice when `p' | n`, a single whole-space unit otherwise).
     pub fn reshaped(&self, new_world: usize) -> Result<Distribution> {
         if !self.reshape_feasible(new_world) {
             return Err(Error::Config(format!(
-                "cannot reshape layout to world {new_world}: need {new_world} | {} blocks, \
-                 r={} | {new_world}{}",
-                self.n_blocks(),
-                self.r,
-                if self.identity {
-                    String::new()
-                } else {
-                    format!(", and {new_world} | {} permutation units", self.perm.domain())
-                }
+                "cannot reshape layout to world {new_world}: need r = {} <= {new_world} <= n = {}",
+                self.r, self.n
             )));
         }
-        let new_bpp = self.n_blocks() / new_world as u64;
         let (s_pr, perm, unit_index): (u64, Arc<dyn RangePermutation>, _) = if self.identity {
-            (new_bpp, Arc::new(Identity { domain: new_world as u64 }), None)
+            if self.n % new_world as u64 == 0 {
+                (self.n / new_world as u64, Arc::new(Identity { domain: new_world as u64 }), None)
+            } else {
+                (self.n, Arc::new(Identity { domain: 1 }), None)
+            }
         } else {
             (self.s_pr, Arc::clone(&self.perm), self.unit_index.clone())
         };
@@ -167,7 +241,9 @@ impl Distribution {
             r: self.r,
             offset: self.offset_cfg % new_world,
             offset_cfg: self.offset_cfg,
-            blocks_per_pe: new_bpp,
+            n: self.n,
+            q: self.n / new_world as u64,
+            rem: self.n % new_world as u64,
             s_pr,
             identity: self.identity,
             perm,
@@ -183,20 +259,71 @@ impl Distribution {
         self.r
     }
 
-    pub fn blocks_per_pe(&self) -> u64 {
-        self.blocks_per_pe
-    }
-
     /// Permutation-unit size in blocks.
     pub fn perm_range_blocks(&self) -> u64 {
         self.s_pr
     }
 
     pub fn n_blocks(&self) -> u64 {
-        self.p as u64 * self.blocks_per_pe
+        self.n
     }
 
-    /// Group offset `p/r` between successive copies (§IV-A).
+    /// Are all slices the same length (`p | n`)?
+    pub fn equal_slices(&self) -> bool {
+        self.rem == 0
+    }
+
+    /// Length of the longest slice, `⌈n/p⌉` — what a pre-sized per-slice
+    /// buffer must accommodate.
+    pub fn max_slice_blocks(&self) -> u64 {
+        self.q + (self.rem > 0) as u64
+    }
+
+    /// Start of slice `i` in permuted block IDs (valid for `i ≤ p`; at
+    /// `i = p` this is `n`): `i·⌊n/p⌋ + min(i, n mod p)` — the closed-form
+    /// prefix sum of the balanced slice lengths.
+    #[inline]
+    pub fn slice_start(&self, i: usize) -> u64 {
+        debug_assert!(i <= self.p);
+        let i = i as u64;
+        i * self.q + i.min(self.rem)
+    }
+
+    /// End of slice `i` (== `slice_start(i + 1)`).
+    #[inline]
+    pub fn slice_end(&self, i: usize) -> u64 {
+        self.slice_start(i + 1)
+    }
+
+    /// Length of slice `i`: `⌈n/p⌉` for the first `n mod p` slices,
+    /// `⌊n/p⌋` for the rest.
+    #[inline]
+    pub fn slice_len(&self, i: usize) -> u64 {
+        debug_assert!(i < self.p);
+        self.q + ((i as u64) < self.rem) as u64
+    }
+
+    /// The permuted interval `[slice_start(i), slice_end(i))` of slice `i`.
+    pub fn slice_range(&self, i: usize) -> BlockRange {
+        BlockRange::new(self.slice_start(i), self.slice_end(i))
+    }
+
+    /// Slice containing permuted block `y` — the closed-form inverse of
+    /// [`Distribution::slice_start`]: one division plus one branch (the
+    /// big slices form a contiguous prefix of length `rem·(q+1)`).
+    #[inline]
+    pub fn slice_of(&self, y: u64) -> usize {
+        debug_assert!(y < self.n);
+        let big_end = self.rem * (self.q + 1);
+        if y < big_end {
+            (y / (self.q + 1)) as usize
+        } else {
+            (self.rem + (y - big_end) / self.q) as usize
+        }
+    }
+
+    /// Group offset `⌊p/r⌋` between successive copies (§IV-A; exact
+    /// `p/r` when `r | p`).
     pub fn copy_stride(&self) -> usize {
         self.p / self.r
     }
@@ -206,8 +333,9 @@ impl Distribution {
         self.offset
     }
 
-    /// §IV-D group of a PE: all PEs with equal `pe mod p/r` store the same
-    /// slices.
+    /// §IV-D group of a PE: all PEs with equal `pe mod ⌊p/r⌋` store the
+    /// same slices **when `r | p`**; with a non-dividing `r` the stride
+    /// wraps unevenly and this is only the first-copy neighborhood.
     pub fn group_of(&self, pe: usize) -> usize {
         pe % self.copy_stride()
     }
@@ -244,12 +372,13 @@ impl Distribution {
 
     /// PE owning the *primary* (k = 0) copy of permuted block `y`.
     pub fn primary_of_permuted(&self, y: u64) -> usize {
-        debug_assert!(y < self.n_blocks());
-        (y / self.blocks_per_pe) as usize
+        debug_assert!(y < self.n);
+        self.slice_of(y)
     }
 
     /// PE holding copy `k` of permuted block `y`: `L` of the paper
-    /// (plus the configurable constant placement offset).
+    /// (plus the configurable constant placement offset). The `r` holders
+    /// are pairwise distinct for any `r ≤ p`: `k·⌊p/r⌋ < p` for `k < r`.
     pub fn holder(&self, y: u64, k: usize) -> usize {
         debug_assert!(k < self.r);
         (self.primary_of_permuted(y) + k * self.copy_stride() + self.offset) % self.p
@@ -265,14 +394,13 @@ impl Distribution {
         debug_assert!(pe < self.p && k < self.r);
         let primary =
             (pe + 2 * self.p - (k * self.copy_stride() + self.offset) % self.p) % self.p;
-        let start = primary as u64 * self.blocks_per_pe;
-        BlockRange::new(start, start + self.blocks_per_pe)
+        self.slice_range(primary)
     }
 
-    /// Original block range submitted by `pe` (the application's shard).
+    /// Original block range submitted by `pe` (the application's shard) —
+    /// the same balanced partition as the permuted slices, in original IDs.
     pub fn shard_of(&self, pe: usize) -> BlockRange {
-        let start = pe as u64 * self.blocks_per_pe;
-        BlockRange::new(start, start + self.blocks_per_pe)
+        BlockRange::new(self.slice_start(pe), self.slice_end(pe))
     }
 
     /// Decompose an *original* block range into permuted pieces, each fully
@@ -282,8 +410,9 @@ impl Distribution {
         for unit_piece in range.chunks(self.s_pr) {
             let perm_start = self.permute_block(unit_piece.start);
             // A piece inside one permutation unit maps contiguously; it can
-            // still straddle a slice boundary if s_pr does not divide
-            // blocks_per_pe alignment of the permuted start — split there.
+            // still straddle one or more slice boundaries (units and slices
+            // are independent lattices once slices are unequal) — split at
+            // every slice edge it crosses.
             let piece = PermutedPiece {
                 perm_start,
                 orig_start: unit_piece.start,
@@ -298,7 +427,7 @@ impl Distribution {
         let mut orig = piece.orig_start;
         let end = piece.perm_start + piece.len;
         while start < end {
-            let slice_end = (start / self.blocks_per_pe + 1) * self.blocks_per_pe;
+            let slice_end = self.slice_end(self.slice_of(start));
             let stop = slice_end.min(end);
             out.push(PermutedPiece { perm_start: start, orig_start: orig, len: stop - start });
             orig += stop - start;
@@ -312,7 +441,9 @@ impl std::fmt::Debug for Distribution {
         f.debug_struct("Distribution")
             .field("p", &self.p)
             .field("r", &self.r)
-            .field("blocks_per_pe", &self.blocks_per_pe)
+            .field("n", &self.n)
+            .field("q", &self.q)
+            .field("rem", &self.rem)
             .field("s_pr", &self.s_pr)
             .field("unit_index", &self.unit_index.as_ref().map(|ix| ix.len()))
             .finish()
@@ -396,6 +527,50 @@ mod tests {
     }
 
     #[test]
+    fn balanced_slice_geometry_closed_forms() {
+        // n = 100 over p = 7: rem = 2 big slices of 15, then 5 of 14.
+        let d = Distribution::new_balanced(7, 100, 3, None, 1, 0).unwrap();
+        assert!(!d.equal_slices());
+        assert_eq!(d.max_slice_blocks(), 15);
+        let lens: Vec<u64> = (0..7).map(|i| d.slice_len(i)).collect();
+        assert_eq!(lens, vec![15, 15, 14, 14, 14, 14, 14]);
+        assert_eq!(lens.iter().sum::<u64>(), 100);
+        // slice_start is the prefix sum of the lengths; slice_of inverts it
+        let mut start = 0u64;
+        for i in 0..7usize {
+            assert_eq!(d.slice_start(i), start);
+            assert_eq!(d.slice_end(i), start + lens[i]);
+            assert_eq!(d.slice_range(i).len(), lens[i]);
+            start += lens[i];
+        }
+        assert_eq!(d.slice_start(7), 100);
+        for y in 0..100u64 {
+            let i = d.slice_of(y);
+            assert!(d.slice_start(i) <= y && y < d.slice_end(i), "y={y} slice {i}");
+        }
+        // shard partition mirrors the slice partition in original IDs
+        assert_eq!(d.shard_of(0), BlockRange::new(0, 15));
+        assert_eq!(d.shard_of(2), BlockRange::new(30, 44));
+    }
+
+    #[test]
+    fn balanced_holders_distinct_for_non_dividing_r() {
+        // r = 4 over p = 13: stride ⌊13/4⌋ = 3, holders {s, s+3, s+6, s+9}.
+        let d = Distribution::new_balanced(13, 16 * 64, 4, Some(16), 0xD157, 0).unwrap();
+        assert_eq!(d.copy_stride(), 3);
+        for y in (0..d.n_blocks()).step_by(17) {
+            let hs = d.holders(y);
+            let set: std::collections::HashSet<_> = hs.iter().collect();
+            assert_eq!(set.len(), 4, "y={y}: holders {hs:?} not distinct");
+            for (k, &h) in hs.iter().enumerate() {
+                assert_eq!(h, (d.slice_of(y) + 3 * k) % 13);
+                // stored_slice stays the inverse view
+                assert!(d.stored_slice(h, k).contains(y));
+            }
+        }
+    }
+
+    #[test]
     fn pieces_cover_request_and_respect_boundaries() {
         let d = dist(8, 64, 2, Some(8));
         let req = BlockRange::new(5, 200);
@@ -412,6 +587,32 @@ mod tests {
             let last_slice = (p.perm_start + p.len - 1) / 64;
             assert_eq!(first_slice, last_slice);
             // mapping is consistent with permute_block
+            assert_eq!(d.permute_block(p.orig_start), p.perm_start);
+        }
+    }
+
+    #[test]
+    fn pieces_split_at_unit_and_unequal_slice_edges() {
+        // n = 1024 blocks over p' = 13 with 16-block units: slice
+        // boundaries are NOT unit-aligned, so pieces must split at both
+        // lattices and still cover the request exactly.
+        let d = Distribution::new_balanced(13, 1024, 4, Some(16), 0xD157, 0).unwrap();
+        let req = BlockRange::new(3, 997);
+        let mut pieces = Vec::new();
+        d.permuted_pieces(req, &mut pieces);
+        assert_eq!(pieces.iter().map(|p| p.len).sum::<u64>(), req.len());
+        let mut orig = req.start;
+        for p in &pieces {
+            assert_eq!(p.orig_start, orig, "pieces in request order");
+            orig += p.len;
+            // single slice per piece
+            assert_eq!(
+                d.slice_of(p.perm_start),
+                d.slice_of(p.perm_start + p.len - 1),
+                "piece {p:?} crosses a slice edge"
+            );
+            // single unit per piece
+            assert_eq!(p.perm_start / 16, (p.perm_start + p.len - 1) / 16);
             assert_eq!(d.permute_block(p.orig_start), p.perm_start);
         }
     }
@@ -456,38 +657,47 @@ mod tests {
     }
 
     #[test]
-    fn reshaped_matches_fresh_construction() {
+    fn reshaped_matches_fresh_balanced_construction() {
         // The rebalance layout must be indistinguishable from building a
-        // new Distribution at the shrunken world from scratch — same
-        // permuted space, same holders, same slices.
-        for (s_pr, new_p) in [(Some(16usize), 8usize), (Some(16), 4), (None, 8), (None, 4)] {
+        // new balanced Distribution at the shrunken world from scratch —
+        // same permuted space, same holders, same slices — for dividing
+        // AND non-dividing survivor counts.
+        for (s_pr, new_p) in [
+            (Some(16u64), 8usize),
+            (Some(16), 4),
+            (Some(16), 13),
+            (Some(16), 7),
+            (Some(16), 5),
+            (None, 8),
+            (None, 4),
+            (None, 13),
+            (None, 6),
+        ] {
             let cfg = RestoreConfig::builder(16, 8, 64)
                 .replicas(4)
-                .perm_range_blocks(s_pr)
+                .perm_range_blocks(s_pr.map(|s| s as usize))
                 .seed(0xD157)
                 .build()
                 .unwrap();
             let old = Distribution::new(&cfg);
             let got = old.reshaped(new_p).unwrap();
-            let fresh_cfg = RestoreConfig::builder(new_p, 8, (cfg.n_blocks() as usize) / new_p)
-                .replicas(4)
-                .perm_range_blocks(s_pr)
-                .seed(0xD157)
-                .build()
-                .unwrap();
-            let want = Distribution::new(&fresh_cfg);
+            let want =
+                Distribution::new_balanced(new_p, cfg.n_blocks(), 4, s_pr, 0xD157, 0).unwrap();
             assert_eq!(got.world(), want.world());
-            assert_eq!(got.blocks_per_pe(), want.blocks_per_pe());
-            assert_eq!(got.perm_range_blocks(), want.perm_range_blocks());
+            assert_eq!(got.perm_range_blocks(), want.perm_range_blocks(), "s_pr {s_pr:?} p' {new_p}");
             assert_eq!(got.n_blocks(), old.n_blocks());
+            assert_eq!(got.copy_stride(), want.copy_stride());
             for y in 0..got.n_blocks() {
                 assert_eq!(got.permute_block(y), want.permute_block(y), "s_pr {s_pr:?} y {y}");
                 assert_eq!(got.unpermute_block(y), want.unpermute_block(y));
+                assert_eq!(got.slice_of(y), want.slice_of(y), "s_pr {s_pr:?} y {y}");
                 for k in 0..4 {
                     assert_eq!(got.holder(y, k), want.holder(y, k), "s_pr {s_pr:?} y {y} k {k}");
                 }
             }
             for pe in 0..new_p {
+                assert_eq!(got.slice_len(pe), want.slice_len(pe));
+                assert_eq!(got.shard_of(pe), want.shard_of(pe));
                 for k in 0..4 {
                     assert_eq!(got.stored_slice(pe, k), want.stored_slice(pe, k));
                 }
@@ -497,20 +707,45 @@ mod tests {
 
     #[test]
     fn reshape_feasibility_rules() {
-        // p=16, bpp=64, s_pr=16: n = 1024 blocks, 64 permutation units.
+        // p=16, bpp=64, s_pr=16: n = 1024 blocks. Balanced unequal slices
+        // admit EVERY world with r <= p' <= n.
         let d = dist(16, 64, 4, Some(16));
         assert!(d.reshape_feasible(16));
+        assert!(d.reshape_feasible(13), "non-dividing p' must now be feasible");
+        assert!(d.reshape_feasible(12));
         assert!(d.reshape_feasible(8));
-        assert!(d.reshape_feasible(4));
+        assert!(d.reshape_feasible(5));
+        assert!(d.reshape_feasible(4), "p' = r is the floor");
+        assert!(!d.reshape_feasible(3), "r = 4 needs at least 4 distinct holders");
         assert!(!d.reshape_feasible(0));
-        assert!(!d.reshape_feasible(12), "1024 blocks are not divisible into 12 slices");
-        assert!(!d.reshape_feasible(2), "r=4 must divide the new world");
-        assert!(d.reshaped(2).is_err());
-        // identity layouts only need n % p' == 0 and r | p'
+        assert!(d.reshaped(3).is_err());
+        // identity layouts follow the same rule
         let id = dist(16, 64, 2, None);
-        assert!(id.reshape_feasible(8));
-        assert!(!id.reshape_feasible(10), "n % p' != 0");
-        assert!(!id.reshape_feasible(1), "r=2 must divide the new world");
+        assert!(id.reshape_feasible(10), "n % p' != 0 is no longer a constraint");
+        assert!(id.reshape_feasible(2));
+        assert!(!id.reshape_feasible(1), "r = 2 must fit in the new world");
+    }
+
+    #[test]
+    fn reshaped_chains_through_non_dividing_worlds() {
+        // 16 -> 13 -> 7: each step must equal the fresh balanced layout.
+        let cfg = RestoreConfig::builder(16, 8, 64)
+            .replicas(4)
+            .perm_range_blocks(Some(16))
+            .seed(0xC4A1)
+            .build()
+            .unwrap();
+        let d16 = Distribution::new(&cfg);
+        let d13 = d16.reshaped(13).unwrap();
+        let d7 = d13.reshaped(7).unwrap();
+        let want7 = Distribution::new_balanced(7, cfg.n_blocks(), 4, Some(16), 0xC4A1, 0).unwrap();
+        for y in (0..d7.n_blocks()).step_by(11) {
+            assert_eq!(d7.slice_of(y), want7.slice_of(y));
+            for k in 0..4 {
+                assert_eq!(d7.holder(y, k), want7.holder(y, k), "y {y} k {k}");
+            }
+        }
+        assert_eq!(d7.max_slice_blocks(), want7.max_slice_blocks());
     }
 
     #[test]
@@ -531,6 +766,13 @@ mod tests {
         assert_eq!(got.placement_offset(), want.placement_offset());
         for y in (0..512).step_by(13) {
             assert_eq!(got.holder(y, 1), want.holder(y, 1));
+        }
+        // ...and at a non-dividing world against the balanced reference
+        let got5 = old.reshaped(5).unwrap();
+        let want5 = Distribution::new_balanced(5, 512, 2, None, cfg.seed, 5).unwrap();
+        assert_eq!(got5.placement_offset(), want5.placement_offset());
+        for y in (0..512).step_by(7) {
+            assert_eq!(got5.holder(y, 1), want5.holder(y, 1));
         }
     }
 

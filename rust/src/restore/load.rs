@@ -11,6 +11,15 @@
 //! 2. **Data sparse all-to-all.** Servers answer with one coalesced data
 //!    message per requester.
 //!
+//! **Self-send semantics** (consistent across both phases): a requester
+//! that serves a piece from its own store exchanges no protocol message at
+//! all — the request phase skips the pair entirely — and the data phase
+//! charges only the local memory-bandwidth copy of the payload (via the
+//! [`Accumulator`]'s self-message handling), never NIC, latency, or
+//! fragment costs. A requester loading its own surviving slice therefore
+//! costs **zero network** (pinned by the `self_served_load_costs_zero_network`
+//! golden test).
+//!
 //! ## The routing pipeline (perf)
 //!
 //! Recovery latency is the paper's headline number ("in the range of
@@ -55,7 +64,7 @@
 use crate::config::ServerSelection;
 use crate::error::{Error, Result};
 use crate::restore::block::{BlockRange, RangeSet};
-use crate::restore::distribution::PermutedPiece;
+use crate::restore::distribution::{Distribution, PermutedPiece};
 use crate::restore::hashing::seeded_hash;
 use crate::restore::{LoadOutput, LoadRequest, LoadedShard, ReStore};
 use crate::simnet::cluster::Cluster;
@@ -108,6 +117,11 @@ struct Run {
     /// stays per-piece so totals are identical to the uncoalesced schedule).
     pieces: u64,
     out_offset: u64,
+    /// End of the slice containing this run. Runs never cross slice edges
+    /// (pieces are pre-split there), so caching the boundary makes the
+    /// same-slice merge check one compare instead of a `slice_of` per
+    /// appended piece on the hot coalescing loop.
+    slice_end: u64,
 }
 
 /// Reusable buffers for [`ReStore::load`]: steady-state calls perform no
@@ -156,7 +170,6 @@ impl ReStore {
     ) -> Result<LoadOutput> {
         let dist = &self.dist;
         let bs = self.cfg.block_size as u64;
-        let bpp = dist.blocks_per_pe();
 
         // --- Phase 1a: request resolution (local, per requester) --------
         for req in requests {
@@ -179,7 +192,7 @@ impl ReStore {
         // never crosses a request boundary, so with the `rayon` feature the
         // per-request segments coalesce in parallel and concatenate back in
         // request order — byte-identical to the serial pass.
-        Self::coalesce_all(requests.len(), bpp, bs, scratch);
+        Self::coalesce_all(requests.len(), dist, bs, scratch);
 
         // Group runs per (requester, server) pair by sorting; both message
         // phases below are single run-length passes over this order. The
@@ -201,8 +214,11 @@ impl ReStore {
 
         // --- Phase 1b: request sparse all-to-all -------------------------
         // One message per distinct (requester, server) pair carrying the
-        // per-piece descriptors. Both phases run on the scratch-pooled
-        // accumulator: no O(p) counter allocation per call.
+        // per-piece descriptors. A requester serving itself sends no
+        // request at all — resolution is local bookkeeping, so self pairs
+        // are skipped entirely (not even a local-copy charge; see the
+        // module docs on self-send semantics). Both phases run on the
+        // scratch-pooled accumulator: no O(p) counter allocation per call.
         let mut phase = cluster.phase_pooled(&mut scratch.acc);
         let mut i = 0;
         while i < scratch.runs.len() {
@@ -215,13 +231,19 @@ impl ReStore {
                 bytes += scratch.runs[i].pieces * REQUEST_HEADER_BYTES;
                 i += 1;
             }
-            phase.add(requester, server, bytes)?;
+            if requester != server {
+                phase.add(requester, server, bytes)?;
+            }
         }
         let request_cost = phase.commit();
 
         // --- Phase 2: data sparse all-to-all ------------------------------
         // One message per (server, requester) pair; every run is one pack
         // fragment on the server and one unpack fragment on the requester.
+        // Self pairs (requester serves itself) still go through `add`: the
+        // Accumulator books them as a pure local memory copy — the output
+        // assembly genuinely copies the payload — with zero network bytes,
+        // messages, or fragments (hence the matching `frag` skip).
         let mut phase = cluster.phase_pooled(&mut scratch.acc);
         let mut i = 0;
         while i < scratch.runs.len() {
@@ -280,7 +302,12 @@ impl ReStore {
     /// serial output byte for byte (CI proves it by running the golden
     /// parity suite under both feature sets).
     #[cfg_attr(not(feature = "rayon"), allow(unused_variables))]
-    fn coalesce_all(n_requests: usize, bpp: u64, bs: u64, scratch: &mut LoadScratch) {
+    fn coalesce_all(
+        n_requests: usize,
+        dist: &Distribution,
+        bs: u64,
+        scratch: &mut LoadScratch,
+    ) {
         scratch.runs.clear();
         #[cfg(feature = "rayon")]
         if n_requests > 1 && scratch.routed.len() >= PAR_MIN_ITEMS {
@@ -298,7 +325,7 @@ impl ReStore {
                 .par_iter()
                 .map(|&(a, b)| {
                     let mut out = Vec::new();
-                    coalesce_runs(&routed[a..b], bpp, bs, &mut out);
+                    coalesce_runs(&routed[a..b], dist, bs, &mut out);
                     out
                 })
                 .collect();
@@ -308,7 +335,7 @@ impl ReStore {
             }
             return;
         }
-        coalesce_runs(&scratch.routed, bpp, bs, &mut scratch.runs);
+        coalesce_runs(&scratch.routed, dist, bs, &mut scratch.runs);
     }
 
     /// Resolve every request into routed pieces appended to
@@ -455,7 +482,7 @@ impl ReStore {
             // so slot membership implies the piece is held). Formerly an
             // O(p) store sweep per fallback piece.
             holders_scratch.clear();
-            let slot = (piece.perm_start / dist.blocks_per_pe()) as usize;
+            let slot = dist.slice_of(piece.perm_start);
             for &pe in self.holder_index.holders_of(slot) {
                 let pe = pe as usize;
                 if cluster.is_alive(pe) {
@@ -476,7 +503,7 @@ impl ReStore {
             ServerSelection::Random => {
                 // Same (requester, slice, epoch) -> same server: successive
                 // blocks with the same holder set share one sender (§IV-A).
-                let slice = piece.perm_start / dist.blocks_per_pe();
+                let slice = dist.slice_of(piece.perm_start) as u64;
                 let h = seeded_hash(
                     self.cfg.seed ^ cluster.epoch(),
                     ((requester as u64) << 32) ^ slice,
@@ -505,14 +532,26 @@ impl ReStore {
 
 /// The serial coalescing kernel: merge adjacent routed pieces of one
 /// routed segment into maximal runs, appending to `out`. Shared by the
-/// serial whole-list pass and the rayon per-request fan-out.
-fn coalesce_runs(routed: &[RoutedPiece], bpp: u64, bs: u64, out: &mut Vec<Run>) {
+/// serial whole-list pass and the rayon per-request fan-out. The
+/// same-slice check routes through [`Distribution::slice_of`] — with
+/// balanced unequal slices a run's slice membership is no longer a fixed
+/// `blocks_per_pe` division.
+fn coalesce_runs(
+    routed: &[RoutedPiece],
+    dist: &Distribution,
+    bs: u64,
+    out: &mut Vec<Run>,
+) {
     for rp in routed {
         if let Some(last) = out.last_mut() {
+            // Same slice ⇔ the next piece starts before the run's cached
+            // slice boundary (every piece lies wholly inside one slice, so
+            // a contiguous successor either continues the slice or starts
+            // exactly at `slice_end`).
             if last.req_idx == rp.req_idx
                 && last.server == rp.server
                 && last.perm_start + last.len == rp.piece.perm_start
-                && last.perm_start / bpp == rp.piece.perm_start / bpp
+                && rp.piece.perm_start < last.slice_end
                 && last.out_offset + last.len * bs == rp.out_offset
             {
                 last.len += rp.piece.len;
@@ -528,6 +567,7 @@ fn coalesce_runs(routed: &[RoutedPiece], bpp: u64, bs: u64, out: &mut Vec<Run>) 
             len: rp.piece.len,
             pieces: 1,
             out_offset: rp.out_offset,
+            slice_end: dist.slice_end(dist.slice_of(rp.piece.perm_start)),
         });
     }
 }
@@ -605,9 +645,8 @@ pub fn load_percent_requests(
 ) -> Vec<LoadRequest> {
     let dist = store.distribution();
     let p = dist.world();
-    let bpp = dist.blocks_per_pe();
-    let blocks = ((p as f64 * percent / 100.0) * bpp as f64).round() as u64;
-    let start = (start_pe as u64 * bpp) % dist.n_blocks();
+    let blocks = (dist.n_blocks() as f64 * percent / 100.0).round() as u64;
+    let start = dist.slice_start(start_pe % p);
     let end = (start + blocks).min(dist.n_blocks());
     let survivors = cluster.survivors();
     let ns = survivors.len() as u64;
@@ -636,8 +675,10 @@ pub fn load_all_requests(store: &ReStore, cluster: &Cluster) -> Vec<LoadRequest>
     let survivors = cluster.survivors();
     let ns = survivors.len() as u64;
     // Rotate the even partition of [0, n) by exactly one shard: with all
-    // PEs alive, survivor j loads precisely PE j+1's shard — never its own.
-    let shift = dist.blocks_per_pe() % n;
+    // PEs alive and equal slices, survivor j loads precisely PE j+1's
+    // shard — never its own. (After a reshape to unequal slices the shift
+    // is the first shard's length; the partition stays seamless.)
+    let shift = dist.slice_len(0) % n;
     survivors
         .iter()
         .enumerate()
@@ -960,7 +1001,7 @@ mod golden {
                     assert!(!alive.is_empty(), "reference hit IDL");
                     let server = match cfg.server_selection {
                         ServerSelection::Random => {
-                            let slice = piece.perm_start / dist.blocks_per_pe();
+                            let slice = dist.slice_of(piece.perm_start) as u64;
                             let h = seeded_hash(
                                 cfg.seed ^ cluster.epoch(),
                                 ((req.pe as u64) << 32) ^ slice,
@@ -986,9 +1027,13 @@ mod golden {
             }
         }
 
+        // self-served pieces need no request message at all (see the
+        // module docs on self-send semantics)
         let mut req_msgs: HashMap<(usize, usize), u64> = HashMap::new();
         for rp in &routed {
-            *req_msgs.entry((rp.requester, rp.server)).or_insert(0) += REQUEST_HEADER_BYTES;
+            if rp.requester != rp.server {
+                *req_msgs.entry((rp.requester, rp.server)).or_insert(0) += REQUEST_HEADER_BYTES;
+            }
         }
         let mut acc = Accumulator::new(cluster.network(), cluster.topology());
         for (&(s, d), &b) in &req_msgs {
@@ -1187,6 +1232,41 @@ mod golden {
             "LeastLoaded imbalance: max {max} > 2x mean {mean:.1} over {} servers",
             sent.len()
         );
+    }
+
+    /// The self-send golden cost contract (see the module docs): a
+    /// requester loading its own surviving slice must cost ZERO network —
+    /// no request message, no data message, no fragments — and exactly one
+    /// local memory-bandwidth copy of the payload in the data phase.
+    #[test]
+    fn self_served_load_costs_zero_network() {
+        // p=4, r=2, no permutation, Primary policy: requester 0's slice
+        // [0, bpp) has itself as the primary holder.
+        let (mut cluster, mut rs) = build(4, 64, 2, None, ServerSelection::Primary);
+        let reqs = vec![LoadRequest {
+            pe: 0,
+            ranges: RangeSet::new(vec![BlockRange::new(0, 64)]),
+        }];
+        let out = rs.load(&mut cluster, &reqs).unwrap();
+        // request phase: nothing at all — self pairs are skipped entirely
+        assert_eq!(out.request_cost, PhaseCost::default());
+        // data phase: zero network in every counter...
+        assert_eq!(out.data_cost.total_bytes, 0);
+        assert_eq!(out.data_cost.total_msgs, 0);
+        assert_eq!(out.data_cost.bottleneck_bytes, 0);
+        assert_eq!(out.data_cost.bottleneck_msgs, 0);
+        // ...but exactly the local copy of the payload on the sim clock
+        let payload = 64.0 * 8.0;
+        let want = payload / cluster.network().pe_mem_bw_bytes_per_s;
+        assert!(
+            (out.data_cost.sim_time_s - want).abs() < 1e-15,
+            "data phase must charge exactly one local copy: {} vs {}",
+            out.data_cost.sim_time_s,
+            want
+        );
+        // bytes are still correct (the local copy is real)
+        let want_bytes: Vec<u8> = (0..64usize * 8).map(|i| (i * 7) as u8).collect(); // PE 0 shard
+        assert_eq!(out.shards[0].bytes.as_deref().unwrap(), &want_bytes[..]);
     }
 
     #[test]

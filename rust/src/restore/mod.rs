@@ -168,14 +168,16 @@ impl ReStore {
         self.pe_map[dist_rank] as usize
     }
 
-    /// Does the current survivor count admit the §IV-A layout (equal
-    /// slices at `p'` — see [`Distribution::reshape_feasible`])? A pure
+    /// Does the current survivor count admit the balanced §IV-A layout
+    /// (⌊n/p'⌋/⌈n/p'⌉ slices — see [`Distribution::reshape_feasible`])?
+    /// With balanced unequal slices this holds for **every** `p' ≥ r`, so
+    /// after any real kill wave the answer is almost always yes. A pure
     /// feasibility predicate: [`ReStore::rebalance`] additionally requires
     /// the epoch handshake (a `ulfm::shrink` not yet adopted) and a
     /// current [`RankMap`](crate::simnet::ulfm::RankMap) —
     /// [`ReStore::rebalance_or_acknowledge`] packages the whole policy.
-    /// When the layout cannot hold, stay in the dead world via
-    /// [`ReStore::acknowledge_shrink`] + §IV-E repair.
+    /// Only when fewer than `r` PEs survive must applications stay in the
+    /// dead world via [`ReStore::acknowledge_shrink`] + §IV-E repair.
     pub fn can_rebalance(&self, cluster: &Cluster) -> bool {
         self.submitted && self.dist.reshape_feasible(cluster.n_alive())
     }
@@ -208,15 +210,30 @@ impl ReStore {
     }
 
     /// The full §IV-B shrink handshake for applications: rewrite the layout
-    /// over the survivors when the shrunken world admits the §IV-A
-    /// distribution, otherwise stay in the dead world (reclaiming dead
-    /// stores) — either way the store ends at the cluster's epoch. Returns
-    /// the rebalance report when one ran.
+    /// over the survivors when the shrunken world admits the balanced
+    /// §IV-A distribution (any `p' ≥ r` — almost always, see
+    /// [`ReStore::can_rebalance`]), otherwise stay in the dead world
+    /// (reclaiming dead stores) — either way the store ends at the
+    /// cluster's epoch. Returns the rebalance report when one ran.
+    ///
+    /// The `map` is validated against the cluster's *current* survivor set
+    /// **before** any policy branch: a stale `RankMap` from an earlier
+    /// shrink would otherwise silently steer the policy (acknowledging a
+    /// rebalanceable world, or rebalancing against the wrong survivors) —
+    /// surfaced as [`Error::StaleRankMap`] with the store untouched.
+    ///
+    /// If the rebalance itself discovers an interval with no surviving
+    /// holder (`Error::IrrecoverableDataLoss`), the policy degrades to
+    /// acknowledging instead of failing: data that is still held stays
+    /// loadable in the dead world, and only a *targeted* load of the lost
+    /// ranges reports the loss — applications whose live state covers the
+    /// lost blocks keep running, exactly as before the rebalance existed.
     pub fn rebalance_or_acknowledge(
         &mut self,
         cluster: &mut Cluster,
         map: &crate::simnet::ulfm::RankMap,
     ) -> Result<Option<rebalance::RebalanceReport>> {
+        map.validate_against(cluster)?;
         // A shrink that removed no ranks leaves the layout already correct:
         // adopting the epoch (acknowledge) is the O(1) action, not a
         // keep-everything rebalance that re-materializes the whole store.
@@ -225,7 +242,17 @@ impl ReStore {
             && map.new_world() < self.dist.world()
             && self.dist.reshape_feasible(map.new_world())
         {
-            return Ok(Some(self.rebalance(cluster, map)?));
+            match self.rebalance(cluster, map) {
+                Ok(report) => return Ok(Some(report)),
+                // Some interval has no surviving holder: the full-layout
+                // rewrite is impossible, but data that IS still held stays
+                // loadable in the dead world — degrade to acknowledge (the
+                // failed rebalance left the old layout fully intact) and
+                // let targeted loads surface real losses to the caller, as
+                // the pre-rebalance code paths always did.
+                Err(Error::IrrecoverableDataLoss { .. }) => {}
+                Err(e) => return Err(e),
+            }
         }
         self.acknowledge_shrink(cluster)?;
         Ok(None)

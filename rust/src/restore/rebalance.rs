@@ -16,21 +16,26 @@
 //!    ([`Distribution::reshaped`]) — the permuted block ID space, the
 //!    Feistel permutation, and the precomputed unit→slot placement index
 //!    carry over by `Arc`; only the slice partition and copy stride change,
-//!    so the new layout is bit-identical to a fresh
-//!    `Distribution::new` at `p'` (golden-tested);
+//!    so the new layout is bit-identical to a fresh balanced construction
+//!    ([`Distribution::new_balanced`]) at `p'` (golden-tested). Slices are
+//!    **balanced unequal** (`⌊n/p'⌋`/`⌈n/p'⌉` blocks, closed-form
+//!    boundaries), so ANY survivor count with `r ≤ p'` is feasible — a
+//!    16 → 13 kill wave rebalances instead of acknowledging;
 //! 2. **plans a minimal migration** ([`plan_rebalance`]) in permuted-slot
-//!    space: the permuted ID range `[0, n)` is walked over the lattice of
-//!    old (`n/p`) and new (`n/p'`) slice boundaries — O(p + p') intervals —
-//!    and only intervals whose destination is **not** already an alive
-//!    current holder move; sources are drawn from the reverse
-//!    [`HolderIndex`] round-robin across the current holders (the §IV-E
-//!    Distribution-B style spread). Data already in place is retained with
-//!    a local copy, never sent;
+//!    space: the permuted ID range `[0, n)` is walked over the interval
+//!    lattice of old and new slice boundaries — O(p + p') intervals, each
+//!    boundary a closed-form prefix-sum lookup
+//!    ([`Distribution::slice_start`]) — and only intervals whose
+//!    destination is **not** already an alive current holder move; sources
+//!    are drawn from the reverse [`HolderIndex`] round-robin across the
+//!    current holders (the §IV-E Distribution-B style spread). Data
+//!    already in place is retained with a local copy, never sent;
 //! 3. **executes** the schedule zero-copy in execution mode — each interval
 //!    is written straight from the source slice into the destination's
-//!    pre-sized new slice via [`PeStore::write_from`] — and charges one
-//!    modeled sparse all-to-all [`PhaseCost`] (plus the local-copy term for
-//!    retained bytes) in both modes;
+//!    pre-sized new slice (sized per slice from the balanced partition)
+//!    via [`PeStore::write_from`] — and charges one modeled sparse
+//!    all-to-all [`PhaseCost`] (plus the local-copy term for retained
+//!    bytes) in both modes;
 //! 4. **atomically swaps** the new distribution, rank translation
 //!    (`RankMap::new_to_old`), stores, and holder index in under the
 //!    cluster's bumped epoch. `submit`/`load`/`repair` validate their
@@ -46,10 +51,14 @@
 //! Memory transiently doubles during the swap (old + new stores coexist),
 //! mirroring the §IV-C "doubled during submission" observation for submit.
 //!
-//! When `p'` does not admit the equal-slice layout
-//! ([`Distribution::reshape_feasible`]), applications stay in the dead
-//! world via `ReStore::acknowledge_shrink` + §IV-E repair;
-//! `ReStore::rebalance_or_acknowledge` packages that policy.
+//! Only when fewer than `r` PEs survive
+//! ([`Distribution::reshape_feasible`]) does the layout become
+//! unrepresentable; applications then stay in the dead world via
+//! `ReStore::acknowledge_shrink` + §IV-E repair.
+//! `ReStore::rebalance_or_acknowledge` packages that policy — and, since
+//! a stale [`RankMap`] from an earlier shrink could silently steer it,
+//! validates the map against the cluster up front
+//! (`Error::StaleRankMap`).
 
 use crate::error::{Error, Result};
 use crate::restore::distribution::Distribution;
@@ -117,8 +126,6 @@ pub fn plan_rebalance(
     debug_assert_eq!(n, new_dist.n_blocks(), "rebalance must preserve the block space");
     debug_assert_eq!(to_cluster.len(), new_dist.world());
     debug_assert_eq!(holders.slots(), old_dist.world());
-    let ob = old_dist.blocks_per_pe();
-    let nb = new_dist.blocks_per_pe();
     let r = new_dist.replicas();
     // Round-robin source cursor per old slot, advanced across all of the
     // slot's intervals and destinations, spreading migration reads evenly
@@ -128,9 +135,14 @@ pub fn plan_rebalance(
     let mut dsts: Vec<usize> = Vec::with_capacity(r);
     let mut cur = 0u64;
     while cur < n {
-        let stop = ((cur / ob + 1) * ob).min((cur / nb + 1) * nb).min(n);
+        // Next boundary of the old/new slice-interval lattice: both sides
+        // are closed-form prefix-sum lookups (slice_start/slice_end), so
+        // unequal slices cost the same O(1) per interval as the former
+        // fixed-stride division.
+        let old_slot = old_dist.slice_of(cur);
+        let new_slot = new_dist.slice_of(cur);
+        let stop = old_dist.slice_end(old_slot).min(new_dist.slice_end(new_slot)).min(n);
         let len = stop - cur;
-        let old_slot = (cur / ob) as usize;
         srcs.clear();
         srcs.extend(
             holders
@@ -148,10 +160,9 @@ pub fn plan_rebalance(
             let orig = old_dist.unpermute_block(cur);
             return Err(Error::IrrecoverableDataLoss { start: orig, end: orig + ulen });
         }
-        let new_start = (cur / nb) * nb;
         dsts.clear();
         for k in 0..r {
-            dsts.push(to_cluster[new_dist.holder(new_start, k)] as usize);
+            dsts.push(to_cluster[new_dist.holder(cur, k)] as usize);
         }
         for &dst in &dsts {
             // `holders_of` lists are sorted ascending and alive-filtering
@@ -195,26 +206,52 @@ impl ReStore {
 
         let execution = self.is_execution_mode();
         let bs = self.config().block_size;
-        let nb = new_dist.blocks_per_pe();
         let r = new_dist.replicas();
         let world = self.config().world;
-        let slice_bytes = (nb * bs as u64) as usize;
+
+        // Plan FIRST: a kill wave that wiped a whole holder set surfaces
+        // as IrrecoverableDataLoss here — a failure path
+        // `rebalance_or_acknowledge` deliberately drives before degrading
+        // to acknowledge — so it must cost O(p + p') planning work, not an
+        // r·n·bs destination-buffer memset that is then thrown away.
+        // Retained intervals are recorded and replayed after the buffers
+        // exist (they are O(r·(p + p')) tuples, nothing like the payload).
+        let mut transfers: Vec<MigrationTransfer> = Vec::new();
+        let mut keeps: Vec<(usize, u64, u64)> = Vec::new();
+        let mut kept_bytes_per_pe: Vec<u64> = vec![0; world];
+        plan_rebalance(
+            self.distribution(),
+            &new_dist,
+            self.holder_index(),
+            |pe| cluster.is_alive(pe),
+            &to_cluster,
+            |pe, perm_start, blocks| {
+                kept_bytes_per_pe[pe] += blocks * bs as u64;
+                if execution {
+                    keeps.push((pe, perm_start, blocks));
+                }
+            },
+            &mut transfers,
+        )?;
 
         // Pre-create every survivor's r new slices (zeroed in execution
-        // mode) and the new reverse holder index — exactly what a fresh
-        // submit at p' would lay out. The zero fill is redundant work in
-        // principle (the keep + migration writes below cover every byte;
-        // the minimality tests assert kept + migrated == stored), but
-        // pre-sized initialized buffers are what `write_from` requires and
-        // what submit does — trading one memset pass for not reasoning
-        // about uninitialized memory on an error path.
+        // mode, sized per slice — the balanced partition has ⌈n/p'⌉ and
+        // ⌊n/p'⌋ slices, each length a closed-form lookup) and the new
+        // reverse holder index — exactly what a fresh submit at p' would
+        // lay out. The zero fill is redundant work in principle (the keep
+        // + migration writes below cover every byte; the minimality tests
+        // assert kept + migrated == stored), but pre-sized initialized
+        // buffers are what `write_from` requires and what submit does —
+        // trading one memset pass for not reasoning about uninitialized
+        // memory.
         let mut new_stores: Vec<PeStore> = (0..world).map(|_| PeStore::new(bs)).collect();
         let mut new_index = HolderIndex::new(new_dist.world());
         for (j, &pe) in to_cluster.iter().enumerate() {
             let pe = pe as usize;
             for k in 0..r {
                 let range = new_dist.stored_slice(j, k);
-                let slot = (range.start / nb) as usize;
+                let slot = new_dist.slice_of(range.start);
+                let slice_bytes = (range.len() * bs as u64) as usize;
                 let buf = if execution {
                     SliceBuf::Real(vec![0u8; slice_bytes])
                 } else {
@@ -225,29 +262,13 @@ impl ReStore {
             }
         }
 
-        // Plan; retained intervals are copied into the new slices on the
-        // spot (zero-copy: one write_from straight out of the old slice).
-        let mut transfers: Vec<MigrationTransfer> = Vec::new();
-        let mut kept_bytes_per_pe: Vec<u64> = vec![0; world];
-        {
-            let old_stores = self.stores();
-            plan_rebalance(
-                self.distribution(),
-                &new_dist,
-                self.holder_index(),
-                |pe| cluster.is_alive(pe),
-                &to_cluster,
-                |pe, perm_start, blocks| {
-                    kept_bytes_per_pe[pe] += blocks * bs as u64;
-                    if execution {
-                        let bytes = old_stores[pe]
-                            .read(perm_start, blocks)
-                            .expect("execution-mode store must hold real bytes");
-                        new_stores[pe].write_from(perm_start, bytes);
-                    }
-                },
-                &mut transfers,
-            )?;
+        // Replay the retained intervals into the new slices (zero-copy:
+        // one write_from straight out of the old slice each).
+        for &(pe, perm_start, blocks) in &keeps {
+            let bytes = self.stores()[pe]
+                .read(perm_start, blocks)
+                .expect("execution-mode store must hold real bytes");
+            new_stores[pe].write_from(perm_start, bytes);
         }
 
         // Charge the local copies of retained bytes (the transient §IV-C
@@ -414,9 +435,111 @@ mod tests {
             // ...and matches a from-scratch rebuild at the new slot count
             assert_eq!(
                 *rs.holder_index(),
-                HolderIndex::rebuild(rs.stores(), 128, 8),
+                HolderIndex::rebuild(rs.stores(), rs.distribution()),
                 "s_pr {s_pr:?}: holder index drifted"
             );
+        }
+    }
+
+    /// Fresh-layout store oracle for ANY (p', possibly unequal-slice)
+    /// distribution: the permuted bytes each (new rank, copy) slice must
+    /// hold, derived block by block from the original global data.
+    fn fresh_layout_stores(
+        dist: &Distribution,
+        shards: &[Vec<u8>],
+        bs: usize,
+    ) -> Vec<Vec<(crate::restore::block::BlockRange, Vec<u8>)>> {
+        let global: Vec<u8> = shards.iter().flatten().copied().collect();
+        (0..dist.world())
+            .map(|j| {
+                let mut slices: Vec<(crate::restore::block::BlockRange, Vec<u8>)> = (0..dist
+                    .replicas())
+                    .map(|k| {
+                        let range = dist.stored_slice(j, k);
+                        let mut buf = Vec::with_capacity((range.len() as usize) * bs);
+                        for y in range.start..range.end {
+                            let x = dist.unpermute_block(y) as usize;
+                            buf.extend_from_slice(&global[x * bs..(x + 1) * bs]);
+                        }
+                        (range, buf)
+                    })
+                    .collect();
+                slices.sort_by_key(|(r, _)| r.start);
+                slices
+            })
+            .collect()
+    }
+
+    /// The tentpole scenario: a 16 → 13 kill wave (a non-dividing survivor
+    /// count the equal-slice layout had to acknowledge) now rebalances,
+    /// and the result is byte-identical to a fresh balanced layout at
+    /// p' = 13 — stores AND holder index, modulo the rank translation.
+    #[test]
+    fn non_dividing_rebalance_matches_fresh_balanced_layout() {
+        for s_pr in [Some(16usize), None] {
+            let (mut cluster, mut rs, shards) = build(16, 64, 4, s_pr, true);
+            // kill 3 PEs from distinct §IV-D groups (stride 4): no IDL
+            cluster.kill(&[0, 1, 2]);
+            let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+            assert!(rs.can_rebalance(&cluster), "s_pr {s_pr:?}: p' = 13 must be feasible");
+            let report = rs.rebalance(&mut cluster, &map).unwrap();
+            assert_eq!(report.new_world, 13, "s_pr {s_pr:?}");
+            // every stored byte is accounted for: kept + migrated == r·n·bs
+            assert_eq!(
+                report.kept_bytes + report.migrated_bytes,
+                4 * 1024 * 8,
+                "s_pr {s_pr:?}"
+            );
+
+            let dist = rs.distribution().clone();
+            assert_eq!(dist.world(), 13);
+            assert!(!dist.equal_slices()); // 1024 = 13·78 + 10
+            assert_eq!(dist.max_slice_blocks(), 79);
+            let want = fresh_layout_stores(&dist, &shards, 8);
+            for j in 0..13usize {
+                let ours = rs.stores()[map.new_to_old[j]].slices();
+                assert_eq!(ours.len(), want[j].len(), "s_pr {s_pr:?}: new rank {j}");
+                for (g, (wrange, wbytes)) in ours.iter().zip(&want[j]) {
+                    assert_eq!(g.range, *wrange, "s_pr {s_pr:?}: new rank {j}");
+                    let SliceBuf::Real(gb) = &g.buf else {
+                        panic!("execution mode must store real bytes");
+                    };
+                    assert_eq!(gb, wbytes, "s_pr {s_pr:?}: new rank {j} slice {wrange:?}");
+                }
+            }
+            // holder index equals a from-scratch rebuild over the new lattice
+            assert_eq!(
+                *rs.holder_index(),
+                HolderIndex::rebuild(rs.stores(), rs.distribution()),
+                "s_pr {s_pr:?}: holder index drifted"
+            );
+            // and dead PEs were reclaimed with the swap
+            for pe in [0usize, 1, 2] {
+                assert!(rs.stores()[pe].slices().is_empty());
+            }
+
+            // the lost shards still load bit-exactly in the new layout
+            let survivors = cluster.survivors();
+            let mut gained: Vec<(usize, RangeSet)> = Vec::new();
+            for (i, dead) in [0u64, 1, 2].into_iter().enumerate() {
+                gained.push((
+                    survivors[i % survivors.len()],
+                    RangeSet::new(vec![BlockRange::new(dead * 64, (dead + 1) * 64)]),
+                ));
+            }
+            let reqs = scatter_requests_for_ranges(&gained);
+            let out = rs.load(&mut cluster, &reqs).unwrap();
+            for (req, shard) in reqs.iter().zip(&out.shards) {
+                let mut want = Vec::new();
+                for range in req.ranges.ranges() {
+                    for x in range.start..range.end {
+                        let pe = (x / 64) as usize;
+                        let off = ((x % 64) * 8) as usize;
+                        want.extend_from_slice(&shards[pe][off..off + 8]);
+                    }
+                }
+                assert_eq!(shard.bytes.as_deref().unwrap(), &want[..], "s_pr {s_pr:?}");
+            }
         }
     }
 
@@ -502,7 +625,7 @@ mod tests {
         for slot in 0..dist.world() {
             let holders = rs.holder_index().holders_of(slot);
             assert_eq!(holders.len(), 4, "slot {slot}");
-            let start = slot as u64 * dist.blocks_per_pe();
+            let start = dist.slice_start(slot);
             let mut det: Vec<u32> =
                 (0..4).map(|k| rs.cluster_rank(dist.holder(start, k)) as u32).collect();
             det.sort_unstable();
@@ -604,7 +727,7 @@ mod tests {
         assert_eq!(report.new_world, 4);
         assert_eq!(
             *rs.holder_index(),
-            HolderIndex::rebuild(rs.stores(), rs.distribution().blocks_per_pe(), 4)
+            HolderIndex::rebuild(rs.stores(), rs.distribution())
         );
         // every survivor holds r * n/p' blocks (§IV-C at the new world)
         for &pe in &map2.new_to_old {
@@ -654,25 +777,113 @@ mod tests {
 
     #[test]
     fn acknowledge_shrink_reclaims_and_adopts_epoch() {
-        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
-        cluster.kill(&[3, 7]); // p' = 14: no §IV-A layout (r does not divide)
+        // With balanced unequal slices the ONLY infeasible survivor count
+        // is p' < r: p = 8, r = 4, kill 5 (≤ 3 per §IV-D group, so the
+        // data survives) -> p' = 3 cannot place 4 distinct copies.
+        let (mut cluster, mut rs, _) = build(8, 64, 4, Some(16), false);
+        cluster.kill(&[0, 1, 2, 3, 4]);
         let (_f, map, _) = ulfm::recover(&mut cluster);
-        assert!(!rs.can_rebalance(&cluster));
+        assert!(!rs.can_rebalance(&cluster), "p' = 3 < r = 4 must be infeasible");
         let ran = rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
         assert!(ran.is_none(), "infeasible world must fall back to acknowledge");
         assert_eq!(rs.epoch(), cluster.epoch());
-        assert!(rs.stores()[3].slices().is_empty());
-        assert!(rs.stores()[7].slices().is_empty());
+        for pe in 0..5 {
+            assert!(rs.stores()[pe].slices().is_empty(), "dead PE {pe} not reclaimed");
+        }
         assert_eq!(
             *rs.holder_index(),
-            HolderIndex::rebuild(rs.stores(), 64, 16)
+            HolderIndex::rebuild(rs.stores(), rs.distribution())
         );
         // dead-world routing still works (fallback path, old distribution)
         let reqs = vec![LoadRequest {
-            pe: 0,
+            pe: 5,
             ranges: RangeSet::new(vec![BlockRange::new(3 * 64, 4 * 64)]),
         }];
         rs.load(&mut cluster, &reqs).unwrap();
+    }
+
+    /// A 14-survivor world (r = 4 does not divide 14) — the exact case the
+    /// equal-slice layout had to acknowledge — now goes through the full
+    /// rebalance_or_acknowledge policy as a REBALANCE.
+    #[test]
+    fn rebalance_or_acknowledge_rebalances_non_dividing_worlds() {
+        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
+        cluster.kill(&[3, 7]); // p' = 14
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        assert!(rs.can_rebalance(&cluster));
+        let ran = rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+        let report = ran.expect("p' = 14 must rebalance now");
+        assert_eq!(report.new_world, 14);
+        assert_eq!(rs.distribution().world(), 14);
+        assert!(!rs.distribution().equal_slices()); // 1024 = 14·73 + 2
+        assert_eq!(rs.epoch(), cluster.epoch());
+    }
+
+    /// When the rebalance discovers an interval with no surviving holder,
+    /// the packaged policy degrades to acknowledge instead of failing the
+    /// whole handshake: data still held stays loadable in the dead world
+    /// and only targeted loads of the lost ranges surface the IDL.
+    #[test]
+    fn rebalance_or_acknowledge_degrades_to_acknowledge_on_idl() {
+        // whole group {1, 5, 9, 13} dies (plus fillers): direct rebalance
+        // reports IDL, but the policy must acknowledge and keep routing.
+        // Identity layout so the lost slots are exactly 1, 5, 9, 13 and a
+        // surviving slot's data is deterministically loadable.
+        let (mut cluster, mut rs, _) = build(16, 64, 4, None, false);
+        cluster.kill(&[1, 5, 9, 13, 0, 4, 2, 6]);
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        assert!(matches!(
+            rs.rebalance(&mut cluster, &map),
+            Err(Error::IrrecoverableDataLoss { .. })
+        ));
+        let ran = rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+        assert!(ran.is_none(), "IDL world must degrade to acknowledge");
+        assert_eq!(rs.epoch(), cluster.epoch());
+        assert_eq!(rs.distribution().world(), 16, "dead-world layout retained");
+        // data whose holders survive is still loadable (slot 3: holders
+        // {3, 7, 11, 15} all alive)...
+        let held = vec![LoadRequest {
+            pe: 8,
+            ranges: RangeSet::new(vec![BlockRange::new(3 * 64, 4 * 64)]),
+        }];
+        rs.load(&mut cluster, &held).unwrap();
+        // ...and only a targeted load of the LOST slot reports the IDL
+        let lost = vec![LoadRequest {
+            pe: 8,
+            ranges: RangeSet::new(vec![BlockRange::new(64, 2 * 64)]),
+        }];
+        assert!(matches!(
+            rs.load(&mut cluster, &lost),
+            Err(Error::IrrecoverableDataLoss { .. })
+        ));
+    }
+
+    /// The shrink-handshake bugfix: a stale RankMap (a second failure after
+    /// the shrink that produced it) must surface Error::StaleRankMap from
+    /// rebalance_or_acknowledge BEFORE any policy branch, leaving the store
+    /// untouched — not silently acknowledge or rebalance against the wrong
+    /// survivor set.
+    #[test]
+    fn rebalance_or_acknowledge_rejects_stale_rank_map() {
+        let (mut cluster, mut rs, _) = build(16, 64, 4, Some(16), false);
+        cluster.kill(&HALF_KILLS);
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        // another PE dies after the shrink: `map` no longer describes the
+        // survivor set
+        cluster.kill(&[15]);
+        let err = rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap_err();
+        assert!(
+            matches!(err, Error::StaleRankMap(_)),
+            "expected StaleRankMap, got {err:?}"
+        );
+        // the store is fully untouched: old epoch, old world, stores intact
+        assert_eq!(rs.epoch(), 0);
+        assert_eq!(rs.distribution().world(), 16);
+        assert_eq!(rs.stores()[15].slices().len(), 4);
+        // a fresh shrink produces a current map and the policy resumes
+        let (map2, _) = ulfm::shrink(&mut cluster);
+        rs.rebalance_or_acknowledge(&mut cluster, &map2).unwrap();
+        assert_eq!(rs.epoch(), cluster.epoch());
     }
 
     #[test]

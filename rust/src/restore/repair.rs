@@ -249,8 +249,10 @@ impl crate::restore::ReStore {
             if homes.len() < r {
                 // fewer than r alive PEs overall; keep what we can
             }
-            let slice_start = unit * dist.blocks_per_pe();
-            let len = dist.blocks_per_pe();
+            // balanced unequal slices: the unit's boundaries come from the
+            // closed-form slice lattice, not a fixed blocks_per_pe stride
+            let slice_start = dist.slice_start(primary);
+            let len = dist.slice_len(primary);
             // Source candidates: the slot's alive PRE-CALL holders, read
             // from the reverse index once before any destination for this
             // unit is planned. A destination created this call holds no
@@ -285,7 +287,6 @@ impl crate::restore::ReStore {
             phase.add(t.src, t.dst, t.blocks * bs)?;
         }
         let cost = phase.commit();
-        let bpp = dist.blocks_per_pe();
         for t in &transfers {
             let buf = match self.stores()[t.src].read(t.perm_start, t.blocks) {
                 Some(bytes) => SliceBuf::Real(bytes.to_vec()),
@@ -296,7 +297,7 @@ impl crate::restore::ReStore {
                 t.perm_start + t.blocks,
             );
             self.stores_mut()[t.dst].insert(range, buf);
-            self.holder_index_mut().insert((t.perm_start / bpp) as usize, t.dst);
+            self.holder_index_mut().insert(dist.slice_of(t.perm_start), t.dst);
         }
 
         Ok(RepairReport { transfers: transfers.len(), unrepairable, cost })
@@ -459,8 +460,8 @@ mod golden {
             if homes.is_empty() {
                 continue;
             }
-            let slice_start = primary as u64 * dist.blocks_per_pe();
-            let len = dist.blocks_per_pe();
+            let slice_start = dist.slice_start(primary);
+            let len = dist.slice_len(primary);
             let holders: Vec<usize> = (0..p)
                 .filter(|&pe| alive(pe) && rs.stores()[pe].holds(slice_start, len))
                 .collect();
@@ -542,11 +543,7 @@ mod golden {
                 // the incrementally maintained index matches a full rescan
                 assert_eq!(
                     *rs.holder_index(),
-                    HolderIndex::rebuild(
-                        rs.stores(),
-                        rs.distribution().blocks_per_pe(),
-                        rs.distribution().world(),
-                    ),
+                    HolderIndex::rebuild(rs.stores(), rs.distribution()),
                     "{tag}: holder index drifted"
                 );
             }
@@ -564,11 +561,7 @@ mod golden {
             assert_eq!(second.transfers, 0, "repairing twice must move nothing");
             assert_eq!(
                 *rs.holder_index(),
-                HolderIndex::rebuild(
-                    rs.stores(),
-                    rs.distribution().blocks_per_pe(),
-                    rs.distribution().world(),
-                )
+                HolderIndex::rebuild(rs.stores(), rs.distribution())
             );
         }
     }

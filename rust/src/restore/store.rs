@@ -155,9 +155,9 @@ impl PeStore {
     }
 }
 
-/// Reverse holder index: permuted *slot* (slice number, `perm_start /
-/// blocks_per_pe`) → sorted list of PEs currently storing that slot's
-/// slice.
+/// Reverse holder index: permuted *slot* (slice number,
+/// [`Distribution::slice_of`] of the slice start) → sorted list of PEs
+/// currently storing that slot's slice.
 ///
 /// Both submit and §IV-E repair place whole slices, so slot granularity is
 /// exact. The index is maintained incrementally ([`HolderIndex::insert`] on
@@ -207,18 +207,19 @@ impl HolderIndex {
 
     /// From-scratch rebuild by scanning every PE store — the O(p · slices)
     /// reference the incremental maintenance is property-tested against.
-    /// `slots` is the slot count of the *current* layout (equal to the
-    /// store count before a rebalance, `p'` after one — the rebalanced
-    /// slice partition has one slot per survivor while stores stay indexed
-    /// by original rank).
-    pub fn rebuild(stores: &[PeStore], blocks_per_pe: u64, slots: usize) -> Self {
-        let mut ix = HolderIndex::new(slots);
+    /// Slot boundaries come from `dist`, the *current* layout (one slot per
+    /// distribution rank — `p'` after a rebalance, while stores stay
+    /// indexed by original cluster rank): with balanced unequal slices a
+    /// slot is no longer a fixed `blocks_per_pe` stride, so membership is
+    /// resolved through [`Distribution::slice_of`].
+    pub fn rebuild(stores: &[PeStore], dist: &Distribution) -> Self {
+        let mut ix = HolderIndex::new(dist.world());
         for (pe, st) in stores.iter().enumerate() {
             for s in st.slices() {
-                let first = s.range.start / blocks_per_pe;
-                let last = (s.range.end - 1) / blocks_per_pe;
+                let first = dist.slice_of(s.range.start);
+                let last = dist.slice_of(s.range.end - 1);
                 for slot in first..=last {
-                    ix.insert(slot as usize, pe);
+                    ix.insert(slot, pe);
                 }
             }
         }
@@ -226,11 +227,13 @@ impl HolderIndex {
     }
 }
 
-/// Verify the §IV-C memory formula for a fully submitted store set:
-/// every PE holds exactly `r * n/p` blocks.
+/// Verify the §IV-C memory formula for a fully submitted store set: every
+/// PE holds exactly its `r` stored slices — `r · n/p` blocks in the
+/// equal-slice layout, `Σ_k |stored_slice(pe, k)|` in general.
 pub fn assert_memory_invariant(stores: &[PeStore], dist: &Distribution) {
-    let expect = dist.replicas() as u64 * dist.blocks_per_pe();
     for (pe, st) in stores.iter().enumerate() {
+        let expect: u64 =
+            (0..dist.replicas()).map(|k| dist.stored_slice(pe, k).len()).sum();
         let blocks: u64 = st.slices().iter().map(|s| s.range.len()).sum();
         assert_eq!(blocks, expect, "PE {pe}: stores {blocks} blocks, expected {expect}");
     }
@@ -331,9 +334,10 @@ mod tests {
 
     #[test]
     fn holder_index_insert_drop_rebuild() {
+        // equal-slice reference layout: 4 slots of 8 blocks each
+        let dist = Distribution::new_balanced(4, 32, 1, None, 0, 0).unwrap();
         let mut stores: Vec<PeStore> = (0..4).map(|_| PeStore::new(1)).collect();
         let mut ix = HolderIndex::new(4);
-        // slot layout with bpp = 8: slot s covers [8s, 8s+8)
         for (pe, slot) in [(0usize, 0usize), (2, 0), (1, 1), (3, 3), (2, 3)] {
             let start = slot as u64 * 8;
             stores[pe].insert(BlockRange::new(start, start + 8), SliceBuf::Virtual(8));
@@ -344,12 +348,28 @@ mod tests {
         assert_eq!(ix.holders_of(1), &[1]);
         assert_eq!(ix.holders_of(2), &[] as &[u32]);
         assert_eq!(ix.holders_of(3), &[2, 3]);
-        assert_eq!(ix, HolderIndex::rebuild(&stores, 8, 4));
+        assert_eq!(ix, HolderIndex::rebuild(&stores, &dist));
 
         ix.drop_pe(2);
         stores[2].clear();
         assert_eq!(ix.holders_of(0), &[0]);
         assert_eq!(ix.holders_of(3), &[3]);
-        assert_eq!(ix, HolderIndex::rebuild(&stores, 8, 4));
+        assert_eq!(ix, HolderIndex::rebuild(&stores, &dist));
+    }
+
+    #[test]
+    fn holder_index_rebuild_with_unequal_slices() {
+        // n = 30 over p = 4: slice lens 8, 8, 7, 7 (boundaries 0/8/16/23).
+        let dist = Distribution::new_balanced(4, 30, 1, None, 0, 0).unwrap();
+        let mut stores: Vec<PeStore> = (0..4).map(|_| PeStore::new(1)).collect();
+        for (pe, slot) in [(0usize, 0usize), (1, 2), (3, 2), (2, 3)] {
+            let range = dist.slice_range(slot);
+            stores[pe].insert(range, SliceBuf::Virtual(range.len()));
+        }
+        let ix = HolderIndex::rebuild(&stores, &dist);
+        assert_eq!(ix.holders_of(0), &[0]);
+        assert_eq!(ix.holders_of(1), &[] as &[u32]);
+        assert_eq!(ix.holders_of(2), &[1, 3]);
+        assert_eq!(ix.holders_of(3), &[2]);
     }
 }

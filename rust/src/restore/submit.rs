@@ -74,13 +74,13 @@ impl ReStore {
         let r = dist.replicas();
         let p = dist.world();
 
-        // Pre-create every PE's r slice buffers (zeroed in execution mode)
-        // and register them in the reverse holder index.
-        let slice_bytes = (dist.blocks_per_pe() * bs) as usize;
+        // Pre-create every PE's r slice buffers (zeroed in execution mode,
+        // sized per slice) and register them in the reverse holder index.
         for pe in 0..p {
             for k in 0..r {
                 let range = dist.stored_slice(pe, k);
-                let slot = (range.start / dist.blocks_per_pe()) as usize;
+                let slot = dist.slice_of(range.start);
+                let slice_bytes = (range.len() * bs) as usize;
                 let buf = if shards.is_some() {
                     SliceBuf::Real(vec![0u8; slice_bytes])
                 } else {
@@ -103,8 +103,12 @@ impl ReStore {
         // built) and expand the r copies when emitting — no per-copy
         // hashing. (§Perf: 8x faster schedule construction than the
         // HashMap version; see EXPERIMENTS.md §Perf.)
+        // Submit only ever runs at the submit-time world (guarded above:
+        // all PEs alive, epoch current, one-shot), where slices are equal
+        // and unit-aligned — shard starts land on unit boundaries.
+        debug_assert!(dist.equal_slices(), "submit runs before any reshape");
         let unit_bytes = s_pr * bs;
-        let units_per_pe = (dist.blocks_per_pe() / s_pr) as usize;
+        let units_per_pe = (self.cfg.blocks_per_pe as u64 / s_pr) as usize;
         let stride = dist.copy_stride();
         let offset = dist.placement_offset();
 
@@ -141,7 +145,7 @@ impl ReStore {
         for src in 0..p {
             for u in 0..units_per_pe {
                 let perm_start = unit_slot_of(src * units_per_pe + u) * s_pr;
-                let slot_pe = (perm_start / dist.blocks_per_pe()) as usize;
+                let slot_pe = dist.slice_of(perm_start);
                 if slot_units[slot_pe] == 0 {
                     touched.push(slot_pe as u32);
                 }
@@ -315,20 +319,20 @@ mod tests {
             // reference: seed write path (fresh Vec per unit × replica)
             let dist = rs.distribution().clone();
             let bs = 8u64;
-            let slice_bytes = (dist.blocks_per_pe() * bs) as usize;
             let mut ref_stores: Vec<crate::restore::store::PeStore> =
                 (0..8).map(|_| crate::restore::store::PeStore::new(8)).collect();
             for pe in 0..8 {
                 for k in 0..4 {
-                    ref_stores[pe]
-                        .insert(dist.stored_slice(pe, k), SliceBuf::Real(vec![0u8; slice_bytes]));
+                    let range = dist.stored_slice(pe, k);
+                    let slice_bytes = (range.len() * bs) as usize;
+                    ref_stores[pe].insert(range, SliceBuf::Real(vec![0u8; slice_bytes]));
                 }
             }
             let s = dist.perm_range_blocks();
             let unit_bytes = (s * bs) as usize;
             for src in 0..8usize {
-                for u in 0..(dist.blocks_per_pe() / s) as usize {
-                    let orig = src as u64 * dist.blocks_per_pe() + u as u64 * s;
+                for u in 0..(dist.slice_len(src) / s) as usize {
+                    let orig = dist.slice_start(src) + u as u64 * s;
                     let perm_start = dist.permute_block(orig);
                     let off = u * unit_bytes;
                     let bytes = shards[src][off..off + unit_bytes].to_vec();
@@ -389,7 +393,7 @@ mod tests {
             let shard = dist.shard_of(src);
             for orig in (shard.start..shard.end).step_by(s as usize) {
                 let y = dist.permute_block(orig);
-                let slot_pe = (y / dist.blocks_per_pe()) as usize;
+                let slot_pe = dist.slice_of(y);
                 *units_on.entry((src, slot_pe)).or_insert(0) += 1;
             }
         }
@@ -420,11 +424,8 @@ mod tests {
             let mut cluster = Cluster::new_execution(8, 4);
             let mut rs = ReStore::new(cfg, &cluster).unwrap();
             rs.submit(&mut cluster, &make_shards(8, 64 * 8)).unwrap();
-            let rebuilt = crate::restore::store::HolderIndex::rebuild(
-                rs.stores(),
-                rs.distribution().blocks_per_pe(),
-                rs.distribution().world(),
-            );
+            let rebuilt =
+                crate::restore::store::HolderIndex::rebuild(rs.stores(), rs.distribution());
             assert_eq!(*rs.holder_index(), rebuilt, "s_pr {s_pr:?}");
             // every slot has exactly r holders right after submit
             for slot in 0..8 {

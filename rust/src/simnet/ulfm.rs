@@ -44,11 +44,13 @@ impl RankMap {
     /// Verify this map describes `cluster`'s *current* survivor set: every
     /// new rank maps to an alive old rank, the survivors are covered
     /// exactly once in old-rank order, and the two directions agree. The
-    /// rebalance path calls this before rewriting a layout — a stale map
-    /// (from an earlier shrink) silently addressing dead ranks is the bug
-    /// class this guards against.
+    /// rebalance policy (`ReStore::rebalance` and
+    /// `ReStore::rebalance_or_acknowledge`) calls this before ANY layout
+    /// decision — a stale map (from an earlier shrink) silently addressing
+    /// dead ranks is the bug class this guards against. Failures surface
+    /// as the dedicated [`Error::StaleRankMap`].
     pub fn validate_against(&self, cluster: &Cluster) -> Result<()> {
-        let err = |m: String| Err(Error::Config(m));
+        let err = |m: String| Err(Error::StaleRankMap(m));
         if self.old_to_new.len() != cluster.world() {
             return err(format!(
                 "rank map covers {} old ranks, cluster world is {}",
@@ -154,9 +156,13 @@ mod tests {
         c.kill(&[2]);
         let (map, _) = shrink(&mut c);
         map.validate_against(&c).unwrap();
-        // a later failure makes the map stale
+        // a later failure makes the map stale — surfaced as the dedicated
+        // StaleRankMap variant, not a generic Config error
         c.kill(&[5]);
-        assert!(map.validate_against(&c).is_err());
+        assert!(matches!(
+            map.validate_against(&c),
+            Err(Error::StaleRankMap(_))
+        ));
         let (map2, _) = shrink(&mut c);
         map2.validate_against(&c).unwrap();
         assert_eq!(c.epoch(), 2);

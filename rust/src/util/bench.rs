@@ -57,6 +57,16 @@ pub fn alloc_count() -> u64 {
     ALLOC_COUNT.load(Ordering::Relaxed)
 }
 
+/// Is the `BENCH_SHORT` environment variable set (to anything but `0`)?
+/// The bench binaries use this to skip their largest configurations and
+/// cut repetition counts — CI's `make bench-json-short` schema smoke runs
+/// every bench end to end (so each `BENCH_*.json` artifact exists and
+/// parses) in seconds instead of minutes; the full-scale runs follow in
+/// dedicated steps.
+pub fn short_mode() -> bool {
+    std::env::var_os("BENCH_SHORT").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
 /// One timed measurement series.
 pub struct BenchResult {
     pub name: String,

@@ -42,6 +42,7 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     repair_planning_allocations_do_not_scale_with_world();
     steady_state_load_allocations_do_not_scale_with_piece_count();
     rebalance_planning_allocations_do_not_scale_with_world();
+    unequal_slice_rebalance_planning_allocations_do_not_scale_with_world();
 }
 
 fn submit_allocations_do_not_scale_with_unit_count() {
@@ -139,6 +140,55 @@ fn rebalance_planning_allocations_do_not_scale_with_world() {
     assert_eq!(
         small, large,
         "rebalance planning allocation count scales with p ({small} vs {large})"
+    );
+}
+
+fn unequal_slice_rebalance_planning_allocations_do_not_scale_with_world() {
+    // The balanced unequal-slice case: kill ONE PE so p' = p - 1 does not
+    // divide n — every slice boundary is now a closed-form prefix-sum
+    // lookup rather than a fixed stride, and the old/new boundary lattice
+    // interleaves maximally. Planning must still use a fixed number of
+    // scratch vectors regardless of p; the migration output is
+    // caller-provided with enough pre-reserved capacity that pushing
+    // transfers never reallocates (transfers <= r intervals <= r·(p + p')).
+    let count_for = |p: usize| {
+        let cfg = RestoreConfig::builder(p, 8, 64)
+            .replicas(4)
+            .perm_range_blocks(Some(16))
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit_virtual(&mut cluster).unwrap();
+        cluster.kill(&[0]);
+        let (map, _cost) = ulfm::shrink(&mut cluster);
+        assert_eq!(map.new_world(), p - 1);
+        let new_dist = rs.distribution().reshaped(map.new_world()).unwrap();
+        assert!(!new_dist.equal_slices(), "p' = {} must not divide n", p - 1);
+        let to_cluster: Vec<u32> = map.new_to_old.iter().map(|&o| o as u32).collect();
+        let mut out: Vec<MigrationTransfer> = Vec::with_capacity(4 * (2 * p + 2));
+        let cap_before = out.capacity();
+        let (n, ()) = allocs_during(|| {
+            plan_rebalance(
+                rs.distribution(),
+                &new_dist,
+                rs.holder_index(),
+                |pe| cluster.is_alive(pe),
+                &to_cluster,
+                |_pe, _start, _blocks| {},
+                &mut out,
+            )
+            .unwrap()
+        });
+        assert!(!out.is_empty(), "killing a PE must migrate something");
+        assert_eq!(out.capacity(), cap_before, "pre-reserved capacity must suffice");
+        n
+    };
+    let small = count_for(8);
+    let large = count_for(32);
+    assert_eq!(
+        small, large,
+        "unequal-slice rebalance planning allocation count scales with p ({small} vs {large})"
     );
 }
 

@@ -211,11 +211,7 @@ fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
         let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
         store.submit_virtual(&mut cluster).unwrap();
         let check = |store: &ReStore, when: &str| {
-            let rebuilt = HolderIndex::rebuild(
-                store.stores(),
-                store.distribution().blocks_per_pe(),
-                store.distribution().world(),
-            );
+            let rebuilt = HolderIndex::rebuild(store.stores(), store.distribution());
             assert_eq!(
                 *store.holder_index(),
                 rebuilt,
@@ -285,7 +281,7 @@ fn prop_acknowledge_shrink_reclaims_only_dead_stores() {
     }
     assert_eq!(
         *store.holder_index(),
-        HolderIndex::rebuild(store.stores(), store.distribution().blocks_per_pe(), 4)
+        HolderIndex::rebuild(store.stores(), store.distribution())
     );
     store.acknowledge_shrink(&cluster).unwrap(); // idempotent
     // it also adopts the communicator epoch after a shrink
@@ -297,17 +293,18 @@ fn prop_acknowledge_shrink_reclaims_only_dead_stores() {
 
 #[test]
 fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
-    // For random configurations and random feasible kill waves, the §IV-B
-    // rebalance must (a) migrate exactly the bytes whose destination did
-    // not already hold them (minimality, checked against a store-diff
-    // oracle), (b) leave the incrementally-built holder index equal to a
-    // from-scratch rebuild, (c) restore r alive holders in deterministic
-    // positions for every slot (the load fast path), and (d) keep every
-    // byte loadable.
+    // For random configurations and random kill waves — including the
+    // non-dividing survivor counts the balanced unequal-slice layout now
+    // admits — the §IV-B rebalance must (a) migrate exactly the bytes
+    // whose destination did not already hold them (minimality, checked
+    // against a store-diff oracle), (b) leave the incrementally-built
+    // holder index equal to a from-scratch rebuild, (c) restore r alive
+    // holders in deterministic positions for every slot (the load fast
+    // path), and (d) keep every byte loadable.
     let mut rng = Rng::seed_from_u64(0x5EBA1A);
     let mut ran = 0usize;
+    let mut ran_unequal = 0usize;
     for trial in 0..60 {
-        // config with divisor-rich worlds so feasible shrink targets exist
         let p = [8usize, 12, 16, 24, 32][rng.gen_index(5)];
         let divisors: Vec<usize> = (2..=p).filter(|r| p % r == 0 && *r <= 4).collect();
         let r = divisors[rng.gen_index(divisors.len())];
@@ -327,12 +324,10 @@ fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
         let n = cfg.n_blocks();
         let stride = p / r;
 
-        // feasible shrink targets: p' | units, r | p', and p' >= stride so
-        // a <= r-1 per-group kill pattern can reach it without IDL
-        let units = n / s_pr.map(|s| s as u64).unwrap_or(1);
-        let candidates: Vec<usize> = (stride.max(r)..p)
-            .filter(|&q| q % r == 0 && n % q as u64 == 0 && units % q as u64 == 0)
-            .collect();
+        // every p' >= max(stride, r) is feasible now (balanced unequal
+        // slices need only r <= p'; p' >= stride keeps a <= r-1 per-group
+        // kill pattern IDL-free)
+        let candidates: Vec<usize> = (stride.max(r)..p).collect();
         if candidates.is_empty() {
             continue;
         }
@@ -366,6 +361,9 @@ fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
             .rebalance(&mut cluster, &map)
             .unwrap_or_else(|e| panic!("trial {trial} (p={p}, r={r}, p'={p_new}): {e}"));
         ran += 1;
+        if n % p_new as u64 != 0 {
+            ran_unequal += 1;
+        }
         assert_eq!(report.new_world, p_new);
 
         // (a) minimality: migrated bytes == sum over survivors of new
@@ -388,34 +386,43 @@ fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
         );
 
         // (b) incremental index == from-scratch rebuild at the new world
-        let nb = store.distribution().blocks_per_pe();
+        let dist = store.distribution().clone();
         assert_eq!(
             *store.holder_index(),
-            HolderIndex::rebuild(store.stores(), nb, p_new),
+            HolderIndex::rebuild(store.stores(), &dist),
             "trial {trial}: holder index drifted through rebalance"
         );
 
         // (c) fast path: every slot has exactly r alive holders in the
-        // deterministic §IV-A positions of the new layout
-        let dist = store.distribution().clone();
+        // deterministic §IV-A positions of the new layout; slice lengths
+        // follow the balanced ⌊n/p'⌋/⌈n/p'⌉ partition
+        let q = n / p_new as u64;
+        let rem = n % p_new as u64;
         for slot in 0..p_new {
             let holders = store.holder_index().holders_of(slot);
             assert_eq!(holders.len(), r, "trial {trial}: slot {slot}");
             let mut det: Vec<u32> = (0..r)
-                .map(|k| store.cluster_rank(dist.holder(slot as u64 * nb, k)) as u32)
+                .map(|k| store.cluster_rank(dist.holder(dist.slice_start(slot), k)) as u32)
                 .collect();
             det.sort_unstable();
             assert_eq!(holders, &det[..], "trial {trial}: slot {slot} off the §IV-A set");
             for &h in holders {
                 assert!(cluster.is_alive(h as usize));
             }
+            let want_len = q + ((slot as u64) < rem) as u64;
+            assert_eq!(dist.slice_len(slot), want_len, "trial {trial}: slot {slot} length");
         }
-        // ...and dead stores were reclaimed; survivors hold r·n/p' blocks
-        for pe in 0..p {
+        // ...and dead stores were reclaimed; each survivor holds exactly
+        // its r balanced slices (r·n/p' blocks when p' | n)
+        for (j, &pe) in map.new_to_old.iter().enumerate() {
             let blocks: u64 = store.stores()[pe].slices().iter().map(|s| s.range.len()).sum();
-            if cluster.is_alive(pe) {
-                assert_eq!(blocks, r as u64 * nb, "trial {trial}: PE {pe}");
-            } else {
+            let expect: u64 = (0..r).map(|k| dist.stored_slice(j, k).len()).sum();
+            assert_eq!(blocks, expect, "trial {trial}: PE {pe}");
+        }
+        for pe in 0..p {
+            if !cluster.is_alive(pe) {
+                let blocks: u64 =
+                    store.stores()[pe].slices().iter().map(|s| s.range.len()).sum();
                 assert_eq!(blocks, 0, "trial {trial}: dead PE {pe} still holds data");
             }
         }
@@ -440,6 +447,220 @@ fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
             .unwrap_or_else(|e| panic!("trial {trial}: post-rebalance load failed: {e}"));
     }
     assert!(ran >= 10, "only {ran} feasible rebalance trials ran — generator too narrow");
+    assert!(
+        ran_unequal >= 5,
+        "only {ran_unequal} unequal-slice (non-dividing p') trials ran — generator too narrow"
+    );
+}
+
+/// Reshaped layouts must equal a fresh balanced construction at the new
+/// world for random (p, p', r, s_pr) tuples — including non-dividing p'
+/// and chained reshapes — and the slice geometry must satisfy its
+/// closed-form invariants (⌊n/p'⌋/⌈n/p'⌉ lengths, prefix-sum boundaries,
+/// slice_of inverse, distinct holders).
+#[test]
+fn prop_reshaped_matches_fresh_balanced_over_random_tuples() {
+    let mut rng = Rng::seed_from_u64(0xBA1A2CED);
+    for trial in 0..50 {
+        let cfg = random_config(&mut rng);
+        let p = cfg.world;
+        let r = cfg.replicas;
+        if r > p.saturating_sub(1).max(1) {
+            continue; // no smaller feasible world exists for r = p
+        }
+        let old = Distribution::new(&cfg);
+        let n = cfg.n_blocks();
+        // any p' in [r, p) is feasible now
+        let p_new = r + rng.gen_index(p - r);
+        assert!(old.reshape_feasible(p_new), "trial {trial}: p'={p_new} (r={r})");
+        let got = old.reshaped(p_new).unwrap();
+        let want = Distribution::new_balanced(
+            p_new,
+            n,
+            r,
+            cfg.perm_range_blocks.map(|s| s as u64),
+            cfg.seed,
+            cfg.placement_offset,
+        )
+        .unwrap();
+
+        // geometry invariants
+        let q = n / p_new as u64;
+        let rem = n % p_new as u64;
+        let mut prefix = 0u64;
+        for i in 0..p_new {
+            assert_eq!(got.slice_start(i), prefix, "trial {trial}: slice_start({i})");
+            let want_len = q + ((i as u64) < rem) as u64;
+            assert_eq!(got.slice_len(i), want_len, "trial {trial}: slice_len({i})");
+            assert_eq!(want.slice_len(i), want_len);
+            prefix += want_len;
+        }
+        assert_eq!(prefix, n, "trial {trial}: slices must partition [0, n)");
+
+        // golden equality with the fresh construction on sampled blocks
+        for _ in 0..64 {
+            let y = rng.gen_u64_below(n);
+            assert_eq!(got.slice_of(y), want.slice_of(y), "trial {trial}: slice_of({y})");
+            assert!(got.slice_start(got.slice_of(y)) <= y && y < got.slice_end(got.slice_of(y)));
+            assert_eq!(got.permute_block(y % n), want.permute_block(y % n));
+            assert_eq!(got.unpermute_block(y), want.unpermute_block(y));
+            let mut seen = std::collections::HashSet::new();
+            for k in 0..r {
+                let h = got.holder(y, k);
+                assert_eq!(h, want.holder(y, k), "trial {trial}: holder({y}, {k})");
+                assert!(seen.insert(h), "trial {trial}: duplicate holder {h} for y={y}");
+                assert!(got.stored_slice(h, k).contains(y), "trial {trial}: inverse view");
+            }
+        }
+
+        // chained reshape: a second shrink from the already-unequal layout
+        // must still match the fresh construction at the final world
+        if p_new > r {
+            let p_final = r + rng.gen_index(p_new - r);
+            let chained = got.reshaped(p_final).unwrap();
+            let fresh = Distribution::new_balanced(
+                p_final,
+                n,
+                r,
+                cfg.perm_range_blocks.map(|s| s as u64),
+                cfg.seed,
+                cfg.placement_offset,
+            )
+            .unwrap();
+            for _ in 0..32 {
+                let y = rng.gen_u64_below(n);
+                assert_eq!(chained.slice_of(y), fresh.slice_of(y), "trial {trial} chained");
+                for k in 0..r {
+                    assert_eq!(chained.holder(y, k), fresh.holder(y, k), "trial {trial} chained");
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance scenario: a 16 → 13 → 7 chained shrink (both steps
+/// non-dividing) in execution mode — each rebalance must be golden-equal
+/// to a fresh balanced layout (stores byte-identical modulo the rank
+/// translation, holder index translation-equal) and minimal against the
+/// store-diff oracle, and every byte must stay loadable.
+#[test]
+fn prop_chained_16_13_7_shrink_golden_and_minimal() {
+    let cfg = RestoreConfig::builder(16, 8, 64)
+        .replicas(4)
+        .perm_range_blocks(Some(16))
+        .seed(0x16137)
+        .build()
+        .unwrap();
+    let mut cluster = Cluster::new_execution(16, 4);
+    let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+    let mut rng = Rng::seed_from_u64(0x16137);
+    let shards = shards_for(&cfg, &mut rng);
+    store.submit(&mut cluster, &shards).unwrap();
+    let global: Vec<u8> = shards.iter().flatten().copied().collect();
+    let bs = cfg.block_size;
+    let n = cfg.n_blocks();
+
+    // one wave: kill the given cluster ranks, recover, rebalance, verify
+    let wave = |cluster: &mut Cluster,
+                    store: &mut ReStore,
+                    kills: &[usize],
+                    p_want: usize,
+                    tag: &str| {
+        let pre_held: Vec<Vec<BlockRange>> = (0..16)
+            .map(|pe| store.stores()[pe].slices().iter().map(|s| s.range).collect())
+            .collect();
+        cluster.kill(kills);
+        let (_f, map, _c) = restore::simnet::ulfm::recover(cluster);
+        assert!(store.can_rebalance(cluster), "{tag}: p'={p_want} must rebalance");
+        let report = store.rebalance(cluster, &map).unwrap();
+        assert_eq!(report.new_world, p_want, "{tag}");
+
+        // minimality vs the store-diff oracle
+        let mut expected = 0u64;
+        for &pe in &map.new_to_old {
+            for s in store.stores()[pe].slices() {
+                let mut missing = s.range.len();
+                for old in &pre_held[pe] {
+                    if let Some(overlap) = s.range.intersect(old) {
+                        missing -= overlap.len();
+                    }
+                }
+                expected += missing * bs as u64;
+            }
+        }
+        assert_eq!(report.migrated_bytes, expected, "{tag}: migration not minimal");
+        assert_eq!(
+            report.kept_bytes + report.migrated_bytes,
+            4 * n * bs as u64,
+            "{tag}: kept + migrated must cover the stored volume"
+        );
+
+        // golden: every survivor's stores equal the fresh balanced layout
+        let dist = store.distribution().clone();
+        assert_eq!(n % p_want as u64 == 0, dist.equal_slices(), "{tag}");
+        for (j, &pe) in map.new_to_old.iter().enumerate() {
+            let mut want: Vec<(BlockRange, Vec<u8>)> = (0..4)
+                .map(|k| {
+                    let range = dist.stored_slice(j, k);
+                    let mut buf = Vec::new();
+                    for y in range.start..range.end {
+                        let x = dist.unpermute_block(y) as usize;
+                        buf.extend_from_slice(&global[x * bs..(x + 1) * bs]);
+                    }
+                    (range, buf)
+                })
+                .collect();
+            want.sort_by_key(|(r, _)| r.start);
+            let ours = store.stores()[pe].slices();
+            assert_eq!(ours.len(), want.len(), "{tag}: new rank {j}");
+            for (g, (wrange, wbytes)) in ours.iter().zip(&want) {
+                assert_eq!(g.range, *wrange, "{tag}: new rank {j}");
+                let restore::restore::store::SliceBuf::Real(gb) = &g.buf else {
+                    panic!("{tag}: execution mode must store real bytes");
+                };
+                assert_eq!(gb, wbytes, "{tag}: new rank {j} slice {wrange:?}");
+            }
+        }
+        // holder index: translation-equal to a from-scratch rebuild
+        assert_eq!(
+            *store.holder_index(),
+            HolderIndex::rebuild(store.stores(), &dist),
+            "{tag}: holder index drifted"
+        );
+    };
+
+    // 16 -> 13: kill 3 ranks from distinct §IV-D groups (stride 4)
+    wave(&mut cluster, &mut store, &[0, 5, 10], 13, "wave 16->13");
+    // 13 -> 7: kill 6 consecutive new ranks (= the 6 lowest survivors);
+    // holders sit at stride ⌊13/4⌋ = 3, so a window of 6 takes at most 2
+    // of any slot's 4 holders — never an IDL
+    let kills: Vec<usize> = cluster.survivors()[..6].to_vec();
+    wave(&mut cluster, &mut store, &kills, 7, "wave 13->7");
+
+    // every byte of the original data still loads bit-exactly
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    let reqs: Vec<LoadRequest> = survivors
+        .iter()
+        .enumerate()
+        .filter_map(|(j, &pe)| {
+            let s = (j as u64 * n) / ns;
+            let e = ((j as u64 + 1) * n) / ns;
+            (s < e).then(|| LoadRequest {
+                pe,
+                ranges: RangeSet::new(vec![BlockRange::new(s, e)]),
+            })
+        })
+        .collect();
+    let out = store.load(&mut cluster, &reqs).unwrap();
+    for (req, shard) in reqs.iter().zip(&out.shards) {
+        assert_eq!(
+            shard.bytes.as_deref().unwrap(),
+            expected_bytes(&shards, &req.ranges, &cfg),
+            "post-chain load mismatch for PE {}",
+            req.pe
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json perf artifacts against the CI schema.
+
+The bench binaries emit one JSON object per line:
+
+    {"name": <non-empty string>, "ns_per_iter": <finite number>}
+
+`tools/perf_table.py` (and the cross-PR perf-trajectory tooling) silently
+skips nothing — a malformed line used to surface only when someone tried
+to render the table months later. This validator fails loudly instead:
+CI's `bench-json-short` smoke step runs every bench binary in short mode
+and then checks every produced artifact line-by-line.
+
+Exit status: 0 if every file exists, is non-empty, and every line parses
+with exactly the expected fields; 1 otherwise (all problems are listed).
+
+Usage:
+    python3 tools/validate_bench_json.py BENCH_hotpath.json \
+        BENCH_load_scale.json BENCH_rebalance.json
+"""
+
+import json
+import math
+import sys
+
+
+def validate_file(path: str) -> list:
+    problems = []
+    try:
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except FileNotFoundError:
+        return [f"{path}: missing (bench did not write its artifact)"]
+    entries = 0
+    for lineno, line in enumerate(lines, start=1):
+        if not line.strip():
+            continue
+        where = f"{path}:{lineno}"
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"{where}: not valid JSON ({e}): {line!r}")
+            continue
+        if not isinstance(obj, dict):
+            problems.append(f"{where}: expected an object, got {type(obj).__name__}")
+            continue
+        extra = sorted(set(obj) - {"name", "ns_per_iter"})
+        missing = sorted({"name", "ns_per_iter"} - set(obj))
+        if missing:
+            problems.append(f"{where}: missing field(s) {missing}")
+        if extra:
+            problems.append(f"{where}: unexpected field(s) {extra}")
+        name = obj.get("name")
+        if not isinstance(name, str) or not name.strip():
+            problems.append(f"{where}: 'name' must be a non-empty string, got {name!r}")
+        value = obj.get("ns_per_iter")
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            problems.append(f"{where}: 'ns_per_iter' must be a number, got {value!r}")
+        elif not math.isfinite(value):
+            problems.append(f"{where}: 'ns_per_iter' must be finite, got {value!r}")
+        entries += 1
+    if not entries:
+        problems.append(f"{path}: no entries (empty artifact)")
+    return problems
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    all_problems = []
+    for path in sys.argv[1:]:
+        problems = validate_file(path)
+        if problems:
+            all_problems.extend(problems)
+        else:
+            print(f"{path}: OK")
+    for problem in all_problems:
+        print(f"error: {problem}", file=sys.stderr)
+    return 1 if all_problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
