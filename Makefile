@@ -6,7 +6,7 @@
 
 PYTHON ?= python3
 
-.PHONY: artifacts test bench-json bench-json-short perf-table clean-artifacts
+.PHONY: artifacts test bench-json bench-json-short perf-table weak-scaling clean-artifacts
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
@@ -16,11 +16,13 @@ test:
 	cargo build --release && cargo test -q
 
 # The CI bench smoke set: emits BENCH_hotpath.json / BENCH_load_scale.json /
-# BENCH_rebalance.json ({name, ns_per_iter} JSON lines).
+# BENCH_rebalance.json / BENCH_fused_load.json ({name, ns_per_iter} JSON
+# lines).
 bench-json:
 	cargo bench --bench hotpath
 	cargo bench --bench load_scale
 	cargo bench --bench rebalance
+	cargo bench --bench fused_load
 
 # Short mode: every bench binary runs end to end (so every BENCH_*.json
 # artifact exists) but skips the p = 24576 configurations and cuts
@@ -31,13 +33,19 @@ bench-json:
 bench-json-short:
 	BENCH_SHORT=1 $(MAKE) bench-json
 	$(PYTHON) tools/validate_bench_json.py BENCH_hotpath.json \
-		BENCH_load_scale.json BENCH_rebalance.json
+		BENCH_load_scale.json BENCH_rebalance.json BENCH_fused_load.json
 
 # Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
 # (downloaded from CI's bench-json artifact, or produced by `make
 # bench-json` locally).
 perf-table:
-	$(PYTHON) tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json BENCH_rebalance.json
+	$(PYTHON) tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json \
+		BENCH_rebalance.json BENCH_fused_load.json
+
+# Render the Fig-4-style weak-scaling table (ROADMAP item) from the
+# load-path and fused-load artifacts.
+weak-scaling:
+	$(PYTHON) tools/weak_scaling_figure.py BENCH_load_scale.json BENCH_fused_load.json
 
 clean-artifacts:
 	rm -rf artifacts

@@ -1,0 +1,124 @@
+//! Fused vs. sequential multi-dataset recovery (EXPERIMENTS.md §Perf,
+//! §V walkthrough).
+//!
+//! A recovery that needs k datasets (kmeans points + centroids, PageRank
+//! edges + ranks, RAxML sites + model state) pays one full two-phase
+//! sparse-all-to-all round per dataset when driven sequentially;
+//! `ReStore::load_many` merges the per-dataset message plans into ONE
+//! request all-to-all and ONE data all-to-all. This bench measures both
+//! drivings of the same 3-dataset scattered recovery (one failed 48-PE
+//! node) in cost-model mode at p = 1536 and p = 24576, and reports the
+//! message savings — bytes are identical by construction (asserted), the
+//! fused round sends one message per (requester, server) pair across all
+//! datasets.
+
+use restore::config::RestoreConfig;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::{DatasetId, LoadRequest, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::network::PhaseCost;
+use restore::util::bench::{bench, black_box, short_mode, write_json_artifact, BenchResult};
+
+/// Scatter the `failed` PEs' submit-time shards (of a dataset with
+/// `bpp` blocks per PE) evenly over the survivors — the per-dataset
+/// generalization of `restore::load::scatter_requests`.
+fn scatter_for(bpp: u64, cluster: &Cluster, failed: &[usize]) -> Vec<LoadRequest> {
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    let mut per_pe: Vec<Vec<BlockRange>> = vec![Vec::new(); survivors.len()];
+    for &dead in failed {
+        let start = dead as u64 * bpp;
+        for (j, ranges) in per_pe.iter_mut().enumerate() {
+            let s = start + (j as u64 * bpp) / ns;
+            let e = start + ((j as u64 + 1) * bpp) / ns;
+            if s < e {
+                ranges.push(BlockRange::new(s, e));
+            }
+        }
+    }
+    survivors
+        .iter()
+        .zip(per_pe)
+        .filter(|(_, r)| !r.is_empty())
+        .map(|(&pe, r)| LoadRequest { pe, ranges: RangeSet::new(r) })
+        .collect()
+}
+
+fn run_scale(p: usize, reps: usize, results: &mut Vec<BenchResult>) {
+    println!("--- p = {p} (cost-model, 3 datasets) ---");
+    // Three §V datasets with distinct r/b: bulk data (paper default),
+    // a medium metadata set, and a small state set.
+    let bulk = RestoreConfig::paper_default(p).unwrap();
+    let meta = RestoreConfig::builder(p, 32, 4096)
+        .replicas(2)
+        .perm_range_blocks(Some(128))
+        .build()
+        .unwrap();
+    let state = RestoreConfig::builder(p, 32, 256).replicas(2).build().unwrap();
+    let bpps = [bulk.blocks_per_pe as u64, meta.blocks_per_pe as u64, state.blocks_per_pe as u64];
+
+    let mut cluster = Cluster::new_execution(p, 48);
+    let mut store = ReStore::new(bulk, &cluster).unwrap();
+    let ds_meta = store.create_dataset(meta, &cluster).unwrap();
+    let ds_state = store.create_dataset(state, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+    store.dataset_mut(ds_meta).unwrap().submit_virtual(&mut cluster).unwrap();
+    store.dataset_mut(ds_state).unwrap().submit_virtual(&mut cluster).unwrap();
+    let ids = [DatasetId::FIRST, ds_meta, ds_state];
+
+    // one full node fails; the survivors scatter-load all three datasets
+    let failed: Vec<usize> = (0..48).collect();
+    cluster.kill(&failed);
+    let parts: Vec<(DatasetId, Vec<LoadRequest>)> = ids
+        .iter()
+        .zip(bpps)
+        .map(|(&id, bpp)| (id, scatter_for(bpp, &cluster, &failed)))
+        .collect();
+
+    // cost parity + savings (once, outside the timed loops)
+    let fused = store.load_many(&mut cluster, &parts).unwrap();
+    let mut seq = PhaseCost::default();
+    for (id, reqs) in &parts {
+        let out = store.dataset_mut(*id).unwrap().load(&mut cluster, reqs).unwrap();
+        seq = seq.then(out.cost);
+    }
+    assert_eq!(fused.cost.total_bytes, seq.total_bytes, "fused changes no payload bytes");
+    assert!(fused.cost.total_msgs < seq.total_msgs, "shared pairs must merge");
+    println!(
+        "    messages: sequential {} -> fused {} ({:.1} % saved), bytes identical",
+        seq.total_msgs,
+        fused.cost.total_msgs,
+        100.0 * (seq.total_msgs - fused.cost.total_msgs) as f64 / seq.total_msgs as f64,
+    );
+    results.push(BenchResult::from_value(
+        &format!("fused-load msgs-saved-pct 3ds p={p}"),
+        100.0 * (seq.total_msgs - fused.cost.total_msgs) as f64 / seq.total_msgs as f64,
+    ));
+
+    let r = bench(&format!("fused-load resolve+route 3ds p={p}"), 1, reps, || {
+        black_box(store.load_many(&mut cluster, &parts).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    let r = bench(&format!("sequential-load resolve+route 3ds p={p}"), 1, reps, || {
+        for (id, reqs) in &parts {
+            black_box(store.dataset_mut(*id).unwrap().load(&mut cluster, reqs).unwrap());
+        }
+    });
+    println!("{}", r.line());
+    results.push(r);
+}
+
+fn main() {
+    println!("=== fused multi-dataset load benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    if short_mode() {
+        run_scale(1536, 2, &mut results);
+    } else {
+        run_scale(1536, 10, &mut results);
+        run_scale(24576, 3, &mut results);
+    }
+    write_json_artifact("BENCH_fused_load.json", &results).expect("write BENCH_fused_load.json");
+    println!("\nwrote BENCH_fused_load.json ({} entries)", results.len());
+}

@@ -1,44 +1,69 @@
-//! Quickstart: the 60-second tour of the ReStore API.
+//! Quickstart: the 60-second tour of the ReStore API — now with the §V
+//! multi-dataset registry.
 //!
-//! Creates a 16-PE simulated cluster, submits 1 MiB per PE into the
-//! replicated store, kills two PEs, and recovers their data scattered over
-//! the survivors — verifying every recovered byte.
+//! Creates a 16-PE simulated cluster, registers TWO datasets ("an
+//! application can create multiple ReStore objects, e.g., one for each
+//! datatype to be stored"): 1 MiB/PE of point data (r = 4, 64 B blocks,
+//! permuted) and 2 KiB/PE of model state (r = 2, 32 B blocks, contiguous).
+//! Kills two PEs, rebalances BOTH layouts in one fused shrink handshake,
+//! and recovers both datasets' lost shards in ONE fused two-phase round
+//! (`load_many`) — verifying every recovered byte and showing the message
+//! savings over driving the two loads sequentially.
 //!
 //! Run with: `cargo run --example quickstart`
 
 use restore::config::RestoreConfig;
 use restore::metrics::fmt_time;
+use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::load::scatter_requests;
-use restore::restore::ReStore;
+use restore::restore::{DatasetId, LoadRequest, ReStore};
 use restore::simnet::cluster::Cluster;
 use restore::simnet::ulfm;
 
+const P: usize = 16;
+const POINT_BPP: u64 = 16 * 1024; // 64 B blocks -> 1 MiB per PE
+const MODEL_BPP: u64 = 64; // 32 B blocks -> 2 KiB per PE
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A cluster of 16 PEs, 4 per node (so each node is a failure domain).
-    let mut cluster = Cluster::new_execution(16, 4);
+    let mut cluster = Cluster::new_execution(P, 4);
 
-    // ReStore config: 1 MiB per PE in 64 B blocks, r = 4 replicas, 16 KiB
+    // Dataset 0 — the bulk point data: 64 B blocks, r = 4 replicas, 16 KiB
     // permutation ranges (the paper's §IV-B scattering).
-    let cfg = RestoreConfig::builder(16, 64, 16 * 1024)
+    let points_cfg = RestoreConfig::builder(P, 64, POINT_BPP as usize)
         .replicas(4)
         .perm_range_bytes(Some(16 * 1024))
         .build()?;
+    // Dataset 1 — small model state with its OWN r/b: 32 B blocks, r = 2,
+    // no permutation. Independent per-dataset policies are the point of
+    // the registry (§V: one ReStore object per datatype).
+    let model_cfg = RestoreConfig::builder(P, 32, MODEL_BPP as usize).replicas(2).build()?;
 
-    // Every PE submits its serialized shard once.
-    let shards: Vec<Vec<u8>> =
-        (0..16u32).map(|pe| (0..1024 * 1024).map(|i| (pe as usize + i) as u8).collect()).collect();
-    let mut store = ReStore::new(cfg, &cluster)?;
-    let submit = store.submit(&mut cluster, &shards)?;
+    let point_shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..POINT_BPP as usize * 64).map(|i| (pe + i) as u8).collect())
+        .collect();
+    let model_shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..MODEL_BPP as usize * 32).map(|i| (pe * 7 + i * 3) as u8).collect())
+        .collect();
+
+    let mut store = ReStore::new(points_cfg, &cluster)?;
+    let points = DatasetId::FIRST;
+    let model = store.create_dataset(model_cfg, &cluster)?;
+    let s1 = store.submit(&mut cluster, &point_shards)?; // facade = dataset 0
+    let s2 = store.dataset_mut(model)?.submit(&mut cluster, &model_shards)?;
     println!(
-        "submit: {} over the simulated network ({} messages, {} total)",
-        fmt_time(submit.cost.sim_time_s),
-        submit.cost.total_msgs,
-        human_bytes(submit.cost.total_bytes),
+        "submit: points {} ({} msgs), model {} ({} msgs)",
+        fmt_time(s1.cost.sim_time_s),
+        s1.cost.total_msgs,
+        fmt_time(s2.cost.sim_time_s),
+        s2.cost.total_msgs,
     );
 
-    // Two PEs fail. The survivors agree on the failure and shrink the
-    // communicator (ULFM-style), then reload the lost shards via ReStore.
-    cluster.kill(&[3, 11]);
+    // Two PEs fail (from different §IV-D groups of BOTH datasets — the
+    // model dataset's r = 2 groups sit at stride p/r = 8, so 3 and 12 never
+    // share a holder set). The survivors agree on the failure and shrink
+    // the communicator (ULFM-style).
+    cluster.kill(&[3, 12]);
     let (failed, map, ulfm_cost) = ulfm::recover(&mut cluster);
     println!(
         "failure: PEs {failed:?} died; communicator shrunk to {} ranks in {}",
@@ -46,47 +71,76 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         fmt_time(ulfm_cost.sim_time_s)
     );
 
-    // The shrink bumped the communicator epoch; the store must adopt the
-    // new world before it will route again. With balanced unequal slices
-    // every survivor count >= r admits the §IV-B rebalance, so the 14
-    // survivors get a fresh layout (two slice sizes, ⌈n/14⌉ and ⌊n/14⌋)
-    // with full r = 4 replication — no lingering dead-rank holes. See
-    // examples/replica_repair.rs for the full story (and the repair-based
-    // alternative when the application keeps the communicator).
-    let rebalanced = store.rebalance_or_acknowledge(&mut cluster, &map)?;
-    if let Some(report) = rebalanced {
-        println!(
-            "rebalance: layout rewritten over {} survivors ({} migrated)",
-            report.new_world,
-            human_bytes(report.migrated_bytes),
-        );
+    // The shrink bumped the communicator epoch; EVERY dataset must adopt
+    // the new world before it will route again. One fused handshake
+    // rebalances all feasible layouts under the single epoch bump — here
+    // both datasets get fresh balanced layouts over the 14 survivors with
+    // full replication, their migration all-to-alls merged into one phase.
+    let outcomes = store.rebalance_or_acknowledge_all(&mut cluster, &map)?;
+    for (id, outcome) in outcomes.iter().enumerate() {
+        if let Some(report) = outcome {
+            println!(
+                "rebalance: dataset {id} rewritten over {} survivors ({} migrated)",
+                report.new_world,
+                human_bytes(report.migrated_bytes),
+            );
+        }
     }
 
-    let requests = scatter_requests(&store, &cluster, &failed);
-    let out = store.load(&mut cluster, &requests)?;
+    // ONE fused recovery round for both datasets: the per-dataset message
+    // plans merge into a single request all-to-all and a single data
+    // all-to-all — one message per (requester, server) pair ACROSS
+    // datasets (§IV-C's startup-overhead argument applied across
+    // datasets).
+    let point_reqs = scatter_requests(&store, &cluster, &failed);
+    let survivors = cluster.survivors();
+    let model_reqs: Vec<LoadRequest> = failed
+        .iter()
+        .enumerate()
+        .map(|(i, &dead)| LoadRequest {
+            pe: survivors[i % survivors.len()],
+            ranges: RangeSet::new(vec![BlockRange::new(
+                dead as u64 * MODEL_BPP,
+                (dead as u64 + 1) * MODEL_BPP,
+            )]),
+        })
+        .collect();
+    let parts = [(points, point_reqs), (model, model_reqs)];
+    let out = store.load_many(&mut cluster, &parts)?;
     println!(
-        "recovery: {} ({} request phase + {} data phase)",
+        "fused recovery: {} ({} request msgs + {} data msgs across {} datasets)",
         fmt_time(out.cost.sim_time_s),
-        fmt_time(out.request_cost.sim_time_s),
-        fmt_time(out.data_cost.sim_time_s)
+        out.request_cost.total_msgs,
+        out.data_cost.total_msgs,
+        parts.len(),
     );
 
-    // Verify every byte.
+    // Verify every byte of both datasets.
     let mut recovered = 0usize;
-    for (req, shard) in requests.iter().zip(&out.shards) {
-        let bytes = shard.bytes.as_ref().unwrap();
-        let mut off = 0;
-        for range in req.ranges.ranges() {
-            for x in range.start..range.end {
-                let pe = (x / (16 * 1024)) as usize;
-                let boff = ((x % (16 * 1024)) * 64) as usize;
-                assert_eq!(&bytes[off..off + 64], &shards[pe][boff..boff + 64]);
-                off += 64;
+    for (part, (_, reqs)) in out.parts.iter().zip(&parts) {
+        let (bpp, bs, shards): (u64, usize, &[Vec<u8>]) = if part.dataset == points {
+            (POINT_BPP, 64, &point_shards)
+        } else {
+            (MODEL_BPP, 32, &model_shards)
+        };
+        for (req, shard) in reqs.iter().zip(&part.shards) {
+            let bytes = shard.bytes.as_ref().unwrap();
+            let mut off = 0;
+            for range in req.ranges.ranges() {
+                for x in range.start..range.end {
+                    let pe = (x / bpp) as usize;
+                    let boff = ((x % bpp) as usize) * bs;
+                    assert_eq!(&bytes[off..off + bs], &shards[pe][boff..boff + bs]);
+                    off += bs;
+                }
             }
+            recovered += bytes.len();
         }
-        recovered += bytes.len();
     }
-    println!("verified {} recovered bytes — bit-exact", human_bytes(recovered as u64));
+    println!(
+        "verified {} recovered bytes across both datasets — bit-exact",
+        human_bytes(recovered as u64)
+    );
     Ok(())
 }
 

@@ -26,6 +26,13 @@
 //! rebalance after a shrink (now feasible for every p' ≥ r), repair in
 //! place when the application keeps the communicator.
 //!
+//! NEW with the multi-dataset registry (§V): a second dataset — 1 KiB/PE
+//! of "model state" with its own r = 2 and 16 B blocks — rides every wave.
+//! One fused `rebalance_or_acknowledge_all` adopts each shrink for BOTH
+//! datasets under the single epoch bump (their migration all-to-alls
+//! merged into one phase), and both datasets' lost shards reload
+//! bit-exactly afterwards.
+//!
 //! Run with: `cargo run --release --example replica_repair`
 
 use restore::config::RestoreConfig;
@@ -34,7 +41,7 @@ use restore::metrics::fmt_time;
 use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::idl;
 use restore::restore::repair::RepairScheme;
-use restore::restore::{LoadRequest, ReStore};
+use restore::restore::{Dataset, DatasetId, LoadRequest, ReStore};
 use restore::simnet::cluster::Cluster;
 use restore::simnet::ulfm;
 
@@ -42,39 +49,52 @@ const P: usize = 64;
 const R: usize = 4;
 const BPP: u64 = 256; // blocks per PE at p = 64
 const BS: usize = 8;
+/// Second dataset: model state — its own replication level and block size.
+const R2: usize = 2;
+const BPP2: u64 = 64;
+const BS2: usize = 16;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = RestoreConfig::builder(P, BS, BPP as usize)
         .replicas(R)
         .perm_range_blocks(Some(64))
         .build()?;
+    let model_cfg = RestoreConfig::builder(P, BS2, BPP2 as usize).replicas(R2).build()?;
     let mut cluster = Cluster::new_execution(P, 8);
     let mut store = ReStore::new(cfg, &cluster)?;
+    let model = store.create_dataset(model_cfg, &cluster)?;
     let shards: Vec<Vec<u8>> = (0..P)
         .map(|pe| (0..BPP as usize * BS).map(|i| (pe * 41 + i * 3) as u8).collect())
         .collect();
+    let model_shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..BPP2 as usize * BS2).map(|i| (pe * 13 + i * 7) as u8).collect())
+        .collect();
     store.submit(&mut cluster, &shards)?;
+    store.dataset_mut(model)?.submit(&mut cluster, &model_shards)?;
     println!(
-        "submitted {} PEs x {} KiB, r = {R}, epoch {}",
+        "submitted {} PEs x {} KiB (r = {R}) + {} B model state (r = {R2}), epoch {}",
         P,
         BPP as usize * BS / 1024,
+        BPP2 as usize * BS2,
         store.epoch()
     );
 
     // --- wave 1: 64 -> 45 (non-dividing) ------------------------------------
     // Kill ranks 0..19: every §IV-D group (stride p/r = 16) loses at most
-    // 2 of its 4 members — recoverable. p' = 45 is the layout the old
-    // equal-slice geometry had to refuse (45 ∤ n, 4 ∤ 45); the balanced
-    // unequal slices (364/365 blocks) carry it.
+    // 2 of its 4 members — recoverable (the model dataset's r = 2 groups
+    // sit at stride 32, so they lose at most 1 of 2). p' = 45 is the
+    // layout the old equal-slice geometry had to refuse (45 ∤ n, 4 ∤ 45);
+    // the balanced unequal slices (364/365 blocks) carry it.
     let wave1: Vec<usize> = (0..19).collect();
-    run_wave(&mut cluster, &mut store, &shards, &wave1, "wave 1 (64 -> 45)")?;
+    run_wave(&mut cluster, &mut store, &shards, &model_shards, &wave1, "wave 1 (64 -> 45)")?;
 
     // --- wave 2: 45 -> 23 (non-dividing, chained) ---------------------------
     // Kill the 22 lowest survivors (= new ranks 0..22): holders sit at
-    // stride ⌊45/4⌋ = 11 in the rebalanced world, so a window of 22
-    // consecutive ranks takes at most 2 of any slot's 4 holders.
+    // stride ⌊45/4⌋ = 11 (model: ⌊45/2⌋ = 22) in the rebalanced world, so
+    // a window of 22 consecutive ranks takes at most 2 of any slot's 4
+    // holders (at most 1 of the model's 2).
     let wave2: Vec<usize> = cluster.survivors()[..22].to_vec();
-    run_wave(&mut cluster, &mut store, &shards, &wave2, "wave 2 (45 -> 23)")?;
+    run_wave(&mut cluster, &mut store, &shards, &model_shards, &wave2, "wave 2 (45 -> 23)")?;
 
     // --- wave 3: §IV-E repair inside the rebalanced world -------------------
     // Two more PEs die. The application *could* shrink and rebalance again
@@ -87,33 +107,46 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("\n=== wave 3: 2 PEs die; repair instead of shrink ===");
     let extra: Vec<usize> = cluster.survivors()[..2].to_vec();
     cluster.kill(&extra);
-    let degraded = count_slots_below_r(&store, &cluster);
+    let degraded = count_slots_below_r(store.dataset(DatasetId::FIRST)?, &cluster, R);
     let rep = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing)?;
+    let rep2 = store
+        .dataset_mut(DatasetId(1))?
+        .repair_replicas(&mut cluster, RepairScheme::DoubleHashing)?;
     println!(
-        "{degraded} slots were below r = {R} copies; repair moved {} slices ({} unrepairable), \
-         {} sim time",
+        "{degraded} slots were below r = {R} copies; repair moved {} + {} slices \
+         ({} unrepairable), {} sim time",
         rep.transfers,
-        rep.unrepairable,
-        fmt_time(rep.cost.sim_time_s)
+        rep2.transfers,
+        rep.unrepairable + rep2.unrepairable,
+        fmt_time(rep.cost.sim_time_s + rep2.cost.sim_time_s)
     );
-    assert_eq!(count_slots_below_r(&store, &cluster), 0, "repair must restore r copies");
-    println!("every slot back at {R} alive replicas without moving surviving copies");
+    assert_eq!(
+        count_slots_below_r(store.dataset(DatasetId::FIRST)?, &cluster, R),
+        0,
+        "repair must restore r copies"
+    );
+    assert_eq!(
+        count_slots_below_r(store.dataset(DatasetId(1))?, &cluster, R2),
+        0,
+        "repair must restore the model dataset's r copies too"
+    );
+    println!("every slot of both datasets back at full alive replication");
 
     println!("\nall waves recovered bit-exactly; layout epoch {}", store.epoch());
     Ok(())
 }
 
-/// Slots of the current layout with fewer than `R` alive holders.
-fn count_slots_below_r(store: &ReStore, cluster: &Cluster) -> usize {
-    (0..store.distribution().world())
+/// Slots of a dataset's current layout with fewer than `r` alive holders.
+fn count_slots_below_r(ds: &Dataset, cluster: &Cluster, r: usize) -> usize {
+    (0..ds.distribution().world())
         .filter(|&slot| {
-            let alive = store
+            let alive = ds
                 .holder_index()
                 .holders_of(slot)
                 .iter()
                 .filter(|&&pe| cluster.is_alive(pe as usize))
                 .count();
-            alive < R
+            alive < r
         })
         .count()
 }
@@ -122,6 +155,7 @@ fn run_wave(
     cluster: &mut Cluster,
     store: &mut ReStore,
     shards: &[Vec<u8>],
+    model_shards: &[Vec<u8>],
     kills: &[usize],
     tag: &str,
 ) -> Result<(), Box<dyn std::error::Error>> {
@@ -172,9 +206,15 @@ fn run_wave(
     }
     println!();
 
-    // Rebalance: fresh §IV-A layout over the survivors, minimal migration.
+    // Fused rebalance: fresh §IV-A layouts for BOTH datasets over the
+    // survivors, minimal migrations merged into one sparse all-to-all,
+    // one epoch adoption.
     let t0 = cluster.now();
-    let report = store.rebalance(cluster, &map)?;
+    let outcomes = store.rebalance_or_acknowledge_all(cluster, &map)?;
+    let report = outcomes[0].as_ref().expect("point dataset must rebalance");
+    let report2 = outcomes[1].as_ref().expect("model dataset must rebalance");
+    assert_eq!(store.epoch(), cluster.epoch());
+    assert_eq!(store.dataset(DatasetId(1))?.epoch(), cluster.epoch());
     // total replicated volume is r·n·bs regardless of how p' slices it
     let stored: u64 = R as u64 * store.distribution().n_blocks() * BS as u64;
     let dist = store.distribution();
@@ -186,12 +226,15 @@ fn run_wave(
         dist.n_blocks() / p_new,
     );
     println!(
-        "rebalance: {} transfers moved {} ({:.1} % of the {} stored), kept {} local, {}",
+        "fused rebalance: {} + {} transfers moved {} ({:.1} % of the {} stored) + {} model, \
+         kept {} local, {}",
         report.transfers,
+        report2.transfers,
         human(report.migrated_bytes),
         100.0 * report.migrated_bytes as f64 / stored as f64,
         human(stored),
-        human(report.kept_bytes),
+        human(report2.migrated_bytes),
+        human(report.kept_bytes + report2.kept_bytes),
         fmt_time(cluster.now() - t0)
     );
 
@@ -238,6 +281,34 @@ fn run_wave(
         fmt_time(out.cost.sim_time_s),
         human(verified as u64)
     );
+
+    // ...and the model dataset reloads its lost shards bit-exactly in its
+    // own rebalanced layout, through the dataset handle.
+    let model_reqs: Vec<LoadRequest> = kills
+        .iter()
+        .enumerate()
+        .map(|(i, &dead)| LoadRequest {
+            pe: survivors[i % survivors.len()],
+            ranges: RangeSet::new(vec![BlockRange::new(
+                dead as u64 * BPP2,
+                (dead as u64 + 1) * BPP2,
+            )]),
+        })
+        .collect();
+    let model_out = store.dataset_mut(DatasetId(1))?.load(cluster, &model_reqs)?;
+    for (req, shard) in model_reqs.iter().zip(&model_out.shards) {
+        let bytes = shard.bytes.as_ref().expect("execution mode");
+        let mut off = 0usize;
+        for range in req.ranges.ranges() {
+            for x in range.start..range.end {
+                let pe = (x / BPP2) as usize;
+                let boff = ((x % BPP2) as usize) * BS2;
+                assert_eq!(&bytes[off..off + BS2], &model_shards[pe][boff..boff + BS2]);
+                off += BS2;
+            }
+        }
+    }
+    println!("model dataset: {} lost shards verified bit-exact", kills.len());
     Ok(())
 }
 

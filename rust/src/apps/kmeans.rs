@@ -17,12 +17,13 @@
 //! real PJRT compute, small p) and **cost-model** (schedules + calibrated
 //! per-iteration compute time, the paper's PE counts).
 
-use crate::apps::Ownership;
+use crate::apps::{secondary_replicas, Ownership};
 use crate::config::RestoreConfig;
 use crate::error::{Error, Result};
+use crate::restore::block::{BlockRange, RangeSet};
 use crate::restore::load::scatter_requests_for_ranges;
 use crate::restore::serialize::{blocks_to_f32s, f32s_to_blocks};
-use crate::restore::{LoadRequest, ReStore};
+use crate::restore::{DatasetId, LoadRequest, ReStore};
 use crate::runtime::Engine;
 use crate::simnet::cluster::Cluster;
 use crate::simnet::failure::ExpDecaySchedule;
@@ -138,6 +139,19 @@ pub fn starting_centers(seed: u64, k: usize, dims: usize) -> Vec<f32> {
     (0..k * dims).map(|_| rng.gen_range_f32(-8.0, 8.0)).collect()
 }
 
+/// The §V per-datatype config for the starting-centroid dataset: its own
+/// `r`/`b` choice, independent of the point dataset's — the centroid
+/// checkpoint is tiny, so it takes small 32 B blocks, a lower replication
+/// level, and no permutation (a contiguous shard per PE).
+pub fn centroid_restore_cfg(p: usize, k: usize, dims: usize) -> Result<RestoreConfig> {
+    let bs = 32usize;
+    let blocks = (k * dims * 4).div_ceil(bs);
+    RestoreConfig::builder(p, bs, blocks)
+        .replicas(secondary_replicas(p))
+        .seed(0xCE17E55)
+        .build()
+}
+
 /// Run fault-tolerant k-means in **execution mode**: real points, real
 /// PJRT kernels, real recovery, on the (small) simulated cluster.
 pub fn run_execution(
@@ -179,12 +193,27 @@ pub fn run_execution(
         .collect();
     let shards: Vec<Vec<u8>> = work.iter().map(|w| f32s_to_blocks(&w.points, bs)).collect();
     let mut store = ReStore::new(restore_cfg.clone(), cluster)?;
+    let points_ds = DatasetId::FIRST;
     let t0 = cluster.now();
     let submit = store.submit(cluster, &shards)?;
     report.sim_restore_s += submit.cost.sim_time_s;
     drop(shards);
 
     let mut centers = starting_centers(params.seed, params.k, dims);
+
+    // Second dataset (§V: one ReStore object per datatype): the shared
+    // starting centroids, checkpointed with their own r/b — every PE
+    // submits the identical serialization, so any survivor can re-fetch a
+    // bit-exact copy after a failure (verified below).
+    let centroid_cfg = centroid_restore_cfg(p, params.k, dims)?;
+    let centroid_bpp = centroid_cfg.blocks_per_pe as u64;
+    let centroid_blocks = f32s_to_blocks(&centers, centroid_cfg.block_size);
+    let centroid_ds = store.create_dataset(centroid_cfg, cluster)?;
+    let centroid_shards: Vec<Vec<u8>> = vec![centroid_blocks.clone(); p];
+    let submit_c = store.dataset_mut(centroid_ds)?.submit(cluster, &centroid_shards)?;
+    report.sim_restore_s += submit_c.cost.sim_time_s;
+    drop(centroid_shards);
+
     let mut ownership = Ownership::identity(p, restore_cfg.blocks_per_pe as u64);
 
     // exact padding correction: a zero point's distance² to each center
@@ -266,11 +295,10 @@ pub fn run_execution(
             let (_failed, map, _cost) = ulfm::recover(cluster);
             report.sim_mpi_recovery_s += cluster.now() - mpi_t0;
 
-            // §IV-B shrinking recovery: rewrite the replica layout over the
-            // survivors when the shrunken world admits the §IV-A layout
-            // (IDL probability returns to the fresh-r level and loads keep
-            // the deterministic fast path); otherwise acknowledge the
-            // shrink — reclaim dead stores, route around the holes.
+            // §IV-B shrinking recovery, fused across BOTH datasets: one
+            // handshake rewrites every feasible layout (points AND
+            // centroids) under the single post-shrink epoch; infeasible or
+            // data-lost datasets degrade to acknowledge individually.
             let rs_t0 = cluster.now();
             store.rebalance_or_acknowledge(cluster, &map)?;
 
@@ -278,13 +306,48 @@ pub fn run_execution(
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, align);
 
-            // ReStore scattered load of the lost ranges
+            // ONE fused recovery round for both datasets: the survivors'
+            // scattered point loads and the centroid re-fetch share a
+            // single request all-to-all and a single data all-to-all.
             let requests: Vec<LoadRequest> = gained
                 .iter()
                 .map(|(pe, set)| LoadRequest { pe: *pe, ranges: set.clone() })
                 .collect();
-            let out = store.load(cluster, &requests)?;
-            for (req, shard) in requests.iter().zip(&out.shards) {
+            let centroid_reqs = vec![LoadRequest {
+                pe: survivors[0],
+                ranges: RangeSet::new(
+                    dead.iter()
+                        .map(|&d| {
+                            BlockRange::new(d as u64 * centroid_bpp, (d as u64 + 1) * centroid_bpp)
+                        })
+                        .collect(),
+                ),
+            }];
+            let parts = [(points_ds, requests), (centroid_ds, centroid_reqs)];
+            let point_shards_out = match store.load_many(cluster, &parts) {
+                Ok(fused) => {
+                    // the recovered centroid shards must be bit-exact
+                    // copies of the canonical starting-center serialization
+                    let got = fused.parts[1].shards[0].bytes.as_ref().expect("execution mode");
+                    for (i, chunk) in got.chunks(centroid_blocks.len()).enumerate() {
+                        assert_eq!(
+                            chunk,
+                            &centroid_blocks[..],
+                            "recovered centroid shard {i} diverged"
+                        );
+                    }
+                    fused.parts.into_iter().next().unwrap().shards
+                }
+                // The low-replication centroid dataset (r = 2) can lose
+                // whole slots under heavy waves; every PE still holds the
+                // centers in app memory, so degrade to a points-only load
+                // — exactly what the app did before the second dataset.
+                Err(Error::IrrecoverableDataLoss { dataset, .. }) if dataset == centroid_ds => {
+                    store.load(cluster, &parts[0].1)?.shards
+                }
+                Err(e) => return Err(e),
+            };
+            for (req, shard) in parts[0].1.iter().zip(&point_shards_out) {
                 let bytes = shard.bytes.as_ref().expect("execution mode");
                 let floats = blocks_to_f32s(bytes, (req.ranges.total_blocks() as usize * bs) / 4);
                 work[req.pe].points.extend_from_slice(&floats);
@@ -337,9 +400,16 @@ pub fn run_cost_model(
     let schedule = ExpDecaySchedule::new(params.failure_fraction.max(0.0).min(0.999), params.iterations);
 
     let mut store = ReStore::new(restore_cfg.clone(), cluster)?;
+    let points_ds = DatasetId::FIRST;
     let t0 = cluster.now();
     let submit = store.submit_virtual(cluster)?;
     report.sim_restore_s += submit.cost.sim_time_s;
+    // centroid dataset (same §V split as the execution-mode run)
+    let centroid_cfg = centroid_restore_cfg(p, params.k, params.dims)?;
+    let centroid_bpp = centroid_cfg.blocks_per_pe as u64;
+    let centroid_ds = store.create_dataset(centroid_cfg, cluster)?;
+    let submit_c = store.dataset_mut(centroid_ds)?.submit_virtual(cluster)?;
+    report.sim_restore_s += submit_c.cost.sim_time_s;
     let mut ownership = Ownership::identity(p, restore_cfg.blocks_per_pe as u64);
 
     let reduce_bytes = ((params.k * params.dims + params.k + 1) * 4) as u64;
@@ -365,7 +435,26 @@ pub fn run_cost_model(
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, 1);
             let requests = scatter_requests_for_ranges(&gained);
-            store.load(cluster, &requests)?;
+            let centroid_reqs = vec![LoadRequest {
+                pe: survivors[0],
+                ranges: RangeSet::new(
+                    dead.iter()
+                        .map(|&d| {
+                            BlockRange::new(d as u64 * centroid_bpp, (d as u64 + 1) * centroid_bpp)
+                        })
+                        .collect(),
+                ),
+            }];
+            let parts = [(points_ds, requests), (centroid_ds, centroid_reqs)];
+            match store.load_many(cluster, &parts) {
+                Ok(_) => {}
+                // lost centroid slots: degrade to a points-only load (see
+                // the execution-mode run)
+                Err(Error::IrrecoverableDataLoss { dataset, .. }) if dataset == centroid_ds => {
+                    store.load(cluster, &parts[0].1)?;
+                }
+                Err(e) => return Err(e),
+            }
             report.sim_restore_s += cluster.now() - rs_t0;
         }
         report.iterations_run = iter + 1;

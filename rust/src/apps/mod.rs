@@ -13,6 +13,13 @@
 //! iterate compute + allreduce, and on failure run the ULFM recovery
 //! (`agree` + `shrink`), rebalance the lost shards over the survivors with
 //! a scattered `load`, and keep going — the paper's shrinking strategy.
+//!
+//! Each app checkpoints TWO datasets (§V: "one ReStore object per
+//! datatype"): its bulk input (points / edges / MSA sites, r = 4, 64 B
+//! blocks) and a small state dataset (starting centroids / initial rank
+//! vector / model state, [`secondary_replicas`], 32 B blocks). Failure
+//! recovery drives both through ONE fused `load_many` round and ONE fused
+//! shrink handshake.
 
 pub mod kmeans;
 pub mod pagerank;
@@ -20,20 +27,37 @@ pub mod raxml;
 
 use crate::restore::block::{BlockRange, RangeSet};
 
+/// Replication level for an application's *secondary* dataset (centroids,
+/// rank vectors, model state): lower than the point/edge/site data's
+/// `r = 4`, but still subject to the config's `r | p` constraint — 2 on
+/// even worlds, 1 otherwise.
+pub fn secondary_replicas(world: usize) -> usize {
+    if world >= 2 && world % 2 == 0 {
+        2
+    } else {
+        1
+    }
+}
+
 /// Per-PE ownership ledger: which *original* block ranges each PE is
 /// currently working on. Starts as the identity partition (PE i owns its
 /// own shard) and is updated by the load balancer after every failure.
 #[derive(Debug, Clone)]
 pub struct Ownership {
     /// Indexed by original rank; dead PEs keep their (now stale) entry.
-    pub owned: Vec<Vec<BlockRange>>,
+    pub owned: Vec<RangeSet>,
 }
 
 impl Ownership {
     pub fn identity(world: usize, blocks_per_pe: u64) -> Self {
         Ownership {
             owned: (0..world as u64)
-                .map(|pe| vec![BlockRange::new(pe * blocks_per_pe, (pe + 1) * blocks_per_pe)])
+                .map(|pe| {
+                    RangeSet::new(vec![BlockRange::new(
+                        pe * blocks_per_pe,
+                        (pe + 1) * blocks_per_pe,
+                    )])
+                })
                 .collect(),
         }
     }
@@ -55,11 +79,14 @@ impl Ownership {
         align: u64,
     ) -> Vec<(usize, RangeSet)> {
         assert!(align > 0);
-        let mut lost: Vec<BlockRange> = Vec::new();
+        // collect the dead PEs' holdings into ONE normalization pass (an
+        // incremental union per failed PE would re-sort the accumulated
+        // set f times)
+        let mut lost_ranges: Vec<BlockRange> = Vec::new();
         for &f in failed {
-            lost.append(&mut self.owned[f]);
+            lost_ranges.extend(std::mem::take(&mut self.owned[f]).ranges().iter().copied());
         }
-        let lost = RangeSet::new(lost);
+        let lost = RangeSet::new(lost_ranges);
         let total: u64 = lost.total_blocks();
         let ns = survivors.len() as u64;
         if ns == 0 || total == 0 {
@@ -90,7 +117,7 @@ impl Ownership {
             }
             if !mine.is_empty() {
                 let set = RangeSet::new(mine);
-                self.owned[pe].extend(set.ranges().iter().copied());
+                self.owned[pe] = self.owned[pe].union(&set);
                 out.push((pe, set));
             }
         }
@@ -99,7 +126,7 @@ impl Ownership {
 
     /// Total blocks owned by `pe`.
     pub fn blocks_of(&self, pe: usize) -> u64 {
-        self.owned[pe].iter().map(BlockRange::len).sum()
+        self.owned[pe].total_blocks()
     }
 }
 
@@ -110,8 +137,16 @@ mod tests {
     #[test]
     fn identity_partition() {
         let o = Ownership::identity(4, 100);
-        assert_eq!(o.owned[2], vec![BlockRange::new(200, 300)]);
+        assert_eq!(o.owned[2].ranges(), &[BlockRange::new(200, 300)]);
         assert_eq!(o.blocks_of(3), 100);
+    }
+
+    #[test]
+    fn secondary_replicas_respects_divisibility() {
+        assert_eq!(secondary_replicas(8), 2);
+        assert_eq!(secondary_replicas(48), 2);
+        assert_eq!(secondary_replicas(3), 1);
+        assert_eq!(secondary_replicas(1), 1);
     }
 
     #[test]
@@ -124,7 +159,7 @@ mod tests {
             assert_eq!(s.total_blocks(), 25);
         }
         assert_eq!(o.blocks_of(0), 125);
-        assert_eq!(o.owned[1], Vec::<BlockRange>::new()); // emptied
+        assert!(o.owned[1].is_empty()); // emptied
     }
 
     #[test]

@@ -9,12 +9,13 @@
 //! for a fixed-shape AOT kernel; DESIGN.md §3/S19), same recovery skeleton
 //! as the other apps.
 
-use crate::apps::Ownership;
+use crate::apps::{secondary_replicas, Ownership};
 use crate::config::RestoreConfig;
 use crate::error::Result;
+use crate::restore::block::{BlockRange, RangeSet};
 use crate::restore::load::scatter_requests_for_ranges;
 use crate::restore::serialize::{blocks_to_u64s, u64s_to_blocks};
-use crate::restore::{LoadRequest, ReStore};
+use crate::restore::{DatasetId, LoadRequest, ReStore};
 use crate::simnet::cluster::Cluster;
 use crate::simnet::failure::ExpDecaySchedule;
 use crate::simnet::ulfm;
@@ -73,6 +74,18 @@ pub fn generate_edges(seed: u64, pe: usize, params: &PagerankParams, total_verti
         .collect()
 }
 
+/// The §V per-datatype config for the initial-rank-vector dataset: 32 B
+/// blocks (4 vertices' f64 ranks each), a lower replication level than the
+/// edge dataset, no permutation.
+pub fn rank_restore_cfg(p: usize, params: &PagerankParams) -> Result<RestoreConfig> {
+    let bs = 32usize;
+    let blocks = (params.vertices_per_pe * 8).div_ceil(bs);
+    RestoreConfig::builder(p, bs, blocks)
+        .replicas(secondary_replicas(p))
+        .seed(0x9A6E)
+        .build()
+}
+
 /// Run fault-tolerant PageRank in execution mode.
 pub fn run(
     cluster: &mut Cluster,
@@ -97,10 +110,27 @@ pub fn run(
         (0..p).map(|pe| generate_edges(params.seed, pe, params, total_vertices)).collect();
     let shards: Vec<Vec<u8>> = edges.iter().map(|e| u64s_to_blocks(e, bs)).collect();
     let mut store = ReStore::new(restore_cfg.clone(), cluster)?;
+    let edges_ds = DatasetId::FIRST;
     let t0 = cluster.now();
     let submit = store.submit(cluster, &shards)?;
     report.sim_restore_s += submit.cost.sim_time_s;
     drop(shards);
+
+    // Second dataset (§V: one ReStore object per datatype): the initial
+    // rank vector (1/n per vertex as f64 bit patterns), checkpointed with
+    // its own r/b — a restarted survivor re-fetches a dead PE's rank shard
+    // bit-exactly after every failure (verified below). 32 B blocks hold 4
+    // vertices' ranks; the edge dataset keeps its larger blocks and r = 4.
+    let rank_cfg = rank_restore_cfg(p, params)?;
+    let rank_bpp = rank_cfg.blocks_per_pe as u64;
+    let rank0 = (1.0f64 / total_vertices as f64).to_bits();
+    let rank_shard =
+        u64s_to_blocks(&vec![rank0; params.vertices_per_pe], rank_cfg.block_size);
+    let rank_ds = store.create_dataset(rank_cfg, cluster)?;
+    let rank_shards: Vec<Vec<u8>> = vec![rank_shard.clone(); p];
+    let submit_r = store.dataset_mut(rank_ds)?.submit(cluster, &rank_shards)?;
+    report.sim_restore_s += submit_r.cost.sim_time_s;
+    drop(rank_shards);
 
     // ownership in blocks; vertices_per_block for edge<->vertex mapping
     let vertices_per_block = bs / (8 * epv);
@@ -160,15 +190,50 @@ pub fn run(
             let (_failed, map, _cost) = ulfm::recover(cluster);
             report.sim_mpi_recovery_s += cluster.now() - t_mpi;
 
-            // §IV-B: rebalance the replica layout over the survivors when
-            // the shrunken world admits it; acknowledge otherwise.
+            // §IV-B: rebalance the replica layouts of BOTH datasets over
+            // the survivors in one fused handshake when the shrunken world
+            // admits them; acknowledge per dataset otherwise.
             let t_rs = cluster.now();
             store.rebalance_or_acknowledge(cluster, &map)?;
             let survivors = cluster.survivors();
             let gained = ownership.rebalance(&dead, &survivors, 1);
             let requests: Vec<LoadRequest> = scatter_requests_for_ranges(&gained);
-            let out = store.load(cluster, &requests)?;
-            for (req, shard) in requests.iter().zip(&out.shards) {
+            // fused recovery round: the survivors' edge loads and the
+            // initial-rank re-fetch share one request and one data
+            // all-to-all across the two datasets
+            let rank_reqs = vec![LoadRequest {
+                pe: survivors[0],
+                ranges: RangeSet::new(
+                    dead.iter()
+                        .map(|&d| {
+                            BlockRange::new(d as u64 * rank_bpp, (d as u64 + 1) * rank_bpp)
+                        })
+                        .collect(),
+                ),
+            }];
+            let parts = [(edges_ds, requests), (rank_ds, rank_reqs)];
+            let edge_shards_out = match store.load_many(cluster, &parts) {
+                Ok(fused) => {
+                    // the recovered initial-rank shards must be bit-exact
+                    let got = fused.parts[1].shards[0].bytes.as_ref().expect("execution mode");
+                    for (i, chunk) in got.chunks(rank_shard.len()).enumerate() {
+                        assert_eq!(chunk, &rank_shard[..], "recovered rank shard {i} diverged");
+                    }
+                    fused.parts.into_iter().next().unwrap().shards
+                }
+                // The low-replication rank dataset (r = 2) can lose whole
+                // slots under heavy waves; the rank vector is live in app
+                // memory, so degrade to an edges-only load — exactly what
+                // the app did before the second dataset.
+                Err(crate::error::Error::IrrecoverableDataLoss { dataset, .. })
+                    if dataset == rank_ds =>
+                {
+                    store.load(cluster, &parts[0].1)?.shards
+                }
+                Err(e) => return Err(e),
+            };
+            let requests = &parts[0].1;
+            for (req, shard) in requests.iter().zip(&edge_shards_out) {
                 let bytes = shard.bytes.as_ref().expect("execution mode");
                 let mut off = 0usize;
                 for r in req.ranges.ranges() {

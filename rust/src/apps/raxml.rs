@@ -16,11 +16,13 @@
 //! = 36 B/site, padded to 64 B blocks: 1 site = 1 block, which conveniently
 //! matches the paper's 64 B block granularity.
 
+use crate::apps::secondary_replicas;
 use crate::config::{PfsConfig, RestoreConfig};
 use crate::error::Result;
 use crate::pfs::{CacheState, Pfs, PfsMethod};
+use crate::restore::block::{BlockRange, RangeSet};
 use crate::restore::load::scatter_requests_for_ranges;
-use crate::restore::ReStore;
+use crate::restore::{DatasetId, LoadRequest, ReStore};
 use crate::runtime::Engine;
 use crate::simnet::cluster::Cluster;
 use crate::simnet::ulfm;
@@ -150,9 +152,24 @@ pub fn evaluate_loglik(
     Ok(total[0] as f64)
 }
 
+/// The §V per-datatype config for the model-state dataset riding along the
+/// MSA sites: per-PE evolutionary-model state (transition matrices, base
+/// frequencies, rate categories — ~1 KiB), in 32 B blocks with a lower
+/// replication level, permutation off like the site data.
+pub fn model_state_cfg(world: usize, seed: u64) -> Result<RestoreConfig> {
+    let bs = 32usize;
+    let model_bytes = 1024usize;
+    RestoreConfig::builder(world, bs, model_bytes / bs)
+        .replicas(secondary_replicas(world))
+        .perm_range_blocks(None)
+        .seed(seed ^ 0x40DE1)
+        .build()
+}
+
 /// The Fig 6 experiment (cost-model mode): submit once, fail `kill_count`
-/// PEs, redistribute their data over all survivors via ReStore, and
-/// compare against re-reading the per-PE input from the PFS.
+/// PEs, redistribute their data over all survivors via ReStore — the MSA
+/// site dataset AND the model-state dataset in ONE fused `load_many`
+/// round — and compare against re-reading the per-PE input from the PFS.
 pub fn measure_recovery(
     world: usize,
     pes_per_node: usize,
@@ -171,8 +188,14 @@ pub fn measure_recovery(
         .build()?;
     let mut cluster = Cluster::new_execution(world, pes_per_node);
     let mut store = ReStore::new(cfg.clone(), &cluster)?;
+    let sites_ds = DatasetId::FIRST;
     let t0 = cluster.now();
     store.submit_virtual(&mut cluster)?;
+    // second dataset: the per-PE model state, with its own r/b (§V)
+    let model_cfg = model_state_cfg(world, seed)?;
+    let model_bpp = model_cfg.blocks_per_pe as u64;
+    let model_ds = store.create_dataset(model_cfg, &cluster)?;
+    store.dataset_mut(model_ds)?.submit_virtual(&mut cluster)?;
     let submit_s = cluster.now() - t0;
 
     let dead: Vec<usize> = (0..kill_count.min(world - 1)).map(|i| i * 7 % world).collect();
@@ -184,16 +207,43 @@ pub fn measure_recovery(
     };
     cluster.kill(&dead);
     let (_failed, map, _cost) = ulfm::recover(&mut cluster);
-    // §IV-B: rewrite the layout over the survivors when the shrunken world
-    // admits the §IV-A distribution, else acknowledge and route around the
-    // holes (arbitrary 1 %-style kill counts rarely divide the block space).
+    // §IV-B: the fused handshake rewrites BOTH layouts over the survivors
+    // when the shrunken world admits the §IV-A distribution, else
+    // acknowledges per dataset and routes around the holes (arbitrary
+    // 1 %-style kill counts rarely divide the block space).
     store.rebalance_or_acknowledge(&mut cluster, &map)?;
 
-    // redistribute the lost shards evenly over all survivors
+    // redistribute the lost shards evenly over all survivors; the dead
+    // PEs' model state goes to the survivors that take over their sites —
+    // fused with the site loads into one two-phase round
     let mut ownership = crate::apps::Ownership::identity(world, cfg.blocks_per_pe as u64);
     let gained = ownership.rebalance(&dead, &cluster.survivors(), 1);
+    let survivors = cluster.survivors();
+    let model_reqs: Vec<LoadRequest> = dead
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| LoadRequest {
+            pe: survivors[i % survivors.len()],
+            ranges: RangeSet::new(vec![BlockRange::new(
+                d as u64 * model_bpp,
+                (d as u64 + 1) * model_bpp,
+            )]),
+        })
+        .collect();
     let t1 = cluster.now();
-    store.load(&mut cluster, &scatter_requests_for_ranges(&gained))?;
+    let parts = [(sites_ds, scatter_requests_for_ranges(&gained)), (model_ds, model_reqs)];
+    match store.load_many(&mut cluster, &parts) {
+        Ok(_) => {}
+        // lost model-state slots (r = 2): the model is re-derivable from
+        // the run configuration, so degrade to the sites-only load the
+        // measurement always performed.
+        Err(crate::error::Error::IrrecoverableDataLoss { dataset, .. })
+            if dataset == model_ds =>
+        {
+            store.load(&mut cluster, &parts[0].1)?;
+        }
+        Err(e) => return Err(e),
+    }
     let load_s = cluster.now() - t1;
 
     // PFS baseline: after the failure *every* survivor re-reads its (new)

@@ -15,8 +15,17 @@ pub enum Error {
 
     /// The data for a requested block range is irrecoverably lost: all `r`
     /// replicas resided on failed PEs (the paper's IDL event, §IV-D).
-    #[error("irrecoverable data loss: all replicas of blocks [{start}, {end}) failed")]
-    IrrecoverableDataLoss { start: u64, end: u64 },
+    /// Tagged with the dataset whose blocks were lost — a multi-dataset
+    /// recovery (`ReStore::load_many`, the fused shrink handshake) needs to
+    /// know *which* datatype must fall back to reloading from disk.
+    #[error(
+        "irrecoverable data loss: all replicas of dataset {dataset} blocks [{start}, {end}) failed"
+    )]
+    IrrecoverableDataLoss { dataset: crate::restore::registry::DatasetId, start: u64, end: u64 },
+
+    /// An operation referenced a dataset id the registry never created.
+    #[error("unknown dataset {dataset} (registry holds {datasets} datasets)")]
+    UnknownDataset { dataset: u32, datasets: usize },
 
     /// submit() called more than once. The paper's library supports
     /// submitting data exactly once (§V); so does this reproduction.
@@ -67,6 +76,21 @@ pub enum Error {
     /// Config/manifest text could not be parsed.
     #[error("parse: {0}")]
     Parse(String),
+}
+
+impl Error {
+    /// Re-tag an [`Error::IrrecoverableDataLoss`] with the dataset it
+    /// belongs to (identity on every other variant). Used by the layers
+    /// that plan in dataset-agnostic terms (e.g.
+    /// `restore::rebalance::plan_rebalance`) whose callers know the id.
+    pub(crate) fn tag_dataset(self, id: crate::restore::registry::DatasetId) -> Error {
+        match self {
+            Error::IrrecoverableDataLoss { start, end, .. } => {
+                Error::IrrecoverableDataLoss { dataset: id, start, end }
+            }
+            other => other,
+        }
+    }
 }
 
 impl From<crate::util::json::JsonError> for Error {

@@ -11,8 +11,12 @@
 //!   exact-schedule α-β transport model here — see `DESIGN.md §1`).
 //! * [`restore`] — the paper's contribution: replica placement `L(x,k)`,
 //!   permutation ranges, the `submit`/`load` sparse all-to-all paths, the
-//!   irrecoverable-data-loss (IDL) analysis of §IV-D, and the §IV-E replica
-//!   repair distributions.
+//!   irrecoverable-data-loss (IDL) analysis of §IV-D, the §IV-E replica
+//!   repair distributions, and the §V **multi-dataset registry** — one
+//!   `Dataset` per application datatype (independent `n`/`r`/`b`/seed)
+//!   with fused cross-dataset recovery (`ReStore::load_many`) and shrink
+//!   handshakes (`ReStore::rebalance_or_acknowledge_all`). The
+//!   single-dataset calls below are a facade over dataset 0.
 //! * [`pfs`] — the parallel-file-system baseline every disk-based
 //!   checkpointing library bottoms out in (Fig 6/7 comparisons).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts

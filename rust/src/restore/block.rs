@@ -88,6 +88,78 @@ impl RangeSet {
     pub fn is_empty(&self) -> bool {
         self.ranges.is_empty()
     }
+
+    /// Does the set contain block `id`? O(log ranges).
+    pub fn contains(&self, id: u64) -> bool {
+        let i = self.ranges.partition_point(|r| r.start <= id);
+        i.checked_sub(1).is_some_and(|i| id < self.ranges[i].end)
+    }
+
+    /// Set union — the multi-dataset request router's merge primitive
+    /// (e.g. combining several load-balancer grants for one PE into the
+    /// single request set a `load_many` part accepts per dataset).
+    pub fn union(&self, other: &RangeSet) -> RangeSet {
+        let mut v = Vec::with_capacity(self.ranges.len() + other.ranges.len());
+        v.extend_from_slice(&self.ranges);
+        v.extend_from_slice(&other.ranges);
+        RangeSet::new(v)
+    }
+
+    /// Set intersection, by a two-pointer sweep over the sorted disjoint
+    /// range lists.
+    pub fn intersect(&self, other: &RangeSet) -> RangeSet {
+        let mut out: Vec<BlockRange> = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.ranges.len() && j < other.ranges.len() {
+            let (a, b) = (self.ranges[i], other.ranges[j]);
+            if let Some(ov) = a.intersect(&b) {
+                out.push(ov);
+            }
+            // advance whichever range ends first (the other may still
+            // overlap the next one)
+            if a.end <= b.end {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        RangeSet { ranges: out }
+    }
+
+    /// Set difference `self \ other` — what remains of a request after
+    /// removing the blocks another source already covers (the router's
+    /// bounds/coverage check: `request.subtract(&dataset_space)` must be
+    /// empty for a well-formed request).
+    pub fn subtract(&self, other: &RangeSet) -> RangeSet {
+        let mut out: Vec<BlockRange> = Vec::new();
+        let mut j = 0usize;
+        for &a in &self.ranges {
+            let mut cur = a.start;
+            // skip other-ranges that end at or before cur
+            while j < other.ranges.len() && other.ranges[j].end <= cur {
+                j += 1;
+            }
+            let mut k = j;
+            while cur < a.end {
+                match other.ranges.get(k) {
+                    Some(b) if b.start < a.end => {
+                        if b.start > cur {
+                            out.push(BlockRange::new(cur, b.start));
+                        }
+                        cur = cur.max(b.end);
+                        if b.end <= a.end {
+                            k += 1;
+                        }
+                    }
+                    _ => {
+                        out.push(BlockRange::new(cur, a.end));
+                        cur = a.end;
+                    }
+                }
+            }
+        }
+        RangeSet { ranges: out }
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +227,113 @@ mod tests {
     fn rangeset_merges_adjacent() {
         let s = RangeSet::new(vec![BlockRange::new(0, 5), BlockRange::new(5, 10)]);
         assert_eq!(s.ranges(), &[BlockRange::new(0, 10)]);
+    }
+
+    #[test]
+    fn set_algebra_basics() {
+        let a = RangeSet::new(vec![BlockRange::new(0, 10), BlockRange::new(20, 30)]);
+        let b = RangeSet::new(vec![BlockRange::new(5, 25)]);
+        assert_eq!(
+            a.union(&b).ranges(),
+            &[BlockRange::new(0, 30)]
+        );
+        assert_eq!(
+            a.intersect(&b).ranges(),
+            &[BlockRange::new(5, 10), BlockRange::new(20, 25)]
+        );
+        assert_eq!(
+            a.subtract(&b).ranges(),
+            &[BlockRange::new(0, 5), BlockRange::new(25, 30)]
+        );
+        assert_eq!(
+            b.subtract(&a).ranges(),
+            &[BlockRange::new(10, 20)]
+        );
+        let empty = RangeSet::default();
+        assert_eq!(a.subtract(&empty), a);
+        assert!(a.intersect(&empty).is_empty());
+        assert_eq!(a.union(&empty), a);
+        assert!(a.contains(0) && a.contains(9) && !a.contains(10) && a.contains(29));
+        assert!(!a.contains(15) && !a.contains(30));
+    }
+
+    /// Property test: `union`/`intersect`/`subtract` against a naive
+    /// per-block-ID bitmap oracle over a small universe, plus the
+    /// normalization invariants (sorted, disjoint, non-adjacent) every
+    /// `RangeSet` must uphold — the contract the multi-dataset request
+    /// router leans on.
+    #[test]
+    fn set_algebra_matches_bitmap_oracle() {
+        use crate::util::rng::Rng;
+        const UNIVERSE: u64 = 96;
+
+        fn random_set(rng: &mut Rng) -> RangeSet {
+            let k = rng.gen_index(5);
+            let ranges: Vec<BlockRange> = (0..k)
+                .map(|_| {
+                    let s = rng.gen_u64_below(UNIVERSE);
+                    let e = (s + 1 + rng.gen_u64_below(24)).min(UNIVERSE);
+                    BlockRange::new(s, e)
+                })
+                .collect();
+            RangeSet::new(ranges)
+        }
+
+        fn bitmap(set: &RangeSet) -> Vec<bool> {
+            let mut bits = vec![false; UNIVERSE as usize];
+            for r in set.ranges() {
+                for id in r.start..r.end {
+                    bits[id as usize] = true;
+                }
+            }
+            bits
+        }
+
+        fn assert_normalized(set: &RangeSet, tag: &str) {
+            for r in set.ranges() {
+                assert!(r.start < r.end, "{tag}: empty range {r:?}");
+            }
+            for w in set.ranges().windows(2) {
+                assert!(
+                    w[0].end < w[1].start,
+                    "{tag}: ranges {:?} and {:?} overlap or touch",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+
+        let mut rng = Rng::seed_from_u64(0x5E7A16EB);
+        for trial in 0..500 {
+            let a = random_set(&mut rng);
+            let b = random_set(&mut rng);
+            let (ba, bb) = (bitmap(&a), bitmap(&b));
+            for op in ["union", "intersect", "subtract"] {
+                let got = match op {
+                    "union" => a.union(&b),
+                    "intersect" => a.intersect(&b),
+                    _ => a.subtract(&b),
+                };
+                assert_normalized(&got, op);
+                for id in 0..UNIVERSE {
+                    let i = id as usize;
+                    let want = match op {
+                        "union" => ba[i] || bb[i],
+                        "intersect" => ba[i] && bb[i],
+                        _ => ba[i] && !bb[i],
+                    };
+                    assert_eq!(
+                        got.contains(id),
+                        want,
+                        "trial {trial}: {op} of {:?} and {:?} wrong at block {id}",
+                        a.ranges(),
+                        b.ranges()
+                    );
+                }
+                // total_blocks agrees with the membership count
+                let count = (0..UNIVERSE).filter(|&id| got.contains(id)).count() as u64;
+                assert_eq!(got.total_blocks(), count, "trial {trial}: {op} volume");
+            }
+        }
     }
 }

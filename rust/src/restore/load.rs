@@ -27,10 +27,17 @@
 //! must not be dominated by its own bookkeeping. The pipeline performs no
 //! per-piece heap allocation in steady state — all per-piece intermediate
 //! state, including the per-phase cost `Accumulator` counters, lives in a
-//! [`LoadScratch`] owned by the `ReStore` instance and reused across calls
+//! [`LoadScratch`] owned by each [`Dataset`] and reused across calls
 //! (the only remaining per-call allocation is the output shards). With the
 //! `rayon` feature, request resolution additionally fans out across
-//! requesters (serial-identical by construction; see `resolve_all`):
+//! requesters (serial-identical by construction; see `resolve_all`). The
+//! greedy `LeastLoaded` policy parallelizes through a deterministic
+//! two-pass split: pass 1 resolves every piece's alive-holder candidate
+//! set in parallel (liveness, deterministic holders, post-repair index
+//! fallback — the per-piece work), pass 2 replays the greedy
+//! minimum-load assignment serially in request order over those fixed
+//! candidate sets — bit-identical to the single-pass serial router, since
+//! the candidate sets never depend on the running load table:
 //!
 //! * **Resolve** — block ranges → [`PermutedPiece`]s via the precomputed
 //!   placement index ([`crate::restore::distribution`]), no Feistel work on
@@ -66,6 +73,7 @@ use crate::error::{Error, Result};
 use crate::restore::block::{BlockRange, RangeSet};
 use crate::restore::distribution::{Distribution, PermutedPiece};
 use crate::restore::hashing::seeded_hash;
+use crate::restore::registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
 use crate::restore::{LoadOutput, LoadRequest, LoadedShard, ReStore};
 use crate::simnet::cluster::Cluster;
 use crate::simnet::network::Accumulator;
@@ -100,6 +108,19 @@ struct RoutedPiece {
     server: usize,
     /// Byte offset in the request's output buffer.
     out_offset: u64,
+}
+
+/// One piece with its precomputed load-independent candidate servers —
+/// pass 1 output of the two-pass `LeastLoaded` resolution. `n_holders == 0`
+/// marks an oversized post-repair fallback set; pass 2 re-resolves those
+/// through `pick_server`.
+#[cfg(feature = "rayon")]
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    piece: PermutedPiece,
+    out_offset: u64,
+    n_holders: u8,
+    holders: [u32; INLINE_HOLDERS],
 }
 
 /// A maximal merge of adjacent routed pieces with the same (requester,
@@ -141,7 +162,7 @@ pub(crate) struct LoadScratch {
     acc: Accumulator,
 }
 
-impl ReStore {
+impl Dataset {
     /// Load data after failures. `requests` lists, per requesting PE, the
     /// original block ID ranges it needs (PEs with no needs may be absent).
     ///
@@ -162,12 +183,17 @@ impl ReStore {
         result
     }
 
-    fn load_with_scratch(
+    /// The planning front half of a load: resolve, route, coalesce, and
+    /// sort `requests` into `scratch.runs` — everything up to (but not
+    /// including) charging the message phases. Pure with respect to the
+    /// cluster clock, so [`ReStore::load_many`] can plan every dataset
+    /// first and then charge the merged phases once.
+    fn plan_into(
         &self,
-        cluster: &mut Cluster,
+        cluster: &Cluster,
         requests: &[LoadRequest],
         scratch: &mut LoadScratch,
-    ) -> Result<LoadOutput> {
+    ) -> Result<()> {
         let dist = &self.dist;
         let bs = self.cfg.block_size as u64;
 
@@ -175,6 +201,22 @@ impl ReStore {
         for req in requests {
             if !cluster.is_alive(req.pe) {
                 return Err(Error::DeadPe(req.pe));
+            }
+            // Range sets are sorted, so the last range's end bounds the
+            // whole request — an O(1), allocation-free check that turns an
+            // out-of-space request into a routing error instead of a panic
+            // deep inside the permutation.
+            if let Some(last) = req.ranges.ranges().last() {
+                if last.end > dist.n_blocks() {
+                    return Err(Error::Config(format!(
+                        "load: request for PE {} addresses blocks up to {} but dataset {} \
+                         holds [0, {})",
+                        req.pe,
+                        last.end,
+                        self.id,
+                        dist.n_blocks()
+                    )));
+                }
             }
         }
         scratch.routed.clear();
@@ -211,6 +253,48 @@ impl ReStore {
         }
         #[cfg(not(feature = "rayon"))]
         scratch.runs.sort_unstable_by_key(run_key);
+        Ok(())
+    }
+
+    /// Assemble the per-request output shards from planned `runs`
+    /// (execution mode copies the payload; cost-model mode returns `None`
+    /// bytes) — the back half shared by [`Dataset::load`] and
+    /// [`ReStore::load_many`].
+    fn assemble_shards(
+        &self,
+        requests: &[LoadRequest],
+        runs: &[Run],
+    ) -> Vec<LoadedShard> {
+        let bs = self.cfg.block_size as u64;
+        let execution = self.is_execution_mode();
+        let mut shards: Vec<LoadedShard> = requests
+            .iter()
+            .map(|r| LoadedShard {
+                pe: r.pe,
+                bytes: execution.then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]),
+            })
+            .collect();
+        if execution {
+            for run in runs {
+                let src = self.stores[run.server]
+                    .read(run.perm_start, run.len)
+                    .expect("execution-mode store must hold real bytes");
+                let dst = shards[run.req_idx].bytes.as_mut().unwrap();
+                let off = run.out_offset as usize;
+                dst[off..off + src.len()].copy_from_slice(src);
+            }
+        }
+        shards
+    }
+
+    fn load_with_scratch(
+        &self,
+        cluster: &mut Cluster,
+        requests: &[LoadRequest],
+        scratch: &mut LoadScratch,
+    ) -> Result<LoadOutput> {
+        let bs = self.cfg.block_size as u64;
+        self.plan_into(cluster, requests, scratch)?;
 
         // --- Phase 1b: request sparse all-to-all -------------------------
         // One message per distinct (requester, server) pair carrying the
@@ -266,24 +350,7 @@ impl ReStore {
         let data_cost = phase.commit();
 
         // --- Assemble outputs (execution mode) ---------------------------
-        let execution = self.is_execution_mode();
-        let mut shards: Vec<LoadedShard> = requests
-            .iter()
-            .map(|r| LoadedShard {
-                pe: r.pe,
-                bytes: execution.then(|| vec![0u8; (r.ranges.total_blocks() * bs) as usize]),
-            })
-            .collect();
-        if execution {
-            for run in &scratch.runs {
-                let src = self.stores[run.server]
-                    .read(run.perm_start, run.len)
-                    .expect("execution-mode store must hold real bytes");
-                let dst = shards[run.req_idx].bytes.as_mut().unwrap();
-                let off = run.out_offset as usize;
-                dst[off..off + src.len()].copy_from_slice(src);
-            }
-        }
+        let shards = self.assemble_shards(requests, &scratch.runs);
 
         Ok(LoadOutput {
             shards,
@@ -348,7 +415,11 @@ impl ReStore {
     /// bytes are identical to the serial path by construction (enforced by
     /// the `golden` parity suite, which CI runs under both feature sets).
     /// The greedy `LeastLoaded` policy reads the running per-server byte
-    /// table, so it always resolves serially.
+    /// table, so its per-piece *choice* is inherently sequential — but the
+    /// per-piece *candidate set* (alive §IV-A holders, or the post-repair
+    /// index fallback) is not: past the `PAR_MIN_ITEMS` workload estimate
+    /// it resolves through the deterministic two-pass split
+    /// ([`Dataset::resolve_least_loaded_two_pass`]), below it serially.
     fn resolve_all(
         &self,
         cluster: &Cluster,
@@ -356,34 +427,47 @@ impl ReStore {
         scratch: &mut LoadScratch,
     ) -> Result<()> {
         #[cfg(feature = "rayon")]
-        if !matches!(self.cfg.server_selection, ServerSelection::LeastLoaded)
-            && requests.len() > 1
-        {
-            let per_req: Vec<Result<Vec<RoutedPiece>>> = requests
-                .par_iter()
-                .enumerate()
-                .map(|(req_idx, req)| {
-                    let mut routed = Vec::new();
-                    let mut pieces = Vec::new();
-                    let mut holders = Vec::new();
-                    self.resolve_request(
-                        cluster,
-                        req,
-                        req_idx,
-                        &mut [],
-                        &mut pieces,
-                        &mut holders,
-                        &mut routed,
-                    )?;
-                    Ok(routed)
-                })
-                .collect();
-            // Deterministic merge: request order; the first requester's
-            // error wins, exactly as in the serial loop.
-            for r in per_req {
-                scratch.routed.extend(r?);
+        if requests.len() > 1 {
+            if !matches!(self.cfg.server_selection, ServerSelection::LeastLoaded) {
+                let per_req: Vec<Result<Vec<RoutedPiece>>> = requests
+                    .par_iter()
+                    .enumerate()
+                    .map(|(req_idx, req)| {
+                        let mut routed = Vec::new();
+                        let mut pieces = Vec::new();
+                        let mut holders = Vec::new();
+                        self.resolve_request(
+                            cluster,
+                            req,
+                            req_idx,
+                            &mut [],
+                            &mut pieces,
+                            &mut holders,
+                            &mut routed,
+                        )?;
+                        Ok(routed)
+                    })
+                    .collect();
+                // Deterministic merge: request order; the first requester's
+                // error wins, exactly as in the serial loop.
+                for r in per_req {
+                    scratch.routed.extend(r?);
+                }
+                return Ok(());
             }
-            return Ok(());
+            // LeastLoaded: the two-pass split pays off only when the
+            // per-piece candidate work dominates the fork/join overhead —
+            // estimate the piece count from the requested volume (a lower
+            // bound: slice/unit splits only add pieces). Small workloads
+            // stay on the single-pass serial path, which also keeps the
+            // allocation-count assertions exact at test scales.
+            let est_pieces: u64 = requests
+                .iter()
+                .map(|r| r.ranges.total_blocks() / self.dist.perm_range_blocks().max(1))
+                .sum();
+            if est_pieces >= PAR_MIN_ITEMS as u64 && self.dist.replicas() <= INLINE_HOLDERS {
+                return self.resolve_least_loaded_two_pass(cluster, requests, scratch);
+            }
         }
 
         for (req_idx, req) in requests.iter().enumerate() {
@@ -396,6 +480,131 @@ impl ReStore {
                 &mut scratch.holders,
                 &mut scratch.routed,
             )?;
+        }
+        Ok(())
+    }
+
+    /// Pass 1 of the two-pass `LeastLoaded` resolution: the fixed,
+    /// load-independent candidate set of one piece — the alive
+    /// deterministic §IV-A holders in holder order, or (all dead) the
+    /// alive post-repair index holders in index order; exactly the `alive`
+    /// slice [`Dataset::pick_server`] would walk. `n_holders == 0` marks
+    /// the rare oversized fallback set (> [`INLINE_HOLDERS`] repair-created
+    /// replicas): pass 2 re-resolves those serially through `pick_server`.
+    #[cfg(feature = "rayon")]
+    fn candidate_for(
+        &self,
+        cluster: &Cluster,
+        piece: &PermutedPiece,
+        out_offset: u64,
+    ) -> Result<Candidate> {
+        let r = self.dist.replicas();
+        let mut holders = [0u32; INLINE_HOLDERS];
+        let mut n = 0usize;
+        for k in 0..r {
+            let pe = self.cluster_rank(self.dist.holder(piece.perm_start, k));
+            if cluster.is_alive(pe) {
+                holders[n] = pe as u32;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            let slot = self.dist.slice_of(piece.perm_start);
+            let mut count = 0usize;
+            for &pe in self.holder_index.holders_of(slot) {
+                if cluster.is_alive(pe as usize) {
+                    if count < INLINE_HOLDERS {
+                        holders[count] = pe;
+                    }
+                    count += 1;
+                }
+            }
+            if count == 0 {
+                let orig = self.dist.unpermute_block(piece.perm_start);
+                return Err(Error::IrrecoverableDataLoss {
+                    dataset: self.id,
+                    start: orig,
+                    end: orig + piece.len,
+                });
+            }
+            n = if count <= INLINE_HOLDERS { count } else { 0 };
+        }
+        Ok(Candidate { piece: *piece, out_offset, n_holders: n as u8, holders })
+    }
+
+    /// The `LeastLoaded`-compatible parallel resolution (the last ROADMAP
+    /// perf lever): pass 1 resolves every requester's pieces and their
+    /// alive-holder candidate sets in parallel (the per-piece load
+    /// estimation inputs — liveness walks, holder arithmetic, index
+    /// fallback); pass 2 replays the greedy minimum-load assignment
+    /// serially in request (rank) order over the fixed candidate sets.
+    /// Candidate sets do not depend on the running per-server byte table,
+    /// and pass 2 performs comparisons in exactly the serial order with
+    /// exactly the serial first-minimum tie-break — so the routed output
+    /// is bit-identical to the single-pass serial router (pinned by the
+    /// golden parity suite under CI's 3-feature matrix, including the
+    /// large-scale case that crosses the threshold).
+    #[cfg(feature = "rayon")]
+    fn resolve_least_loaded_two_pass(
+        &self,
+        cluster: &Cluster,
+        requests: &[LoadRequest],
+        scratch: &mut LoadScratch,
+    ) -> Result<()> {
+        let bs = self.cfg.block_size as u64;
+        // Pass 1: parallel per-requester candidate resolution.
+        let per_req: Vec<Result<Vec<Candidate>>> = requests
+            .par_iter()
+            .map(|req| {
+                let mut out: Vec<Candidate> = Vec::new();
+                let mut pieces: Vec<PermutedPiece> = Vec::new();
+                let mut out_offset = 0u64;
+                for range in req.ranges.ranges() {
+                    pieces.clear();
+                    self.dist.permuted_pieces(*range, &mut pieces);
+                    for piece in &pieces {
+                        out.push(self.candidate_for(cluster, piece, out_offset)?);
+                        out_offset += piece.len * bs;
+                    }
+                }
+                Ok(out)
+            })
+            .collect();
+        // Pass 2: serial greedy assignment in request order (the first
+        // requester's error wins, exactly as in the serial loop).
+        for (req_idx, (req, cands)) in requests.iter().zip(per_req).enumerate() {
+            for cand in cands? {
+                let server = if cand.n_holders == 0 {
+                    // oversized post-repair fallback set: re-resolve
+                    // serially (identical to the single-pass path)
+                    self.pick_server(
+                        cluster,
+                        req.pe,
+                        &cand.piece,
+                        &mut scratch.server_load,
+                        &mut scratch.holders,
+                    )?
+                } else {
+                    let alive = &cand.holders[..cand.n_holders as usize];
+                    // Mirrors `pick_server`: on ties the FIRST minimal
+                    // holder wins.
+                    let mut best = alive[0] as usize;
+                    for &pe in &alive[1..] {
+                        if scratch.server_load[pe as usize] < scratch.server_load[best] {
+                            best = pe as usize;
+                        }
+                    }
+                    scratch.server_load[best] += cand.piece.len * bs;
+                    best
+                };
+                scratch.routed.push(RoutedPiece {
+                    piece: cand.piece,
+                    requester: req.pe,
+                    req_idx,
+                    server,
+                    out_offset: cand.out_offset,
+                });
+            }
         }
         Ok(())
     }
@@ -493,6 +702,7 @@ impl ReStore {
             if holders_scratch.is_empty() {
                 let orig = dist.unpermute_block(piece.perm_start);
                 return Err(Error::IrrecoverableDataLoss {
+                    dataset: self.id,
                     start: orig,
                     end: orig + piece.len,
                 });
@@ -528,6 +738,174 @@ impl ReStore {
         }
         Ok(chosen)
     }
+}
+
+impl ReStore {
+    /// Load from several datasets in ONE two-phase recovery round: the
+    /// per-dataset message plans are merged so the whole operation costs a
+    /// single request sparse all-to-all and a single data sparse
+    /// all-to-all — one message per distinct (requester, server) pair
+    /// *across all datasets*, carrying the pair's dataset-tagged runs
+    /// concatenated. §IV-C's startup-overhead argument applied across
+    /// datasets: bytes are identical to driving the k loads sequentially,
+    /// message counts are strictly lower whenever two datasets share a
+    /// requester→server pair, and the returned shards are byte-identical
+    /// to the k sequential [`Dataset::load`]s (golden-pinned).
+    ///
+    /// `parts` lists (dataset, requests) pairs; each dataset may appear at
+    /// most once (union the request sets per PE instead — see
+    /// [`RangeSet::union`]). Requests are bounds-checked against each
+    /// dataset's block space. Self-send semantics are unchanged: a
+    /// requester serving itself exchanges no request message and pays only
+    /// the local copy in the data phase, for every dataset.
+    pub fn load_many(
+        &mut self,
+        cluster: &mut Cluster,
+        parts: &[(DatasetId, Vec<LoadRequest>)],
+    ) -> Result<LoadManyOutput> {
+        // Scratches are detached per dataset while planning; reattach them
+        // (with their grown capacity) on every exit path.
+        let mut taken: Vec<(usize, LoadScratch)> = Vec::with_capacity(parts.len());
+        let result = self.load_many_inner(cluster, parts, &mut taken);
+        for (di, scratch) in taken {
+            self.datasets[di].scratch = scratch;
+        }
+        result
+    }
+
+    fn load_many_inner(
+        &mut self,
+        cluster: &mut Cluster,
+        parts: &[(DatasetId, Vec<LoadRequest>)],
+        taken: &mut Vec<(usize, LoadScratch)>,
+    ) -> Result<LoadManyOutput> {
+        // --- validate + plan every dataset (clock-pure) ------------------
+        for (id, requests) in parts {
+            let di = self.index_of(*id)?;
+            if taken.iter().any(|(d, _)| *d == di) {
+                return Err(Error::Config(format!(
+                    "load_many: dataset {id} appears twice; union the request sets per PE instead"
+                )));
+            }
+            let ds = &self.datasets[di];
+            ds.ensure_submitted()?;
+            ds.ensure_current_epoch(cluster)?;
+            // Bounds check through the RangeSet algebra: anything outside
+            // the dataset's block space is a routing error, not a panic
+            // deep inside the permutation. `plan_into` backstops the same
+            // condition with an O(1) check (covering direct `Dataset::load`
+            // too); the subtract here buys the exact offending ranges in
+            // the error on a path that already allocates its outputs.
+            let space = RangeSet::new(vec![BlockRange::new(0, ds.dist.n_blocks())]);
+            for req in requests {
+                let oob = req.ranges.subtract(&space);
+                if !oob.is_empty() {
+                    return Err(Error::Config(format!(
+                        "load_many: dataset {id} request for PE {} addresses blocks {:?} \
+                         outside [0, {})",
+                        req.pe,
+                        oob.ranges(),
+                        ds.dist.n_blocks()
+                    )));
+                }
+            }
+            let mut scratch = std::mem::take(&mut self.datasets[di].scratch);
+            let planned = self.datasets[di].plan_into(cluster, requests, &mut scratch);
+            taken.push((di, scratch));
+            planned?;
+        }
+
+        // --- fused phase 1b: ONE request sparse all-to-all ---------------
+        // Each dataset's runs are sorted by (requester, server, ...); a
+        // k-way merge on the pair key visits every distinct pair once and
+        // concatenates the datasets' descriptor payloads into one message.
+        let bs: Vec<u64> =
+            taken.iter().map(|(di, _)| self.datasets[*di].cfg.block_size as u64).collect();
+        let mut idx: Vec<usize> = vec![0; taken.len()];
+        let mut phase = cluster.phase_pooled(&mut self.fused_acc);
+        loop {
+            let Some((requester, server)) = next_pair(taken, &idx) else { break };
+            let mut bytes = 0u64;
+            for (d, (_, scratch)) in taken.iter().enumerate() {
+                let runs = &scratch.runs[..];
+                let mut i = idx[d];
+                while i < runs.len()
+                    && runs[i].requester == requester
+                    && runs[i].server == server
+                {
+                    bytes += runs[i].pieces * REQUEST_HEADER_BYTES;
+                    i += 1;
+                }
+                idx[d] = i;
+            }
+            if requester != server {
+                phase.add(requester, server, bytes)?;
+            }
+        }
+        let request_cost = phase.commit();
+
+        // --- fused phase 2: ONE data sparse all-to-all -------------------
+        // Same merge; every run still costs one pack fragment on the
+        // server and one unpack fragment on the requester (self pairs:
+        // local copy only, as in the single-dataset path).
+        let mut idx: Vec<usize> = vec![0; taken.len()];
+        let mut phase = cluster.phase_pooled(&mut self.fused_acc);
+        loop {
+            let Some((requester, server)) = next_pair(taken, &idx) else { break };
+            let mut bytes = 0u64;
+            for (d, (_, scratch)) in taken.iter().enumerate() {
+                let runs = &scratch.runs[..];
+                let mut i = idx[d];
+                let mut n_runs = 0u64;
+                while i < runs.len()
+                    && runs[i].requester == requester
+                    && runs[i].server == server
+                {
+                    bytes += runs[i].len * bs[d];
+                    n_runs += 1;
+                    i += 1;
+                }
+                idx[d] = i;
+                if server != requester && n_runs > 0 {
+                    phase.frag(server, n_runs);
+                    phase.frag(requester, n_runs);
+                }
+            }
+            phase.add(server, requester, bytes)?;
+        }
+        let data_cost = phase.commit();
+
+        // --- assemble per-dataset outputs --------------------------------
+        let mut out_parts: Vec<LoadManyPart> = Vec::with_capacity(parts.len());
+        for ((di, scratch), (id, requests)) in taken.iter().zip(parts) {
+            let ds = &self.datasets[*di];
+            out_parts.push(LoadManyPart {
+                dataset: *id,
+                shards: ds.assemble_shards(requests, &scratch.runs),
+            });
+        }
+        Ok(LoadManyOutput {
+            parts: out_parts,
+            request_cost,
+            data_cost,
+            cost: request_cost.then(data_cost),
+        })
+    }
+}
+
+/// Smallest (requester, server) pair at or after the per-dataset cursors —
+/// the k-way-merge step of the fused phases.
+fn next_pair(taken: &[(usize, LoadScratch)], idx: &[usize]) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize)> = None;
+    for (d, (_, scratch)) in taken.iter().enumerate() {
+        if let Some(run) = scratch.runs.get(idx[d]) {
+            let key = (run.requester, run.server);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+    }
+    best
 }
 
 /// The serial coalescing kernel: merge adjacent routed pieces of one
@@ -875,7 +1253,7 @@ mod tests {
             ServerSelection::LeastLoaded,
             ServerSelection::Primary,
         ] {
-            let cfg = RestoreConfig::builder(8, 8, 64, )
+            let cfg = RestoreConfig::builder(8, 8, 64)
                 .replicas(4)
                 .perm_range_blocks(Some(16))
                 .server_selection(policy)
@@ -1188,6 +1566,31 @@ mod golden {
         }
     }
 
+    /// Parity for the two-pass `LeastLoaded` resolution at a piece count
+    /// past its engagement threshold (est. pieces >= PAR_MIN_ITEMS): the
+    /// parallel candidate pass + serial greedy replay must be bit-identical
+    /// to the single-pass serial router (the reference oracle). CI runs
+    /// this under the default, `--no-default-features`, and
+    /// `--features rayon` builds — closing the ROADMAP "LeastLoaded-
+    /// compatible parallel resolution" lever with the same serial-parity
+    /// matrix as the other rayon stages.
+    #[test]
+    fn large_scale_least_loaded_two_pass_parity() {
+        // 8 PEs x 8192 blocks, 8-block units -> load-all resolves ~8192
+        // pieces; the volume estimate (65536 / 8 = 8192) crosses
+        // PAR_MIN_ITEMS (4096), so the rayon build takes the two-pass path.
+        let (mut cluster, mut rs) = build(8, 8192, 4, Some(8), ServerSelection::LeastLoaded);
+        let reqs = load_all_requests(&rs, &cluster);
+        assert_parity(&mut rs, &mut cluster, &reqs, "LeastLoaded/large-load-all");
+
+        // ...and through failures (candidate sets shrink, order preserved)
+        let (mut cluster, mut rs) = build(8, 8192, 4, Some(8), ServerSelection::LeastLoaded);
+        let dead = [0usize, 2, 4, 1, 3, 5];
+        cluster.kill(&dead);
+        let reqs = scatter_requests(&rs, &cluster, &dead);
+        assert_parity(&mut rs, &mut cluster, &reqs, "LeastLoaded/large-scatter");
+    }
+
     #[test]
     fn parity_through_repair_fallback() {
         // Kill a PE, repair its replicas onto probing-sequence homes, then
@@ -1277,27 +1680,24 @@ mod golden {
         cluster.kill(&[3]);
         let reqs = scatter_requests(&rs, &cluster, &[3]);
         rs.load(&mut cluster, &reqs).unwrap();
-        let caps = (
-            rs.scratch.routed.capacity(),
-            rs.scratch.pieces.capacity(),
-            rs.scratch.runs.capacity(),
-            rs.scratch.server_load.capacity(),
-            rs.scratch.holders.capacity(),
-            rs.scratch.acc.pe_capacity(),
-        );
+        let caps = |rs: &ReStore| {
+            let s = &rs.datasets[0].scratch;
+            (
+                s.routed.capacity(),
+                s.pieces.capacity(),
+                s.runs.capacity(),
+                s.server_load.capacity(),
+                s.holders.capacity(),
+                s.acc.pe_capacity(),
+            )
+        };
+        let warm = caps(&rs);
         for _ in 0..5 {
             rs.load(&mut cluster, &reqs).unwrap();
         }
         assert_eq!(
-            caps,
-            (
-                rs.scratch.routed.capacity(),
-                rs.scratch.pieces.capacity(),
-                rs.scratch.runs.capacity(),
-                rs.scratch.server_load.capacity(),
-                rs.scratch.holders.capacity(),
-                rs.scratch.acc.pe_capacity(),
-            ),
+            warm,
+            caps(&rs),
             "scratch buffers grew across identical steady-state loads"
         );
     }

@@ -1,21 +1,27 @@
 //! The ReStore library core (§IV + §V of the paper).
 //!
-//! * [`block`] — block IDs, ranges, range sets.
+//! * [`block`] — block IDs, ranges, range sets (with the set algebra the
+//!   multi-dataset request router uses).
 //! * [`distribution`] — the placement function `L(x,k)` with permutation
 //!   ranges and the precomputed unit→slot placement index shared by
 //!   submit, load, and repair.
 //! * [`permutation`] — Feistel range permutation (and identity).
+//! * [`registry`] — the multi-dataset registry: [`Dataset`] (one per
+//!   datatype, each with independent `n`/`r`/`b`/seed, §V) and the
+//!   [`DatasetId`] key; [`ReStore`] owns a `Vec<Dataset>` and keeps the
+//!   historical single-dataset API as a facade over dataset 0.
 //! * [`store`] — per-PE in-memory replica storage.
 //! * [`submit`] — the one-time checkpoint creation path.
 //! * [`load`] — the recovery path (request resolution + sparse all-to-all),
-//!   plus the request-pattern helpers for the paper's three benchmark
-//!   operations (*load 1 %*, *load all*, scattered/single-target recovery).
+//!   the fused cross-dataset [`ReStore::load_many`], plus the
+//!   request-pattern helpers for the paper's three benchmark operations.
 //! * [`idl`] — §IV-D irrecoverable-data-loss probabilities (exact
 //!   inclusion–exclusion, the small-f approximation, and the Monte-Carlo
 //!   failure simulator behind Fig 3).
 //! * [`rebalance`] — §IV-B shrinking recovery: rewrite the layout over the
 //!   `p'` survivors after `ulfm::shrink` with a minimal migration schedule,
-//!   under a bumped communicator epoch.
+//!   under a bumped communicator epoch — fused across every feasible
+//!   dataset by [`ReStore::rebalance_or_acknowledge`].
 //! * [`repair`] — §IV-E replica re-creation after failures (Appendix
 //!   Distributions A and B).
 //! * [`serialize`] — typed helpers to move `f32`/`u64` app data in and out
@@ -28,6 +34,7 @@ pub mod idl;
 pub mod load;
 pub mod permutation;
 pub mod rebalance;
+pub mod registry;
 pub mod repair;
 pub mod serialize;
 pub mod store;
@@ -36,11 +43,15 @@ pub mod submit;
 use crate::config::RestoreConfig;
 use crate::error::{Error, Result};
 use crate::simnet::cluster::Cluster;
-use crate::simnet::network::PhaseCost;
+use crate::simnet::network::{Accumulator, PhaseCost};
+use crate::simnet::ulfm::RankMap;
 
 use block::RangeSet;
 use distribution::Distribution;
+use rebalance::{charge_shrink_plans, RebalanceReport, ShrinkPlan};
 use store::{HolderIndex, PeStore};
+
+pub use registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
 /// (The paper's preferred API mode: "providing exactly those ID ranges each
@@ -59,7 +70,7 @@ pub struct LoadedShard {
     pub bytes: Option<Vec<u8>>,
 }
 
-/// Result of a [`ReStore::load`].
+/// Result of a [`Dataset::load`].
 #[derive(Debug, Clone)]
 pub struct LoadOutput {
     pub shards: Vec<LoadedShard>,
@@ -71,256 +82,276 @@ pub struct LoadOutput {
     pub cost: PhaseCost,
 }
 
-/// Result of a [`ReStore::submit`].
+/// Result of a [`Dataset::submit`].
 #[derive(Debug, Clone)]
 pub struct SubmitReport {
     pub cost: PhaseCost,
 }
 
-/// The replicated in-memory storage over a (simulated) cluster.
+/// The replicated in-memory storage over a (simulated) cluster: a registry
+/// of [`Dataset`]s (one per application datatype, §V), each with its own
+/// `Distribution`, block size, replication level, and epoch.
 ///
 /// One `ReStore` instance owns the stores of *all* PEs — the simulator's
 /// global view of what, in the paper's C++ library, is one instance per MPI
 /// rank. All placement, routing and scheduling decisions are computed
 /// per-PE exactly as each rank would compute them locally.
+///
+/// ## Single-dataset facade
+///
+/// Every historical single-dataset method (`submit`, `load`,
+/// `repair_replicas`, `rebalance`, accessors...) delegates to dataset 0 —
+/// the dataset created by [`ReStore::new`] — and is byte-identical to the
+/// pre-registry implementation. Additional datasets are created with
+/// [`ReStore::create_dataset`] and driven through the
+/// [`ReStore::dataset_mut`] handle.
+///
+/// ## Fused cross-dataset phases
+///
+/// A recovery that touches several datasets pays one sparse all-to-all
+/// *round* per dataset if driven sequentially; [`ReStore::load_many`]
+/// merges the per-dataset message plans into ONE request all-to-all and
+/// ONE data all-to-all (per-pair messages concatenated, dataset-tagged),
+/// and [`ReStore::rebalance_or_acknowledge`] rebalances every feasible
+/// dataset under the single post-shrink epoch with one fused migration
+/// all-to-all, degrading per dataset to acknowledge on
+/// [`Error::IrrecoverableDataLoss`].
 pub struct ReStore {
-    cfg: RestoreConfig,
-    dist: Distribution,
-    stores: Vec<PeStore>,
-    submitted: bool,
-    /// Reverse holder index (permuted slot → storing PEs, in *cluster*
-    /// ranks), maintained incrementally by submit, §IV-E repair, and the
-    /// §IV-B rebalance; consulted by repair/rebalance planning and the load
-    /// path's post-repair fallback instead of an O(p) store sweep.
-    holder_index: HolderIndex,
-    /// Distribution rank → cluster rank. The identity until the first
-    /// [`ReStore::rebalance`]; afterwards the shrink's dense re-ranking
-    /// (`RankMap::new_to_old`), so the `Distribution` computes the §IV-A
-    /// layout in the compact post-shrink world while stores, requests, and
-    /// the network keep addressing original cluster ranks.
-    pe_map: Vec<u32>,
-    /// Communicator epoch this layout was computed at. `submit`/`load`/
-    /// `repair` refuse to run when `ulfm::shrink` has bumped the cluster
-    /// epoch past it — the caller must `rebalance` (or
-    /// `acknowledge_shrink`) first.
-    epoch: u64,
-    /// Reusable buffers for the load pipeline — grown on first use, then
-    /// reused so steady-state `load()` calls allocate nothing per piece.
-    scratch: load::LoadScratch,
+    pub(crate) datasets: Vec<Dataset>,
+    /// Pooled accumulator backing the fused `load_many` phases (same
+    /// steady-state no-O(p)-alloc contract as each dataset's own
+    /// `LoadScratch` accumulator).
+    pub(crate) fused_acc: Accumulator,
 }
 
 impl ReStore {
-    /// Create an instance sized for `cluster`'s world.
+    /// Create an instance sized for `cluster`'s world, with `cfg` as
+    /// dataset 0 (the dataset the single-dataset facade addresses).
     pub fn new(cfg: RestoreConfig, cluster: &Cluster) -> Result<Self> {
-        cfg.validate()?;
-        if cfg.world != cluster.world() {
-            return Err(Error::Config(format!(
-                "config world {} != cluster world {}",
-                cfg.world,
-                cluster.world()
-            )));
-        }
-        let dist = Distribution::new(&cfg);
-        let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
-        let holder_index = HolderIndex::new(cluster.world());
         Ok(ReStore {
-            cfg,
-            dist,
-            stores,
-            submitted: false,
-            holder_index,
-            pe_map: (0..cfg.world as u32).collect(),
-            epoch: cluster.epoch(),
-            scratch: load::LoadScratch::default(),
+            datasets: vec![Dataset::new(DatasetId(0), cfg, cluster)?],
+            fused_acc: Accumulator::default(),
         })
     }
 
+    /// Register an additional dataset (its own `n`, `r`, `b`, seed — §V's
+    /// "one ReStore object per datatype"). The config's world must match
+    /// the cluster's; everything else is independent per dataset.
+    pub fn create_dataset(&mut self, cfg: RestoreConfig, cluster: &Cluster) -> Result<DatasetId> {
+        let id = DatasetId(self.datasets.len() as u32);
+        self.datasets.push(Dataset::new(id, cfg, cluster)?);
+        Ok(id)
+    }
+
+    /// Number of registered datasets (≥ 1).
+    pub fn n_datasets(&self) -> usize {
+        self.datasets.len()
+    }
+
+    /// All registered datasets, in id order.
+    pub fn datasets(&self) -> &[Dataset] {
+        &self.datasets
+    }
+
+    pub(crate) fn index_of(&self, id: DatasetId) -> Result<usize> {
+        if id.index() < self.datasets.len() {
+            Ok(id.index())
+        } else {
+            Err(Error::UnknownDataset { dataset: id.0, datasets: self.datasets.len() })
+        }
+    }
+
+    /// The dataset handle for `id`.
+    pub fn dataset(&self, id: DatasetId) -> Result<&Dataset> {
+        let i = self.index_of(id)?;
+        Ok(&self.datasets[i])
+    }
+
+    /// The mutable dataset handle for `id` — every routing operation
+    /// (`submit`/`load`/`repair`/`rebalance`/`acknowledge_shrink`) is a
+    /// method of the handle.
+    pub fn dataset_mut(&mut self, id: DatasetId) -> Result<&mut Dataset> {
+        let i = self.index_of(id)?;
+        Ok(&mut self.datasets[i])
+    }
+
+    // --- single-dataset facade (dataset 0) -------------------------------
+
+    fn ds0(&self) -> &Dataset {
+        &self.datasets[0]
+    }
+
+    fn ds0_mut(&mut self) -> &mut Dataset {
+        &mut self.datasets[0]
+    }
+
     pub fn config(&self) -> &RestoreConfig {
-        &self.cfg
+        self.ds0().config()
     }
 
     pub fn distribution(&self) -> &Distribution {
-        &self.dist
+        self.ds0().distribution()
     }
 
     pub fn stores(&self) -> &[PeStore] {
-        &self.stores
+        self.ds0().stores()
     }
 
     pub fn is_submitted(&self) -> bool {
-        self.submitted
+        self.ds0().is_submitted()
     }
 
-    /// The reverse holder index (permuted slot → storing PEs).
+    /// The reverse holder index of dataset 0 (permuted slot → storing PEs).
     pub fn holder_index(&self) -> &HolderIndex {
-        &self.holder_index
+        self.ds0().holder_index()
     }
 
-    /// Communicator epoch the current layout addresses.
+    /// Communicator epoch dataset 0's layout addresses.
     pub fn epoch(&self) -> u64 {
-        self.epoch
+        self.ds0().epoch()
     }
 
-    /// Cluster rank of distribution rank `dist_rank` (identity until the
-    /// first rebalance).
+    /// Cluster rank of dataset 0's distribution rank `dist_rank`.
     #[inline]
     pub fn cluster_rank(&self, dist_rank: usize) -> usize {
-        self.pe_map[dist_rank] as usize
+        self.ds0().cluster_rank(dist_rank)
     }
 
-    /// Does the current survivor count admit the balanced §IV-A layout
-    /// (⌊n/p'⌋/⌈n/p'⌉ slices — see [`Distribution::reshape_feasible`])?
-    /// With balanced unequal slices this holds for **every** `p' ≥ r`, so
-    /// after any real kill wave the answer is almost always yes. A pure
-    /// feasibility predicate: [`ReStore::rebalance`] additionally requires
-    /// the epoch handshake (a `ulfm::shrink` not yet adopted) and a
-    /// current [`RankMap`](crate::simnet::ulfm::RankMap) —
-    /// [`ReStore::rebalance_or_acknowledge`] packages the whole policy.
-    /// Only when fewer than `r` PEs survive must applications stay in the
-    /// dead world via [`ReStore::acknowledge_shrink`] + §IV-E repair.
+    /// Does the current survivor count admit the balanced §IV-A layout for
+    /// dataset 0 (see [`Dataset::can_rebalance`])?
     pub fn can_rebalance(&self, cluster: &Cluster) -> bool {
-        self.submitted && self.dist.reshape_feasible(cluster.n_alive())
+        self.ds0().can_rebalance(cluster)
     }
 
-    /// Adopt a shrunk communicator **without** rewriting the layout: the
-    /// distribution keeps addressing the original world (load falls back to
-    /// routing around dead ranks, repair re-replicates in place), but every
-    /// dead PE's replica memory is reclaimed and the store's epoch catches
-    /// up to the cluster's so submit/load/repair run again. This folds the
-    /// former standalone `drop_pe` reclaim — reclaiming must go through
-    /// here (not the raw stores) to keep the reverse holder index
-    /// consistent. Safe to call when no shrink happened (pure reclaim) and
-    /// idempotent.
+    /// Submit real data into dataset 0 (see [`Dataset::submit`]).
+    pub fn submit(&mut self, cluster: &mut Cluster, shards: &[Vec<u8>]) -> Result<SubmitReport> {
+        self.ds0_mut().submit(cluster, shards)
+    }
+
+    /// Cost-model submit into dataset 0 (see [`Dataset::submit_virtual`]).
+    pub fn submit_virtual(&mut self, cluster: &mut Cluster) -> Result<SubmitReport> {
+        self.ds0_mut().submit_virtual(cluster)
+    }
+
+    /// Load from dataset 0 (see [`Dataset::load`]).
+    pub fn load(&mut self, cluster: &mut Cluster, requests: &[LoadRequest]) -> Result<LoadOutput> {
+        self.ds0_mut().load(cluster, requests)
+    }
+
+    /// §IV-E replica repair of dataset 0 (see [`Dataset::repair_replicas`]).
+    pub fn repair_replicas(
+        &mut self,
+        cluster: &mut Cluster,
+        scheme: repair::RepairScheme,
+    ) -> Result<repair::RepairReport> {
+        self.ds0_mut().repair_replicas(cluster, scheme)
+    }
+
+    /// §IV-B rebalance of dataset 0 alone (see [`Dataset::rebalance`]).
+    /// Applications with several datasets should prefer the fused
+    /// [`ReStore::rebalance_or_acknowledge`], which adopts the shrink for
+    /// every dataset at once.
+    pub fn rebalance(&mut self, cluster: &mut Cluster, map: &RankMap) -> Result<RebalanceReport> {
+        self.ds0_mut().rebalance(cluster, map)
+    }
+
+    /// Adopt a shrunk communicator without rewriting any layout, for
+    /// **every** dataset (see [`Dataset::acknowledge_shrink`]): all dead
+    /// stores reclaimed, all dataset epochs caught up to the cluster's.
     pub fn acknowledge_shrink(&mut self, cluster: &Cluster) -> Result<()> {
-        if cluster.world() != self.stores.len() {
-            return Err(Error::Config(format!(
-                "acknowledge_shrink: cluster world {} != store world {}",
-                cluster.world(),
-                self.stores.len()
-            )));
+        for ds in &mut self.datasets {
+            ds.acknowledge_shrink(cluster)?;
         }
-        for pe in 0..self.stores.len() {
-            if !cluster.is_alive(pe) && !self.stores[pe].slices().is_empty() {
-                self.stores[pe].clear();
-                self.holder_index.drop_pe(pe);
-            }
-        }
-        self.epoch = cluster.epoch();
         Ok(())
     }
 
-    /// The full §IV-B shrink handshake for applications: rewrite the layout
-    /// over the survivors when the shrunken world admits the balanced
-    /// §IV-A distribution (any `p' ≥ r` — almost always, see
-    /// [`ReStore::can_rebalance`]), otherwise stay in the dead world
-    /// (reclaiming dead stores) — either way the store ends at the
-    /// cluster's epoch. Returns the rebalance report when one ran.
+    // --- fused shrink handshake ------------------------------------------
+
+    /// The full §IV-B shrink handshake across **all** datasets: rewrite the
+    /// layout over the survivors for every dataset whose shrunken world
+    /// admits the balanced §IV-A distribution, acknowledge (reclaiming dead
+    /// stores) for the rest — all under the single post-shrink cluster
+    /// epoch, with the per-dataset migration plans merged into ONE local
+    /// copy charge and ONE migration sparse all-to-all (per-pair messages
+    /// concatenated across datasets). Returns the per-dataset outcomes in
+    /// id order: `Some(report)` where a rebalance ran, `None` where the
+    /// dataset acknowledged.
     ///
     /// The `map` is validated against the cluster's *current* survivor set
     /// **before** any policy branch: a stale `RankMap` from an earlier
-    /// shrink would otherwise silently steer the policy (acknowledging a
-    /// rebalanceable world, or rebalancing against the wrong survivors) —
-    /// surfaced as [`Error::StaleRankMap`] with the store untouched.
+    /// shrink would otherwise silently steer the policy — surfaced as
+    /// [`Error::StaleRankMap`] with every dataset untouched.
     ///
-    /// If the rebalance itself discovers an interval with no surviving
-    /// holder (`Error::IrrecoverableDataLoss`), the policy degrades to
-    /// acknowledging instead of failing: data that is still held stays
-    /// loadable in the dead world, and only a *targeted* load of the lost
-    /// ranges reports the loss — applications whose live state covers the
-    /// lost blocks keep running, exactly as before the rebalance existed.
-    pub fn rebalance_or_acknowledge(
+    /// If a dataset's rebalance plan discovers an interval with no
+    /// surviving holder ([`Error::IrrecoverableDataLoss`]), that dataset —
+    /// and only that dataset — degrades to acknowledging: data it still
+    /// holds stays loadable in the dead world, and a *targeted* load of
+    /// the lost ranges reports the loss (tagged with the dataset id).
+    pub fn rebalance_or_acknowledge_all(
         &mut self,
         cluster: &mut Cluster,
-        map: &crate::simnet::ulfm::RankMap,
-    ) -> Result<Option<rebalance::RebalanceReport>> {
+        map: &RankMap,
+    ) -> Result<Vec<Option<RebalanceReport>>> {
         map.validate_against(cluster)?;
-        // A shrink that removed no ranks leaves the layout already correct:
-        // adopting the epoch (acknowledge) is the O(1) action, not a
-        // keep-everything rebalance that re-materializes the whole store.
-        if self.submitted
-            && cluster.epoch() > self.epoch
-            && map.new_world() < self.dist.world()
-            && self.dist.reshape_feasible(map.new_world())
-        {
-            match self.rebalance(cluster, map) {
-                Ok(report) => return Ok(Some(report)),
-                // Some interval has no surviving holder: the full-layout
-                // rewrite is impossible, but data that IS still held stays
-                // loadable in the dead world — degrade to acknowledge (the
-                // failed rebalance left the old layout fully intact) and
-                // let targeted loads surface real losses to the caller, as
-                // the pre-rebalance code paths always did.
+        // Plan FIRST, for every eligible dataset: planning is pure (no
+        // clock, no store mutation), so a non-IDL error here leaves the
+        // whole registry untouched. A shrink that removed no ranks leaves
+        // each layout already correct: adopting the epoch (acknowledge) is
+        // the O(1) action, not a keep-everything rebalance.
+        let mut plans: Vec<(usize, ShrinkPlan)> = Vec::new();
+        for (i, ds) in self.datasets.iter().enumerate() {
+            let eligible = ds.submitted
+                && cluster.epoch() > ds.epoch
+                && map.new_world() < ds.dist.world()
+                && ds.dist.reshape_feasible(map.new_world());
+            if !eligible {
+                continue;
+            }
+            match ds.plan_shrink(cluster, map) {
+                Ok(plan) => plans.push((i, plan)),
+                // This dataset has an interval with no surviving holder:
+                // degrade it (alone) to acknowledge; targeted loads surface
+                // the real losses, exactly as the single-dataset policy did.
                 Err(Error::IrrecoverableDataLoss { .. }) => {}
                 Err(e) => return Err(e),
             }
         }
-        self.acknowledge_shrink(cluster)?;
-        Ok(None)
+
+        // ONE fused local-copy charge + ONE fused migration all-to-all for
+        // every planned dataset (identical to the single-dataset charges
+        // when only one dataset planned).
+        let mut outcomes: Vec<Option<RebalanceReport>> = Vec::new();
+        outcomes.resize_with(self.datasets.len(), || None);
+        if !plans.is_empty() {
+            let tagged: Vec<(&ShrinkPlan, u64)> = plans
+                .iter()
+                .map(|(i, plan)| (plan, self.datasets[*i].cfg.block_size as u64))
+                .collect();
+            let (local_cost, net_cost) = charge_shrink_plans(cluster, &tagged)?;
+            let shared = local_cost.then(net_cost);
+            for (i, plan) in plans {
+                let report = self.datasets[i].apply_shrink(cluster, plan, shared);
+                outcomes[i] = Some(report);
+            }
+        }
+        for (i, ds) in self.datasets.iter_mut().enumerate() {
+            if outcomes[i].is_none() {
+                ds.acknowledge_shrink(cluster)?;
+            }
+        }
+        Ok(outcomes)
     }
 
-    pub(crate) fn stores_mut(&mut self) -> &mut Vec<PeStore> {
-        &mut self.stores
-    }
-
-    pub(crate) fn holder_index_mut(&mut self) -> &mut HolderIndex {
-        &mut self.holder_index
-    }
-
-    /// Swap in a rebalanced layout (called by `rebalance` after the
-    /// migration executed): new distribution, rank translation, stores, and
-    /// holder index become current atomically, under the cluster's epoch.
-    pub(crate) fn install_layout(
+    /// The single-dataset view of the fused shrink handshake: runs
+    /// [`ReStore::rebalance_or_acknowledge_all`] (every dataset adopts the
+    /// shrink) and returns dataset 0's outcome — exactly the historical
+    /// single-dataset behavior when only one dataset is registered.
+    pub fn rebalance_or_acknowledge(
         &mut self,
-        cluster: &Cluster,
-        dist: Distribution,
-        pe_map: Vec<u32>,
-        stores: Vec<PeStore>,
-        holder_index: HolderIndex,
-    ) {
-        debug_assert_eq!(pe_map.len(), dist.world());
-        debug_assert_eq!(stores.len(), self.cfg.world);
-        self.dist = dist;
-        self.pe_map = pe_map;
-        self.stores = stores;
-        self.holder_index = holder_index;
-        self.epoch = cluster.epoch();
-    }
-
-    pub(crate) fn mark_submitted(&mut self) -> Result<()> {
-        if self.submitted {
-            return Err(Error::AlreadySubmitted);
-        }
-        self.submitted = true;
-        Ok(())
-    }
-
-    pub(crate) fn ensure_submitted(&self) -> Result<()> {
-        if !self.submitted {
-            return Err(Error::NotSubmitted);
-        }
-        Ok(())
-    }
-
-    /// The shrink-handshake guard on every routing operation: fail with
-    /// [`Error::StaleEpoch`] when `ulfm::shrink` has produced a newer
-    /// communicator than the one this layout was computed for.
-    pub(crate) fn ensure_current_epoch(&self, cluster: &Cluster) -> Result<()> {
-        if self.epoch != cluster.epoch() {
-            return Err(Error::StaleEpoch {
-                store_epoch: self.epoch,
-                cluster_epoch: cluster.epoch(),
-            });
-        }
-        Ok(())
-    }
-
-    /// Is any store holding real bytes (execution mode) rather than
-    /// virtual lengths (cost-model mode)?
-    pub(crate) fn is_execution_mode(&self) -> bool {
-        self.stores.iter().any(|st| {
-            st.slices()
-                .first()
-                .is_some_and(|s| matches!(s.buf, store::SliceBuf::Real(_)))
-        })
+        cluster: &mut Cluster,
+        map: &RankMap,
+    ) -> Result<Option<RebalanceReport>> {
+        let mut outcomes = self.rebalance_or_acknowledge_all(cluster, map)?;
+        Ok(outcomes.swap_remove(0))
     }
 }

@@ -62,8 +62,8 @@
 
 use crate::error::{Error, Result};
 use crate::restore::distribution::Distribution;
+use crate::restore::registry::Dataset;
 use crate::restore::store::{HolderIndex, PeStore, SliceBuf};
-use crate::restore::ReStore;
 use crate::simnet::cluster::Cluster;
 use crate::simnet::network::PhaseCost;
 use crate::simnet::ulfm::RankMap;
@@ -158,7 +158,13 @@ pub fn plan_rebalance(
             let s_pr = old_dist.perm_range_blocks();
             let ulen = len.min(s_pr - cur % s_pr);
             let orig = old_dist.unpermute_block(cur);
-            return Err(Error::IrrecoverableDataLoss { start: orig, end: orig + ulen });
+            // Planning is dataset-agnostic; callers re-tag with the real
+            // dataset id (`Error::tag_dataset`).
+            return Err(Error::IrrecoverableDataLoss {
+                dataset: crate::restore::registry::DatasetId::FIRST,
+                start: orig,
+                end: orig + ulen,
+            });
         }
         dsts.clear();
         for k in 0..r {
@@ -185,13 +191,96 @@ pub fn plan_rebalance(
     Ok(())
 }
 
-impl ReStore {
-    /// §IV-B shrinking recovery: rewrite the layout over the `map`'s `p'`
-    /// survivors. Requires a preceding `ulfm::shrink` (the cluster epoch
-    /// must be ahead of the store's) and a feasible `p'`
-    /// ([`Distribution::reshape_feasible`]); on any error the old layout
-    /// stays fully intact (the swap is atomic-on-success).
-    pub fn rebalance(&mut self, cluster: &mut Cluster, map: &RankMap) -> Result<RebalanceReport> {
+/// A fully planned §IV-B shrink of one dataset: everything the fused
+/// executor needs to charge and apply the layout rewrite. Planning is pure
+/// (no clock advance, no store mutation), so a plan can be discarded —
+/// which is exactly what the `rebalance_or_acknowledge` policy does when a
+/// dataset's plan hits [`Error::IrrecoverableDataLoss`].
+pub(crate) struct ShrinkPlan {
+    new_dist: Distribution,
+    to_cluster: Vec<u32>,
+    /// Sorted by (src, dst, perm_start) — the per-pair coalescing order.
+    transfers: Vec<MigrationTransfer>,
+    /// Retained intervals to replay locally (execution mode only).
+    keeps: Vec<(usize, u64, u64)>,
+    /// Indexed by cluster rank; the §IV-C-style transient local copies.
+    kept_bytes_per_pe: Vec<u64>,
+}
+
+/// Charge the fused §IV-B migration for a set of dataset plans: ONE local
+/// copy term (per-PE kept bytes summed across datasets, slowest PE billed)
+/// followed by ONE sparse all-to-all whose per-(src, dst) messages
+/// concatenate every dataset's intervals for that pair (bytes summed, one
+/// pack/unpack fragment per interval per dataset). With a single plan this
+/// is charge-identical to the historical single-dataset `rebalance`.
+pub(crate) fn charge_shrink_plans(
+    cluster: &mut Cluster,
+    plans: &[(&ShrinkPlan, u64)],
+) -> Result<(PhaseCost, PhaseCost)> {
+    // Local copies: every survivor re-materializes its kept data of ALL
+    // datasets in the new slice buffers, in parallel across PEs — bill the
+    // slowest PE's total.
+    let mut max_local = 0u64;
+    if let Some((first, _)) = plans.first() {
+        for pe in 0..first.kept_bytes_per_pe.len() {
+            let total: u64 = plans.iter().map(|(p, _)| p.kept_bytes_per_pe[pe]).sum();
+            max_local = max_local.max(total);
+        }
+    }
+    let local_cost = PhaseCost::local_copy(cluster.network(), max_local);
+    cluster.advance(&local_cost);
+
+    // ONE migration sparse all-to-all across all datasets: each plan's
+    // transfers are sorted by (src, dst, perm_start), so a k-way merge on
+    // the (src, dst) key visits every pair once, in order.
+    let mut phase = cluster.phase();
+    let mut idx: Vec<usize> = vec![0; plans.len()];
+    loop {
+        let mut pair: Option<(usize, usize)> = None;
+        for (d, (plan, _)) in plans.iter().enumerate() {
+            if let Some(t) = plan.transfers.get(idx[d]) {
+                let key = (t.src, t.dst);
+                if pair.map_or(true, |best| key < best) {
+                    pair = Some(key);
+                }
+            }
+        }
+        let Some((src, dst)) = pair else { break };
+        let mut bytes = 0u64;
+        for (d, (plan, bs)) in plans.iter().enumerate() {
+            let mut i = idx[d];
+            let mut intervals = 0u64;
+            while i < plan.transfers.len()
+                && plan.transfers[i].src == src
+                && plan.transfers[i].dst == dst
+            {
+                bytes += plan.transfers[i].blocks * bs;
+                intervals += 1;
+                i += 1;
+            }
+            idx[d] = i;
+            if intervals > 0 {
+                phase.frag(src, intervals);
+                phase.frag(dst, intervals);
+            }
+        }
+        phase.add(src, dst, bytes)?;
+    }
+    Ok((local_cost, phase.commit()))
+}
+
+impl Dataset {
+    /// Plan this dataset's §IV-B shrink onto the `map`'s `p'` survivors:
+    /// validates the handshake (preceding `ulfm::shrink`, current map,
+    /// feasible `p'`) and computes the minimal migration — no clock
+    /// advance, no store mutation. A kill wave that wiped a whole holder
+    /// set surfaces as [`Error::IrrecoverableDataLoss`] here — a failure
+    /// path `rebalance_or_acknowledge` deliberately drives before
+    /// degrading to acknowledge — so it must cost O(p + p') planning work,
+    /// not an r·n·bs destination-buffer memset that is then thrown away.
+    /// Retained intervals are recorded for replay once the buffers exist
+    /// (they are O(r·(p + p')) tuples, nothing like the payload).
+    pub(crate) fn plan_shrink(&self, cluster: &Cluster, map: &RankMap) -> Result<ShrinkPlan> {
         self.ensure_submitted()?;
         if cluster.epoch() <= self.epoch() {
             return Err(Error::Config(format!(
@@ -205,17 +294,9 @@ impl ReStore {
         let to_cluster: Vec<u32> = map.new_to_old.iter().map(|&o| o as u32).collect();
 
         let execution = self.is_execution_mode();
-        let bs = self.config().block_size;
-        let r = new_dist.replicas();
+        let bs = self.config().block_size as u64;
         let world = self.config().world;
 
-        // Plan FIRST: a kill wave that wiped a whole holder set surfaces
-        // as IrrecoverableDataLoss here — a failure path
-        // `rebalance_or_acknowledge` deliberately drives before degrading
-        // to acknowledge — so it must cost O(p + p') planning work, not an
-        // r·n·bs destination-buffer memset that is then thrown away.
-        // Retained intervals are recorded and replayed after the buffers
-        // exist (they are O(r·(p + p')) tuples, nothing like the payload).
         let mut transfers: Vec<MigrationTransfer> = Vec::new();
         let mut keeps: Vec<(usize, u64, u64)> = Vec::new();
         let mut kept_bytes_per_pe: Vec<u64> = vec![0; world];
@@ -226,13 +307,37 @@ impl ReStore {
             |pe| cluster.is_alive(pe),
             &to_cluster,
             |pe, perm_start, blocks| {
-                kept_bytes_per_pe[pe] += blocks * bs as u64;
+                kept_bytes_per_pe[pe] += blocks * bs;
                 if execution {
                     keeps.push((pe, perm_start, blocks));
                 }
             },
             &mut transfers,
-        )?;
+        )
+        .map_err(|e| e.tag_dataset(self.id()))?;
+        // Per-pair coalescing order for the (possibly fused) charge.
+        transfers.sort_unstable_by_key(|t| (t.src, t.dst, t.perm_start));
+
+        Ok(ShrinkPlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe })
+    }
+
+    /// Execute a planned shrink: build the new slice buffers, replay the
+    /// retained intervals, run the migration zero-copy, and atomically
+    /// swap the layout in under the cluster's epoch. The caller has
+    /// already charged the phases (`charge_shrink_plans`) — `shared_cost`
+    /// is recorded in the report (the fused local + migration cost, shared
+    /// by every dataset rebalanced in the same handshake).
+    pub(crate) fn apply_shrink(
+        &mut self,
+        cluster: &Cluster,
+        plan: ShrinkPlan,
+        shared_cost: PhaseCost,
+    ) -> RebalanceReport {
+        let ShrinkPlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe } = plan;
+        let execution = self.is_execution_mode();
+        let bs = self.config().block_size;
+        let r = new_dist.replicas();
+        let world = self.config().world;
 
         // Pre-create every survivor's r new slices (zeroed in execution
         // mode, sized per slice — the balanced partition has ⌈n/p'⌉ and
@@ -271,41 +376,13 @@ impl ReStore {
             new_stores[pe].write_from(perm_start, bytes);
         }
 
-        // Charge the local copies of retained bytes (the transient §IV-C
-        // style doubling: every survivor re-materializes its kept data in
-        // the new slice buffers, in parallel — bill the slowest PE).
-        let max_local = kept_bytes_per_pe.iter().copied().max().unwrap_or(0);
-        let local_cost = PhaseCost::local_copy(cluster.network(), max_local);
-        cluster.advance(&local_cost);
-
-        // ONE sparse all-to-all for the migration: coalesce per (src, dst)
-        // pair, charge pack/unpack fragments per interval like the load
-        // path's data phase.
-        transfers.sort_unstable_by_key(|t| (t.src, t.dst, t.perm_start));
-        let mut migrated = 0u64;
-        let mut phase = cluster.phase();
-        let mut i = 0;
-        while i < transfers.len() {
-            let (src, dst) = (transfers[i].src, transfers[i].dst);
-            let start = i;
-            let mut bytes = 0u64;
-            while i < transfers.len() && transfers[i].src == src && transfers[i].dst == dst {
-                bytes += transfers[i].blocks * bs as u64;
-                i += 1;
-            }
-            migrated += bytes;
-            phase.add(src, dst, bytes)?;
-            let pieces = (i - start) as u64;
-            phase.frag(src, pieces);
-            phase.frag(dst, pieces);
-        }
-        let net_cost = phase.commit();
-
         // Execute the migration zero-copy (old stores are read-only here;
         // destinations live in the not-yet-installed new store set, so a
         // same-call destination can never be read as a source).
-        if execution {
-            for t in &transfers {
+        let mut migrated = 0u64;
+        for t in &transfers {
+            migrated += t.blocks * bs as u64;
+            if execution {
                 let bytes = self.stores()[t.src]
                     .read(t.perm_start, t.blocks)
                     .expect("execution-mode store must hold real bytes");
@@ -318,14 +395,30 @@ impl ReStore {
             transfers: transfers.len(),
             migrated_bytes: migrated,
             kept_bytes: kept_bytes_per_pe.iter().sum(),
-            cost: local_cost.then(net_cost),
+            cost: shared_cost,
         };
         // Atomic swap: distribution, rank translation, stores, and holder
         // index become current together, under the cluster's epoch. Dead
         // PEs' old stores are dropped with the old store set (the former
         // standalone `drop_pe` reclaim, folded in).
         self.install_layout(cluster, new_dist, to_cluster, new_stores, new_index);
-        Ok(report)
+        report
+    }
+
+    /// §IV-B shrinking recovery of THIS dataset: rewrite the layout over
+    /// the `map`'s `p'` survivors. Requires a preceding `ulfm::shrink`
+    /// (the cluster epoch must be ahead of the dataset's) and a feasible
+    /// `p'` ([`Distribution::reshape_feasible`]); on any error the old
+    /// layout stays fully intact (the swap is atomic-on-success).
+    /// Registries with several datasets should prefer the fused
+    /// [`ReStore::rebalance_or_acknowledge`](crate::restore::ReStore::rebalance_or_acknowledge),
+    /// which adopts the shrink for every dataset under one epoch with one
+    /// merged migration all-to-all.
+    pub fn rebalance(&mut self, cluster: &mut Cluster, map: &RankMap) -> Result<RebalanceReport> {
+        let plan = self.plan_shrink(cluster, map)?;
+        let bs = self.config().block_size as u64;
+        let (local_cost, net_cost) = charge_shrink_plans(cluster, &[(&plan, bs)])?;
+        Ok(self.apply_shrink(cluster, plan, local_cost.then(net_cost)))
     }
 }
 
@@ -335,7 +428,7 @@ mod tests {
     use crate::config::RestoreConfig;
     use crate::restore::block::{BlockRange, RangeSet};
     use crate::restore::load::scatter_requests_for_ranges;
-    use crate::restore::LoadRequest;
+    use crate::restore::{LoadRequest, ReStore};
     use crate::simnet::ulfm;
 
     fn make_shards(world: usize, bytes: usize) -> Vec<Vec<u8>> {

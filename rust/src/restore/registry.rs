@@ -1,0 +1,312 @@
+//! The multi-dataset store registry (§V).
+//!
+//! The paper's API lets "an application ... create multiple ReStore
+//! objects, e.g., one for each datatype to be stored": kmeans points vs.
+//! centroids, PageRank edges vs. rank vectors, RAxML MSA sites vs. model
+//! state — each with its own block size `b`, replication level `r`, block
+//! count `n`, and permutation seed. This module holds the per-dataset
+//! state: a [`Dataset`] is exactly the single-dataset store the crate grew
+//! up as — one [`Distribution`], one [`PeStore`] set, one reverse
+//! [`HolderIndex`], one communicator epoch, one reusable
+//! [`LoadScratch`](crate::restore::load) — and
+//! [`ReStore`](crate::restore::ReStore) is now a registry of them, keyed
+//! by [`DatasetId`].
+//!
+//! Every routing operation goes through the dataset handle
+//! ([`ReStore::dataset`] / [`ReStore::dataset_mut`]); the historical
+//! single-dataset `ReStore` API survives as a thin facade over dataset 0,
+//! byte-identical to the pre-registry behavior (golden-pinned by the
+//! entire pre-existing test suite running unchanged). The *fused*
+//! cross-dataset phases — [`ReStore::load_many`]
+//! (`restore/load.rs`) and the all-dataset shrink handshake
+//! [`ReStore::rebalance_or_acknowledge`] (`restore/mod.rs`) — are where
+//! the registry pays off at scale: one request sparse all-to-all and one
+//! data sparse all-to-all across *all* datasets instead of one round per
+//! dataset (§IV-C's startup-overhead argument applied across datasets).
+
+use crate::config::RestoreConfig;
+use crate::error::{Error, Result};
+use crate::restore::distribution::Distribution;
+use crate::restore::load::LoadScratch;
+use crate::restore::store::{HolderIndex, PeStore};
+use crate::restore::LoadedShard;
+use crate::simnet::cluster::Cluster;
+
+/// Identifier of one dataset inside a [`ReStore`](crate::restore::ReStore)
+/// registry. Ids are dense: the first dataset (the one the single-dataset
+/// facade addresses) is always `DatasetId(0)`, and
+/// [`ReStore::create_dataset`](crate::restore::ReStore::create_dataset)
+/// hands out consecutive ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DatasetId(pub u32);
+
+impl DatasetId {
+    /// The dataset the single-dataset facade addresses.
+    pub const FIRST: DatasetId = DatasetId(0);
+
+    /// Dense index of this dataset inside the registry.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for DatasetId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Data loaded for one dataset of a
+/// [`ReStore::load_many`](crate::restore::ReStore::load_many) call.
+#[derive(Debug, Clone)]
+pub struct LoadManyPart {
+    pub dataset: DatasetId,
+    /// One entry per request of this dataset's part, in request order —
+    /// exactly what the corresponding single-dataset `load` would return.
+    pub shards: Vec<LoadedShard>,
+}
+
+/// Result of a [`ReStore::load_many`](crate::restore::ReStore::load_many):
+/// per-dataset shards plus the costs of the TWO fused phases (one request
+/// sparse all-to-all and one data sparse all-to-all across all datasets).
+#[derive(Debug, Clone)]
+pub struct LoadManyOutput {
+    /// In input-part order.
+    pub parts: Vec<LoadManyPart>,
+    /// Cost of the single fused request sparse all-to-all.
+    pub request_cost: crate::simnet::network::PhaseCost,
+    /// Cost of the single fused data sparse all-to-all.
+    pub data_cost: crate::simnet::network::PhaseCost,
+    /// Total (= request + data).
+    pub cost: crate::simnet::network::PhaseCost,
+}
+
+/// One dataset of the registry: the per-datatype replicated store of §V
+/// (its own `n`, `r`, `b`, seed — independent of every other dataset), with
+/// the full single-dataset lifecycle: `submit` → `load`/`repair` →
+/// `rebalance`/`acknowledge_shrink`. The heavy path implementations live
+/// in their historical modules (`submit.rs`, `load.rs`, `repair.rs`,
+/// `rebalance.rs`) as `impl Dataset` blocks.
+pub struct Dataset {
+    pub(crate) id: DatasetId,
+    pub(crate) cfg: RestoreConfig,
+    pub(crate) dist: Distribution,
+    pub(crate) stores: Vec<PeStore>,
+    pub(crate) submitted: bool,
+    /// Payload mode, latched at submit time (`submit` → true,
+    /// `submit_virtual` → false): whether stores hold real bytes
+    /// (execution mode) or virtual lengths (cost-model mode). Replaces the
+    /// former per-call O(p) store sweep on every load/rebalance.
+    pub(crate) execution: bool,
+    /// Reverse holder index (permuted slot → storing PEs, in *cluster*
+    /// ranks), maintained incrementally by submit, §IV-E repair, and the
+    /// §IV-B rebalance; consulted by repair/rebalance planning and the load
+    /// path's post-repair fallback instead of an O(p) store sweep.
+    pub(crate) holder_index: HolderIndex,
+    /// Distribution rank → cluster rank. The identity until the first
+    /// rebalance; afterwards the shrink's dense re-ranking
+    /// (`RankMap::new_to_old`), so the `Distribution` computes the §IV-A
+    /// layout in the compact post-shrink world while stores, requests, and
+    /// the network keep addressing original cluster ranks.
+    pub(crate) pe_map: Vec<u32>,
+    /// Communicator epoch this layout was computed at. `submit`/`load`/
+    /// `repair` refuse to run when `ulfm::shrink` has bumped the cluster
+    /// epoch past it — the caller must `rebalance` (or
+    /// `acknowledge_shrink`) first.
+    pub(crate) epoch: u64,
+    /// Reusable buffers for the load pipeline — grown on first use, then
+    /// reused so steady-state `load()` calls allocate nothing per piece.
+    pub(crate) scratch: LoadScratch,
+}
+
+impl Dataset {
+    /// Create a dataset sized for `cluster`'s world.
+    pub(crate) fn new(id: DatasetId, cfg: RestoreConfig, cluster: &Cluster) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.world != cluster.world() {
+            return Err(Error::Config(format!(
+                "config world {} != cluster world {}",
+                cfg.world,
+                cluster.world()
+            )));
+        }
+        let dist = Distribution::new(&cfg);
+        let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
+        let holder_index = HolderIndex::new(cluster.world());
+        Ok(Dataset {
+            id,
+            cfg,
+            dist,
+            stores,
+            submitted: false,
+            execution: false,
+            holder_index,
+            pe_map: (0..cfg.world as u32).collect(),
+            epoch: cluster.epoch(),
+            scratch: LoadScratch::default(),
+        })
+    }
+
+    /// This dataset's id inside the registry.
+    pub fn id(&self) -> DatasetId {
+        self.id
+    }
+
+    pub fn config(&self) -> &RestoreConfig {
+        &self.cfg
+    }
+
+    pub fn distribution(&self) -> &Distribution {
+        &self.dist
+    }
+
+    pub fn stores(&self) -> &[PeStore] {
+        &self.stores
+    }
+
+    pub fn is_submitted(&self) -> bool {
+        self.submitted
+    }
+
+    /// The reverse holder index (permuted slot → storing PEs).
+    pub fn holder_index(&self) -> &HolderIndex {
+        &self.holder_index
+    }
+
+    /// Communicator epoch the current layout addresses.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Cluster rank of distribution rank `dist_rank` (identity until the
+    /// first rebalance).
+    #[inline]
+    pub fn cluster_rank(&self, dist_rank: usize) -> usize {
+        self.pe_map[dist_rank] as usize
+    }
+
+    /// Does the current survivor count admit the balanced §IV-A layout for
+    /// this dataset (see [`Distribution::reshape_feasible`])? A pure
+    /// feasibility predicate; the full shrink handshake is
+    /// [`ReStore::rebalance_or_acknowledge`](crate::restore::ReStore::rebalance_or_acknowledge).
+    pub fn can_rebalance(&self, cluster: &Cluster) -> bool {
+        self.submitted && self.dist.reshape_feasible(cluster.n_alive())
+    }
+
+    /// Adopt a shrunk communicator **without** rewriting the layout: the
+    /// distribution keeps addressing the original world (load falls back to
+    /// routing around dead ranks, repair re-replicates in place), but every
+    /// dead PE's replica memory is reclaimed and the dataset's epoch
+    /// catches up to the cluster's so submit/load/repair run again.
+    /// Reclaiming must go through here (not the raw stores) to keep the
+    /// reverse holder index consistent. Safe to call when no shrink
+    /// happened (pure reclaim) and idempotent.
+    pub fn acknowledge_shrink(&mut self, cluster: &Cluster) -> Result<()> {
+        if cluster.world() != self.stores.len() {
+            return Err(Error::Config(format!(
+                "acknowledge_shrink: cluster world {} != store world {}",
+                cluster.world(),
+                self.stores.len()
+            )));
+        }
+        for pe in 0..self.stores.len() {
+            if !cluster.is_alive(pe) && !self.stores[pe].slices().is_empty() {
+                self.stores[pe].clear();
+                self.holder_index.drop_pe(pe);
+            }
+        }
+        self.epoch = cluster.epoch();
+        Ok(())
+    }
+
+    pub(crate) fn stores_mut(&mut self) -> &mut Vec<PeStore> {
+        &mut self.stores
+    }
+
+    pub(crate) fn holder_index_mut(&mut self) -> &mut HolderIndex {
+        &mut self.holder_index
+    }
+
+    /// Swap in a rebalanced layout (called by the §IV-B shrink machinery
+    /// after the migration executed): new distribution, rank translation,
+    /// stores, and holder index become current atomically, under the
+    /// cluster's epoch.
+    pub(crate) fn install_layout(
+        &mut self,
+        cluster: &Cluster,
+        dist: Distribution,
+        pe_map: Vec<u32>,
+        stores: Vec<PeStore>,
+        holder_index: HolderIndex,
+    ) {
+        debug_assert_eq!(pe_map.len(), dist.world());
+        debug_assert_eq!(stores.len(), self.cfg.world);
+        self.dist = dist;
+        self.pe_map = pe_map;
+        self.stores = stores;
+        self.holder_index = holder_index;
+        self.epoch = cluster.epoch();
+    }
+
+    pub(crate) fn mark_submitted(&mut self) -> Result<()> {
+        if self.submitted {
+            return Err(Error::AlreadySubmitted);
+        }
+        self.submitted = true;
+        Ok(())
+    }
+
+    pub(crate) fn ensure_submitted(&self) -> Result<()> {
+        if !self.submitted {
+            return Err(Error::NotSubmitted);
+        }
+        Ok(())
+    }
+
+    /// The shrink-handshake guard on every routing operation: fail with
+    /// [`Error::StaleEpoch`] when `ulfm::shrink` has produced a newer
+    /// communicator than the one this layout was computed for.
+    pub(crate) fn ensure_current_epoch(&self, cluster: &Cluster) -> Result<()> {
+        if self.epoch != cluster.epoch() {
+            return Err(Error::StaleEpoch {
+                store_epoch: self.epoch,
+                cluster_epoch: cluster.epoch(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Is this dataset holding real bytes (execution mode) rather than
+    /// virtual lengths (cost-model mode)? A flag latched at submit time —
+    /// the former implementation swept all `p` stores on every load and
+    /// rebalance.
+    #[inline]
+    pub(crate) fn is_execution_mode(&self) -> bool {
+        self.execution
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+
+    #[test]
+    fn dataset_ids_are_dense_and_displayed_plainly() {
+        assert_eq!(DatasetId::FIRST, DatasetId(0));
+        assert_eq!(DatasetId(3).index(), 3);
+        assert_eq!(format!("{}", DatasetId(7)), "7");
+    }
+
+    #[test]
+    fn dataset_requires_matching_world() {
+        let cluster = Cluster::new_execution(4, 2);
+        let cfg = RestoreConfig::builder(8, 8, 16).replicas(2).build().unwrap();
+        assert!(Dataset::new(DatasetId(0), cfg, &cluster).is_err());
+        let cfg = RestoreConfig::builder(4, 8, 16).replicas(2).build().unwrap();
+        let ds = Dataset::new(DatasetId(0), cfg, &cluster).unwrap();
+        assert!(!ds.is_submitted());
+        assert!(!ds.is_execution_mode());
+        assert_eq!(ds.epoch(), 0);
+    }
+}

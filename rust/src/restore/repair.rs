@@ -191,7 +191,7 @@ pub struct RepairReport {
     pub cost: crate::simnet::network::PhaseCost,
 }
 
-impl crate::restore::ReStore {
+impl crate::restore::registry::Dataset {
     /// §IV-E: re-create the replicas lost with the currently-dead PEs on
     /// the next alive PE of each unit's probing sequence, leaving all
     /// surviving replicas in place. Uses the *hybrid* placement: the first

@@ -12,8 +12,9 @@
 //! buffers" is charged as a local serialization copy.
 
 use crate::error::{Error, Result};
+use crate::restore::registry::Dataset;
 use crate::restore::store::SliceBuf;
-use crate::restore::{ReStore, SubmitReport};
+use crate::restore::SubmitReport;
 use crate::simnet::cluster::Cluster;
 use crate::simnet::network::PhaseCost;
 
@@ -26,7 +27,7 @@ use rayon::prelude::*;
 #[cfg(feature = "rayon")]
 const PAR_MIN_UNITS: usize = 4096;
 
-impl ReStore {
+impl Dataset {
     /// Submit real data: `shards[pe]` is PE `pe`'s serialized blocks
     /// (`blocks_per_pe * block_size` bytes). Execution mode.
     pub fn submit(&mut self, cluster: &mut Cluster, shards: &[Vec<u8>]) -> Result<SubmitReport> {
@@ -67,6 +68,9 @@ impl ReStore {
                 "submit requires all PEs alive (data is submitted once, at program start)".into(),
             ));
         }
+        // Latch the payload mode: every later load/rebalance reads this
+        // flag instead of sweeping all p stores per call.
+        self.execution = shards.is_some();
 
         let dist = self.dist.clone();
         let bs = self.cfg.block_size as u64;
@@ -192,6 +196,7 @@ mod tests {
     use super::*;
     use crate::config::RestoreConfig;
     use crate::restore::store::assert_memory_invariant;
+    use crate::restore::ReStore;
 
     fn make_shards(world: usize, bytes: usize) -> Vec<Vec<u8>> {
         (0..world)

@@ -196,9 +196,10 @@ fn steady_state_load_allocations_do_not_scale_with_piece_count() {
     // Cost-model mode: after a warm-up call, a load's allocations are the
     // output-shard bookkeeping only — identical for a whole-ID-space
     // load-all and a single lost-shard scatter despite the ~8x piece-count
-    // difference. LeastLoaded pins the always-serial resolution path, so
-    // the assertion holds under every feature set (the rayon path trades
-    // small per-requester buffers for parallelism by design).
+    // difference. LeastLoaded at this scale stays on the single-pass
+    // serial path under every feature set (its rayon two-pass split only
+    // engages past the PAR_MIN_ITEMS volume estimate; parallel paths
+    // trade small per-requester buffers for parallelism by design).
     let cfg = RestoreConfig::builder(8, 8, 64)
         .replicas(4)
         .perm_range_blocks(Some(8))

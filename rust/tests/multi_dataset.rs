@@ -1,0 +1,418 @@
+//! Integration: the multi-dataset store registry and its fused
+//! cross-dataset phases (§V "one ReStore object per datatype").
+//!
+//! The golden contracts this suite pins:
+//!
+//! * **facade** — the single-dataset `ReStore` API is a thin delegating
+//!   facade over dataset 0 (the rest of the repo's test suite running
+//!   unchanged is the byte-level half of this pin; here we check the
+//!   handle and the facade agree).
+//! * **fused load** — `load_many` over k datasets returns shards
+//!   byte-identical to k sequential `Dataset::load`s, with identical
+//!   request/data byte totals and strictly fewer total messages whenever
+//!   two datasets share a (requester, server) pair.
+//! * **fused shrink** — a chained 16 → 13 → 7 shrink rebalances every
+//!   feasible dataset under ONE epoch bump per wave, and each rebalanced
+//!   store is byte-identical to a fresh balanced construction
+//!   (`Distribution::new_balanced` layout oracle) at the survivor count.
+//! * **per-dataset degradation** — an IDL-hit dataset degrades to
+//!   acknowledge while the others rebalance, and IDL errors carry the
+//!   dataset id.
+
+use restore::config::{RestoreConfig, ServerSelection};
+use restore::error::Error;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::store::SliceBuf;
+use restore::restore::{Dataset, DatasetId, LoadRequest, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::network::PhaseCost;
+use restore::simnet::ulfm;
+
+fn make_shards(world: usize, bytes: usize, salt: usize) -> Vec<Vec<u8>> {
+    (0..world)
+        .map(|pe| (0..bytes).map(|i| (pe * 31 + i * 7 + salt) as u8).collect())
+        .collect()
+}
+
+/// Two-dataset registry: dataset 0 is bulk data (r = 4, 8 B blocks,
+/// optionally permuted), dataset 1 is small state (r = 2, 16 B blocks,
+/// contiguous). Returns the cluster, the store, and both original shard
+/// sets.
+fn build_two(
+    p: usize,
+    s_pr: Option<usize>,
+    policy: ServerSelection,
+) -> (Cluster, ReStore, DatasetId, Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let cfg0 = RestoreConfig::builder(p, 8, 64)
+        .replicas(4)
+        .perm_range_blocks(s_pr)
+        .server_selection(policy)
+        .build()
+        .unwrap();
+    let cfg1 = RestoreConfig::builder(p, 16, 32)
+        .replicas(2)
+        .server_selection(policy)
+        .build()
+        .unwrap();
+    let mut cluster = Cluster::new_execution(p, 4);
+    let mut store = ReStore::new(cfg0, &cluster).unwrap();
+    let ds1 = store.create_dataset(cfg1, &cluster).unwrap();
+    let shards0 = make_shards(p, 64 * 8, 0);
+    let shards1 = make_shards(p, 32 * 16, 5);
+    store.submit(&mut cluster, &shards0).unwrap();
+    store.dataset_mut(ds1).unwrap().submit(&mut cluster, &shards1).unwrap();
+    (cluster, store, ds1, shards0, shards1)
+}
+
+/// Scatter the `failed` PEs' shards (of a `bpp`-blocks-per-PE dataset)
+/// evenly over the survivors.
+fn scatter_for(bpp: u64, cluster: &Cluster, failed: &[usize]) -> Vec<LoadRequest> {
+    let survivors = cluster.survivors();
+    let ns = survivors.len() as u64;
+    let mut per_pe: Vec<Vec<BlockRange>> = vec![Vec::new(); survivors.len()];
+    for &dead in failed {
+        let start = dead as u64 * bpp;
+        for (j, ranges) in per_pe.iter_mut().enumerate() {
+            let s = start + (j as u64 * bpp) / ns;
+            let e = start + ((j as u64 + 1) * bpp) / ns;
+            if s < e {
+                ranges.push(BlockRange::new(s, e));
+            }
+        }
+    }
+    survivors
+        .iter()
+        .zip(per_pe)
+        .filter(|(_, r)| !r.is_empty())
+        .map(|(&pe, r)| LoadRequest { pe, ranges: RangeSet::new(r) })
+        .collect()
+}
+
+#[test]
+fn facade_is_dataset_zero() {
+    let (cluster, store, ds1, _, _) = build_two(8, Some(16), ServerSelection::Random);
+    let d0 = store.dataset(DatasetId::FIRST).unwrap();
+    assert_eq!(d0.id(), DatasetId::FIRST);
+    assert_eq!(store.epoch(), d0.epoch());
+    assert_eq!(store.config().block_size, d0.config().block_size);
+    assert_eq!(store.distribution().world(), d0.distribution().world());
+    assert_eq!(store.stores().len(), d0.stores().len());
+    assert_eq!(store.is_submitted(), d0.is_submitted());
+    assert_eq!(store.can_rebalance(&cluster), d0.can_rebalance(&cluster));
+    // the two datasets carry genuinely independent configs
+    let d1 = store.dataset(ds1).unwrap();
+    assert_eq!(d1.config().replicas, 2);
+    assert_eq!(d1.config().block_size, 16);
+    assert_eq!(d0.config().replicas, 4);
+    assert_eq!(store.n_datasets(), 2);
+    // unknown ids are rejected, with the registry size in the error
+    match store.dataset(DatasetId(7)) {
+        Err(Error::UnknownDataset { dataset: 7, datasets: 2 }) => {}
+        other => panic!("expected UnknownDataset, got {:?}", other.map(|_| ())),
+    }
+}
+
+/// Golden (b): fused vs sequential — byte-identical shards, identical
+/// byte totals, strictly fewer messages on a crafted guaranteed-shared
+/// pair (Primary policy, identity layouts: both datasets serve PE 2's
+/// shard from PE 2 to requester 0).
+#[test]
+fn load_many_merges_shared_pairs_exactly() {
+    let (mut cluster, mut store, ds1, shards0, shards1) =
+        build_two(8, None, ServerSelection::Primary);
+    let reqs0 = vec![LoadRequest {
+        pe: 0,
+        ranges: RangeSet::new(vec![BlockRange::new(2 * 64, 3 * 64)]),
+    }];
+    let reqs1 = vec![LoadRequest {
+        pe: 0,
+        ranges: RangeSet::new(vec![BlockRange::new(2 * 32, 3 * 32)]),
+    }];
+
+    // sequential reference: two full two-phase rounds
+    let out0 = store.load(&mut cluster, &reqs0).unwrap();
+    let out1 = store.dataset_mut(ds1).unwrap().load(&mut cluster, &reqs1).unwrap();
+    assert_eq!(out0.request_cost.total_msgs + out1.request_cost.total_msgs, 2);
+    assert_eq!(out0.data_cost.total_msgs + out1.data_cost.total_msgs, 2);
+
+    // fused: ONE request message and ONE data message for the shared
+    // (0, 2) pair, same bytes
+    let parts = [(DatasetId::FIRST, reqs0), (ds1, reqs1)];
+    let fused = store.load_many(&mut cluster, &parts).unwrap();
+    assert_eq!(fused.request_cost.total_msgs, 1, "shared pair must merge");
+    assert_eq!(fused.data_cost.total_msgs, 1, "shared pair must merge");
+    assert_eq!(
+        fused.request_cost.total_bytes,
+        out0.request_cost.total_bytes + out1.request_cost.total_bytes
+    );
+    assert_eq!(
+        fused.data_cost.total_bytes,
+        out0.data_cost.total_bytes + out1.data_cost.total_bytes
+    );
+    // shards byte-identical to the sequential loads...
+    assert_eq!(fused.parts[0].shards[0].bytes, out0.shards[0].bytes);
+    assert_eq!(fused.parts[1].shards[0].bytes, out1.shards[0].bytes);
+    // ...and to the original data
+    assert_eq!(fused.parts[0].shards[0].bytes.as_deref().unwrap(), &shards0[2][..]);
+    assert_eq!(fused.parts[1].shards[0].bytes.as_deref().unwrap(), &shards1[2][..]);
+}
+
+/// Golden (b) at scale: a scattered two-dataset recovery after a failure —
+/// fused shards byte-identical to sequential, byte totals identical,
+/// message totals never higher. In the identity layout (`s_pr = None`)
+/// the kill wave leaves PE 11 as the ONLY alive holder of both datasets'
+/// slot-3 data, so every policy routes every requester's slot-3 pieces of
+/// both datasets to 11 — the (requester, 11) pairs are provably shared
+/// and the fused message count must be strictly lower.
+#[test]
+fn load_many_matches_sequential_scatter_recovery() {
+    for policy in
+        [ServerSelection::Random, ServerSelection::LeastLoaded, ServerSelection::Primary]
+    {
+        for s_pr in [Some(16), None] {
+            let tag = format!("{policy:?}/{s_pr:?}");
+            let (mut cluster, mut store, ds1, _, _) = build_two(16, s_pr, policy);
+            // Kill dataset 0's slot-3 holder group minus PE 11 ({3, 7, 15}
+            // of the stride-4 group {3, 7, 11, 15}). Dataset 1 (stride 8
+            // pairs) loses one holder of {3, 11} and both of {7, 15} — so
+            // its requests cover only dead PE 3's shard (slot 3, sole
+            // alive holder 11), while dataset 0 scatters all three dead
+            // shards.
+            cluster.kill(&[3, 7, 15]);
+            let parts = [
+                (DatasetId::FIRST, scatter_for(64, &cluster, &[3, 7, 15])),
+                (ds1, scatter_for(32, &cluster, &[3])),
+            ];
+
+            let mut seq_req = PhaseCost::default();
+            let mut seq_data = PhaseCost::default();
+            let mut seq_shards: Vec<Vec<Option<Vec<u8>>>> = Vec::new();
+            for (id, reqs) in &parts {
+                let out = store.dataset_mut(*id).unwrap().load(&mut cluster, reqs).unwrap();
+                seq_req = seq_req.then(out.request_cost);
+                seq_data = seq_data.then(out.data_cost);
+                seq_shards.push(out.shards.into_iter().map(|s| s.bytes).collect());
+            }
+
+            let fused = store.load_many(&mut cluster, &parts).unwrap();
+            for (d, part) in fused.parts.iter().enumerate() {
+                for (i, shard) in part.shards.iter().enumerate() {
+                    assert_eq!(shard.bytes, seq_shards[d][i], "{tag}: dataset {d} shard {i}");
+                }
+            }
+            assert_eq!(fused.request_cost.total_bytes, seq_req.total_bytes, "{tag}");
+            assert_eq!(fused.data_cost.total_bytes, seq_data.total_bytes, "{tag}");
+            assert!(
+                fused.request_cost.total_msgs <= seq_req.total_msgs,
+                "{tag}: fusing can never add messages"
+            );
+            assert!(fused.data_cost.total_msgs <= seq_data.total_msgs, "{tag}");
+            if s_pr.is_none() {
+                // identity layout: the shared (requester, 11) pairs are
+                // guaranteed — strictly fewer messages, same bytes.
+                assert!(
+                    fused.request_cost.total_msgs < seq_req.total_msgs,
+                    "{tag}: shared slot-3 pairs must merge ({} !< {})",
+                    fused.request_cost.total_msgs,
+                    seq_req.total_msgs
+                );
+                assert!(fused.data_cost.total_msgs < seq_data.total_msgs, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn load_many_rejects_duplicates_unknown_ids_and_out_of_space_requests() {
+    let (mut cluster, mut store, ds1, _, _) = build_two(8, Some(16), ServerSelection::Random);
+    let req = |pe: usize, s: u64, e: u64| {
+        vec![LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(s, e)]) }]
+    };
+    // duplicate dataset entries
+    let dup = [(ds1, req(0, 0, 8)), (ds1, req(1, 8, 16))];
+    assert!(matches!(store.load_many(&mut cluster, &dup), Err(Error::Config(_))));
+    // unknown id
+    let unk = [(DatasetId(9), req(0, 0, 8))];
+    assert!(matches!(
+        store.load_many(&mut cluster, &unk),
+        Err(Error::UnknownDataset { dataset: 9, .. })
+    ));
+    // out-of-space request (ds1 has 8 * 32 = 256 blocks)
+    let oob = [(ds1, req(0, 250, 300))];
+    assert!(matches!(store.load_many(&mut cluster, &oob), Err(Error::Config(_))));
+    // ...and a valid call still works afterwards (scratches were reattached)
+    let ok = [(DatasetId::FIRST, req(1, 0, 16)), (ds1, req(1, 0, 8))];
+    let out = store.load_many(&mut cluster, &ok).unwrap();
+    assert_eq!(out.parts.len(), 2);
+}
+
+/// IDL errors carry the dataset id: killing both r = 2 holders of dataset
+/// 1's slot 0 (PEs 0 and 8) loses only dataset 1's blocks — dataset 0
+/// still has 2 of 4 holders alive.
+#[test]
+fn idl_is_tagged_with_the_lossy_dataset() {
+    let (mut cluster, mut store, ds1, _, _) = build_two(16, None, ServerSelection::Random);
+    cluster.kill(&[0, 8]);
+    let parts = [
+        (DatasetId::FIRST, scatter_for(64, &cluster, &[0])),
+        (ds1, scatter_for(32, &cluster, &[0])),
+    ];
+    match store.load_many(&mut cluster, &parts) {
+        Err(Error::IrrecoverableDataLoss { dataset, .. }) => assert_eq!(dataset, ds1),
+        other => panic!("expected dataset-tagged IDL, got {:?}", other.map(|_| ())),
+    }
+    // dataset 0 alone still loads the lost shard fine
+    let out = store.load(&mut cluster, &scatter_for(64, &cluster, &[0])).unwrap();
+    assert!(out.cost.total_bytes > 0);
+}
+
+/// Per-dataset degradation in the fused handshake: after killing a whole
+/// r = 2 group of dataset 1, the shrink rebalances dataset 0 (feasible)
+/// and acknowledges dataset 1 (IDL) — both under the cluster's epoch.
+#[test]
+fn fused_handshake_degrades_only_the_lossy_dataset() {
+    let (mut cluster, mut store, ds1, _, _) = build_two(16, None, ServerSelection::Random);
+    cluster.kill(&[0, 8]);
+    let (_failed, map, _) = ulfm::recover(&mut cluster);
+    let outcomes = store.rebalance_or_acknowledge_all(&mut cluster, &map).unwrap();
+    let rep0 = outcomes[0].as_ref().expect("dataset 0 must rebalance");
+    assert_eq!(rep0.new_world, 14);
+    assert!(outcomes[1].is_none(), "dataset 1 must degrade to acknowledge");
+    assert_eq!(store.epoch(), cluster.epoch());
+    assert_eq!(store.dataset(ds1).unwrap().epoch(), cluster.epoch());
+    // dataset 1 keeps the dead-world layout; its dead stores are reclaimed
+    assert_eq!(store.dataset(ds1).unwrap().distribution().world(), 16);
+    assert!(store.dataset(ds1).unwrap().stores()[0].slices().is_empty());
+    // a targeted load of the lost slot reports the tagged loss
+    let lost = vec![LoadRequest {
+        pe: 1,
+        ranges: RangeSet::new(vec![BlockRange::new(0, 32)]),
+    }];
+    match store.dataset_mut(ds1).unwrap().load(&mut cluster, &lost) {
+        Err(Error::IrrecoverableDataLoss { dataset, .. }) => assert_eq!(dataset, ds1),
+        other => panic!("expected tagged IDL, got {:?}", other.map(|_| ())),
+    }
+}
+
+/// The fresh-layout store oracle: the permuted bytes each (new rank, copy)
+/// slice of `ds` must hold, derived block by block from the original
+/// global data — `Distribution::new_balanced` semantics without touching
+/// the migration machinery.
+fn assert_matches_fresh_layout(
+    ds: &Dataset,
+    new_to_old: &[usize],
+    shards: &[Vec<u8>],
+    tag: &str,
+) {
+    let dist = ds.distribution();
+    let bs = ds.config().block_size;
+    let global: Vec<u8> = shards.iter().flatten().copied().collect();
+    for (j, &pe) in new_to_old.iter().enumerate() {
+        let mut want: Vec<(BlockRange, Vec<u8>)> = (0..dist.replicas())
+            .map(|k| {
+                let range = dist.stored_slice(j, k);
+                let mut buf = Vec::with_capacity(range.len() as usize * bs);
+                for y in range.start..range.end {
+                    let x = dist.unpermute_block(y) as usize;
+                    buf.extend_from_slice(&global[x * bs..(x + 1) * bs]);
+                }
+                (range, buf)
+            })
+            .collect();
+        want.sort_by_key(|(r, _)| r.start);
+        let got = ds.stores()[pe].slices();
+        assert_eq!(got.len(), want.len(), "{tag}: new rank {j} slice count");
+        for (g, (wrange, wbytes)) in got.iter().zip(&want) {
+            assert_eq!(g.range, *wrange, "{tag}: new rank {j}");
+            let SliceBuf::Real(gb) = &g.buf else {
+                panic!("{tag}: execution mode must store real bytes");
+            };
+            assert_eq!(gb, wbytes, "{tag}: new rank {j} slice {wrange:?}");
+        }
+    }
+}
+
+/// Golden (c): the chained 16 → 13 → 7 shrink rebalances BOTH datasets
+/// under exactly one epoch bump per wave, each landing byte-identical to
+/// a fresh balanced construction at the survivor count, and both
+/// datasets' original data stays loadable bit-exactly at p'' = 7.
+#[test]
+fn chained_shrink_rebalances_all_datasets_under_one_epoch() {
+    let (mut cluster, mut store, ds1, shards0, shards1) =
+        build_two(16, Some(16), ServerSelection::Random);
+
+    // --- wave 1: 16 -> 13 -------------------------------------------------
+    cluster.kill(&[0, 1, 2]);
+    let epoch_before = cluster.epoch();
+    let (_failed, map, _) = ulfm::recover(&mut cluster);
+    assert_eq!(cluster.epoch(), epoch_before + 1, "one shrink = one epoch bump");
+    let outcomes = store.rebalance_or_acknowledge_all(&mut cluster, &map).unwrap();
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.as_ref().expect("both rebalance").new_world, 13, "dataset {i}");
+    }
+    assert_eq!(store.epoch(), cluster.epoch());
+    assert_eq!(store.dataset(ds1).unwrap().epoch(), cluster.epoch());
+    let new_to_old: Vec<usize> = map.new_to_old.clone();
+    assert_matches_fresh_layout(
+        store.dataset(DatasetId::FIRST).unwrap(),
+        &new_to_old,
+        &shards0,
+        "wave1/ds0",
+    );
+    assert_matches_fresh_layout(store.dataset(ds1).unwrap(), &new_to_old, &shards1, "wave1/ds1");
+
+    // --- wave 2: 13 -> 7 (kill new ranks 0..5) -----------------------------
+    // safe: ds0 holders sit at stride 3 (s+6, s+9 survive), ds1 at stride
+    // 6 (s or s+6 survives) — no slot loses every holder.
+    let kills: Vec<usize> = new_to_old[..6].to_vec();
+    cluster.kill(&kills);
+    let epoch_before = cluster.epoch();
+    let (_failed, map2, _) = ulfm::recover(&mut cluster);
+    assert_eq!(cluster.epoch(), epoch_before + 1);
+    let outcomes = store.rebalance_or_acknowledge_all(&mut cluster, &map2).unwrap();
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.as_ref().expect("both rebalance").new_world, 7, "dataset {i}");
+    }
+    assert_eq!(store.epoch(), cluster.epoch());
+    assert_eq!(store.dataset(ds1).unwrap().epoch(), cluster.epoch());
+    assert_matches_fresh_layout(
+        store.dataset(DatasetId::FIRST).unwrap(),
+        &map2.new_to_old,
+        &shards0,
+        "wave2/ds0",
+    );
+    assert_matches_fresh_layout(
+        store.dataset(ds1).unwrap(),
+        &map2.new_to_old,
+        &shards1,
+        "wave2/ds1",
+    );
+
+    // --- every original byte of both datasets still loads, fused ----------
+    let dead_all: Vec<usize> = (0..16).filter(|pe| !cluster.is_alive(*pe)).collect();
+    let parts = [
+        (DatasetId::FIRST, scatter_for(64, &cluster, &dead_all)),
+        (ds1, scatter_for(32, &cluster, &dead_all)),
+    ];
+    let out = store.load_many(&mut cluster, &parts).unwrap();
+    for (d, (shards, bpp, bs)) in
+        [(&shards0, 64u64, 8usize), (&shards1, 32, 16)].into_iter().enumerate()
+    {
+        for (req, shard) in parts[d].1.iter().zip(&out.parts[d].shards) {
+            let bytes = shard.bytes.as_ref().expect("execution mode");
+            let mut off = 0usize;
+            for range in req.ranges.ranges() {
+                for x in range.start..range.end {
+                    let pe = (x / bpp) as usize;
+                    let boff = (x % bpp) as usize * bs;
+                    assert_eq!(
+                        &bytes[off..off + bs],
+                        &shards[pe][boff..boff + bs],
+                        "dataset {d} block {x}"
+                    );
+                    off += bs;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Render a Fig-4-style weak-scaling table from BENCH_*.json files.
+
+The load-path bench binaries tag every entry name with its PE count
+(`... p=1536`, `... p=24576`). This script groups the `{name,
+ns_per_iter}` JSON lines by operation, pivots the PE counts into columns,
+and reports the wall-clock resolve+route overhead per operation together
+with the scale factor between the smallest and largest measured p — the
+companion number to the paper's Fig 4 (simulated recovery time vs. the
+simulator's own routing overhead at p = 24576):
+
+    python3 tools/weak_scaling_figure.py BENCH_load_scale.json \
+        BENCH_fused_load.json
+
+CI runs this after the bench smoke steps and ships the rendered table as
+WEAK_SCALING.md inside the bench-json artifact. Raw-metric entries (e.g.
+`... msgs-saved-pct ...`) are listed in a separate section, as the value
+their name declares rather than nanoseconds.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+P_RE = re.compile(r"^(?P<op>.+?)\s+p=(?P<p>\d+)$")
+
+
+def fmt_ns(value: float) -> str:
+    if value >= 1e9:
+        return f"{value / 1e9:.2f} s"
+    if value >= 1e6:
+        return f"{value / 1e6:.2f} ms"
+    if value >= 1e3:
+        return f"{value / 1e3:.2f} µs"
+    return f"{value:.0f} ns"
+
+
+def load(paths):
+    rows = []
+    for path in paths:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    obj = json.loads(line)
+                    rows.append((obj["name"], float(obj["ns_per_iter"])))
+        except FileNotFoundError:
+            print(f"warning: {path} not found (skipped)", file=sys.stderr)
+    return rows
+
+
+def render(rows) -> str:
+    # split raw-metric entries (unit declared in the name) from timings
+    timings, metrics = {}, []
+    for name, value in rows:
+        m = P_RE.match(name)
+        if not m:
+            metrics.append((name, value))
+            continue
+        op, p = m.group("op"), int(m.group("p"))
+        if "msgs-saved-pct" in op or "sim-ns" in op or "bytes" in op:
+            metrics.append((name, value))
+            continue
+        timings.setdefault(op, {})[p] = value
+
+    ps = sorted({p for per_op in timings.values() for p in per_op})
+    out = ["# Weak scaling — resolve+route wall overhead per operation", ""]
+    header = "| operation | " + " | ".join(f"p = {p}" for p in ps) + " | scale |"
+    sep = "|---" * (len(ps) + 2) + "|"
+    out += [header, sep]
+    for op in sorted(timings):
+        per_op = timings[op]
+        cells = [fmt_ns(per_op[p]) if p in per_op else "—" for p in ps]
+        measured = [p for p in ps if p in per_op]
+        if len(measured) >= 2 and per_op[measured[0]] > 0:
+            lo, hi = measured[0], measured[-1]
+            scale = f"{per_op[hi] / per_op[lo]:.1f}x over {hi // lo}x PEs"
+        else:
+            scale = "—"
+        out.append(f"| `{op}` | " + " | ".join(cells) + f" | {scale} |")
+    if metrics:
+        out += ["", "## Raw metrics (unit declared by the entry name)", ""]
+        out += ["| metric | value |", "|---|---|"]
+        for name, value in metrics:
+            if "msgs-saved-pct" in name:
+                # from_value scales by 1e-9 on write and 1e9 on read: the
+                # ns_per_iter field carries the percentage verbatim
+                out.append(f"| `{name}` | {value:.1f} % |")
+            else:
+                out.append(f"| `{name}` | {value:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_files", nargs="+")
+    args = ap.parse_args()
+    print(render(load(args.json_files)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
