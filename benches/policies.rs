@@ -1,0 +1,117 @@
+//! Recovery-policy benchmark (EXPERIMENTS.md §Policies).
+//!
+//! Drives the same MTBF failure storm (Poisson arrivals with
+//! node-correlated bursts) through all three recovery policies at the
+//! hotpath baseline scale (p = 1536) and the paper's largest
+//! configuration (p = 24576), in cost-model mode. Every wave runs the
+//! full agree → {shrink | substitute | grow} → fused reshape (→ fused
+//! repair) handshake; the rows compare what each policy buys:
+//!
+//! * `policy <name> recovery-sim-ns ...` — simulated cluster time spent
+//!   recovering, summed over the storm (agreement + reshape + migration
+//!   + repair phases);
+//! * `policy <name> recovery-wall ...` — wall-clock nanoseconds of the
+//!   planners/executors for the same waves;
+//! * `policy <name> idl-prob ...` — §IV-D small-f IDL probability for
+//!   `f = max(r, p/100)` further failures at the post-storm world (the
+//!   risk level the storm leaves you at);
+//! * `policy <name> throughput-frac ...` — alive compute fraction after
+//!   the storm (steady-state throughput proxy: shrink loses workers,
+//!   substitution/re-grow buy them back from the spare pool).
+//!
+//! With `BENCH_SHORT=1` only the p = 1536 configurations run (the CI
+//! schema smoke — see `make bench-json-short`). Emits
+//! `BENCH_policies.json` in the `{name, ns_per_iter}` artifact schema
+//! (the name states the unit).
+
+use std::time::Instant;
+
+use restore::config::RestoreConfig;
+use restore::restore::idl;
+use restore::restore::policy::{RecoveryPolicy, Shrink, ShrinkThenRegrow, Substitute};
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::simnet::failure::MtbfStorm;
+use restore::simnet::network::PhaseCost;
+use restore::util::bench::{short_mode, write_json_artifact, BenchResult};
+
+const PPN: usize = 48;
+const WAVES: usize = 4;
+const NODE_BURST_PROB: f64 = 0.25;
+
+fn storm_under(
+    p: usize,
+    policy: &mut dyn RecoveryPolicy,
+    results: &mut Vec<BenchResult>,
+) {
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    // Pool sized for the storm: enough spares to substitute a few whole
+    // 48-PE node bursts before degrading to shrink.
+    let spares = p / 8;
+    let mut cluster = Cluster::with_spares(p, PPN, spares);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+    let r = store.distribution().replicas() as u64;
+
+    let mut storm = MtbfStorm::new(1.0e5, NODE_BURST_PROB, 0xBEEF ^ p as u64);
+    let mut sim_total = 0.0_f64;
+    let mut killed = 0usize;
+    let wall0 = Instant::now();
+    for _ in 0..WAVES {
+        let ev = storm.next_event(&cluster).expect("storm survivors");
+        let gap = PhaseCost { sim_time_s: ev.at_s - cluster.now(), ..Default::default() };
+        cluster.advance(&gap);
+        cluster.kill(&ev.kills);
+        killed += ev.kills.len();
+        let out = policy.recover(&mut cluster, &mut store).unwrap();
+        sim_total += out.recovery_time_s;
+    }
+    let wall = wall0.elapsed().as_secs_f64();
+
+    let p_final = store.distribution().world() as u64;
+    let f_next = (p as u64 / 100).max(r);
+    let idl_prob = idl::p_idl_approx(p_final, r, f_next);
+    let alive_frac = cluster.n_alive() as f64 / p as f64;
+
+    let tag = format!("p={p}");
+    let name = policy.name();
+    println!(
+        "policy {name} {tag}: {killed} killed over {WAVES} waves -> world {p_final}, \
+         alive frac {alive_frac:.4}, P(IDL|f={f_next}) {idl_prob:.2e}, \
+         recovery sim {:.2} ms, wall {:.1} ms",
+        sim_total * 1e3,
+        wall * 1e3,
+    );
+    results.push(BenchResult::from_value(
+        &format!("policy {name} recovery-sim-ns {tag}"),
+        sim_total * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("policy {name} recovery-wall {tag}"),
+        wall * 1e9,
+    ));
+    results.push(BenchResult::from_value(&format!("policy {name} idl-prob {tag}"), idl_prob));
+    results.push(BenchResult::from_value(
+        &format!("policy {name} throughput-frac {tag}"),
+        alive_frac,
+    ));
+}
+
+fn main() {
+    println!("=== recovery-policy benchmarks (cost-model) ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let scales: &[usize] = &[1536, 24576];
+    let scales = if short_mode() { &scales[..1] } else { scales };
+    for &p in scales {
+        let mut policies: Vec<Box<dyn RecoveryPolicy>> = vec![
+            Box::new(Shrink),
+            Box::new(Substitute),
+            Box::new(ShrinkThenRegrow { target_world: p }),
+        ];
+        for policy in policies.iter_mut() {
+            storm_under(p, policy.as_mut(), &mut results);
+        }
+    }
+    write_json_artifact("BENCH_policies.json", &results).expect("write BENCH_policies.json");
+    println!("\nwrote BENCH_policies.json ({} entries)", results.len());
+}

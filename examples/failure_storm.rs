@@ -1,0 +1,161 @@
+//! An MTBF-driven failure storm weathered by all three recovery policies.
+//!
+//! The paper always recovers by *shrinking* (§IV-B). This example drives
+//! the same storm — Poisson failure arrivals against the simulated
+//! cluster clock, one PE per strike — through the full policy space:
+//!
+//! * `policy::Shrink` — the paper's behavior: survivors adopt a smaller
+//!   communicator, ReStore rebalances to the `p' < p` world;
+//! * `policy::Substitute` — the world size is preserved by seating spare
+//!   PEs in the dead ranks' positions; the reshape degenerates to a
+//!   repair-shaped transfer (only the dead ranks' replicas move, onto
+//!   their spares);
+//! * `policy::ShrinkThenRegrow` — shrink now, re-grow toward the original
+//!   world with whatever spares remain, ONE reshape against the final map.
+//!
+//! Every wave runs the complete agree → reshape → fused
+//! rebalance/acknowledge (→ fused §IV-E repair when needed) handshake for
+//! BOTH registered datasets, and after every wave the example reloads
+//! *all* blocks of both datasets and checks them byte-for-byte against
+//! the originally submitted shards — the golden oracle: no matter which
+//! policy ran, recovery is exact.
+//!
+//! Run with: `cargo run --release --example failure_storm`
+
+use restore::config::RestoreConfig;
+use restore::metrics::fmt_time;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::idl;
+use restore::restore::policy::{
+    RecoveryAction, RecoveryPolicy, Shrink, ShrinkThenRegrow, Substitute,
+};
+use restore::restore::{DatasetId, LoadRequest, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::failure::MtbfStorm;
+use restore::simnet::network::PhaseCost;
+
+const P: usize = 64;
+const PPN: usize = 8;
+const SPARES: usize = 16;
+const R: usize = 4;
+const BPP: u64 = 64;
+const BS: usize = 8;
+/// Second dataset: model state with its own replication level/block size.
+const R2: usize = 2;
+const BPP2: u64 = 16;
+const BS2: usize = 16;
+/// Per-PE mean time between failures. 64 alive PEs -> one strike every
+/// ~50 simulated seconds; each wave kills a single PE (a survivable mix
+/// at r = 4, since every recovery restores full replication before the
+/// next strike).
+const PE_MTBF_S: f64 = 3200.0;
+const WAVES: usize = 6;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut policies: Vec<Box<dyn RecoveryPolicy>> = vec![
+        Box::new(Shrink),
+        Box::new(Substitute),
+        Box::new(ShrinkThenRegrow { target_world: P }),
+    ];
+    for policy in policies.iter_mut() {
+        run_storm(policy.as_mut())?;
+    }
+    println!("\nall policies weathered the storm; every reload was byte-exact");
+    Ok(())
+}
+
+fn run_storm(policy: &mut dyn RecoveryPolicy) -> Result<(), Box<dyn std::error::Error>> {
+    println!("\n=== policy `{}`: {WAVES}-wave MTBF storm over p = {P} (+{SPARES} spares) ===",
+        policy.name());
+    let cfg = RestoreConfig::builder(P, BS, BPP as usize).replicas(R).build()?;
+    let model_cfg = RestoreConfig::builder(P, BS2, BPP2 as usize).replicas(R2).build()?;
+    let mut cluster = Cluster::with_spares(P, PPN, SPARES);
+    let mut store = ReStore::new(cfg, &cluster)?;
+    let model = store.create_dataset(model_cfg, &cluster)?;
+    let shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..BPP as usize * BS).map(|i| (pe * 41 + i * 3) as u8).collect())
+        .collect();
+    let model_shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..BPP2 as usize * BS2).map(|i| (pe * 13 + i * 7) as u8).collect())
+        .collect();
+    store.submit(&mut cluster, &shards)?;
+    store.dataset_mut(model)?.submit(&mut cluster, &model_shards)?;
+
+    // Same seed for every policy: all three face the *identical* storm.
+    let mut storm = MtbfStorm::new(PE_MTBF_S, 0.0, 0xA11CE);
+    let mut recovery_total_s = 0.0;
+    for wave in 1..=WAVES {
+        let ev = storm.next_event(&cluster).expect("enough survivors to continue");
+        // run the application until the strike lands
+        let gap = PhaseCost { sim_time_s: ev.at_s - cluster.now(), ..Default::default() };
+        cluster.advance(&gap);
+        cluster.kill(&ev.kills);
+
+        let out = policy.recover(&mut cluster, &mut store)?;
+        recovery_total_s += out.recovery_time_s;
+        let action = match out.action {
+            RecoveryAction::Shrunk { new_world } => format!("shrunk to {new_world}"),
+            RecoveryAction::Substituted { replaced } => {
+                format!("substituted {replaced} spare(s), world kept at {}", out.map.new_world())
+            }
+            RecoveryAction::Regrown { shrunk_to, regrown_to } => {
+                format!("shrunk to {shrunk_to}, regrown to {regrown_to}")
+            }
+        };
+        println!(
+            "wave {wave} at {}: killed {:?} -> {action}{} ({}, {} spares left)",
+            fmt_time(ev.at_s),
+            ev.kills,
+            if out.degraded { " [degraded]" } else { "" },
+            fmt_time(out.recovery_time_s),
+            cluster.n_spares(),
+        );
+
+        // Golden oracle: EVERY block of BOTH datasets reloads with exactly
+        // the bytes submitted before any failure.
+        verify_full_reload(&mut cluster, &mut store, DatasetId::FIRST, &shards, BPP, BS)?;
+        verify_full_reload(&mut cluster, &mut store, DatasetId(1), &model_shards, BPP2, BS2)?;
+    }
+
+    let p_final = store.distribution().world() as u64;
+    println!(
+        "storm over: world {} -> {p_final}, {} spares left, {} total recovery time",
+        P,
+        cluster.n_spares(),
+        fmt_time(recovery_total_s),
+    );
+    println!(
+        "P(IDL | 8 more failures) at the final world (small-f approx): {:.2e}",
+        idl::p_idl_approx(p_final, R as u64, 8)
+    );
+    Ok(())
+}
+
+/// Reload every block of `id` to one survivor and compare byte-for-byte
+/// with the originally submitted shards.
+fn verify_full_reload(
+    cluster: &mut Cluster,
+    store: &mut ReStore,
+    id: DatasetId,
+    shards: &[Vec<u8>],
+    bpp: u64,
+    bs: usize,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let pe = cluster.survivors()[0];
+    let n = shards.len() as u64 * bpp;
+    let reqs = vec![LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(0, n)]) }];
+    let out = store.dataset_mut(id)?.load(cluster, &reqs)?;
+    let bytes = out.shards[0].bytes.as_ref().expect("execution mode");
+    let mut off = 0usize;
+    for x in 0..n {
+        let src = &shards[(x / bpp) as usize];
+        let boff = ((x % bpp) as usize) * bs;
+        assert_eq!(
+            &bytes[off..off + bs],
+            &src[boff..boff + bs],
+            "dataset {id:?}: block {x} corrupted"
+        );
+        off += bs;
+    }
+    Ok(())
+}

@@ -41,24 +41,28 @@ pub enum Error {
     DeadPe(usize),
 
     /// A `ReStore` operation ran against a cluster whose communicator has
-    /// been shrunk (`ulfm::shrink` bumped the epoch) without the store
-    /// adopting the new world first. Call `ReStore::rebalance` (rewrite the
-    /// §IV-A layout over the survivors) or `ReStore::acknowledge_shrink`
-    /// (keep the dead-world layout, reclaiming dead stores) after a shrink.
+    /// been reconfigured — `ulfm::shrink`, `ulfm::substitute`, and
+    /// `ulfm::grow` ALL bump the epoch — without the store adopting the
+    /// new world first. Call `ReStore::rebalance_or_acknowledge` (or its
+    /// `_all` registry form) with the map the primitive returned, or let a
+    /// `restore::policy::RecoveryPolicy` drive the whole agree →
+    /// {shrink | substitute | grow} → reshape handshake for you.
     #[error(
         "stale storage epoch: store layout at epoch {store_epoch}, cluster at epoch \
-         {cluster_epoch}; call ReStore::rebalance or ReStore::acknowledge_shrink after \
-         ulfm::shrink"
+         {cluster_epoch}; call ReStore::rebalance_or_acknowledge (or run a \
+         restore::policy::RecoveryPolicy) after ulfm::shrink/substitute/grow"
     )]
     StaleEpoch { store_epoch: u64, cluster_epoch: u64 },
 
     /// A `RankMap` no longer (or never) described the cluster's current
-    /// survivor set — e.g. it came from an earlier shrink and further PEs
-    /// failed since. The §IV-B policy (`ReStore::rebalance` /
-    /// `rebalance_or_acknowledge`) validates the map up front so a stale
-    /// map can never steer it into the wrong branch; re-run `ulfm::shrink`
-    /// after the latest failures to obtain a current map.
-    #[error("stale rank map: {0}; re-run ulfm::shrink after the latest failures")]
+    /// communicator — e.g. it came from an earlier shrink, substitute, or
+    /// grow and further PEs failed (or another reconfiguration landed)
+    /// since. The reshape layer (`ReStore::rebalance` /
+    /// `rebalance_or_acknowledge`) and every `restore::policy` policy
+    /// validate the map up front so a stale map can never steer them into
+    /// the wrong branch; re-run the `ulfm` primitive after the latest
+    /// failures to obtain a current map.
+    #[error("stale rank map: {0}; re-run ulfm shrink/substitute/grow after the latest failures")]
     StaleRankMap(String),
 
     /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;

@@ -18,12 +18,18 @@
 //! * [`idl`] — §IV-D irrecoverable-data-loss probabilities (exact
 //!   inclusion–exclusion, the small-f approximation, and the Monte-Carlo
 //!   failure simulator behind Fig 3).
-//! * [`rebalance`] — §IV-B shrinking recovery: rewrite the layout over the
-//!   `p'` survivors after `ulfm::shrink` with a minimal migration schedule,
-//!   under a bumped communicator epoch — fused across every feasible
-//!   dataset by [`ReStore::rebalance_or_acknowledge`].
+//! * [`rebalance`] — §IV-B layout migration: rewrite the layout over the
+//!   `p'`-member communicator after any `ulfm` reshape (shrink,
+//!   substitute, or grow) with a minimal migration schedule, under a
+//!   bumped communicator epoch — fused across every feasible dataset by
+//!   [`ReStore::rebalance_or_acknowledge`].
+//! * [`policy`] — the recovery-policy subsystem: [`RecoveryPolicy`]
+//!   drives the full agree → {shrink | substitute | grow} → reshape
+//!   handshake under the [`policy::Shrink`], [`policy::Substitute`], and
+//!   [`policy::ShrinkThenRegrow`] strategies, with per-policy fallback.
 //! * [`repair`] — §IV-E replica re-creation after failures (Appendix
-//!   Distributions A and B).
+//!   Distributions A and B), fused across datasets by
+//!   [`ReStore::repair_replicas_all`].
 //! * [`serialize`] — typed helpers to move `f32`/`u64` app data in and out
 //!   of block payloads.
 
@@ -33,6 +39,7 @@ pub mod hashing;
 pub mod idl;
 pub mod load;
 pub mod permutation;
+pub mod policy;
 pub mod rebalance;
 pub mod registry;
 pub mod repair;
@@ -48,9 +55,11 @@ use crate::simnet::ulfm::RankMap;
 
 use block::RangeSet;
 use distribution::Distribution;
-use rebalance::{charge_shrink_plans, RebalanceReport, ShrinkPlan};
+use rebalance::{charge_reshape_plans, RebalanceReport, ReshapePlan};
+use repair::{charge_repair_plans, RepairPlan, RepairReport, RepairScheme};
 use store::{HolderIndex, PeStore};
 
+pub use policy::{RecoveryAction, RecoveryOutcome, RecoveryPolicy};
 pub use registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
@@ -265,21 +274,24 @@ impl ReStore {
         Ok(())
     }
 
-    // --- fused shrink handshake ------------------------------------------
+    // --- fused reshape handshake -----------------------------------------
 
-    /// The full §IV-B shrink handshake across **all** datasets: rewrite the
-    /// layout over the survivors for every dataset whose shrunken world
-    /// admits the balanced §IV-A distribution, acknowledge (reclaiming dead
-    /// stores) for the rest — all under the single post-shrink cluster
-    /// epoch, with the per-dataset migration plans merged into ONE local
-    /// copy charge and ONE migration sparse all-to-all (per-pair messages
+    /// The full §IV-B reshape handshake across **all** datasets, for ANY
+    /// epoch-bumping communicator change — a shrink (`p' < p`), a
+    /// substitution (`p' = p`, spares seated in the dead ranks'
+    /// positions), or a grow (`p' > p`): rewrite the layout over the
+    /// `map`'s members for every dataset whose new world admits the
+    /// balanced §IV-A distribution, acknowledge (reclaiming dead stores)
+    /// for the rest — all under the single post-reshape cluster epoch,
+    /// with the per-dataset migration plans merged into ONE local copy
+    /// charge and ONE migration sparse all-to-all (per-pair messages
     /// concatenated across datasets). Returns the per-dataset outcomes in
     /// id order: `Some(report)` where a rebalance ran, `None` where the
     /// dataset acknowledged.
     ///
-    /// The `map` is validated against the cluster's *current* survivor set
+    /// The `map` is validated against the cluster's *current* alive set
     /// **before** any policy branch: a stale `RankMap` from an earlier
-    /// shrink would otherwise silently steer the policy — surfaced as
+    /// epoch would otherwise silently steer the policy — surfaced as
     /// [`Error::StaleRankMap`] with every dataset untouched.
     ///
     /// If a dataset's rebalance plan discovers an interval with no
@@ -287,6 +299,10 @@ impl ReStore {
     /// and only that dataset — degrades to acknowledging: data it still
     /// holds stays loadable in the dead world, and a *targeted* load of
     /// the lost ranges reports the loss (tagged with the dataset id).
+    ///
+    /// The strategy choosing which `ulfm` primitive produced the map
+    /// (shrink vs substitute vs shrink-then-regrow, with pool-exhaustion
+    /// fallback) lives one layer up in [`policy`].
     pub fn rebalance_or_acknowledge_all(
         &mut self,
         cluster: &mut Cluster,
@@ -295,19 +311,23 @@ impl ReStore {
         map.validate_against(cluster)?;
         // Plan FIRST, for every eligible dataset: planning is pure (no
         // clock, no store mutation), so a non-IDL error here leaves the
-        // whole registry untouched. A shrink that removed no ranks leaves
-        // each layout already correct: adopting the epoch (acknowledge) is
-        // the O(1) action, not a keep-everything rebalance.
-        let mut plans: Vec<(usize, ShrinkPlan)> = Vec::new();
+        // whole registry untouched. A reshape that changed nothing (same
+        // world, same member seating as the dataset's pe_map — e.g. a
+        // shrink after deaths that were already acknowledged) leaves each
+        // layout already correct: adopting the epoch (acknowledge) is the
+        // O(1) action, not a keep-everything rebalance.
+        let mut plans: Vec<(usize, ReshapePlan)> = Vec::new();
         for (i, ds) in self.datasets.iter().enumerate() {
+            let layout_current = map.new_world() == ds.dist.world()
+                && map.new_to_old.iter().zip(ds.pe_map.iter()).all(|(&o, &c)| o == c as usize);
             let eligible = ds.submitted
                 && cluster.epoch() > ds.epoch
-                && map.new_world() < ds.dist.world()
+                && !layout_current
                 && ds.dist.reshape_feasible(map.new_world());
             if !eligible {
                 continue;
             }
-            match ds.plan_shrink(cluster, map) {
+            match ds.plan_reshape(cluster, map) {
                 Ok(plan) => plans.push((i, plan)),
                 // This dataset has an interval with no surviving holder:
                 // degrade it (alone) to acknowledge; targeted loads surface
@@ -323,14 +343,14 @@ impl ReStore {
         let mut outcomes: Vec<Option<RebalanceReport>> = Vec::new();
         outcomes.resize_with(self.datasets.len(), || None);
         if !plans.is_empty() {
-            let tagged: Vec<(&ShrinkPlan, u64)> = plans
+            let tagged: Vec<(&ReshapePlan, u64)> = plans
                 .iter()
                 .map(|(i, plan)| (plan, self.datasets[*i].cfg.block_size as u64))
                 .collect();
-            let (local_cost, net_cost) = charge_shrink_plans(cluster, &tagged)?;
+            let (local_cost, net_cost) = charge_reshape_plans(cluster, &tagged)?;
             let shared = local_cost.then(net_cost);
             for (i, plan) in plans {
-                let report = self.datasets[i].apply_shrink(cluster, plan, shared);
+                let report = self.datasets[i].apply_reshape(cluster, plan, shared);
                 outcomes[i] = Some(report);
             }
         }
@@ -342,10 +362,11 @@ impl ReStore {
         Ok(outcomes)
     }
 
-    /// The single-dataset view of the fused shrink handshake: runs
+    /// The single-dataset view of the fused reshape handshake: runs
     /// [`ReStore::rebalance_or_acknowledge_all`] (every dataset adopts the
-    /// shrink) and returns dataset 0's outcome — exactly the historical
-    /// single-dataset behavior when only one dataset is registered.
+    /// new communicator — shrink, substitution, and grow maps alike) and
+    /// returns dataset 0's outcome — exactly the historical single-dataset
+    /// behavior when only one dataset is registered.
     pub fn rebalance_or_acknowledge(
         &mut self,
         cluster: &mut Cluster,
@@ -353,5 +374,45 @@ impl ReStore {
     ) -> Result<Option<RebalanceReport>> {
         let mut outcomes = self.rebalance_or_acknowledge_all(cluster, map)?;
         Ok(outcomes.swap_remove(0))
+    }
+
+    // --- fused cross-dataset §IV-E repair --------------------------------
+
+    /// §IV-E replica repair across **every** submitted dataset in ONE
+    /// merged sparse all-to-all: each dataset's repair transfers are
+    /// planned exactly as its own [`Dataset::repair_replicas`] would plan
+    /// them, then charged as a single fused phase and applied per dataset.
+    /// Each re-created replica stays its own point-to-point message (the
+    /// per-transfer cost model the repair golden tests pin), so fusing
+    /// collapses the former per-dataset repair *rounds* — one phase
+    /// latency and one bottleneck reduction instead of one per dataset —
+    /// while the bytes and message counts match the sequential charges
+    /// exactly. Returns per-dataset reports in id order; datasets not yet
+    /// submitted are skipped (`None`).
+    pub fn repair_replicas_all(
+        &mut self,
+        cluster: &mut Cluster,
+        scheme: RepairScheme,
+    ) -> Result<Vec<Option<RepairReport>>> {
+        let mut plans: Vec<(usize, RepairPlan)> = Vec::new();
+        for (i, ds) in self.datasets.iter().enumerate() {
+            if !ds.submitted {
+                continue;
+            }
+            plans.push((i, ds.plan_repair(cluster, scheme)?));
+        }
+        let mut outcomes: Vec<Option<RepairReport>> = Vec::new();
+        outcomes.resize_with(self.datasets.len(), || None);
+        if !plans.is_empty() {
+            let tagged: Vec<(&RepairPlan, u64)> = plans
+                .iter()
+                .map(|(i, plan)| (plan, self.datasets[*i].cfg.block_size as u64))
+                .collect();
+            let cost = charge_repair_plans(cluster, &tagged)?;
+            for (i, plan) in plans {
+                outcomes[i] = Some(self.datasets[i].apply_repair(plan, cost));
+            }
+        }
+        Ok(outcomes)
     }
 }

@@ -1,0 +1,407 @@
+//! Recovery policies: *what to do* with a failure, built from the `ulfm`
+//! primitives and the fused reshape/repair handshakes.
+//!
+//! The paper's library (§IV-B) always **shrinks**: survivors adopt a
+//! smaller communicator and ReStore rewrites its layout over the `p' < p`
+//! world. The fault-tolerance literature calls this one corner of the
+//! "shrink or substitute" design space — the alternative keeps the world
+//! size by seating standby (spare) PEs in the dead ranks' positions
+//! (FTHP-MPI-style replacement), or shrinks now and *re-grows* to the
+//! target size once spares are available. This module packages all three
+//! as interchangeable [`RecoveryPolicy`] strategies over the same
+//! handshake skeleton:
+//!
+//! 1. `ulfm::agree` — survivors agree on the failure set;
+//! 2. one of `ulfm::shrink` / `ulfm::substitute` / `ulfm::grow` — the
+//!    communicator is reshaped (epoch bump), yielding a [`RankMap`];
+//! 3. [`ReStore::rebalance_or_acknowledge_all`] — every dataset adopts the
+//!    new world with ONE fused migration all-to-all (or acknowledges);
+//! 4. if any acknowledged dataset still references dead ranks, ONE fused
+//!    [`ReStore::repair_replicas_all`] round restores its replication
+//!    level in place (§IV-E).
+//!
+//! Each policy degrades gracefully instead of failing: [`Substitute`]
+//! falls back to a plain shrink when the spare pool cannot cover the dead
+//! (`degraded = true` in the outcome), and [`ShrinkThenRegrow`] re-grows
+//! as far as the pool allows. Policies are driven repeatedly by the
+//! MTBF failure storms in `simnet::failure` (see
+//! `examples/failure_storm.rs` and `benches/policies.rs`).
+
+use crate::error::Result;
+use crate::restore::rebalance::RebalanceReport;
+use crate::restore::repair::{RepairReport, RepairScheme};
+use crate::restore::ReStore;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+use crate::simnet::ulfm::{self, RankMap};
+
+/// How a [`RecoveryPolicy`] reshaped the communicator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Survivors adopted a smaller communicator (`p' ≤ p`).
+    Shrunk { new_world: usize },
+    /// Spares were seated in the dead ranks' positions (`p' = p`).
+    Substituted { replaced: usize },
+    /// Survivors shrank, then re-grew with spares (`p'` may still be
+    /// below the policy's target if the pool ran short).
+    Regrown { shrunk_to: usize, regrown_to: usize },
+}
+
+/// Everything one [`RecoveryPolicy::recover`] call did.
+#[derive(Debug, Clone)]
+pub struct RecoveryOutcome {
+    /// The agreed failure set (every rank that has died while active,
+    /// cumulative across waves — what `ulfm::agree` returns).
+    pub failed: Vec<usize>,
+    /// Which communicator reshape the policy chose.
+    pub action: RecoveryAction,
+    /// The policy could not do what it was asked and fell back: a
+    /// [`Substitute`] that shrank for lack of spares, or a
+    /// [`ShrinkThenRegrow`] that stopped short of its target world.
+    pub degraded: bool,
+    /// The rank map of the final communicator (the one every dataset's
+    /// layout now addresses).
+    pub map: RankMap,
+    /// Per-dataset reshape outcomes in id order: `Some(report)` where a
+    /// §IV-B rebalance ran, `None` where the dataset acknowledged.
+    pub dataset_outcomes: Vec<Option<RebalanceReport>>,
+    /// Per-dataset §IV-E repair reports, when an in-place repair round
+    /// ran (only when some acknowledged dataset still referenced dead
+    /// ranks); `None` when no repair was needed.
+    pub repair_outcomes: Option<Vec<Option<RepairReport>>>,
+    /// Agreement + reshape cost (the `ulfm` share of the recovery; the
+    /// migration/repair costs are in the per-dataset reports).
+    pub ulfm_cost: PhaseCost,
+    /// Simulated wall-clock the whole recovery took (`Cluster::now`
+    /// delta: agree + reshape + fused migration + fused repair).
+    pub recovery_time_s: f64,
+}
+
+/// A strategy for bringing cluster *and* store from "some members died"
+/// back to "every dataset loadable at full replication" — the full
+/// agree → reshape → rebalance/acknowledge → repair handshake.
+pub trait RecoveryPolicy {
+    /// Short stable name for reports and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// Run one full recovery against the current failure set.
+    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome>;
+}
+
+/// Probing scheme used by the policies' in-place repair rounds.
+const REPAIR_SCHEME: RepairScheme = RepairScheme::DoubleHashing;
+
+/// Steps 3–4 of the handshake, shared by every policy: fused reshape
+/// across all datasets, then — only if some acknowledged dataset still
+/// references dead ranks (its replicas died with them) — one fused §IV-E
+/// repair round to restore the replication level in place.
+fn reshape_and_repair(
+    cluster: &mut Cluster,
+    store: &mut ReStore,
+    failed: Vec<usize>,
+    action: RecoveryAction,
+    degraded: bool,
+    map: RankMap,
+    ulfm_cost: PhaseCost,
+    t0: f64,
+) -> Result<RecoveryOutcome> {
+    let dataset_outcomes = store.rebalance_or_acknowledge_all(cluster, &map)?;
+    let needs_repair = store.datasets().iter().zip(&dataset_outcomes).any(|(ds, outcome)| {
+        ds.is_submitted()
+            && outcome.is_none()
+            && ds.pe_map.iter().any(|&c| !cluster.is_alive(c as usize))
+    });
+    let repair_outcomes = if needs_repair {
+        Some(store.repair_replicas_all(cluster, REPAIR_SCHEME)?)
+    } else {
+        None
+    };
+    Ok(RecoveryOutcome {
+        failed,
+        action,
+        degraded,
+        map,
+        dataset_outcomes,
+        repair_outcomes,
+        ulfm_cost,
+        recovery_time_s: cluster.now() - t0,
+    })
+}
+
+/// The paper's policy: agree, shrink to the survivors, rebalance.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Shrink;
+
+impl RecoveryPolicy for Shrink {
+    fn name(&self) -> &'static str {
+        "shrink"
+    }
+
+    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
+        let t0 = cluster.now();
+        let (failed, agree_cost) = ulfm::agree(cluster);
+        let (map, shrink_cost) = ulfm::shrink(cluster);
+        let action = RecoveryAction::Shrunk { new_world: map.new_world() };
+        let cost = agree_cost.then(shrink_cost);
+        reshape_and_repair(cluster, store, failed, action, false, map, cost, t0)
+    }
+}
+
+/// Keep the world size: seat spares in the dead ranks' positions. Falls
+/// back to [`Shrink`] (with `degraded = true`) when the pool cannot cover
+/// the dead.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Substitute;
+
+impl RecoveryPolicy for Substitute {
+    fn name(&self) -> &'static str {
+        "substitute"
+    }
+
+    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
+        let t0 = cluster.now();
+        let (failed, agree_cost) = ulfm::agree(cluster);
+        let n_dead = cluster.comm().iter().filter(|&&r| !cluster.is_alive(r)).count();
+        if n_dead > 0 && cluster.n_spares() >= n_dead {
+            let (map, sub_cost) = ulfm::substitute(cluster)?;
+            let action = RecoveryAction::Substituted { replaced: n_dead };
+            let cost = agree_cost.then(sub_cost);
+            reshape_and_repair(cluster, store, failed, action, false, map, cost, t0)
+        } else {
+            let (map, shrink_cost) = ulfm::shrink(cluster);
+            let action = RecoveryAction::Shrunk { new_world: map.new_world() };
+            let cost = agree_cost.then(shrink_cost);
+            // degraded only when there *were* failures the pool could not
+            // cover — a no-failure call shrinking to the same members is
+            // the policy doing exactly what it should.
+            reshape_and_repair(cluster, store, failed, action, n_dead > 0, map, cost, t0)
+        }
+    }
+}
+
+/// Shrink now, then re-grow toward `target_world` with whatever spares
+/// the pool still holds (elastic recovery: one reshape handshake against
+/// the *final* map, not one per step). `degraded = true` when the pool
+/// ran short of the target.
+#[derive(Debug, Clone, Copy)]
+pub struct ShrinkThenRegrow {
+    /// World size to grow back toward (typically the original `p`).
+    pub target_world: usize,
+}
+
+impl RecoveryPolicy for ShrinkThenRegrow {
+    fn name(&self) -> &'static str {
+        "shrink+regrow"
+    }
+
+    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
+        let t0 = cluster.now();
+        let (failed, agree_cost) = ulfm::agree(cluster);
+        let (shrink_map, shrink_cost) = ulfm::shrink(cluster);
+        let shrunk_to = shrink_map.new_world();
+        let want = self.target_world.saturating_sub(shrunk_to).min(cluster.n_spares());
+        if want > 0 {
+            // The datasets never see the intermediate shrunk world: the
+            // grow map supersedes the shrink map under the final epoch,
+            // and the single reshape below migrates straight to it.
+            let (grow_map, grow_cost) = ulfm::grow(cluster, want)?;
+            let regrown_to = shrunk_to + want;
+            let action = RecoveryAction::Regrown { shrunk_to, regrown_to };
+            let degraded = regrown_to < self.target_world;
+            let cost = agree_cost.then(shrink_cost).then(grow_cost);
+            reshape_and_repair(cluster, store, failed, action, degraded, grow_map, cost, t0)
+        } else {
+            let action = RecoveryAction::Shrunk { new_world: shrunk_to };
+            let degraded = shrunk_to < self.target_world;
+            let cost = agree_cost.then(shrink_cost);
+            reshape_and_repair(cluster, store, failed, action, degraded, shrink_map, cost, t0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::restore::block::{BlockRange, RangeSet};
+    use crate::restore::store::HolderIndex;
+    use crate::restore::LoadRequest;
+
+    const BS: usize = 8; // bytes per block
+    const BPP: usize = 64; // blocks per PE
+
+    fn build(cluster: &Cluster, p: usize) -> (ReStore, Vec<Vec<u8>>) {
+        let cfg = RestoreConfig::builder(p, BS, BPP).replicas(4).build().unwrap();
+        let rs = ReStore::new(cfg, cluster).unwrap();
+        let shards: Vec<Vec<u8>> = (0..p)
+            .map(|pe| (0..BPP * BS).map(|i| (pe * 31 + i * 7) as u8).collect())
+            .collect();
+        (rs, shards)
+    }
+
+    /// Oracle: a full reload from one survivor is byte-identical to the
+    /// originally submitted shards.
+    fn assert_full_reload(rs: &mut ReStore, cluster: &mut Cluster, shards: &[Vec<u8>]) {
+        let pe = cluster.survivors()[0];
+        let n = (shards.len() * BPP) as u64;
+        let reqs =
+            vec![LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(0, n)]) }];
+        let out = rs.load(cluster, &reqs).unwrap();
+        let mut want = Vec::with_capacity(shards.len() * BPP * BS);
+        for x in 0..n as usize {
+            let (pe, off) = (x / BPP, (x % BPP) * BS);
+            want.extend_from_slice(&shards[pe][off..off + BS]);
+        }
+        assert_eq!(out.shards[0].bytes.as_deref().unwrap(), &want[..]);
+        assert_eq!(
+            *rs.holder_index(),
+            HolderIndex::rebuild(rs.stores(), rs.distribution()),
+            "holder index drifted"
+        );
+    }
+
+    /// Golden layout: dist rank `d`'s store (at cluster rank `pe_map[d]`)
+    /// is identical to the store a FRESH submission at the same world
+    /// places on rank `d` — i.e. the reshaped layout equals
+    /// `Distribution::new_balanced` at the new world, byte for byte.
+    fn assert_golden_layout(rs: &ReStore, shards: &[Vec<u8>]) {
+        use crate::restore::store::SliceBuf;
+        let p = shards.len();
+        let mut fresh_cluster = Cluster::new_execution(p, 4);
+        let (mut fresh, _) = build(&fresh_cluster, p);
+        fresh.submit(&mut fresh_cluster, shards).unwrap();
+        let ds = &rs.datasets()[0];
+        for d in 0..p {
+            let got = rs.stores()[ds.pe_map[d] as usize].slices();
+            let want = fresh.stores()[d].slices();
+            assert_eq!(got.len(), want.len(), "dist rank {d} slice count");
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.range, w.range, "dist rank {d}");
+                match (&g.buf, &w.buf) {
+                    (SliceBuf::Real(a), SliceBuf::Real(b)) => assert_eq!(a, b, "rank {d}"),
+                    (SliceBuf::Virtual(a), SliceBuf::Virtual(b)) => assert_eq!(a, b),
+                    _ => panic!("dist rank {d}: buffer kind mismatch"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_policy_runs_the_full_handshake() {
+        let mut cluster = Cluster::new_execution(8, 4);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[1, 2]);
+        let out = Shrink.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Shrunk { new_world: 6 });
+        assert!(!out.degraded);
+        assert_eq!(out.failed, vec![1, 2]);
+        assert!(out.dataset_outcomes[0].is_some(), "survivable shrink rebalances");
+        assert!(out.repair_outcomes.is_none(), "rebalanced: nothing left to repair");
+        assert!(out.recovery_time_s > 0.0);
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+
+        // a recover with no new deaths is an O(1) acknowledge, no repair
+        let quiet = Shrink.recover(&mut cluster, &mut rs).unwrap();
+        assert!(quiet.dataset_outcomes[0].is_none());
+        assert!(quiet.repair_outcomes.is_none());
+    }
+
+    #[test]
+    fn substitute_policy_is_repair_shaped_and_golden() {
+        let mut cluster = Cluster::with_spares(8, 4, 2);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let dead_bytes: u64 = rs.stores()[3]
+            .slices()
+            .iter()
+            .map(|s| (s.range.end - s.range.start) * BS as u64)
+            .sum();
+        cluster.kill(&[3]);
+        let out = Substitute.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Substituted { replaced: 1 });
+        assert!(!out.degraded);
+        assert_eq!(out.map.new_world(), 8, "substitution keeps the world size");
+        let report = out.dataset_outcomes[0].as_ref().unwrap();
+        // repair-shaped: ONLY the dead rank's replicas move (onto its spare)
+        assert_eq!(report.migrated_bytes, dead_bytes);
+        assert_golden_layout(&rs, &shards);
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+    }
+
+    #[test]
+    fn substitute_policy_degrades_to_shrink_when_pool_exhausted() {
+        let mut cluster = Cluster::with_spares(8, 4, 1);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[2, 5]);
+        let out = Substitute.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Shrunk { new_world: 6 });
+        assert!(out.degraded, "pool of 1 cannot cover 2 dead");
+        assert_eq!(cluster.n_spares(), 1, "fallback shrink leaves the pool untouched");
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+    }
+
+    #[test]
+    fn shrink_then_regrow_reaches_target_and_is_golden() {
+        let mut cluster = Cluster::with_spares(8, 4, 3);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[1, 4]);
+        let out = ShrinkThenRegrow { target_world: 8 }.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Regrown { shrunk_to: 6, regrown_to: 8 });
+        assert!(!out.degraded);
+        assert_eq!(out.map.new_world(), 8);
+        // shrink + grow are two epoch bumps but ONE dataset reshape
+        assert_eq!(cluster.epoch(), 2);
+        assert_eq!(rs.epoch(), 2);
+        assert_golden_layout(&rs, &shards);
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+    }
+
+    #[test]
+    fn regrow_stops_at_the_pool_and_reports_degraded() {
+        let mut cluster = Cluster::with_spares(8, 4, 1);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[2, 3]);
+        let out = ShrinkThenRegrow { target_world: 8 }.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Regrown { shrunk_to: 6, regrown_to: 7 });
+        assert!(out.degraded, "one spare cannot reach the target of 8");
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+
+        // pool now empty: the next wave degenerates to a plain shrink
+        cluster.kill(&[6]);
+        let out2 = ShrinkThenRegrow { target_world: 8 }.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out2.action, RecoveryAction::Shrunk { new_world: 6 });
+        assert!(out2.degraded);
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+    }
+
+    #[test]
+    fn acknowledged_datasets_get_a_fused_repair_round() {
+        // 8 PEs, r = 4: shrinking to 3 survivors is below the replication
+        // level, so the dataset acknowledges — and the policy restores
+        // what replication it can in place with a §IV-E repair round.
+        let mut cluster = Cluster::new_execution(8, 4);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[0, 1, 2, 3, 4]);
+        let out = Shrink.recover(&mut cluster, &mut rs).unwrap();
+        assert_eq!(out.action, RecoveryAction::Shrunk { new_world: 3 });
+        assert!(out.dataset_outcomes[0].is_none(), "3 < r = 4: acknowledge");
+        let repairs = out.repair_outcomes.as_ref().expect("dead replicas need repair");
+        assert!(repairs[0].is_some());
+        assert_eq!(
+            *rs.holder_index(),
+            HolderIndex::rebuild(rs.stores(), rs.distribution())
+        );
+    }
+
+    #[test]
+    fn policy_names_are_stable() {
+        assert_eq!(Shrink.name(), "shrink");
+        assert_eq!(Substitute.name(), "substitute");
+        assert_eq!(ShrinkThenRegrow { target_world: 8 }.name(), "shrink+regrow");
+    }
+}

@@ -1,5 +1,6 @@
-//! §IV-B shrinking recovery: rewrite the replica layout after a
-//! communicator shrink.
+//! §IV-B layout migration: rewrite the replica layout after ANY
+//! communicator reshape — shrink (`p' < p`), substitution (`p' = p` with
+//! spares seated in the dead ranks' positions), or grow (`p' > p`).
 //!
 //! The paper's headline capability beyond fast reload is *shrinking
 //! recovery* — "we also support shrinking recovery instead of recovery
@@ -8,9 +9,9 @@
 //! *replica store* keeps addressing the dead world: failed ranks linger in
 //! the §IV-A layout, §IV-E repair re-replicates onto probing-sequence
 //! homes, and every later load pays the post-repair fallback route. This
-//! module closes the loop: after `ulfm::shrink` produces the dense
-//! re-ranking of the `p'` survivors,
-//! [`ReStore::rebalance`](crate::restore::ReStore::rebalance)
+//! module closes the loop: after an `ulfm` primitive (`shrink`,
+//! `substitute`, or `grow`) produces the `RankMap` of the `p'`-member
+//! communicator, [`ReStore::rebalance`](crate::restore::ReStore::rebalance)
 //!
 //! 1. **reshapes** the distribution to `p'`
 //!    ([`Distribution::reshaped`]) — the permuted block ID space, the
@@ -39,8 +40,17 @@
 //! 4. **atomically swaps** the new distribution, rank translation
 //!    (`RankMap::new_to_old`), stores, and holder index in under the
 //!    cluster's bumped epoch. `submit`/`load`/`repair` validate their
-//!    layout epoch against `Cluster::epoch`, so a shrink can never be
+//!    layout epoch against `Cluster::epoch`, so a reshape can never be
 //!    silently ignored.
+//!
+//! The same lattice walk covers every map shape: a **substitution** map
+//! (`p' = p`, a spare seated in a dead rank's position) degenerates to a
+//! repair-shaped transfer — slice boundaries are unchanged, so only the
+//! dead rank's intervals move, straight onto the spare — and a **grow**
+//! map (`p' > p`, feasible since `reshape_feasible` only needs
+//! `r ≤ p' ≤ n`) redistributes onto the widened world exactly as a fresh
+//! balanced construction would place it. The policy layer choosing
+//! between them is `restore::policy`.
 //!
 //! After a rebalance every slot again has exactly `r` replicas on *alive*
 //! PEs in §IV-A positions: the IDL probability returns to the fresh
@@ -191,12 +201,13 @@ pub fn plan_rebalance(
     Ok(())
 }
 
-/// A fully planned §IV-B shrink of one dataset: everything the fused
-/// executor needs to charge and apply the layout rewrite. Planning is pure
-/// (no clock advance, no store mutation), so a plan can be discarded —
-/// which is exactly what the `rebalance_or_acknowledge` policy does when a
-/// dataset's plan hits [`Error::IrrecoverableDataLoss`].
-pub(crate) struct ShrinkPlan {
+/// A fully planned §IV-B reshape of one dataset (shrink, substitution, or
+/// grow): everything the fused executor needs to charge and apply the
+/// layout rewrite. Planning is pure (no clock advance, no store mutation),
+/// so a plan can be discarded — which is exactly what the
+/// `rebalance_or_acknowledge` policy does when a dataset's plan hits
+/// [`Error::IrrecoverableDataLoss`].
+pub(crate) struct ReshapePlan {
     new_dist: Distribution,
     to_cluster: Vec<u32>,
     /// Sorted by (src, dst, perm_start) — the per-pair coalescing order.
@@ -213,9 +224,9 @@ pub(crate) struct ShrinkPlan {
 /// concatenate every dataset's intervals for that pair (bytes summed, one
 /// pack/unpack fragment per interval per dataset). With a single plan this
 /// is charge-identical to the historical single-dataset `rebalance`.
-pub(crate) fn charge_shrink_plans(
+pub(crate) fn charge_reshape_plans(
     cluster: &mut Cluster,
-    plans: &[(&ShrinkPlan, u64)],
+    plans: &[(&ReshapePlan, u64)],
 ) -> Result<(PhaseCost, PhaseCost)> {
     // Local copies: every survivor re-materializes its kept data of ALL
     // datasets in the new slice buffers, in parallel across PEs — bill the
@@ -270,21 +281,23 @@ pub(crate) fn charge_shrink_plans(
 }
 
 impl Dataset {
-    /// Plan this dataset's §IV-B shrink onto the `map`'s `p'` survivors:
-    /// validates the handshake (preceding `ulfm::shrink`, current map,
-    /// feasible `p'`) and computes the minimal migration — no clock
-    /// advance, no store mutation. A kill wave that wiped a whole holder
-    /// set surfaces as [`Error::IrrecoverableDataLoss`] here — a failure
-    /// path `rebalance_or_acknowledge` deliberately drives before
-    /// degrading to acknowledge — so it must cost O(p + p') planning work,
-    /// not an r·n·bs destination-buffer memset that is then thrown away.
+    /// Plan this dataset's §IV-B reshape onto the `map`'s `p'`-member
+    /// communicator (a shrink, substitution, or grow map alike): validates
+    /// the handshake (preceding `ulfm` epoch bump, current map, feasible
+    /// `p'`) and computes the minimal migration — no clock advance, no
+    /// store mutation. A kill wave that wiped a whole holder set surfaces
+    /// as [`Error::IrrecoverableDataLoss`] here — a failure path
+    /// `rebalance_or_acknowledge` deliberately drives before degrading to
+    /// acknowledge — so it must cost O(p + p') planning work, not an
+    /// r·n·bs destination-buffer memset that is then thrown away.
     /// Retained intervals are recorded for replay once the buffers exist
     /// (they are O(r·(p + p')) tuples, nothing like the payload).
-    pub(crate) fn plan_shrink(&self, cluster: &Cluster, map: &RankMap) -> Result<ShrinkPlan> {
+    pub(crate) fn plan_reshape(&self, cluster: &Cluster, map: &RankMap) -> Result<ReshapePlan> {
         self.ensure_submitted()?;
         if cluster.epoch() <= self.epoch() {
             return Err(Error::Config(format!(
-                "rebalance requires a preceding ulfm::shrink: store epoch {}, cluster epoch {}",
+                "rebalance requires a preceding ulfm shrink/substitute/grow: \
+                 store epoch {}, cluster epoch {}",
                 self.epoch(),
                 cluster.epoch()
             )));
@@ -295,7 +308,10 @@ impl Dataset {
 
         let execution = self.is_execution_mode();
         let bs = self.config().block_size as u64;
-        let world = self.config().world;
+        // Per-cluster-rank accounting: the store array spans the whole
+        // machine (spare pool included), and migration endpoints can be
+        // activated spares past the configured base world.
+        let world = self.stores().len();
 
         let mut transfers: Vec<MigrationTransfer> = Vec::new();
         let mut keeps: Vec<(usize, u64, u64)> = Vec::new();
@@ -318,26 +334,28 @@ impl Dataset {
         // Per-pair coalescing order for the (possibly fused) charge.
         transfers.sort_unstable_by_key(|t| (t.src, t.dst, t.perm_start));
 
-        Ok(ShrinkPlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe })
+        Ok(ReshapePlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe })
     }
 
-    /// Execute a planned shrink: build the new slice buffers, replay the
+    /// Execute a planned reshape: build the new slice buffers, replay the
     /// retained intervals, run the migration zero-copy, and atomically
     /// swap the layout in under the cluster's epoch. The caller has
-    /// already charged the phases (`charge_shrink_plans`) — `shared_cost`
+    /// already charged the phases (`charge_reshape_plans`) — `shared_cost`
     /// is recorded in the report (the fused local + migration cost, shared
     /// by every dataset rebalanced in the same handshake).
-    pub(crate) fn apply_shrink(
+    pub(crate) fn apply_reshape(
         &mut self,
         cluster: &Cluster,
-        plan: ShrinkPlan,
+        plan: ReshapePlan,
         shared_cost: PhaseCost,
     ) -> RebalanceReport {
-        let ShrinkPlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe } = plan;
+        let ReshapePlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe } = plan;
         let execution = self.is_execution_mode();
         let bs = self.config().block_size;
         let r = new_dist.replicas();
-        let world = self.config().world;
+        // One (mostly empty) store shell per machine slot, so activated
+        // spares have a slot to receive their migrated slices.
+        let world = self.stores().len();
 
         // Pre-create every survivor's r new slices (zeroed in execution
         // mode, sized per slice — the balanced partition has ⌈n/p'⌉ and
@@ -405,20 +423,24 @@ impl Dataset {
         report
     }
 
-    /// §IV-B shrinking recovery of THIS dataset: rewrite the layout over
-    /// the `map`'s `p'` survivors. Requires a preceding `ulfm::shrink`
-    /// (the cluster epoch must be ahead of the dataset's) and a feasible
-    /// `p'` ([`Distribution::reshape_feasible`]); on any error the old
-    /// layout stays fully intact (the swap is atomic-on-success).
-    /// Registries with several datasets should prefer the fused
+    /// §IV-B layout migration of THIS dataset: rewrite the layout over the
+    /// `map`'s `p'`-member communicator — a shrink, substitution (spare
+    /// seated in a dead rank's position), or grow map alike. Requires a
+    /// preceding `ulfm` epoch bump (the cluster epoch must be ahead of the
+    /// dataset's) and a feasible `p'`
+    /// ([`Distribution::reshape_feasible`]); on any error the old layout
+    /// stays fully intact (the swap is atomic-on-success). Registries with
+    /// several datasets should prefer the fused
     /// [`ReStore::rebalance_or_acknowledge`](crate::restore::ReStore::rebalance_or_acknowledge),
-    /// which adopts the shrink for every dataset under one epoch with one
-    /// merged migration all-to-all.
+    /// which adopts the reshape for every dataset under one epoch with one
+    /// merged migration all-to-all; policy selection (shrink vs substitute
+    /// vs shrink-then-regrow) lives in
+    /// [`policy`](crate::restore::policy).
     pub fn rebalance(&mut self, cluster: &mut Cluster, map: &RankMap) -> Result<RebalanceReport> {
-        let plan = self.plan_shrink(cluster, map)?;
+        let plan = self.plan_reshape(cluster, map)?;
         let bs = self.config().block_size as u64;
-        let (local_cost, net_cost) = charge_shrink_plans(cluster, &[(&plan, bs)])?;
-        Ok(self.apply_shrink(cluster, plan, local_cost.then(net_cost)))
+        let (local_cost, net_cost) = charge_reshape_plans(cluster, &[(&plan, bs)])?;
+        Ok(self.apply_reshape(cluster, plan, local_cost.then(net_cost)))
     }
 }
 

@@ -120,19 +120,23 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    /// Create a dataset sized for `cluster`'s world.
+    /// Create a dataset sized for `cluster`'s world: the configured world
+    /// must match the cluster's *base* world (its initial communicator —
+    /// spare-pool PEs don't take part in submit), while the store array
+    /// spans the whole machine so activated spares have slots to migrate
+    /// replicas onto.
     pub(crate) fn new(id: DatasetId, cfg: RestoreConfig, cluster: &Cluster) -> Result<Self> {
         cfg.validate()?;
-        if cfg.world != cluster.world() {
+        if cfg.world != cluster.base_world() {
             return Err(Error::Config(format!(
                 "config world {} != cluster world {}",
                 cfg.world,
-                cluster.world()
+                cluster.base_world()
             )));
         }
         let dist = Distribution::new(&cfg);
-        let stores = (0..cfg.world).map(|_| PeStore::new(cfg.block_size)).collect();
-        let holder_index = HolderIndex::new(cluster.world());
+        let stores = (0..cluster.world()).map(|_| PeStore::new(cfg.block_size)).collect();
+        let holder_index = HolderIndex::new(cfg.world);
         Ok(Dataset {
             id,
             cfg,
@@ -240,7 +244,7 @@ impl Dataset {
         holder_index: HolderIndex,
     ) {
         debug_assert_eq!(pe_map.len(), dist.world());
-        debug_assert_eq!(stores.len(), self.cfg.world);
+        debug_assert_eq!(stores.len(), self.stores.len(), "store arrays span the machine");
         self.dist = dist;
         self.pe_map = pe_map;
         self.stores = stores;

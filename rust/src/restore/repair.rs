@@ -191,6 +191,38 @@ pub struct RepairReport {
     pub cost: crate::simnet::network::PhaseCost,
 }
 
+/// Planned §IV-E repair for one dataset: the transfers re-creating every
+/// lost replica (in unit order) plus the units with no surviving replica.
+/// Planning is read-only; the stores move only in
+/// [`Dataset::apply_repair`], after the (possibly cross-dataset) phase has
+/// been charged.
+pub(crate) struct RepairPlan {
+    transfers: Vec<RepairTransfer>,
+    unrepairable: usize,
+}
+
+/// Charge ONE repair sparse all-to-all covering every dataset's plan.
+///
+/// Repair bills per *transfer* (each re-created replica is its own
+/// point-to-point message — the cost oracle in the golden tests pins this),
+/// and the phase accumulator sums per-PE counters, so the order transfers
+/// enter the phase cannot change the cost: plain concatenation of the
+/// plans is charge-identical to any (src, dst) merge order while still
+/// collapsing the former per-dataset repair rounds into a single phase
+/// (one latency term instead of one per dataset).
+pub(crate) fn charge_repair_plans(
+    cluster: &mut crate::simnet::cluster::Cluster,
+    plans: &[(&RepairPlan, u64)],
+) -> crate::error::Result<crate::simnet::network::PhaseCost> {
+    let mut phase = cluster.phase();
+    for (plan, bs) in plans {
+        for t in &plan.transfers {
+            phase.add(t.src, t.dst, t.blocks * bs)?;
+        }
+    }
+    Ok(phase.commit())
+}
+
 impl crate::restore::registry::Dataset {
     /// §IV-E: re-create the replicas lost with the currently-dead PEs on
     /// the next alive PE of each unit's probing sequence, leaving all
@@ -200,23 +232,35 @@ impl crate::restore::registry::Dataset {
     /// (§IV-E last paragraph): one unit per stored slice.
     ///
     /// Idempotent: repairing twice after the same failures moves nothing
-    /// the second time.
+    /// the second time. Multi-dataset callers should prefer
+    /// [`ReStore::repair_replicas_all`](crate::restore::ReStore::repair_replicas_all),
+    /// which fuses every dataset's transfers into one phase.
     pub fn repair_replicas(
         &mut self,
         cluster: &mut crate::simnet::cluster::Cluster,
         scheme: RepairScheme,
     ) -> crate::error::Result<RepairReport> {
-        use crate::restore::store::SliceBuf;
+        let plan = self.plan_repair(cluster, scheme)?;
+        let bs = self.config().block_size as u64;
+        let cost = charge_repair_plans(cluster, &[(&plan, bs)])?;
+        Ok(self.apply_repair(plan, cost))
+    }
 
+    /// Plan (read-only) the §IV-E repair of this dataset under the current
+    /// failure set. See [`Dataset::repair_replicas`] for the semantics.
+    pub(crate) fn plan_repair(
+        &self,
+        cluster: &crate::simnet::cluster::Cluster,
+        scheme: RepairScheme,
+    ) -> crate::error::Result<RepairPlan> {
         self.ensure_submitted()?;
-        // Shrink handshake: after `ulfm::shrink`, rebalance (or
-        // acknowledge) before repairing — §IV-B.
+        // Shrink handshake: after `ulfm::shrink` (or substitute/grow),
+        // rebalance (or acknowledge) before repairing — §IV-B.
         self.ensure_current_epoch(cluster)?;
-        let dist = self.distribution().clone();
+        let dist = self.distribution();
         let p = dist.world();
         let r = dist.replicas();
         let seqs = ProbeSequences::new(p, self.config().seed ^ 0x4E9A12_u64, scheme);
-        let bs = self.config().block_size as u64;
 
         // units = permuted slices (grouped per primary slice owner).
         // Planning is allocation-free per unit: `homes` and `srcs` are
@@ -281,13 +325,24 @@ impl crate::restore::registry::Dataset {
             }
         }
 
-        // charge + execute
-        let mut phase = cluster.phase();
-        for t in &transfers {
-            phase.add(t.src, t.dst, t.blocks * bs)?;
-        }
-        let cost = phase.commit();
-        for t in &transfers {
+        Ok(RepairPlan { transfers, unrepairable })
+    }
+
+    /// Execute a [`RepairPlan`] against this dataset's stores and holder
+    /// index, stamping the (shared, already-charged) phase `cost` into the
+    /// report. Transfers read only pre-call holders (see the stale-read
+    /// note in [`Dataset::plan_repair`]) and distinct units occupy
+    /// disjoint block ranges, so apply order is byte-irrelevant.
+    pub(crate) fn apply_repair(
+        &mut self,
+        plan: RepairPlan,
+        cost: crate::simnet::network::PhaseCost,
+    ) -> RepairReport {
+        use crate::restore::store::SliceBuf;
+
+        let bs = self.config().block_size as u64;
+        let dist = self.distribution().clone();
+        for t in &plan.transfers {
             let buf = match self.stores()[t.src].read(t.perm_start, t.blocks) {
                 Some(bytes) => SliceBuf::Real(bytes.to_vec()),
                 None => SliceBuf::Virtual(t.blocks * bs),
@@ -300,7 +355,11 @@ impl crate::restore::registry::Dataset {
             self.holder_index_mut().insert(dist.slice_of(t.perm_start), t.dst);
         }
 
-        Ok(RepairReport { transfers: transfers.len(), unrepairable, cost })
+        RepairReport {
+            transfers: plan.transfers.len(),
+            unrepairable: plan.unrepairable,
+            cost,
+        }
     }
 }
 

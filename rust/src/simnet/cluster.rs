@@ -63,17 +63,41 @@ pub struct Msg {
     pub payload: Payload,
 }
 
+/// Lifecycle state of one PE slot in the simulated machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeState {
+    /// Healthy communicator member.
+    Alive,
+    /// Healthy but parked in the spare pool — not a communicator member
+    /// until `ulfm::substitute`/`ulfm::grow` activates it.
+    Spare,
+    /// Died while active; reported by [`Cluster::failed`].
+    Failed,
+    /// Died while parked in the pool. Never a communicator member, so it
+    /// does NOT appear in the failed set the survivors agree on — the pool
+    /// just got one slot smaller.
+    LostSpare,
+}
+
 /// The simulated cluster.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     topo: Topology,
     net: NetworkConfig,
-    alive: Vec<bool>,
+    state: Vec<PeState>,
+    /// Current communicator: new rank → cluster rank. Starts as the dense
+    /// identity over the base ranks (spares excluded); rewritten by the
+    /// `ulfm` shrink/substitute/grow primitives.
+    comm: Vec<usize>,
     n_alive: usize,
+    n_spares: usize,
+    base_pes: usize,
     clock_s: f64,
-    /// Communicator epoch; bumped by `ulfm::shrink`. `ReStore` records the
+    /// Communicator epoch; bumped whenever `ulfm` establishes a new
+    /// communicator (shrink, substitute, or grow). `ReStore` records the
     /// epoch its layout was computed at and refuses to route against a
-    /// newer one (the shrink handshake: agree → shrink → rebalance → load).
+    /// newer one (the handshake: agree → {shrink|substitute|grow} →
+    /// reshape → load).
     epoch: u64,
 }
 
@@ -83,13 +107,33 @@ impl Cluster {
         Self::with_network(pes, pes_per_node, NetworkConfig::default())
     }
 
-    pub fn with_network(pes: usize, pes_per_node: usize, mut net: NetworkConfig) -> Self {
+    /// A cluster with `spares` extra healthy PEs parked in a spare pool
+    /// beyond the `pes` initial communicator members. Spares occupy the
+    /// trailing cluster ranks `pes..pes+spares`, count toward
+    /// [`Cluster::world`] (the machine size) but not [`Cluster::n_alive`]
+    /// (the communicator size), and only join the communicator through
+    /// `ulfm::substitute` / `ulfm::grow`.
+    pub fn with_spares(pes: usize, pes_per_node: usize, spares: usize) -> Self {
+        Self::build(pes, pes_per_node, spares, NetworkConfig::default())
+    }
+
+    pub fn with_network(pes: usize, pes_per_node: usize, net: NetworkConfig) -> Self {
+        Self::build(pes, pes_per_node, 0, net)
+    }
+
+    fn build(pes: usize, pes_per_node: usize, spares: usize, mut net: NetworkConfig) -> Self {
         net.pes_per_node = pes_per_node;
+        let total = pes + spares;
+        let mut state = vec![PeState::Alive; total];
+        state[pes..].fill(PeState::Spare);
         Cluster {
-            topo: Topology::new(pes, pes_per_node),
+            topo: Topology::new(total, pes_per_node),
             net,
-            alive: vec![true; pes],
+            state,
+            comm: (0..pes).collect(),
             n_alive: pes,
+            n_spares: spares,
+            base_pes: pes,
             clock_s: 0.0,
             epoch: 0,
         }
@@ -103,27 +147,74 @@ impl Cluster {
         &self.net
     }
 
-    /// World size `p` at program start (dead PEs keep their rank).
+    /// Machine size: every PE slot, including the spare pool (dead PEs keep
+    /// their rank). Rank maps and store arrays are sized by this.
     pub fn world(&self) -> usize {
         self.topo.pes()
+    }
+
+    /// Initial communicator size `p` — [`Cluster::world`] minus the spare
+    /// pool. This is the world applications are configured against.
+    pub fn base_world(&self) -> usize {
+        self.base_pes
     }
 
     pub fn n_alive(&self) -> usize {
         self.n_alive
     }
 
+    /// Healthy PEs still parked in the spare pool.
+    pub fn n_spares(&self) -> usize {
+        self.n_spares
+    }
+
     pub fn is_alive(&self, rank: usize) -> bool {
-        self.alive.get(rank).copied().unwrap_or(false)
+        self.state.get(rank) == Some(&PeState::Alive)
     }
 
-    /// Alive ranks in increasing order.
+    /// Current communicator membership: new rank → cluster rank.
+    pub fn comm(&self) -> &[usize] {
+        &self.comm
+    }
+
+    /// Alive communicator members in increasing cluster-rank order
+    /// (allocation-free; parked spares are not members).
+    pub fn survivors_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == PeState::Alive)
+            .map(|(r, _)| r)
+    }
+
+    /// Communicator members killed so far, in increasing cluster-rank order
+    /// (allocation-free; lost spares are not failures the survivors see).
+    pub fn failed_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == PeState::Failed)
+            .map(|(r, _)| r)
+    }
+
+    /// Healthy pool spares in increasing cluster-rank order.
+    pub fn spares_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.state
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == PeState::Spare)
+            .map(|(r, _)| r)
+    }
+
+    /// Alive ranks in increasing order ([`Cluster::survivors_iter`]
+    /// collected — recovery hot loops should use the iterator).
     pub fn survivors(&self) -> Vec<usize> {
-        (0..self.world()).filter(|&r| self.alive[r]).collect()
+        self.survivors_iter().collect()
     }
 
-    /// Ranks killed so far.
+    /// Ranks killed so far ([`Cluster::failed_iter`] collected).
     pub fn failed(&self) -> Vec<usize> {
-        (0..self.world()).filter(|&r| !self.alive[r]).collect()
+        self.failed_iter().collect()
     }
 
     /// Simulated elapsed seconds.
@@ -131,25 +222,48 @@ impl Cluster {
         self.clock_s
     }
 
-    /// Current communicator epoch (0 at construction; +1 per shrink).
+    /// Current communicator epoch (0 at construction; +1 per
+    /// shrink/substitute/grow).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
 
-    /// Advance the communicator epoch — called by `ulfm::shrink` when the
-    /// survivors establish a new communicator. Every `ReStore` instance
-    /// validates its layout epoch against this on submit/load/repair.
-    pub(crate) fn bump_epoch(&mut self) {
+    /// Install a new communicator (new rank → cluster rank) and advance the
+    /// epoch — called by the `ulfm` primitives once the members agree.
+    /// Every `ReStore` instance validates its layout epoch against this on
+    /// submit/load/repair.
+    pub(crate) fn establish_comm(&mut self, comm: Vec<usize>) {
+        debug_assert_eq!(comm.len(), self.n_alive, "communicator must cover the alive set");
+        debug_assert!(comm.iter().all(|&r| self.is_alive(r)), "dead rank in new communicator");
+        self.comm = comm;
         self.epoch += 1;
     }
 
+    /// Promote a pool spare to an active communicator member — called by
+    /// `ulfm::substitute`/`ulfm::grow` (which then place it in the new
+    /// communicator via [`Cluster::establish_comm`]).
+    pub(crate) fn activate_spare(&mut self, rank: usize) {
+        debug_assert_eq!(self.state.get(rank), Some(&PeState::Spare), "rank {rank} is not a spare");
+        self.state[rank] = PeState::Alive;
+        self.n_spares -= 1;
+        self.n_alive += 1;
+    }
+
     /// Inject failures (the paper's simulated `MPI_Comm_split` methodology).
-    /// Killing an already-dead PE is a no-op.
+    /// Killing an already-dead PE is a no-op; killing a parked spare
+    /// silently shrinks the pool (the survivors never observe it).
     pub fn kill(&mut self, ranks: &[usize]) {
         for &r in ranks {
-            if r < self.alive.len() && self.alive[r] {
-                self.alive[r] = false;
-                self.n_alive -= 1;
+            match self.state.get(r) {
+                Some(PeState::Alive) => {
+                    self.state[r] = PeState::Failed;
+                    self.n_alive -= 1;
+                }
+                Some(PeState::Spare) => {
+                    self.state[r] = PeState::LostSpare;
+                    self.n_spares -= 1;
+                }
+                _ => {}
             }
         }
     }
@@ -179,10 +293,10 @@ impl Cluster {
                     world: self.world(),
                 });
             }
-            if !self.alive[m.src] {
+            if !self.is_alive(m.src) {
                 return Err(Error::DeadPe(m.src));
             }
-            if !self.alive[m.dst] {
+            if !self.is_alive(m.dst) {
                 return Err(Error::DeadPe(m.dst));
             }
             acc.msg(m.src, m.dst, m.payload.len());
@@ -227,10 +341,10 @@ impl Cluster {
             if src >= self.world() || dst >= self.world() {
                 return Err(Error::RankOutOfRange { rank: src.max(dst), world: self.world() });
             }
-            if !self.alive[src] {
+            if !self.is_alive(src) {
                 return Err(Error::DeadPe(src));
             }
-            if !self.alive[dst] {
+            if !self.is_alive(dst) {
                 return Err(Error::DeadPe(dst));
             }
             acc.msg(src, dst, bytes);
@@ -308,10 +422,10 @@ impl<'a> PhaseBuilder<'a> {
                 world: self.cluster.world(),
             });
         }
-        if !self.cluster.alive[src] {
+        if !self.cluster.is_alive(src) {
             return Err(Error::DeadPe(src));
         }
-        if !self.cluster.alive[dst] {
+        if !self.cluster.is_alive(dst) {
             return Err(Error::DeadPe(dst));
         }
         self.acc.as_mut().msg(src, dst, bytes);
@@ -380,6 +494,39 @@ mod tests {
         assert_eq!(c.n_alive(), 6);
         assert_eq!(c.survivors(), vec![0, 3, 4, 5, 6, 7]);
         assert_eq!(c.failed(), vec![1, 2]);
+    }
+
+    #[test]
+    fn spare_pool_is_parked_outside_the_communicator() {
+        let c = Cluster::with_spares(8, 4, 3);
+        assert_eq!(c.world(), 11);
+        assert_eq!(c.base_world(), 8);
+        assert_eq!(c.n_alive(), 8);
+        assert_eq!(c.n_spares(), 3);
+        assert_eq!(c.comm(), &(0..8).collect::<Vec<_>>()[..]);
+        assert_eq!(c.survivors(), (0..8).collect::<Vec<_>>());
+        assert_eq!(c.spares_iter().collect::<Vec<_>>(), vec![8, 9, 10]);
+        // parked spares are not valid message endpoints
+        assert!(!c.is_alive(8));
+    }
+
+    #[test]
+    fn killing_a_spare_shrinks_the_pool_silently() {
+        let mut c = Cluster::with_spares(8, 4, 2);
+        c.kill(&[9, 9, 3]);
+        assert_eq!(c.n_alive(), 7);
+        assert_eq!(c.n_spares(), 1);
+        // the survivors only agree on communicator-member deaths
+        assert_eq!(c.failed(), vec![3]);
+        assert_eq!(c.spares_iter().collect::<Vec<_>>(), vec![8]);
+    }
+
+    #[test]
+    fn iterators_match_vec_forms() {
+        let mut c = Cluster::with_spares(6, 3, 2);
+        c.kill(&[1, 4]);
+        assert_eq!(c.survivors_iter().collect::<Vec<_>>(), c.survivors());
+        assert_eq!(c.failed_iter().collect::<Vec<_>>(), c.failed());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! node-spreading argument (§IV-A) defends against — provided here for the
 //! ablation benches.
 
+use crate::simnet::cluster::Cluster;
 use crate::simnet::topology::Topology;
 use crate::util::rng::Rng;
 
@@ -50,6 +51,68 @@ pub fn uniform_kills(rng: &mut Rng, alive: &[usize], count: usize) -> Vec<usize>
 /// Whole-node failure: all PEs of `node` die together.
 pub fn node_failure(topo: &Topology, node: usize) -> Vec<usize> {
     topo.ranks_on_node(node).collect()
+}
+
+/// One storm arrival: the wall-clock the failure strikes at and the ranks
+/// it takes down.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StormEvent {
+    /// Simulated absolute time of the failure (seconds; compare against
+    /// `Cluster::now()`).
+    pub at_s: f64,
+    /// Cluster ranks killed by this event (one PE, or a whole node for a
+    /// correlated burst).
+    pub kills: Vec<usize>,
+}
+
+/// MTBF-driven failure storm: failures arrive as a Poisson process against
+/// the simulated cluster clock. Each *PE* has mean time between failures
+/// `pe_mtbf_s`, so with `a` alive communicator members the cluster-level
+/// failure rate is `a / pe_mtbf_s` and inter-arrival gaps are exponential
+/// with that rate — the standard memoryless large-machine failure model
+/// (and the continuous-time version of the paper's §VI-C per-iteration
+/// failure probability). With probability `node_burst_prob` an arrival is
+/// *node-correlated*: the victim's whole node dies together, the failure
+/// mode §IV-A's node-spreading placement defends against.
+#[derive(Debug, Clone)]
+pub struct MtbfStorm {
+    pe_mtbf_s: f64,
+    node_burst_prob: f64,
+    rng: Rng,
+}
+
+impl MtbfStorm {
+    pub fn new(pe_mtbf_s: f64, node_burst_prob: f64, seed: u64) -> Self {
+        assert!(pe_mtbf_s > 0.0, "MTBF must be positive");
+        assert!((0.0..=1.0).contains(&node_burst_prob));
+        MtbfStorm { pe_mtbf_s, node_burst_prob, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Sample the next failure event after `cluster.now()`. Returns `None`
+    /// once fewer than two communicator members survive (no storm left to
+    /// weather). The victim is drawn uniformly from the alive members via
+    /// the allocation-free survivor iterator; a node burst widens it to
+    /// the victim's whole node (already-dead neighbors are no-ops at
+    /// `Cluster::kill`).
+    pub fn next_event(&mut self, cluster: &Cluster) -> Option<StormEvent> {
+        let alive = cluster.n_alive();
+        if alive < 2 {
+            return None;
+        }
+        let rate = alive as f64 / self.pe_mtbf_s;
+        let gap_s = -(1.0 - self.rng.gen_f64()).ln() / rate;
+        let victim = cluster
+            .survivors_iter()
+            .nth(self.rng.gen_index(alive))
+            .expect("n_alive survivors");
+        let kills = if self.rng.gen_bool(self.node_burst_prob) {
+            let topo = cluster.topology();
+            topo.ranks_on_node(topo.node_of(victim)).collect()
+        } else {
+            vec![victim]
+        };
+        Some(StormEvent { at_s: cluster.now() + gap_s, kills })
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +165,53 @@ mod tests {
         let topo = Topology::new(100, 48);
         assert_eq!(node_failure(&topo, 1), (48..96).collect::<Vec<_>>());
         assert_eq!(node_failure(&topo, 2), (96..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mtbf_storm_gaps_have_exponential_mean() {
+        // 64 PEs at 6400 s MTBF each -> cluster rate 1/100 s^-1, so the
+        // mean inter-arrival gap is ~100 s (law of large numbers check)
+        let cluster = Cluster::new_execution(64, 8);
+        let mut storm = MtbfStorm::new(6400.0, 0.0, 42);
+        let n = 4000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let ev = storm.next_event(&cluster).unwrap();
+            assert_eq!(ev.kills.len(), 1);
+            assert!(cluster.is_alive(ev.kills[0]));
+            total += ev.at_s - cluster.now();
+        }
+        let mean = total / n as f64;
+        assert!((90.0..110.0).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn mtbf_storm_is_deterministic_and_rate_scales_with_survivors() {
+        let mut a = MtbfStorm::new(1000.0, 0.25, 7);
+        let mut b = MtbfStorm::new(1000.0, 0.25, 7);
+        let mut cluster = Cluster::new_execution(32, 8);
+        for _ in 0..20 {
+            let ea = a.next_event(&cluster).unwrap();
+            let eb = b.next_event(&cluster).unwrap();
+            assert_eq!(ea, eb);
+            cluster.kill(&ea.kills);
+            if cluster.n_alive() < 2 {
+                break;
+            }
+        }
+        // once fewer than two members survive the storm ends
+        let mut tiny = Cluster::new_execution(2, 2);
+        tiny.kill(&[0]);
+        assert!(a.next_event(&tiny).is_none());
+    }
+
+    #[test]
+    fn mtbf_storm_node_bursts_take_whole_nodes() {
+        let cluster = Cluster::new_execution(96, 48);
+        let mut storm = MtbfStorm::new(100.0, 1.0, 3);
+        let ev = storm.next_event(&cluster).unwrap();
+        assert_eq!(ev.kills.len(), 48);
+        let node = cluster.topology().node_of(ev.kills[0]);
+        assert_eq!(ev.kills, node_failure(cluster.topology(), node));
     }
 }

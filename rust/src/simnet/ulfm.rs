@@ -9,6 +9,15 @@
 //! we model their cost with a latency term that matches the observation in
 //! §VI-C that "the overall running time increases ... mainly due to MPI
 //! operations used to restore a functioning communicator".
+//!
+//! Beyond the paper's shrink-only recovery, this module also models the
+//! other half of the "Shrink or Substitute" design space: [`substitute`]
+//! seats spares from the cluster's pool in the dead ranks' communicator
+//! positions (world size preserved), and [`grow`] widens the communicator
+//! (`p → p + extra`) so a shrunk job can elastically reclaim capacity.
+//! Both carry an `MPI_Comm_spawn`-style cost term on top of the
+//! reconfiguration collectives. The policy layer that chooses between
+//! them lives in `restore::policy`.
 
 use crate::error::{Error, Result};
 use crate::simnet::cluster::Cluster;
@@ -18,6 +27,13 @@ use crate::simnet::network::PhaseCost;
 pub const SHRINK_BASE_S: f64 = 1.0e-3;
 /// Per-log2(p) cost of the agreement + shrink collectives.
 pub const SHRINK_PER_LOG_S: f64 = 1.5e-3;
+/// Fixed cost of activating spares (`MPI_Comm_spawn`-style process
+/// acquisition + connection setup — an order of magnitude above the
+/// shrink base, matching the "Shrink or Substitute" observation that
+/// substitution pays more up front to preserve the world size).
+pub const SPAWN_BASE_S: f64 = 8.0e-3;
+/// Per-log2(p) cost of merging the spawned ranks into the communicator.
+pub const SPAWN_PER_LOG_S: f64 = 2.0e-3;
 
 /// Rank translation between the pre-failure and post-shrink communicators.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -41,14 +57,18 @@ impl RankMap {
         self.new_to_old.len()
     }
 
-    /// Verify this map describes `cluster`'s *current* survivor set: every
-    /// new rank maps to an alive old rank, the survivors are covered
-    /// exactly once in old-rank order, and the two directions agree. The
-    /// rebalance policy (`ReStore::rebalance` and
-    /// `ReStore::rebalance_or_acknowledge`) calls this before ANY layout
-    /// decision — a stale map (from an earlier shrink) silently addressing
-    /// dead ranks is the bug class this guards against. Failures surface
-    /// as the dedicated [`Error::StaleRankMap`].
+    /// Verify this map describes `cluster`'s *current* communicator: every
+    /// new rank maps to an alive cluster rank, the alive set is covered
+    /// exactly once, and the two directions agree. Note new ranks need NOT
+    /// preserve old-rank order — [`shrink`] maps are monotone by
+    /// construction, but a [`substitute`] map seats a (high-numbered)
+    /// spare in the dead rank's position and a [`grow`] map appends
+    /// spares past the old world. The recovery policies
+    /// (`restore::policy`, `ReStore::rebalance_or_acknowledge`) call this
+    /// before ANY layout decision — a stale map (from an earlier epoch)
+    /// silently addressing dead ranks is the bug class this guards
+    /// against. Failures surface as the dedicated
+    /// [`Error::StaleRankMap`].
     pub fn validate_against(&self, cluster: &Cluster) -> Result<()> {
         let err = |m: String| Err(Error::StaleRankMap(m));
         if self.old_to_new.len() != cluster.world() {
@@ -65,7 +85,6 @@ impl RankMap {
                 cluster.n_alive()
             ));
         }
-        let mut prev_old: Option<usize> = None;
         for (new, &old) in self.new_to_old.iter().enumerate() {
             if !cluster.is_alive(old) {
                 return err(format!("rank map: new rank {new} maps to dead PE {old}"));
@@ -73,10 +92,6 @@ impl RankMap {
             if self.old_to_new.get(old).copied().flatten() != Some(new) {
                 return err(format!("rank map: directions disagree at old rank {old}"));
             }
-            if prev_old.is_some_and(|p| p >= old) {
-                return err("rank map: new ranks must preserve old-rank order".into());
-            }
-            prev_old = Some(old);
         }
         for (old, &new) in self.old_to_new.iter().enumerate() {
             if new.is_some() != cluster.is_alive(old) {
@@ -89,6 +104,15 @@ impl RankMap {
     }
 }
 
+/// Build the RankMap for a prospective communicator membership list.
+fn map_from_comm(world: usize, comm: &[usize]) -> RankMap {
+    let mut old_to_new = vec![None; world];
+    for (new, &old) in comm.iter().enumerate() {
+        old_to_new[old] = Some(new);
+    }
+    RankMap { old_to_new, new_to_old: comm.to_vec() }
+}
+
 /// Agreement on the failed set: every survivor learns which PEs died.
 /// Cost: a fault-tolerant allreduce over a bitmap (3 log p rounds — the
 /// two-phase commit structure of `MPIX_Comm_agree`).
@@ -97,31 +121,116 @@ pub fn agree(cluster: &mut Cluster) -> (Vec<usize>, PhaseCost) {
     let rounds = 3 * p.log2().ceil() as u64;
     let cost = PhaseCost::latency(cluster.network(), rounds);
     cluster.advance(&cost);
-    (cluster.failed(), cost)
+    // Exact-capacity collect off the allocation-free iterator: ONE heap
+    // allocation per agreement regardless of world size (asserted by the
+    // counting-allocator suite) — the storm driver calls this every wave.
+    let n_failed = cluster.failed_iter().count();
+    let mut failed = Vec::with_capacity(n_failed);
+    failed.extend(cluster.failed_iter());
+    (failed, cost)
 }
 
-/// Shrink the communicator: survivors get dense new ranks preserving the
-/// old order (exactly what `MPI_Comm_split(comm, alive, old_rank)` does in
-/// the paper's simulation methodology).
+/// Shrink the communicator: surviving members keep their relative order
+/// and get dense new ranks (exactly what
+/// `MPI_Comm_split(comm, alive, old_rank)` does in the paper's simulation
+/// methodology — `MPIX_Comm_shrink` preserves rank order the same way).
 pub fn shrink(cluster: &mut Cluster) -> (RankMap, PhaseCost) {
-    let world = cluster.world();
-    let mut old_to_new = vec![None; world];
-    let mut new_to_old = Vec::with_capacity(cluster.n_alive());
-    for old in 0..world {
-        if cluster.is_alive(old) {
-            old_to_new[old] = Some(new_to_old.len());
-            new_to_old.push(old);
-        }
-    }
-    let p = cluster.n_alive().max(2) as f64;
+    let new_comm: Vec<usize> =
+        cluster.comm().iter().copied().filter(|&r| cluster.is_alive(r)).collect();
+    let map = map_from_comm(cluster.world(), &new_comm);
+    let p = new_comm.len().max(2) as f64;
     let cost = PhaseCost {
         sim_time_s: SHRINK_BASE_S + SHRINK_PER_LOG_S * p.log2(),
         bottleneck_msgs: 2 * p.log2().ceil() as u64,
         ..Default::default()
     };
     cluster.advance(&cost);
-    cluster.bump_epoch();
-    (RankMap { old_to_new, new_to_old }, cost)
+    cluster.establish_comm(new_comm);
+    (map, cost)
+}
+
+/// Substitute every failed communicator member with a spare from the pool,
+/// preserving the world size: each dead rank's communicator position is
+/// taken over by an activated spare (lowest-numbered spares first), so all
+/// surviving members keep their ranks — the FTHP-MPI/"Shrink or
+/// Substitute" standby-replacement policy. Costs a spawn term
+/// ([`SPAWN_BASE_S`]/[`SPAWN_PER_LOG_S`]) on top of the shrink-style
+/// reconfiguration collectives.
+///
+/// Errors with [`Error::Config`] — without mutating the cluster — if no
+/// communicator member is dead or the pool has fewer healthy spares than
+/// there are failures (callers degrade to [`shrink`]).
+pub fn substitute(cluster: &mut Cluster) -> Result<(RankMap, PhaseCost)> {
+    let n_dead = cluster.comm().iter().filter(|&&r| !cluster.is_alive(r)).count();
+    if n_dead == 0 {
+        return Err(Error::Config("substitute: no failed ranks in the communicator".into()));
+    }
+    if cluster.n_spares() < n_dead {
+        return Err(Error::Config(format!(
+            "substitute: spare pool exhausted (need {n_dead}, have {})",
+            cluster.n_spares()
+        )));
+    }
+    let replacements: Vec<usize> = cluster.spares_iter().take(n_dead).collect();
+    let mut new_comm = cluster.comm().to_vec();
+    let mut next = replacements.iter().copied();
+    for slot in new_comm.iter_mut() {
+        if !cluster.is_alive(*slot) {
+            *slot = next.next().expect("one replacement per dead member");
+        }
+    }
+    for &s in &replacements {
+        cluster.activate_spare(s);
+    }
+    let p = new_comm.len().max(2) as f64;
+    let cost = PhaseCost {
+        sim_time_s: SHRINK_BASE_S + SPAWN_BASE_S + (SHRINK_PER_LOG_S + SPAWN_PER_LOG_S) * p.log2(),
+        bottleneck_msgs: 3 * p.log2().ceil() as u64,
+        ..Default::default()
+    };
+    cluster.advance(&cost);
+    let map = map_from_comm(cluster.world(), &new_comm);
+    cluster.establish_comm(new_comm);
+    Ok((map, cost))
+}
+
+/// Grow the communicator by `extra` spares appended past the current
+/// members (`p → p + extra`) — the elastic re-grow half of the policy
+/// space: a job that shrank through a failure storm reclaims capacity once
+/// spares return. Requires a fully-alive communicator (run [`shrink`] or
+/// [`substitute`] first) and `extra` healthy spares; errors with
+/// [`Error::Config`] otherwise, without mutating the cluster.
+pub fn grow(cluster: &mut Cluster, extra: usize) -> Result<(RankMap, PhaseCost)> {
+    if extra == 0 {
+        return Err(Error::Config("grow: extra must be > 0".into()));
+    }
+    if cluster.comm().iter().any(|&r| !cluster.is_alive(r)) {
+        return Err(Error::Config(
+            "grow requires a fully-alive communicator; run shrink or substitute first".into(),
+        ));
+    }
+    if cluster.n_spares() < extra {
+        return Err(Error::Config(format!(
+            "grow: spare pool exhausted (need {extra}, have {})",
+            cluster.n_spares()
+        )));
+    }
+    let added: Vec<usize> = cluster.spares_iter().take(extra).collect();
+    for &s in &added {
+        cluster.activate_spare(s);
+    }
+    let mut new_comm = cluster.comm().to_vec();
+    new_comm.extend(added);
+    let p = new_comm.len().max(2) as f64;
+    let cost = PhaseCost {
+        sim_time_s: SHRINK_BASE_S + SPAWN_BASE_S + (SHRINK_PER_LOG_S + SPAWN_PER_LOG_S) * p.log2(),
+        bottleneck_msgs: 3 * p.log2().ceil() as u64,
+        ..Default::default()
+    };
+    cluster.advance(&cost);
+    let map = map_from_comm(cluster.world(), &new_comm);
+    cluster.establish_comm(new_comm);
+    Ok((map, cost))
 }
 
 /// Full recovery sequence after failures are noticed: agree + shrink.
@@ -195,6 +304,102 @@ mod tests {
         let m = RankMap::identity(4);
         assert_eq!(m.old_to_new[3], Some(3));
         assert_eq!(m.new_world(), 4);
+    }
+
+    #[test]
+    fn substitute_seats_spares_in_dead_positions() {
+        let mut c = Cluster::with_spares(8, 4, 3);
+        c.kill(&[3, 6]);
+        let (map, cost) = substitute(&mut c).unwrap();
+        // world size preserved; survivors keep their ranks; lowest spares
+        // take over the dead positions in order
+        assert_eq!(map.new_world(), 8);
+        assert_eq!(map.new_to_old, vec![0, 1, 2, 8, 4, 5, 9, 7]);
+        assert_eq!(map.old_to_new[3], None);
+        assert_eq!(map.old_to_new[8], Some(3));
+        assert_eq!(map.old_to_new[9], Some(6));
+        assert_eq!(map.old_to_new[0], Some(0));
+        assert_eq!(c.n_alive(), 8);
+        assert_eq!(c.n_spares(), 1);
+        assert_eq!(c.epoch(), 1);
+        assert!(cost.sim_time_s > SPAWN_BASE_S);
+        map.validate_against(&c).unwrap();
+    }
+
+    #[test]
+    fn substitute_requires_failures_and_spares() {
+        let mut c = Cluster::with_spares(4, 2, 1);
+        assert!(substitute(&mut c).is_err()); // nothing failed
+        c.kill(&[0, 2]);
+        let err = substitute(&mut c); // 2 dead, 1 spare
+        assert!(err.is_err());
+        // failed preconditions must not mutate the cluster
+        assert_eq!(c.n_spares(), 1);
+        assert_eq!(c.epoch(), 0);
+        c.kill(&[3]); // now 3 dead, still 1 spare -> degrade path is shrink
+        let (map, _) = shrink(&mut c);
+        assert_eq!(map.new_to_old, vec![1]);
+    }
+
+    #[test]
+    fn grow_appends_spares_past_the_current_members() {
+        let mut c = Cluster::with_spares(8, 4, 4);
+        c.kill(&[2]);
+        let (smap, _) = shrink(&mut c);
+        assert_eq!(smap.new_world(), 7);
+        let (gmap, cost) = grow(&mut c, 2).unwrap();
+        assert_eq!(gmap.new_world(), 9);
+        assert_eq!(gmap.new_to_old, vec![0, 1, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(gmap.old_to_new[8], Some(7));
+        assert_eq!(c.epoch(), 2);
+        assert_eq!(c.n_spares(), 2);
+        assert!(cost.sim_time_s > SPAWN_BASE_S);
+        gmap.validate_against(&c).unwrap();
+        // the pre-grow shrink map is now stale
+        assert!(matches!(smap.validate_against(&c), Err(Error::StaleRankMap(_))));
+    }
+
+    #[test]
+    fn grow_rejects_dead_members_and_empty_pool() {
+        let mut c = Cluster::with_spares(4, 2, 1);
+        c.kill(&[1]);
+        assert!(grow(&mut c, 1).is_err()); // dead member still seated
+        let (_, _) = shrink(&mut c);
+        assert!(grow(&mut c, 0).is_err());
+        assert!(grow(&mut c, 2).is_err()); // only 1 spare
+        assert_eq!(c.epoch(), 1); // failed grows don't bump the epoch
+        grow(&mut c, 1).unwrap();
+        assert_eq!(c.n_alive(), 4);
+        assert_eq!(c.n_spares(), 0);
+    }
+
+    #[test]
+    fn substitution_chain_composes_across_waves() {
+        // wave 1: substitute; wave 2: kill a former spare AND an original
+        // rank — the next substitute must reseat both positions
+        let mut c = Cluster::with_spares(6, 3, 4);
+        c.kill(&[1]);
+        let (m1, _) = substitute(&mut c).unwrap();
+        assert_eq!(m1.new_to_old, vec![0, 6, 2, 3, 4, 5]);
+        c.kill(&[6, 4]);
+        let (m2, _) = substitute(&mut c).unwrap();
+        assert_eq!(m2.new_to_old, vec![0, 7, 2, 3, 8, 5]);
+        assert_eq!(c.epoch(), 2);
+        m2.validate_against(&c).unwrap();
+        assert!(matches!(m1.validate_against(&c), Err(Error::StaleRankMap(_))));
+    }
+
+    #[test]
+    fn shrink_after_substitute_keeps_comm_order() {
+        // substitution seats spare 8 at position 1; a later shrink of rank 4
+        // must preserve the substituted communicator order, not re-sort it
+        let mut c = Cluster::with_spares(6, 3, 2);
+        c.kill(&[1]);
+        let (_, _) = substitute(&mut c).unwrap();
+        c.kill(&[4]);
+        let (map, _) = shrink(&mut c);
+        assert_eq!(map.new_to_old, vec![0, 6, 2, 3, 5]);
+        map.validate_against(&c).unwrap();
     }
 
     #[test]

@@ -43,6 +43,41 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     steady_state_load_allocations_do_not_scale_with_piece_count();
     rebalance_planning_allocations_do_not_scale_with_world();
     unequal_slice_rebalance_planning_allocations_do_not_scale_with_world();
+    survivor_iteration_and_agreement_allocations_do_not_scale_with_world();
+}
+
+fn survivor_iteration_and_agreement_allocations_do_not_scale_with_world() {
+    // The recovery policies and the failure-storm driver scan the alive /
+    // failed sets every wave: `survivors_iter` / `failed_iter` must be
+    // allocation-free, and `ulfm::agree` must make exactly ONE heap
+    // allocation (the exact-capacity failed vector) regardless of world
+    // size — the contract its doc comment promises.
+    let count_for = |p: usize| {
+        let mut cluster = Cluster::with_spares(p, 4, 2);
+        cluster.kill(&[1, p - 1]);
+        let (n_iter, checksum) = allocs_during(|| {
+            let mut acc = 0usize;
+            for r in cluster.survivors_iter() {
+                acc += r;
+            }
+            for r in cluster.failed_iter() {
+                acc += r + 1;
+            }
+            acc
+        });
+        assert!(checksum > 0);
+        assert_eq!(n_iter, 0, "survivor/failed iteration allocated {n_iter} times at p = {p}");
+        let (n_agree, (failed, _cost)) = allocs_during(|| ulfm::agree(&mut cluster));
+        assert_eq!(failed, vec![1, p - 1]);
+        n_agree
+    };
+    let small = count_for(8);
+    let large = count_for(32);
+    assert_eq!(small, 1, "agree must allocate exactly the failed vector ({small} allocations)");
+    assert_eq!(
+        small, large,
+        "agreement allocation count scales with p ({small} vs {large})"
+    );
 }
 
 fn submit_allocations_do_not_scale_with_unit_count() {

@@ -12,7 +12,11 @@ use restore::restore::repair::RepairScheme;
 use restore::restore::store::{assert_memory_invariant, HolderIndex};
 use restore::restore::{LoadRequest, ReStore};
 use restore::simnet::cluster::Cluster;
+use restore::simnet::failure::MtbfStorm;
+use restore::simnet::network::PhaseCost;
+use restore::simnet::ulfm::{self, RankMap};
 use restore::util::rng::Rng;
+use restore::Error;
 
 /// Random valid config: p in [2, 32], r | p, block size in {4..64},
 /// perm ranges on/off.
@@ -454,10 +458,12 @@ fn prop_rebalance_minimality_index_and_fast_path_over_random_kill_waves() {
 }
 
 /// Reshaped layouts must equal a fresh balanced construction at the new
-/// world for random (p, p', r, s_pr) tuples — including non-dividing p'
-/// and chained reshapes — and the slice geometry must satisfy its
-/// closed-form invariants (⌊n/p'⌋/⌈n/p'⌉ lengths, prefix-sum boundaries,
-/// slice_of inverse, distinct holders).
+/// world for random (p, p', r, s_pr) tuples — shrink (p' < p), identity
+/// (p' = p), AND grow (p' > p, the substitution/re-grow direction) all
+/// route through the same `reshaped()` — including non-dividing p' and
+/// chained reshapes, and the slice geometry must satisfy its closed-form
+/// invariants (⌊n/p'⌋/⌈n/p'⌉ lengths, prefix-sum boundaries, slice_of
+/// inverse, distinct holders).
 #[test]
 fn prop_reshaped_matches_fresh_balanced_over_random_tuples() {
     let mut rng = Rng::seed_from_u64(0xBA1A2CED);
@@ -465,13 +471,11 @@ fn prop_reshaped_matches_fresh_balanced_over_random_tuples() {
         let cfg = random_config(&mut rng);
         let p = cfg.world;
         let r = cfg.replicas;
-        if r > p.saturating_sub(1).max(1) {
-            continue; // no smaller feasible world exists for r = p
-        }
         let old = Distribution::new(&cfg);
         let n = cfg.n_blocks();
-        // any p' in [r, p) is feasible now
-        let p_new = r + rng.gen_index(p - r);
+        // any p' in [r, 2p] is feasible now (2p <= n since bpp >= 16)
+        let upper = (2 * p).min(n as usize);
+        let p_new = r + rng.gen_index(upper - r + 1);
         assert!(old.reshape_feasible(p_new), "trial {trial}: p'={p_new} (r={r})");
         let got = old.reshaped(p_new).unwrap();
         let want = Distribution::new_balanced(
@@ -513,10 +517,11 @@ fn prop_reshaped_matches_fresh_balanced_over_random_tuples() {
             }
         }
 
-        // chained reshape: a second shrink from the already-unequal layout
-        // must still match the fresh construction at the final world
-        if p_new > r {
-            let p_final = r + rng.gen_index(p_new - r);
+        // chained reshape: a second reshape (either direction) from the
+        // already-unequal layout must still match the fresh construction
+        // at the final world
+        {
+            let p_final = r + rng.gen_index(upper - r + 1);
             let chained = got.reshaped(p_final).unwrap();
             let fresh = Distribution::new_balanced(
                 p_final,
@@ -704,6 +709,81 @@ fn prop_distribution_holder_consistency() {
             }
         }
     }
+}
+
+/// Every rank map the ulfm primitives mint — shrink, substitute, AND
+/// grow — must round-trip `validate_against` at the epoch it was minted,
+/// equal the communicator it installed, compose across chained MTBF storm
+/// waves in whatever order the spare pool admits, and go stale the moment
+/// the next event lands, surfacing as the dedicated
+/// `Error::StaleRankMap` rather than a silent pass.
+#[test]
+fn prop_substitute_and_grow_maps_validate_and_go_stale_across_storm_waves() {
+    let mut rng = Rng::seed_from_u64(0x57A1E);
+    let mut substituted = 0usize;
+    let mut regrown = 0usize;
+    for trial in 0..40 {
+        let p = 4 + rng.gen_index(29); // 4..=32
+        let ppn = [2usize, 4, 8][rng.gen_index(3)];
+        let spares = rng.gen_index(p + 1); // 0..=p
+        let mut cluster = Cluster::with_spares(p, ppn, spares);
+        let mut storm = MtbfStorm::new(1.0e4, 0.2, rng.next_u64());
+        let mut prev: Option<RankMap> = None;
+        for wave in 0..4 {
+            let Some(ev) = storm.next_event(&cluster) else { break };
+            assert!(ev.at_s >= cluster.now(), "trial {trial}: storm time ran backwards");
+            assert!(!ev.kills.is_empty(), "trial {trial}: empty storm event");
+            let gap = PhaseCost { sim_time_s: ev.at_s - cluster.now(), ..Default::default() };
+            cluster.advance(&gap);
+            cluster.kill(&ev.kills);
+
+            // the previous wave's map is stale the moment this wave lands
+            if let Some(m) = prev.take() {
+                assert!(
+                    matches!(m.validate_against(&cluster), Err(Error::StaleRankMap(_))),
+                    "trial {trial} wave {wave}: pre-wave map survived validation"
+                );
+            }
+
+            let (failed, _cost) = ulfm::agree(&mut cluster);
+            assert_eq!(failed, cluster.failed(), "trial {trial}: agreement must be cumulative");
+
+            let n_dead = cluster.comm().iter().filter(|&&r| !cluster.is_alive(r)).count();
+            assert!(n_dead >= 1, "trial {trial}: storm kills must hit communicator members");
+            let map = if n_dead <= cluster.n_spares() && rng.gen_bool(0.5) {
+                let world_before = cluster.comm().len();
+                let (m, _) = ulfm::substitute(&mut cluster).unwrap();
+                assert_eq!(m.new_world(), world_before, "trial {trial}: substitute must preserve p");
+                substituted += 1;
+                m
+            } else {
+                let (m, _) = ulfm::shrink(&mut cluster);
+                if cluster.n_spares() > 0 && rng.gen_bool(0.5) {
+                    m.validate_against(&cluster)
+                        .unwrap_or_else(|e| panic!("trial {trial}: shrink map invalid: {e}"));
+                    let extra = 1 + rng.gen_index(cluster.n_spares());
+                    let (g, _) = ulfm::grow(&mut cluster, extra).unwrap();
+                    assert_eq!(g.new_world(), m.new_world() + extra, "trial {trial}");
+                    // the pre-grow shrink map is itself stale now
+                    assert!(
+                        matches!(m.validate_against(&cluster), Err(Error::StaleRankMap(_))),
+                        "trial {trial} wave {wave}: shrink map survived the grow"
+                    );
+                    regrown += 1;
+                    g
+                } else {
+                    m
+                }
+            };
+            map.validate_against(&cluster)
+                .unwrap_or_else(|e| panic!("trial {trial} wave {wave}: fresh map invalid: {e}"));
+            // the map IS the installed communicator (round-trip identity)
+            assert_eq!(map.new_to_old, cluster.comm(), "trial {trial} wave {wave}");
+            prev = Some(map);
+        }
+    }
+    assert!(substituted >= 10, "only {substituted} substitute waves ran — generator too narrow");
+    assert!(regrown >= 10, "only {regrown} re-grow waves ran — generator too narrow");
 }
 
 #[test]

@@ -1,12 +1,12 @@
 #!/usr/bin/env python3
-"""Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files.
+"""Render the EXPERIMENTS.md measured tables from BENCH_*.json files.
 
 The bench binaries (and CI's bench smoke steps) emit one JSON object per
 line: {"name": ..., "ns_per_iter": ...}. Entries named `... wall/sim-ns/
-migrated-bytes ...` carry those raw metrics in the ns_per_iter field (see
-util::bench::BenchResult::from_value). This script merges any number of
-such files into a markdown table, ready to paste into (or diff against)
-EXPERIMENTS.md §Perf:
+migrated-bytes/idl-prob/throughput-frac ...` carry those raw metrics in
+the ns_per_iter field (see util::bench::BenchResult::from_value). This
+script merges any number of such files into a markdown table, ready to
+paste into (or diff against) EXPERIMENTS.md:
 
     python3 tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json \
         BENCH_rebalance.json
@@ -16,7 +16,10 @@ table as PERF_TABLE.md inside the bench-json artifact (a CI job cannot
 commit back to the repo). To land the numbers in the tree, download that
 artifact and run with --update EXPERIMENTS.md: it rewrites the block
 between the `<!-- perf-table:begin -->` / `<!-- perf-table:end -->`
-markers in place.
+markers in place. A different marked block can be targeted with
+--marker: `--marker policy-table` rewrites the
+`<!-- policy-table:begin/end -->` block (EXPERIMENTS.md §Policies, fed
+from BENCH_policies.json).
 """
 
 import argparse
@@ -27,6 +30,10 @@ import sys
 def fmt(name: str, value: float) -> str:
     if "migrated-bytes" in name:
         return f"{value / 2**30:.2f} GiB"
+    if "idl-prob" in name:
+        return f"{value:.2e}"
+    if "-frac" in name:
+        return f"{value:.4f}"
     # everything else is nanoseconds (wall, sim-ns, or ns_per_iter proper)
     if value >= 1e9:
         return f"{value / 1e9:.2f} s"
@@ -64,12 +71,17 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("json_files", nargs="+")
     ap.add_argument("--update", metavar="MARKDOWN", help="rewrite the marked block in this file")
+    ap.add_argument(
+        "--marker",
+        default="perf-table",
+        help="marker name bounding the block --update rewrites (default: perf-table)",
+    )
     args = ap.parse_args()
     table = render(load(args.json_files))
     if not args.update:
         print(table)
         return 0
-    begin, end = "<!-- perf-table:begin -->", "<!-- perf-table:end -->"
+    begin, end = f"<!-- {args.marker}:begin -->", f"<!-- {args.marker}:end -->"
     with open(args.update, encoding="utf-8") as fh:
         text = fh.read()
     if begin not in text or end not in text:
