@@ -16,14 +16,15 @@ test:
 	cargo build --release && cargo test -q
 
 # The CI bench smoke set: emits BENCH_hotpath.json / BENCH_load_scale.json /
-# BENCH_rebalance.json / BENCH_fused_load.json / BENCH_policies.json
-# ({name, ns_per_iter} JSON lines).
+# BENCH_rebalance.json / BENCH_fused_load.json / BENCH_policies.json /
+# BENCH_scrub.json ({name, ns_per_iter} JSON lines).
 bench-json:
 	cargo bench --bench hotpath
 	cargo bench --bench load_scale
 	cargo bench --bench rebalance
 	cargo bench --bench fused_load
 	cargo bench --bench policies
+	cargo bench --bench scrub
 
 # Short mode: every bench binary runs end to end (so every BENCH_*.json
 # artifact exists) but skips the p = 24576 configurations and cuts
@@ -35,7 +36,7 @@ bench-json-short:
 	BENCH_SHORT=1 $(MAKE) bench-json
 	$(PYTHON) tools/validate_bench_json.py BENCH_hotpath.json \
 		BENCH_load_scale.json BENCH_rebalance.json BENCH_fused_load.json \
-		BENCH_policies.json
+		BENCH_policies.json BENCH_scrub.json
 
 # Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
 # (downloaded from CI's bench-json artifact, or produced by `make
@@ -44,6 +45,7 @@ perf-table:
 	$(PYTHON) tools/perf_table.py BENCH_hotpath.json BENCH_load_scale.json \
 		BENCH_rebalance.json BENCH_fused_load.json
 	$(PYTHON) tools/perf_table.py --marker policy-table BENCH_policies.json
+	$(PYTHON) tools/perf_table.py --marker integrity-table BENCH_scrub.json
 
 # Render the Fig-4-style weak-scaling table (ROADMAP item) from the
 # load-path and fused-load artifacts.

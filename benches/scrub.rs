@@ -1,0 +1,136 @@
+//! Integrity-scrub benchmark (EXPERIMENTS.md §Integrity).
+//!
+//! Two questions, two sections:
+//!
+//! * **How fast does the scrubber verify resident data?** Execution mode
+//!   at p = 256 with real bytes: a full cursor wrap cross-checks every
+//!   alive copy of every slot against its latched checksum. Reported as
+//!   `scrub throughput-blocks-per-s` (blocks verified per wall second) and
+//!   the wall time of one wrap — this bounds the detection latency a given
+//!   scrub budget buys (scan period = resident blocks / throughput).
+//!
+//! * **What does the repair phase cost at production scale?** Cost-model
+//!   mode at p = 1536 and p = 24576 (paper's largest configuration): a
+//!   handful of holders lose one replica each and the §IV-E
+//!   probing-sequence repair round — the same `plan_repair`/
+//!   `charge_repair_plans`/`apply_repair` machinery a scrub quarantine
+//!   triggers — re-creates them. Reported as simulated nanoseconds and
+//!   migrated bytes per repair round.
+//!
+//! With `BENCH_SHORT=1` the p = 24576 configuration is skipped and the
+//! repetition count is cut (the CI schema smoke — see `make
+//! bench-json-short`). Emits `BENCH_scrub.json` in the
+//! `{name, ns_per_iter}` artifact schema (the name states the unit).
+
+use std::time::Instant;
+
+use restore::config::RestoreConfig;
+use restore::restore::repair::RepairScheme;
+use restore::restore::ReStore;
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::{black_box, short_mode, write_json_artifact, BenchResult};
+
+const PPN: usize = 48;
+
+/// Execution-mode scrub throughput: p PEs, real bytes, full cursor wrap.
+fn scrub_throughput(results: &mut Vec<BenchResult>) {
+    const P: usize = 256;
+    const BPP: usize = 256;
+    const BS: usize = 64;
+    const R: usize = 4;
+    let reps = if short_mode() { 3 } else { 10 };
+
+    let cfg = RestoreConfig::builder(P, BS, BPP).replicas(R).build().unwrap();
+    let mut cluster = Cluster::new_execution(P, 32);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    let shards: Vec<Vec<u8>> = (0..P)
+        .map(|pe| (0..BPP * BS).map(|i| (pe * 37 + i * 11) as u8).collect())
+        .collect();
+    store.submit(&mut cluster, &shards).unwrap();
+
+    // warmup + timed full wraps over a clean store (the steady-state case:
+    // scrubbing is overwhelmingly reads-that-pass)
+    let mut scanned = 0u64;
+    let mut wall = 0.0f64;
+    for rep in 0..reps + 1 {
+        let t0 = Instant::now();
+        let report = store.scrub(&mut cluster, u64::MAX).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(report.wrapped && report.corrupt_blocks == 0);
+        if rep > 0 {
+            scanned += report.scanned_blocks;
+            wall += dt;
+        }
+        black_box(report.scanned_blocks);
+    }
+    let blocks_per_s = scanned as f64 / wall;
+    let per_wrap = scanned / reps as u64;
+    println!(
+        "scrub p={P}: {per_wrap} blocks/wrap ({BS} B each), {:.1} Mblocks/s, \
+         {:.2} ms per full wrap",
+        blocks_per_s / 1e6,
+        wall / reps as f64 * 1e3,
+    );
+    results.push(BenchResult::from_value(
+        &format!("scrub throughput-blocks-per-s p={P}"),
+        blocks_per_s,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("scrub full-wrap wall p={P}"),
+        wall / reps as f64 * 1e9,
+    ));
+}
+
+/// Cost-model repair phase at scale: what a scrub quarantine's §IV-E
+/// repair round costs when the dataset spans p PEs.
+fn repair_cost_at(p: usize, results: &mut Vec<BenchResult>) {
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let mut cluster = Cluster::with_spares(p, PPN, 0);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+    let r = store.distribution().replicas();
+
+    // Lose one replica each from a few holders: killing `kills` *adjacent*
+    // ranks takes at most one of any slot's r stride-spaced copies, so
+    // every slice keeps a survivor to repair from — the exact situation a
+    // scrub quarantine leaves behind.
+    let kills: Vec<usize> = (0..r.min(4)).collect();
+    cluster.kill(&kills);
+    let wall0 = Instant::now();
+    let rep = store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap();
+    let wall = wall0.elapsed().as_secs_f64();
+    assert!(rep.transfers > 0 && rep.unrepairable == 0);
+
+    let tag = format!("p={p}");
+    println!(
+        "repair {tag}: {} transfers for {} lost holders -> sim {:.2} ms, \
+         {:.1} MiB migrated, wall {:.1} ms",
+        rep.transfers,
+        kills.len(),
+        rep.cost.sim_time_s * 1e3,
+        rep.cost.total_bytes as f64 / (1u64 << 20) as f64,
+        wall * 1e3,
+    );
+    results.push(BenchResult::from_value(
+        &format!("scrub repair-sim-ns {tag}"),
+        rep.cost.sim_time_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("scrub repair-migrated-bytes {tag}"),
+        rep.cost.total_bytes as f64,
+    ));
+    results.push(BenchResult::from_value(&format!("scrub repair-wall {tag}"), wall * 1e9));
+}
+
+fn main() {
+    println!("=== integrity-scrub benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    scrub_throughput(&mut results);
+    let scales: &[usize] = &[1536, 24576];
+    let scales = if short_mode() { &scales[..1] } else { scales };
+    for &p in scales {
+        repair_cost_at(p, &mut results);
+    }
+    write_json_artifact("BENCH_scrub.json", &results).expect("write BENCH_scrub.json");
+    println!("\nwrote BENCH_scrub.json ({} entries)", results.len());
+}

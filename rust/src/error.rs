@@ -48,9 +48,9 @@ pub enum Error {
     /// `restore::policy::RecoveryPolicy` drive the whole agree →
     /// {shrink | substitute | grow} → reshape handshake for you.
     #[error(
-        "stale storage epoch: store layout at epoch {store_epoch}, cluster at epoch \
-         {cluster_epoch}; call ReStore::rebalance_or_acknowledge (or run a \
-         restore::policy::RecoveryPolicy) after ulfm::shrink/substitute/grow"
+        "stale storage epoch: store layout observed at epoch {store_epoch}, expected the \
+         cluster's current epoch {cluster_epoch}; call ReStore::rebalance_or_acknowledge (or \
+         run a restore::policy::RecoveryPolicy) after ulfm::shrink/substitute/grow"
     )]
     StaleEpoch { store_epoch: u64, cluster_epoch: u64 },
 
@@ -64,6 +64,19 @@ pub enum Error {
     /// failures to obtain a current map.
     #[error("stale rank map: {0}; re-run ulfm shrink/substitute/grow after the latest failures")]
     StaleRankMap(String),
+
+    /// A stored block's bytes no longer match the checksum latched at
+    /// submit time — silent corruption (bit rot, a torn write) on the
+    /// named holder. The integrity layer never serves such bytes: `load`
+    /// assembly, repair ingest, and rebalance ingest all verify before
+    /// copying. `Dataset::scrub` quarantines the holder's copy in the
+    /// `HolderIndex` and repairs it from a surviving verified replica.
+    #[error(
+        "corrupt block {block} of dataset {dataset} on holder PE {holder}: stored bytes fail \
+         checksum verification; the copy is quarantined from serving — run Dataset::scrub to \
+         repair it from a surviving replica"
+    )]
+    CorruptBlock { dataset: crate::restore::registry::DatasetId, block: u64, holder: usize },
 
     /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;
     /// the variant itself stays so error handling is feature-independent).
@@ -91,6 +104,9 @@ impl Error {
         match self {
             Error::IrrecoverableDataLoss { start, end, .. } => {
                 Error::IrrecoverableDataLoss { dataset: id, start, end }
+            }
+            Error::CorruptBlock { block, holder, .. } => {
+                Error::CorruptBlock { dataset: id, block, holder }
             }
             other => other,
         }

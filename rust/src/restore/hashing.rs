@@ -62,6 +62,31 @@ pub fn gcd(a: u64, b: u64) -> u64 {
     }
 }
 
+/// 64-bit content checksum over `bytes` in the xxhash shape — an 8-byte
+/// lane absorbed per round through the [`splitmix64`] finalizer — built
+/// entirely from the in-tree primitives (no new deps). The seed
+/// parametrizes the family; the integrity layer mixes the permuted block
+/// id into it so a block's checksum also binds its *position* (a
+/// misdirected-but-intact write fails verification too). Length is
+/// absorbed up front, so `[0]` and `[0, 0]` differ; the tail (< 8 bytes)
+/// is absorbed zero-padded together with its length.
+#[inline]
+pub fn block_checksum(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = splitmix64(seed ^ (bytes.len() as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let lane = u64::from_le_bytes(c.try_into().expect("chunks_exact yields 8 bytes"));
+        h = splitmix64(h ^ lane);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        h = splitmix64(h ^ u64::from_le_bytes(tail) ^ ((rem.len() as u64) << 56));
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +118,30 @@ mod tests {
             assert_eq!(coprime_to_factors(x, &fs), gcd(x, p) == 1, "x={x}");
         }
         assert!(!coprime_to_factors(0, &fs));
+    }
+
+    #[test]
+    fn block_checksum_detects_every_single_bit_flip() {
+        let data: Vec<u8> = (0..24u8).collect();
+        let base = block_checksum(7, &data);
+        assert_eq!(base, block_checksum(7, &data), "deterministic");
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_ne!(base, block_checksum(7, &flipped), "byte {byte} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_checksum_binds_seed_length_and_tail() {
+        assert_ne!(block_checksum(1, &[0u8; 8]), block_checksum(2, &[0u8; 8]));
+        assert_ne!(block_checksum(1, &[0u8; 8]), block_checksum(1, &[0u8; 16]));
+        // tail bytes (non-multiple-of-8 lengths) are absorbed, not dropped
+        assert_ne!(block_checksum(1, &[0u8; 9]), block_checksum(1, &[0u8; 10]));
+        assert_ne!(block_checksum(1, &[1, 2, 3]), block_checksum(1, &[1, 2, 4]));
+        assert_eq!(block_checksum(1, &[]), block_checksum(1, &[]));
     }
 
     #[test]

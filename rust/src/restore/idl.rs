@@ -109,6 +109,33 @@ pub fn critical_failure_fraction(p: u64, r: u64) -> f64 {
     (r as f64 / p as f64).powf(1.0 / r as f64)
 }
 
+/// Probability that a single replica of `bytes` bytes suffers at least one
+/// bit flip over a window of `interval_s` seconds at `byte_flip_rate_per_s`
+/// flips per byte per second: `1 − exp(−rate · bytes · t)`. This is the
+/// `q_corrupt` input to [`p_idl_with_corruption_approx`] and matches the
+/// Poisson strike process of `simnet::failure::CorruptionModel`.
+pub fn replica_corruption_prob(byte_flip_rate_per_s: f64, bytes: u64, interval_s: f64) -> f64 {
+    assert!(byte_flip_rate_per_s >= 0.0 && interval_s >= 0.0);
+    -(-byte_flip_rate_per_s * bytes as f64 * interval_s).exp_m1()
+}
+
+/// §IV-D approximation extended with silent corruption: a copy of a group's
+/// data is unusable if its holder is *dead* (probability `f/p` per the
+/// small-f argument) **or** alive but corrupt with the scrubber yet to
+/// repair it (probability `q_corrupt`, independent per replica). Data is
+/// lost only when all `r` copies are unusable, so
+///
+/// `P ≈ g · (f/p + (1 − f/p) · q_corrupt)^r`.
+///
+/// With `q_corrupt = 0` this reduces exactly to [`p_idl_approx`].
+pub fn p_idl_with_corruption_approx(p: u64, r: u64, f: u64, q_corrupt: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q_corrupt), "q_corrupt must be a probability");
+    let g = (p / r) as f64;
+    let dead = f as f64 / p as f64;
+    let unusable = dead + (1.0 - dead) * q_corrupt;
+    (g * unusable.powi(r as i32)).min(1.0)
+}
+
 /// Monte-Carlo simulation of Fig 3a: kill uniformly random PEs one at a
 /// time until some group of the *actual* shared-copy distribution has
 /// fully failed; returns the number of failures at which the IDL occurred.
@@ -243,6 +270,48 @@ mod tests {
             last_ratio = ratio;
         }
         assert!(last_ratio < 1.05, "at f=256 the approximation is within 5 %: {last_ratio}");
+    }
+
+    #[test]
+    fn corruption_term_reduces_to_plain_approximation_at_zero() {
+        for (p, r, f) in [(4096u64, 4u64, 64u64), (256, 2, 8), (1024, 3, 33)] {
+            let plain = p_idl_approx(p, r, f);
+            let with_q = p_idl_with_corruption_approx(p, r, f, 0.0);
+            assert!((plain - with_q).abs() < 1e-15, "p={p} r={r} f={f}");
+        }
+    }
+
+    #[test]
+    fn corruption_term_is_monotone_and_saturates() {
+        let (p, r, f) = (4096u64, 4u64, 64u64);
+        let mut last = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = p_idl_with_corruption_approx(p, r, f, q);
+            assert!(v >= last, "q={q}: {v} < {last}");
+            last = v;
+        }
+        // q = 1: every replica corrupt -> certain loss (clamped to 1).
+        assert!((p_idl_with_corruption_approx(p, r, f, 1.0) - 1.0).abs() < 1e-12);
+        // corruption alone (f = 0) can still lose data
+        assert!(p_idl_with_corruption_approx(p, r, 0, 0.5) > 0.0);
+    }
+
+    #[test]
+    fn replica_corruption_prob_behaves_like_an_exponential() {
+        // zero rate, zero bytes, or zero window -> no corruption
+        assert_eq!(replica_corruption_prob(0.0, 1 << 30, 1e6), 0.0);
+        assert_eq!(replica_corruption_prob(1e-9, 0, 1e6), 0.0);
+        assert_eq!(replica_corruption_prob(1e-9, 1 << 30, 0.0), 0.0);
+        // small argument: q ~ rate*bytes*t
+        let q = replica_corruption_prob(1e-18, 1 << 20, 1.0);
+        let lin = 1e-18 * (1u64 << 20) as f64;
+        assert!((q - lin).abs() < lin * 1e-6, "{q} vs {lin}");
+        // large argument saturates at 1 and is monotone in the window
+        let a = replica_corruption_prob(1e-9, 1 << 30, 1.0);
+        let b = replica_corruption_prob(1e-9, 1 << 30, 100.0);
+        assert!(b > a && b <= 1.0);
+        assert!((replica_corruption_prob(1.0, 1 << 30, 1e9) - 1.0).abs() < 1e-12);
     }
 
     #[test]

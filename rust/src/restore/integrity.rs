@@ -1,0 +1,386 @@
+//! Incremental integrity scrubbing.
+//!
+//! The checksums latched at submit time (`restore/store.rs`) catch silent
+//! corruption *when a rotten copy is touched* — on load assembly, on a
+//! repair source, on a rebalance keep/source. A replica that nobody reads
+//! can rot unnoticed for arbitrarily long, though, and the longer it sits
+//! the higher the chance a *second* copy of the same slice rots too,
+//! turning a repairable single-copy event into §IV-D data loss. The fix is
+//! the classic storage-system answer: a background **scrub** that walks the
+//! resident replicas on a budget, cross-checks every block against its
+//! checksum, quarantines copies that fail, and re-creates them from a
+//! surviving replica with the existing §IV-E repair machinery.
+//!
+//! [`Dataset::scrub`] is that walk. It is *incremental*: a persistent
+//! per-dataset cursor ([`Dataset::scrub_slot`]) remembers the next permuted
+//! slot to verify, each call verifies whole slots (every alive copy of a
+//! slot is checked together, so a corrupt copy is quarantined while its
+//! siblings are provably good) until the block budget is spent or the
+//! cursor wraps, and the clean path allocates nothing — the scan reads the
+//! reverse holder index and the per-slice checksum tables in place, so an
+//! application can afford to interleave small scrub steps with its real
+//! work.
+//!
+//! Quarantine removes the corrupt copy from BOTH the [`HolderIndex`]
+//! (routing: the load path and repair planning stop seeing it) and the
+//! [`PeStore`] (bytes: the rotten slice is dropped). The §IV-E repair
+//! round that follows re-creates the copy — on the *same* PE, since the
+//! deterministic §IV-A home is alive and merely lost its replica. Only
+//! when corruption has eaten ALL `r` copies of a slot is the slot
+//! irrecoverable; the report counts those, and a subsequent targeted load
+//! surfaces [`Error::IrrecoverableDataLoss`] exactly as §IV-D predicts
+//! (see `restore/idl.rs` for the corruption-extended IDL model).
+//!
+//! [`HolderIndex`]: crate::restore::store::HolderIndex
+//! [`PeStore`]: crate::restore::store::PeStore
+//! [`Error::IrrecoverableDataLoss`]: crate::error::Error::IrrecoverableDataLoss
+
+use crate::error::Result;
+use crate::restore::registry::Dataset;
+use crate::restore::repair::{charge_repair_plans, RepairScheme};
+use crate::restore::ReStore;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+
+/// Probing-sequence construction the scrub's repair round uses — the same
+/// Appendix Distribution A double hashing the recovery policies repair
+/// with, so a scrub-triggered re-creation lands on exactly the home a
+/// failure-triggered repair would pick (idempotence across the two paths).
+pub const SCRUB_REPAIR_SCHEME: RepairScheme = RepairScheme::DoubleHashing;
+
+/// What one [`Dataset::scrub`] call found and did.
+#[derive(Debug, Clone, Default)]
+pub struct ScrubReport {
+    /// Blocks whose checksums were cross-checked this call, summed over
+    /// every alive copy scanned (a slot with `r` alive holders charges
+    /// `r · slice_len` against the budget).
+    pub scanned_blocks: u64,
+    /// Blocks that failed verification.
+    pub corrupt_blocks: u64,
+    /// Copies (slot, holder) quarantined: dropped from the holder index
+    /// and the holder's store, pending repair.
+    pub quarantined: usize,
+    /// Replica units re-created by the §IV-E repair round this call
+    /// triggered (covers the quarantined copies and any other currently
+    /// missing replicas — repair is idempotent and heals everything due).
+    pub repaired: usize,
+    /// Slots where corruption ate EVERY remaining alive copy: nothing to
+    /// repair from; a targeted load of those blocks reports
+    /// [`Error::IrrecoverableDataLoss`](crate::error::Error::IrrecoverableDataLoss).
+    pub irrecoverable: usize,
+    /// Did the cursor complete a full circle over the slot space?
+    pub wrapped: bool,
+    /// Network cost of the repair round (zero when nothing was corrupt —
+    /// the scan itself is local and free under the cost model).
+    pub cost: PhaseCost,
+}
+
+impl Dataset {
+    /// Verify up to `budget_blocks` resident blocks (counted per copy)
+    /// against their checksums, starting at the persistent cursor;
+    /// quarantine and repair what fails. At least one slot is always
+    /// processed, so any positive budget makes progress and repeated calls
+    /// eventually wrap the whole dataset (`wrapped` in the report).
+    ///
+    /// Cost-model datasets (`submit_virtual`) have no bytes to verify:
+    /// scrub returns a zero report and leaves the cursor alone.
+    ///
+    /// Like every routing operation, scrub refuses to run over a stale
+    /// communicator ([`Error::StaleEpoch`](crate::error::Error::StaleEpoch)):
+    /// rebalance or acknowledge first, which also re-clamps the cursor
+    /// into the (possibly shrunk) new slot space.
+    pub fn scrub(&mut self, cluster: &mut Cluster, budget_blocks: u64) -> Result<ScrubReport> {
+        self.ensure_submitted()?;
+        self.ensure_current_epoch(cluster)?;
+        if !self.is_execution_mode() {
+            return Ok(ScrubReport::default());
+        }
+
+        let slots = self.dist.world();
+        if self.scrub_slot >= slots {
+            // a rebalance shrank the slot space under the cursor
+            self.scrub_slot = 0;
+        }
+        let mut visited = 0usize;
+        let mut scanned = 0u64;
+        let mut found = 0u64;
+        // (slot, holder) pairs to quarantine, pushed in slot-grouped walk
+        // order; lazily allocated so the clean path allocates nothing.
+        let mut corrupt: Vec<(usize, usize)> = Vec::new();
+        loop {
+            let slot = self.scrub_slot;
+            let range = self.dist.slice_range(slot);
+            for &pe in self.holder_index.holders_of(slot) {
+                let pe = pe as usize;
+                if !cluster.is_alive(pe) {
+                    continue; // dead copies are reclaim's business, not ours
+                }
+                let bad = self.stores[pe].corrupt_blocks(range.start, range.len());
+                scanned += range.len();
+                if bad > 0 {
+                    found += bad;
+                    corrupt.push((slot, pe));
+                }
+            }
+            self.scrub_slot = (slot + 1) % slots;
+            visited += 1;
+            if visited >= slots || scanned >= budget_blocks {
+                break;
+            }
+        }
+        let wrapped = visited >= slots;
+
+        // Quarantine: drop each corrupt copy from routing (holder index)
+        // AND storage (the slice itself) — removing only one would either
+        // keep serving rotten bytes or make repair insert an overlapping
+        // duplicate over them.
+        let mut quarantined = 0usize;
+        for &(slot, pe) in &corrupt {
+            let range = self.dist.slice_range(slot);
+            let in_index = self.holder_index.remove(slot, pe);
+            let in_store = self.stores[pe].remove(range.start, range.len());
+            debug_assert!(in_index && in_store, "quarantined copy missing from index or store");
+            quarantined += 1;
+        }
+
+        // Slots with no alive copy left are beyond repair. `corrupt` is
+        // slot-grouped (the walk finishes a slot before moving on), so
+        // adjacent dedup counts each slot once.
+        let mut irrecoverable = 0usize;
+        let mut prev_slot = usize::MAX;
+        for &(slot, _) in &corrupt {
+            if slot == prev_slot {
+                continue;
+            }
+            prev_slot = slot;
+            let survivor = self
+                .holder_index
+                .holders_of(slot)
+                .iter()
+                .any(|&pe| cluster.is_alive(pe as usize));
+            if !survivor {
+                irrecoverable += 1;
+            }
+        }
+
+        let mut repaired = 0usize;
+        let mut cost = PhaseCost::default();
+        if quarantined > 0 {
+            let plan = self.plan_repair(cluster, SCRUB_REPAIR_SCHEME)?;
+            let bs = self.cfg.block_size as u64;
+            let phase = charge_repair_plans(cluster, &[(&plan, bs)])?;
+            let report = self.apply_repair(plan, phase)?;
+            repaired = report.transfers;
+            cost = report.cost;
+        }
+
+        Ok(ScrubReport {
+            scanned_blocks: scanned,
+            corrupt_blocks: found,
+            quarantined,
+            repaired,
+            irrecoverable,
+            wrapped,
+            cost,
+        })
+    }
+
+    /// Flip one stored bit on PE `pe` — the silent-corruption injection
+    /// surface the fault models drive (`simnet/failure.rs`). `byte`
+    /// indexes the concatenation of that PE's real payloads
+    /// ([`PeStore::corrupt_bit_at`](crate::restore::store::PeStore::corrupt_bit_at));
+    /// returns the *original* block id whose content changed, or None when
+    /// the offset is past the resident bytes (the strike missed).
+    pub fn corrupt_bit(&mut self, pe: usize, byte: u64, bit: u8) -> Option<u64> {
+        let y = self.stores[pe].corrupt_bit_at(byte, bit)?;
+        Some(self.dist.unpermute_block(y))
+    }
+}
+
+impl ReStore {
+    /// [`Dataset::scrub`] on dataset 0 (the single-dataset facade).
+    pub fn scrub(&mut self, cluster: &mut Cluster, budget_blocks: u64) -> Result<ScrubReport> {
+        self.datasets[0].scrub(cluster, budget_blocks)
+    }
+
+    /// [`Dataset::corrupt_bit`] on dataset 0 (the single-dataset facade).
+    pub fn corrupt_bit(&mut self, pe: usize, byte: u64, bit: u8) -> Option<u64> {
+        self.datasets[0].corrupt_bit(pe, byte, bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::error::Error;
+    use crate::restore::block::{BlockRange, RangeSet};
+    use crate::restore::store::HolderIndex;
+    use crate::restore::LoadRequest;
+
+    const P: usize = 16;
+    const BS: usize = 8; // bytes per block
+    const BPP: usize = 64; // blocks per PE
+    const R: usize = 4;
+
+    fn build() -> (Cluster, ReStore, Vec<Vec<u8>>) {
+        let cfg = RestoreConfig::builder(P, BS, BPP).replicas(R).build().unwrap();
+        let mut cluster = Cluster::new_execution(P, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards: Vec<Vec<u8>> = (0..P)
+            .map(|pe| (0..BPP * BS).map(|i| (pe * 31 + i * 7) as u8).collect())
+            .collect();
+        rs.submit(&mut cluster, &shards).unwrap();
+        (cluster, rs, shards)
+    }
+
+    /// Byte-exact golden reload of the whole dataset from one survivor.
+    fn assert_full_reload(rs: &mut ReStore, cluster: &mut Cluster, shards: &[Vec<u8>]) {
+        let pe = cluster.survivors()[0];
+        let n = (shards.len() * BPP) as u64;
+        let reqs =
+            vec![LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(0, n)]) }];
+        let out = rs.load(cluster, &reqs).unwrap();
+        let mut want = Vec::with_capacity(shards.len() * BPP * BS);
+        for x in 0..n as usize {
+            let (pe, off) = (x / BPP, (x % BPP) * BS);
+            want.extend_from_slice(&shards[pe][off..off + BS]);
+        }
+        assert_eq!(out.shards[0].bytes.as_deref().unwrap(), &want[..]);
+    }
+
+    /// Cluster ranks of all `R` copies of original block `x`.
+    fn copy_holders(rs: &ReStore, x: u64) -> (u64, Vec<usize>) {
+        let ds = &rs.datasets()[0];
+        let y = ds.distribution().permute_block(x);
+        let holders =
+            (0..R).map(|k| ds.cluster_rank(ds.distribution().holder(y, k))).collect();
+        (y, holders)
+    }
+
+    #[test]
+    fn clean_scrub_wraps_counts_every_copy_and_is_free() {
+        let (mut cluster, mut rs, _) = build();
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert!(report.wrapped);
+        // every slot has R alive copies: R · n blocks cross-checked
+        assert_eq!(report.scanned_blocks, (R * P * BPP) as u64);
+        assert_eq!(report.corrupt_blocks, 0);
+        assert_eq!(report.quarantined, 0);
+        assert_eq!(report.repaired, 0);
+        assert_eq!(report.irrecoverable, 0);
+        assert_eq!(report.cost, PhaseCost::default(), "clean scan charges nothing");
+        assert_eq!(rs.datasets()[0].scrub_slot, 0, "full circle parks the cursor home");
+    }
+
+    #[test]
+    fn scrub_budget_advances_the_cursor_incrementally() {
+        let (mut cluster, mut rs, _) = build();
+        // one slot costs R · BPP scanned blocks; budget exactly one slot
+        let per_slot = (R * BPP) as u64;
+        for step in 1..=P {
+            let report = rs.scrub(&mut cluster, per_slot).unwrap();
+            assert_eq!(report.scanned_blocks, per_slot, "step {step}");
+            assert!(!report.wrapped, "step {step}: one slot is not a full circle");
+            assert_eq!(rs.datasets()[0].scrub_slot, step % P, "step {step}");
+        }
+        // budget 0 still makes progress (exactly one slot)
+        let report = rs.scrub(&mut cluster, 0).unwrap();
+        assert_eq!(report.scanned_blocks, per_slot);
+        assert_eq!(rs.datasets()[0].scrub_slot, 1);
+    }
+
+    #[test]
+    fn scrub_quarantines_and_repairs_a_corrupt_copy() {
+        let (mut cluster, mut rs, shards) = build();
+        let x = 100u64;
+        let (y, holders) = copy_holders(&rs, x);
+        let victim = holders[0];
+        assert!(rs.datasets[0].stores[victim].corrupt_block_bit(y, 3));
+
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert!(report.wrapped);
+        assert_eq!(report.corrupt_blocks, 1);
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.repaired, 1, "exactly the quarantined copy is re-created");
+        assert_eq!(report.irrecoverable, 0);
+
+        // the copy is back on the same PE (its deterministic home is
+        // alive), byte-identical to its siblings, and the index matches a
+        // from-scratch rescan
+        let ds = &rs.datasets()[0];
+        assert!(ds.stores()[victim].holds(y, 1));
+        assert_eq!(ds.stores()[victim].verify(y, 1), None);
+        assert_eq!(
+            *rs.holder_index(),
+            HolderIndex::rebuild(rs.stores(), rs.distribution()),
+            "holder index drifted"
+        );
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+
+        // a second pass finds nothing left to do
+        let again = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert_eq!(again.corrupt_blocks, 0);
+        assert_eq!(again.quarantined, 0);
+        assert_eq!(again.repaired, 0);
+    }
+
+    #[test]
+    fn all_copies_corrupt_is_irrecoverable_and_load_says_so() {
+        let (mut cluster, mut rs, _) = build();
+        let x = 42u64;
+        let (y, holders) = copy_holders(&rs, x);
+        for &pe in &holders {
+            assert!(rs.datasets[0].stores[pe].corrupt_block_bit(y, 2));
+        }
+
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert_eq!(report.corrupt_blocks, R as u64);
+        assert_eq!(report.quarantined, R);
+        assert_eq!(report.irrecoverable, 1, "no surviving copy to repair from");
+        assert_eq!(report.repaired, 0);
+
+        // targeted load of the lost block: IDL naming the original range
+        let reqs = vec![LoadRequest {
+            pe: 0,
+            ranges: RangeSet::new(vec![BlockRange::new(x, x + 1)]),
+        }];
+        match rs.load(&mut cluster, &reqs) {
+            Err(Error::IrrecoverableDataLoss { start, end, .. }) => {
+                assert_eq!((start, end), (x, x + 1));
+            }
+            other => panic!("expected IrrecoverableDataLoss, got {other:?}"),
+        }
+        // untouched blocks still load fine around the crater
+        let reqs = vec![LoadRequest {
+            pe: 0,
+            ranges: RangeSet::new(vec![BlockRange::new(x + 1, x + 9)]),
+        }];
+        assert!(rs.load(&mut cluster, &reqs).is_ok());
+    }
+
+    #[test]
+    fn corrupt_bit_names_the_original_block_and_scrub_finds_it() {
+        let (mut cluster, mut rs, _) = build();
+        let hit = rs.corrupt_bit(7, 40, 1).expect("offset 40 is resident");
+        assert!(hit < (P * BPP) as u64, "original block id");
+        // past the R · BPP · BS resident bytes: the strike misses
+        assert_eq!(rs.corrupt_bit(7, (R * BPP * BS) as u64, 1), None);
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert_eq!(report.corrupt_blocks, 1);
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.repaired, 1);
+    }
+
+    #[test]
+    fn cost_model_scrub_is_a_zero_report() {
+        let cfg = RestoreConfig::builder(P, BS, BPP).replicas(R).build().unwrap();
+        let mut cluster = Cluster::new_execution(P, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit_virtual(&mut cluster).unwrap();
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert_eq!(report.scanned_blocks, 0);
+        assert!(!report.wrapped);
+        assert_eq!(rs.datasets()[0].scrub_slot, 0, "cursor untouched");
+    }
+}

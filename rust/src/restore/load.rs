@@ -260,11 +260,18 @@ impl Dataset {
     /// (execution mode copies the payload; cost-model mode returns `None`
     /// bytes) — the back half shared by [`Dataset::load`] and
     /// [`ReStore::load_many`].
+    ///
+    /// Every run is checksum-verified against the sums latched at submit
+    /// time before a single byte is copied, so silent corruption (bit rot,
+    /// a torn write) surfaces as [`Error::CorruptBlock`] instead of
+    /// garbage in the output shards. Verification is read-only — it names
+    /// the corrupt holder so the caller can `Dataset::scrub` to quarantine
+    /// and repair it, but a failed load never mutates the store.
     fn assemble_shards(
         &self,
         requests: &[LoadRequest],
         runs: &[Run],
-    ) -> Vec<LoadedShard> {
+    ) -> Result<Vec<LoadedShard>> {
         let bs = self.cfg.block_size as u64;
         let execution = self.is_execution_mode();
         let mut shards: Vec<LoadedShard> = requests
@@ -276,6 +283,13 @@ impl Dataset {
             .collect();
         if execution {
             for run in runs {
+                if let Some(y) = self.stores[run.server].verify(run.perm_start, run.len) {
+                    return Err(Error::CorruptBlock {
+                        dataset: self.id,
+                        block: self.dist.unpermute_block(y),
+                        holder: run.server,
+                    });
+                }
                 let src = self.stores[run.server]
                     .read(run.perm_start, run.len)
                     .expect("execution-mode store must hold real bytes");
@@ -284,7 +298,7 @@ impl Dataset {
                 dst[off..off + src.len()].copy_from_slice(src);
             }
         }
-        shards
+        Ok(shards)
     }
 
     fn load_with_scratch(
@@ -350,7 +364,7 @@ impl Dataset {
         let data_cost = phase.commit();
 
         // --- Assemble outputs (execution mode) ---------------------------
-        let shards = self.assemble_shards(requests, &scratch.runs);
+        let shards = self.assemble_shards(requests, &scratch.runs)?;
 
         Ok(LoadOutput {
             shards,
@@ -502,8 +516,9 @@ impl Dataset {
         let mut holders = [0u32; INLINE_HOLDERS];
         let mut n = 0usize;
         for k in 0..r {
+            // same alive + holds (quarantine-aware) walk as `pick_server`
             let pe = self.cluster_rank(self.dist.holder(piece.perm_start, k));
-            if cluster.is_alive(pe) {
+            if cluster.is_alive(pe) && self.stores[pe].holds(piece.perm_start, piece.len) {
                 holders[n] = pe as u32;
                 n += 1;
             }
@@ -668,8 +683,11 @@ impl Dataset {
         for k in 0..r {
             // Distribution ranks live in the (possibly rebalanced) compact
             // world; translate to cluster ranks for liveness and routing.
+            // `holds` (one binary search, allocation-free) additionally
+            // skips holders whose copy `Dataset::scrub` quarantined: the
+            // PE is alive but its slice was removed pending repair.
             let pe = self.cluster_rank(dist.holder(piece.perm_start, k));
-            if cluster.is_alive(pe) {
+            if cluster.is_alive(pe) && self.stores[pe].holds(piece.perm_start, piece.len) {
                 if use_inline {
                     inline[n_alive] = pe;
                 } else {
@@ -881,7 +899,7 @@ impl ReStore {
             let ds = &self.datasets[*di];
             out_parts.push(LoadManyPart {
                 dataset: *id,
-                shards: ds.assemble_shards(requests, &scratch.runs),
+                shards: ds.assemble_shards(requests, &scratch.runs)?,
             });
         }
         Ok(LoadManyOutput {
@@ -1169,6 +1187,40 @@ mod tests {
             Err(Error::IrrecoverableDataLoss { .. }) => {}
             other => panic!("expected IDL, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn corrupt_block_fails_load_naming_block_and_holder() {
+        let (mut cluster, mut rs, _) = setup(8, 64, 4, Some(16));
+        // Flip a bit in EVERY copy of original block 5, so whichever
+        // holder the router picks serves corrupt bytes — detection must
+        // not depend on the replica choice.
+        let x = 5u64;
+        let ds = &mut rs.datasets[0];
+        let y = ds.dist.permute_block(x);
+        for k in 0..ds.dist.replicas() {
+            let pe = ds.cluster_rank(ds.dist.holder(y, k));
+            assert!(ds.stores[pe].corrupt_block_bit(y, 2));
+        }
+        let reqs = vec![LoadRequest {
+            pe: 0,
+            ranges: RangeSet::new(vec![BlockRange::new(x, x + 1)]),
+        }];
+        match rs.load(&mut cluster, &reqs) {
+            Err(Error::CorruptBlock { dataset, block, holder }) => {
+                assert_eq!(dataset, DatasetId::FIRST);
+                assert_eq!(block, x, "error names the ORIGINAL block id");
+                assert!(cluster.is_alive(holder));
+            }
+            other => panic!("expected CorruptBlock, got {other:?}"),
+        }
+        // Loads that never touch the corrupt block still succeed — the
+        // failed load mutated nothing.
+        let reqs = vec![LoadRequest {
+            pe: 1,
+            ranges: RangeSet::new(vec![BlockRange::new(x + 1, x + 5)]),
+        }];
+        rs.load(&mut cluster, &reqs).unwrap();
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //! * [`idl`] — §IV-D irrecoverable-data-loss probabilities (exact
 //!   inclusion–exclusion, the small-f approximation, and the Monte-Carlo
 //!   failure simulator behind Fig 3).
+//! * [`integrity`] — incremental checksum scrubbing: [`Dataset::scrub`]
+//!   walks a persistent cursor over the resident replicas, quarantines
+//!   copies that fail verification, and heals them through the §IV-E
+//!   repair machinery.
 //! * [`rebalance`] — §IV-B layout migration: rewrite the layout over the
 //!   `p'`-member communicator after any `ulfm` reshape (shrink,
 //!   substitute, or grow) with a minimal migration schedule, under a
@@ -37,6 +41,7 @@ pub mod block;
 pub mod distribution;
 pub mod hashing;
 pub mod idl;
+pub mod integrity;
 pub mod load;
 pub mod permutation;
 pub mod policy;
@@ -59,7 +64,10 @@ use rebalance::{charge_reshape_plans, RebalanceReport, ReshapePlan};
 use repair::{charge_repair_plans, RepairPlan, RepairReport, RepairScheme};
 use store::{HolderIndex, PeStore};
 
-pub use policy::{RecoveryAction, RecoveryOutcome, RecoveryPolicy};
+pub use integrity::{ScrubReport, SCRUB_REPAIR_SCHEME};
+pub use policy::{
+    RecoveryAction, RecoveryOutcome, RecoveryPolicy, RecoveryStep, MAX_RECOVERY_ATTEMPTS,
+};
 pub use registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
@@ -95,6 +103,25 @@ pub struct LoadOutput {
 #[derive(Debug, Clone)]
 pub struct SubmitReport {
     pub cost: PhaseCost,
+}
+
+/// Step boundaries of the fused §IV-B reshape handshake
+/// ([`ReStore::rebalance_or_acknowledge_all_with_faults`]) at which a
+/// fault can be injected. Ordered as the handshake executes; the map is
+/// re-validated after every boundary, so a kill at any of them aborts
+/// with [`Error::StaleRankMap`] instead of proceeding against a
+/// communicator that no longer exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReshapeStep {
+    /// The map passed validation; nothing planned yet.
+    Validated,
+    /// Every eligible dataset's reshape plan is computed (read-only).
+    Planned,
+    /// The fused migration phases are charged; no store touched yet.
+    Charged,
+    /// Dataset `i`'s new layout was just installed (atomic per dataset:
+    /// earlier datasets are complete-new, later ones complete-old).
+    Installed(usize),
 }
 
 /// The replicated in-memory storage over a (simulated) cluster: a registry
@@ -308,6 +335,33 @@ impl ReStore {
         cluster: &mut Cluster,
         map: &RankMap,
     ) -> Result<Vec<Option<RebalanceReport>>> {
+        self.rebalance_or_acknowledge_all_with_faults(cluster, map, &mut |_, _| {})
+    }
+
+    /// [`ReStore::rebalance_or_acknowledge_all`] with a fault-injection
+    /// hook fired at every [`ReshapeStep`] boundary — the harness behind
+    /// the mid-recovery-kill tests: `inject` may kill PEs (or do nothing),
+    /// and the handshake re-validates the map after EVERY boundary, so a
+    /// failure that lands between planning and install surfaces as
+    /// [`Error::StaleRankMap`] *before* any dataset is torn. The atomicity
+    /// contract this proves:
+    ///
+    /// * an abort before the first `Installed(i)` leaves every dataset on
+    ///   its complete OLD layout, byte-intact (planning and charging never
+    ///   touch the stores; `apply_reshape` installs atomically-on-success);
+    /// * an abort after `Installed(i)` leaves datasets `≤ i` on their
+    ///   complete NEW layout and the rest on their complete old one —
+    ///   never a torn mixture. The caller retries with a fresh map
+    ///   ([`policy`] bounds the attempts); already-installed datasets are
+    ///   then `layout_current` and degrade to the O(1) acknowledge.
+    pub fn rebalance_or_acknowledge_all_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        map: &RankMap,
+        inject: &mut dyn FnMut(ReshapeStep, &mut Cluster),
+    ) -> Result<Vec<Option<RebalanceReport>>> {
+        map.validate_against(cluster)?;
+        inject(ReshapeStep::Validated, cluster);
         map.validate_against(cluster)?;
         // Plan FIRST, for every eligible dataset: planning is pure (no
         // clock, no store mutation), so a non-IDL error here leaves the
@@ -336,6 +390,8 @@ impl ReStore {
                 Err(e) => return Err(e),
             }
         }
+        inject(ReshapeStep::Planned, cluster);
+        map.validate_against(cluster)?;
 
         // ONE fused local-copy charge + ONE fused migration all-to-all for
         // every planned dataset (identical to the single-dataset charges
@@ -348,10 +404,14 @@ impl ReStore {
                 .map(|(i, plan)| (plan, self.datasets[*i].cfg.block_size as u64))
                 .collect();
             let (local_cost, net_cost) = charge_reshape_plans(cluster, &tagged)?;
+            inject(ReshapeStep::Charged, cluster);
+            map.validate_against(cluster)?;
             let shared = local_cost.then(net_cost);
             for (i, plan) in plans {
-                let report = self.datasets[i].apply_reshape(cluster, plan, shared);
+                let report = self.datasets[i].apply_reshape(cluster, plan, shared)?;
                 outcomes[i] = Some(report);
+                inject(ReshapeStep::Installed(i), cluster);
+                map.validate_against(cluster)?;
             }
         }
         for (i, ds) in self.datasets.iter_mut().enumerate() {
@@ -410,7 +470,7 @@ impl ReStore {
                 .collect();
             let cost = charge_repair_plans(cluster, &tagged)?;
             for (i, plan) in plans {
-                outcomes[i] = Some(self.datasets[i].apply_repair(plan, cost));
+                outcomes[i] = Some(self.datasets[i].apply_repair(plan, cost)?);
             }
         }
         Ok(outcomes)

@@ -26,8 +26,27 @@
 //! as far as the pool allows. Policies are driven repeatedly by the
 //! MTBF failure storms in `simnet::failure` (see
 //! `examples/failure_storm.rs` and `benches/policies.rs`).
+//!
+//! ## Mid-recovery failures
+//!
+//! A PE can die *while* the handshake runs. The epoch discipline makes
+//! that safe — a kill between the `ulfm` reshape and the fused rebalance
+//! invalidates the map, and the rebalance aborts with
+//! [`Error::StaleRankMap`] before any dataset layout is touched — but
+//! safe-and-stuck is not recovery. [`RecoveryPolicy::recover_with_faults`]
+//! closes the loop: the handshake is retried against the fresh survivor
+//! set (a new agree + reshape each attempt, each under a new epoch), up to
+//! [`MAX_RECOVERY_ATTEMPTS`] times. If failures outpace every attempt,
+//! the policy degrades to the always-convergent floor: one final shrink
+//! plus an acknowledge-only adoption (epoch catch-up and dead-store
+//! reclaim, no migration — an epoch-only step no concurrent kill can
+//! invalidate), reported with `degraded = true`. The injection hook fires
+//! at every [`RecoveryStep`] boundary, so tests and storms can land kills
+//! at each window of the handshake.
+//!
+//! [`Error::StaleRankMap`]: crate::error::Error::StaleRankMap
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::restore::rebalance::RebalanceReport;
 use crate::restore::repair::{RepairReport, RepairScheme};
 use crate::restore::ReStore;
@@ -77,6 +96,29 @@ pub struct RecoveryOutcome {
     pub recovery_time_s: f64,
 }
 
+/// Step boundaries of one recovery attempt at which
+/// [`RecoveryPolicy::recover_with_faults`] fires its injection hook —
+/// the windows where a concurrent failure can land.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryStep {
+    /// After `ulfm::agree`, before the communicator reshape. A kill here
+    /// is absorbed silently: the reshape reads the cluster's current
+    /// state, so the map it produces is already consistent with the death
+    /// (the reported `failed` set lags one wave, as real ULFM agreement
+    /// would).
+    Agreed,
+    /// After the `ulfm` reshape (epoch bumped, map produced), before the
+    /// fused rebalance installs any layout — the critical window: a kill
+    /// here stales the map, the rebalance aborts with every dataset's old
+    /// layout byte-intact, and the handshake retries.
+    Reshaped,
+    /// After the fused rebalance/acknowledge, before the repair round. A
+    /// kill here is absorbed: `needs_repair` is evaluated after the
+    /// injection, so freshly lost replicas of acknowledged datasets join
+    /// this round's repair; rebalanced datasets heal on the next recover.
+    Rebalanced,
+}
+
 /// A strategy for bringing cluster *and* store from "some members died"
 /// back to "every dataset loadable at full replication" — the full
 /// agree → reshape → rebalance/acknowledge → repair handshake.
@@ -85,16 +127,41 @@ pub trait RecoveryPolicy {
     fn name(&self) -> &'static str;
 
     /// Run one full recovery against the current failure set.
-    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome>;
+    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
+        self.recover_with_faults(cluster, store, &mut |_, _| {})
+    }
+
+    /// [`RecoveryPolicy::recover`] with a fault-injection hook fired at
+    /// every [`RecoveryStep`] boundary. The handshake retries (fresh
+    /// agree + reshape under a new epoch) whenever an injected failure
+    /// stales the map mid-attempt, up to [`MAX_RECOVERY_ATTEMPTS`] times,
+    /// then degrades to the acknowledge-only floor (`degraded = true`).
+    fn recover_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &mut ReStore,
+        inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
+    ) -> Result<RecoveryOutcome>;
 }
 
 /// Probing scheme used by the policies' in-place repair rounds.
 const REPAIR_SCHEME: RepairScheme = RepairScheme::DoubleHashing;
 
+/// Attempts one [`RecoveryPolicy::recover_with_faults`] call makes before
+/// degrading to the acknowledge-only floor. Each attempt is a fresh
+/// agree + reshape under a new epoch, so the bound caps how long a storm
+/// that keeps killing PEs mid-handshake can stall a recovery.
+pub const MAX_RECOVERY_ATTEMPTS: usize = 4;
+
 /// Steps 3–4 of the handshake, shared by every policy: fused reshape
 /// across all datasets, then — only if some acknowledged dataset still
 /// references dead ranks (its replicas died with them) — one fused §IV-E
-/// repair round to restore the replication level in place.
+/// repair round to restore the replication level in place. The
+/// `Rebalanced` injection fires between the two, and `needs_repair` is
+/// evaluated *after* it: a kill in that window is absorbed (its lost
+/// replicas join this same repair round where possible; the rest wait for
+/// the next recover call).
+#[allow(clippy::too_many_arguments)]
 fn reshape_and_repair(
     cluster: &mut Cluster,
     store: &mut ReStore,
@@ -104,8 +171,10 @@ fn reshape_and_repair(
     map: RankMap,
     ulfm_cost: PhaseCost,
     t0: f64,
+    inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
 ) -> Result<RecoveryOutcome> {
     let dataset_outcomes = store.rebalance_or_acknowledge_all(cluster, &map)?;
+    inject(RecoveryStep::Rebalanced, cluster);
     let needs_repair = store.datasets().iter().zip(&dataset_outcomes).any(|(ds, outcome)| {
         ds.is_submitted()
             && outcome.is_none()
@@ -128,6 +197,57 @@ fn reshape_and_repair(
     })
 }
 
+/// What one recovery attempt agreed and reshaped:
+/// `(failed, action, degraded, map, ulfm_cost)`.
+type AttemptResult = Result<(Vec<usize>, RecoveryAction, bool, RankMap, PhaseCost)>;
+
+/// The bounded-retry skeleton every policy shares. `attempt` runs steps
+/// 1–2 (agree + reshape, firing `RecoveryStep::Agreed` in between);
+/// `RecoveryStep::Reshaped` fires after it — the critical window between
+/// the epoch bump and the layout install. A [`Error::StaleRankMap`] /
+/// [`Error::StaleEpoch`] abort (an injected kill invalidated the map
+/// before any layout moved) triggers a fresh attempt; after
+/// [`MAX_RECOVERY_ATTEMPTS`] the recovery degrades to one final shrink +
+/// acknowledge-only adoption — an epoch-only step that cannot go stale —
+/// with `degraded = true` and no dataset rebalanced or repaired.
+fn retry_handshake(
+    cluster: &mut Cluster,
+    store: &mut ReStore,
+    inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
+    attempt: &mut dyn FnMut(&mut Cluster, &mut dyn FnMut(RecoveryStep, &mut Cluster)) -> AttemptResult,
+) -> Result<RecoveryOutcome> {
+    let t0 = cluster.now();
+    for _ in 0..MAX_RECOVERY_ATTEMPTS {
+        let (failed, action, degraded, map, ulfm_cost) = attempt(cluster, &mut *inject)?;
+        inject(RecoveryStep::Reshaped, cluster);
+        match reshape_and_repair(
+            cluster, store, failed, action, degraded, map, ulfm_cost, t0, &mut *inject,
+        ) {
+            Err(Error::StaleRankMap { .. }) | Err(Error::StaleEpoch { .. }) => continue,
+            done => return done,
+        }
+    }
+    // Attempts exhausted: the storm outpaced every reshape. Converge on
+    // the floor no kill can invalidate — shrink once more (the epoch bump
+    // the acknowledge adopts) and acknowledge every dataset in place. No
+    // migration, no repair: loads route around the dead ranks until a
+    // calmer recover call finishes the job.
+    let (failed, agree_cost) = ulfm::agree(cluster);
+    let (map, shrink_cost) = ulfm::shrink(cluster);
+    store.acknowledge_shrink(cluster)?;
+    let n = store.n_datasets();
+    Ok(RecoveryOutcome {
+        failed,
+        action: RecoveryAction::Shrunk { new_world: map.new_world() },
+        degraded: true,
+        map,
+        dataset_outcomes: vec![None; n],
+        repair_outcomes: None,
+        ulfm_cost: agree_cost.then(shrink_cost),
+        recovery_time_s: cluster.now() - t0,
+    })
+}
+
 /// The paper's policy: agree, shrink to the survivors, rebalance.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Shrink;
@@ -137,13 +257,19 @@ impl RecoveryPolicy for Shrink {
         "shrink"
     }
 
-    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
-        let t0 = cluster.now();
-        let (failed, agree_cost) = ulfm::agree(cluster);
-        let (map, shrink_cost) = ulfm::shrink(cluster);
-        let action = RecoveryAction::Shrunk { new_world: map.new_world() };
-        let cost = agree_cost.then(shrink_cost);
-        reshape_and_repair(cluster, store, failed, action, false, map, cost, t0)
+    fn recover_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &mut ReStore,
+        inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
+    ) -> Result<RecoveryOutcome> {
+        retry_handshake(cluster, store, inject, &mut |cluster, inject| {
+            let (failed, agree_cost) = ulfm::agree(cluster);
+            inject(RecoveryStep::Agreed, cluster);
+            let (map, shrink_cost) = ulfm::shrink(cluster);
+            let action = RecoveryAction::Shrunk { new_world: map.new_world() };
+            Ok((failed, action, false, map, agree_cost.then(shrink_cost)))
+        })
     }
 }
 
@@ -158,24 +284,31 @@ impl RecoveryPolicy for Substitute {
         "substitute"
     }
 
-    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
-        let t0 = cluster.now();
-        let (failed, agree_cost) = ulfm::agree(cluster);
-        let n_dead = cluster.comm().iter().filter(|&&r| !cluster.is_alive(r)).count();
-        if n_dead > 0 && cluster.n_spares() >= n_dead {
-            let (map, sub_cost) = ulfm::substitute(cluster)?;
-            let action = RecoveryAction::Substituted { replaced: n_dead };
-            let cost = agree_cost.then(sub_cost);
-            reshape_and_repair(cluster, store, failed, action, false, map, cost, t0)
-        } else {
-            let (map, shrink_cost) = ulfm::shrink(cluster);
-            let action = RecoveryAction::Shrunk { new_world: map.new_world() };
-            let cost = agree_cost.then(shrink_cost);
-            // degraded only when there *were* failures the pool could not
-            // cover — a no-failure call shrinking to the same members is
-            // the policy doing exactly what it should.
-            reshape_and_repair(cluster, store, failed, action, n_dead > 0, map, cost, t0)
-        }
+    fn recover_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &mut ReStore,
+        inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
+    ) -> Result<RecoveryOutcome> {
+        retry_handshake(cluster, store, inject, &mut |cluster, inject| {
+            let (failed, agree_cost) = ulfm::agree(cluster);
+            inject(RecoveryStep::Agreed, cluster);
+            // counted after the injection: a kill at `Agreed` joins this
+            // very attempt's substitution arithmetic
+            let n_dead = cluster.comm().iter().filter(|&&r| !cluster.is_alive(r)).count();
+            if n_dead > 0 && cluster.n_spares() >= n_dead {
+                let (map, sub_cost) = ulfm::substitute(cluster)?;
+                let action = RecoveryAction::Substituted { replaced: n_dead };
+                Ok((failed, action, false, map, agree_cost.then(sub_cost)))
+            } else {
+                let (map, shrink_cost) = ulfm::shrink(cluster);
+                let action = RecoveryAction::Shrunk { new_world: map.new_world() };
+                // degraded only when there *were* failures the pool could
+                // not cover — a no-failure call shrinking to the same
+                // members is the policy doing exactly what it should.
+                Ok((failed, action, n_dead > 0, map, agree_cost.then(shrink_cost)))
+            }
+        })
     }
 }
 
@@ -194,28 +327,35 @@ impl RecoveryPolicy for ShrinkThenRegrow {
         "shrink+regrow"
     }
 
-    fn recover(&mut self, cluster: &mut Cluster, store: &mut ReStore) -> Result<RecoveryOutcome> {
-        let t0 = cluster.now();
-        let (failed, agree_cost) = ulfm::agree(cluster);
-        let (shrink_map, shrink_cost) = ulfm::shrink(cluster);
-        let shrunk_to = shrink_map.new_world();
-        let want = self.target_world.saturating_sub(shrunk_to).min(cluster.n_spares());
-        if want > 0 {
-            // The datasets never see the intermediate shrunk world: the
-            // grow map supersedes the shrink map under the final epoch,
-            // and the single reshape below migrates straight to it.
-            let (grow_map, grow_cost) = ulfm::grow(cluster, want)?;
-            let regrown_to = shrunk_to + want;
-            let action = RecoveryAction::Regrown { shrunk_to, regrown_to };
-            let degraded = regrown_to < self.target_world;
-            let cost = agree_cost.then(shrink_cost).then(grow_cost);
-            reshape_and_repair(cluster, store, failed, action, degraded, grow_map, cost, t0)
-        } else {
-            let action = RecoveryAction::Shrunk { new_world: shrunk_to };
-            let degraded = shrunk_to < self.target_world;
-            let cost = agree_cost.then(shrink_cost);
-            reshape_and_repair(cluster, store, failed, action, degraded, shrink_map, cost, t0)
-        }
+    fn recover_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        store: &mut ReStore,
+        inject: &mut dyn FnMut(RecoveryStep, &mut Cluster),
+    ) -> Result<RecoveryOutcome> {
+        let target_world = self.target_world;
+        retry_handshake(cluster, store, inject, &mut |cluster, inject| {
+            let (failed, agree_cost) = ulfm::agree(cluster);
+            inject(RecoveryStep::Agreed, cluster);
+            let (shrink_map, shrink_cost) = ulfm::shrink(cluster);
+            let shrunk_to = shrink_map.new_world();
+            let want = target_world.saturating_sub(shrunk_to).min(cluster.n_spares());
+            if want > 0 {
+                // The datasets never see the intermediate shrunk world:
+                // the grow map supersedes the shrink map under the final
+                // epoch, and the single reshape migrates straight to it.
+                let (grow_map, grow_cost) = ulfm::grow(cluster, want)?;
+                let regrown_to = shrunk_to + want;
+                let action = RecoveryAction::Regrown { shrunk_to, regrown_to };
+                let degraded = regrown_to < target_world;
+                let cost = agree_cost.then(shrink_cost).then(grow_cost);
+                Ok((failed, action, degraded, grow_map, cost))
+            } else {
+                let action = RecoveryAction::Shrunk { new_world: shrunk_to };
+                let degraded = shrunk_to < target_world;
+                Ok((failed, action, degraded, shrink_map, agree_cost.then(shrink_cost)))
+            }
+        })
     }
 }
 
@@ -396,6 +536,61 @@ mod tests {
             *rs.holder_index(),
             HolderIndex::rebuild(rs.stores(), rs.distribution())
         );
+    }
+
+    #[test]
+    fn kill_between_reshape_and_install_retries_and_converges() {
+        let mut cluster = Cluster::new_execution(8, 4);
+        let (mut rs, shards) = build(&cluster, 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[1]);
+        let mut fired = 0usize;
+        let out = Shrink
+            .recover_with_faults(&mut cluster, &mut rs, &mut |step, cluster| {
+                if step == RecoveryStep::Reshaped && fired == 0 {
+                    fired += 1;
+                    cluster.kill(&[2]);
+                }
+            })
+            .unwrap();
+        assert_eq!(fired, 1);
+        assert!(!out.degraded, "one retry finished a clean handshake");
+        assert_eq!(out.action, RecoveryAction::Shrunk { new_world: 6 });
+        assert_eq!(out.failed, vec![1, 2], "the retry's agree sees the mid-recovery death");
+        assert_eq!(cluster.epoch(), 2, "one staled shrink + the good one");
+        assert_eq!(rs.epoch(), 2, "only the second map was installed");
+        assert!(out.dataset_outcomes[0].is_some(), "the retry rebalanced normally");
+        assert_full_reload(&mut rs, &mut cluster, &shards);
+    }
+
+    #[test]
+    fn relentless_mid_recovery_kills_degrade_within_the_attempt_bound() {
+        let mut cluster = Cluster::new_execution(16, 4);
+        let (mut rs, shards) = build(&cluster, 16);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[0]);
+        // one fresh victim per Reshaped window: every attempt's map goes
+        // stale before any layout is installed
+        let mut victims = 1usize..;
+        let mut reshaped_fires = 0usize;
+        let out = Shrink
+            .recover_with_faults(&mut cluster, &mut rs, &mut |step, cluster| {
+                if step == RecoveryStep::Reshaped {
+                    reshaped_fires += 1;
+                    cluster.kill(&[victims.next().unwrap()]);
+                }
+            })
+            .unwrap();
+        assert_eq!(reshaped_fires, MAX_RECOVERY_ATTEMPTS, "retry count is bounded");
+        assert!(out.degraded, "the floor is reported as a degradation");
+        assert!(out.dataset_outcomes.iter().all(|o| o.is_none()), "acknowledge-only");
+        assert!(out.repair_outcomes.is_none());
+        let survivors = 16 - 1 - MAX_RECOVERY_ATTEMPTS;
+        assert_eq!(out.action, RecoveryAction::Shrunk { new_world: survivors });
+        assert_eq!(out.failed.len(), 1 + MAX_RECOVERY_ATTEMPTS);
+        assert_eq!(rs.epoch(), cluster.epoch(), "the floor still adopts the epoch");
+        // every surviving byte stays loadable in the dead world
+        assert_full_reload(&mut rs, &mut cluster, &shards);
     }
 
     #[test]

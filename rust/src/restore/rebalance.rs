@@ -343,16 +343,49 @@ impl Dataset {
     /// already charged the phases (`charge_reshape_plans`) — `shared_cost`
     /// is recorded in the report (the fused local + migration cost, shared
     /// by every dataset rebalanced in the same handshake).
+    ///
+    /// Every source interval — retained AND migrated — is
+    /// checksum-verified up front, before a single byte moves: a reshape
+    /// must never launder silent corruption into a fresh layout whose
+    /// recomputed checksums would declare the rotten bytes healthy. A
+    /// mismatch aborts with
+    /// [`Error::CorruptBlock`](crate::error::Error::CorruptBlock) and,
+    /// because only the not-yet-installed new store set is ever written,
+    /// the old layout stays byte-intact (the swap is atomic-on-success) —
+    /// run `Dataset::scrub`, then rebalance again.
     pub(crate) fn apply_reshape(
         &mut self,
         cluster: &Cluster,
         plan: ReshapePlan,
         shared_cost: PhaseCost,
-    ) -> RebalanceReport {
+    ) -> Result<RebalanceReport> {
         let ReshapePlan { new_dist, to_cluster, transfers, keeps, kept_bytes_per_pe } = plan;
         let execution = self.is_execution_mode();
         let bs = self.config().block_size;
         let r = new_dist.replicas();
+
+        // Ingest verification first — all of it before any new-store write,
+        // so the error path does no wasted buffer work.
+        if execution {
+            let old_dist = self.distribution();
+            let corrupt = |pe: usize, perm_start: u64, blocks: u64| {
+                self.stores()[pe].verify(perm_start, blocks).map(|y| Error::CorruptBlock {
+                    dataset: self.id(),
+                    block: old_dist.unpermute_block(y),
+                    holder: pe,
+                })
+            };
+            for &(pe, perm_start, blocks) in &keeps {
+                if let Some(e) = corrupt(pe, perm_start, blocks) {
+                    return Err(e);
+                }
+            }
+            for t in &transfers {
+                if let Some(e) = corrupt(t.src, t.perm_start, t.blocks) {
+                    return Err(e);
+                }
+            }
+        }
         // One (mostly empty) store shell per machine slot, so activated
         // spares have a slot to receive their migrated slices.
         let world = self.stores().len();
@@ -420,7 +453,7 @@ impl Dataset {
         // PEs' old stores are dropped with the old store set (the former
         // standalone `drop_pe` reclaim, folded in).
         self.install_layout(cluster, new_dist, to_cluster, new_stores, new_index);
-        report
+        Ok(report)
     }
 
     /// §IV-B layout migration of THIS dataset: rewrite the layout over the
@@ -440,7 +473,7 @@ impl Dataset {
         let plan = self.plan_reshape(cluster, map)?;
         let bs = self.config().block_size as u64;
         let (local_cost, net_cost) = charge_reshape_plans(cluster, &[(&plan, bs)])?;
-        Ok(self.apply_reshape(cluster, plan, local_cost.then(net_cost)))
+        self.apply_reshape(cluster, plan, local_cost.then(net_cost))
     }
 }
 
@@ -888,6 +921,58 @@ mod tests {
         // the failed rebalance left the old layout fully intact
         assert_eq!(rs.epoch(), 0);
         assert_eq!(rs.distribution().world(), 16);
+    }
+
+    /// A reshape must refuse to launder silent corruption into the new
+    /// layout (whose recomputed checksums would declare the rotten bytes
+    /// healthy) — and, like every other failed reshape, leave the old
+    /// layout byte-intact.
+    #[test]
+    fn rebalance_refuses_corrupt_source_and_keeps_old_layout() {
+        let (mut cluster, mut rs, shards) = build(16, 64, 4, Some(16), true);
+        // Rot one bit in EVERY copy of one block: the new layout re-places
+        // each block r times, each placement reading SOME current copy
+        // (kept or migrated), so the reshape is guaranteed to read a
+        // corrupt source whichever holder the planner draws.
+        let x = 42u64;
+        let (y, holders) = {
+            let ds = &rs.datasets[0];
+            let y = ds.dist.permute_block(x);
+            (y, (0..4).map(|k| ds.cluster_rank(ds.dist.holder(y, k))).collect::<Vec<_>>())
+        };
+        for &pe in &holders {
+            assert!(rs.datasets[0].stores[pe].corrupt_block_bit(y, 5));
+        }
+        cluster.kill(&HALF_KILLS);
+        let (_f, map, _) = ulfm::recover(&mut cluster);
+        match rs.rebalance(&mut cluster, &map) {
+            Err(Error::CorruptBlock { block, holder, .. }) => {
+                assert_eq!(block, x);
+                assert!(holders.contains(&holder));
+            }
+            other => panic!("expected CorruptBlock, got {other:?}"),
+        }
+        // old layout fully intact: old epoch, old world, survivor bytes
+        assert_eq!(rs.epoch(), 0);
+        assert_eq!(rs.distribution().world(), 16);
+        assert_eq!(rs.stores()[15].slices().len(), 4);
+        // heal the bits (un-flip) and the SAME map rebalances fine, ending
+        // byte-identical to the never-corrupted run
+        for &pe in &holders {
+            assert!(rs.datasets[0].stores[pe].corrupt_block_bit(y, 5));
+        }
+        rs.rebalance(&mut cluster, &map).unwrap();
+        let (_fc, fresh) = fresh_resubmit(8, Some(16), 4, &shards);
+        for j in 0..8usize {
+            let ours = rs.stores()[map.new_to_old[j]].slices();
+            let want = fresh.stores()[j].slices();
+            for (g, w) in ours.iter().zip(want) {
+                let (SliceBuf::Real(gb), SliceBuf::Real(wb)) = (&g.buf, &w.buf) else {
+                    panic!("execution mode must store real bytes");
+                };
+                assert_eq!(gb, wb, "new rank {j} slice {:?}", g.range);
+            }
+        }
     }
 
     #[test]

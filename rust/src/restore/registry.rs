@@ -117,6 +117,11 @@ pub struct Dataset {
     /// Reusable buffers for the load pipeline — grown on first use, then
     /// reused so steady-state `load()` calls allocate nothing per piece.
     pub(crate) scratch: LoadScratch,
+    /// Incremental scrub cursor: the next permuted *slot* (slice number)
+    /// `Dataset::scrub` will verify. Wraps at the distribution world and
+    /// is re-clamped after a rebalance shrinks the slot space — see
+    /// `restore/integrity.rs`.
+    pub(crate) scrub_slot: usize,
 }
 
 impl Dataset {
@@ -148,6 +153,7 @@ impl Dataset {
             pe_map: (0..cfg.world as u32).collect(),
             epoch: cluster.epoch(),
             scratch: LoadScratch::default(),
+            scrub_slot: 0,
         })
     }
 

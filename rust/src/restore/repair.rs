@@ -243,7 +243,7 @@ impl crate::restore::registry::Dataset {
         let plan = self.plan_repair(cluster, scheme)?;
         let bs = self.config().block_size as u64;
         let cost = charge_repair_plans(cluster, &[(&plan, bs)])?;
-        Ok(self.apply_repair(plan, cost))
+        self.apply_repair(plan, cost)
     }
 
     /// Plan (read-only) the §IV-E repair of this dataset under the current
@@ -333,16 +333,32 @@ impl crate::restore::registry::Dataset {
     /// report. Transfers read only pre-call holders (see the stale-read
     /// note in [`Dataset::plan_repair`]) and distinct units occupy
     /// disjoint block ranges, so apply order is byte-irrelevant.
+    ///
+    /// Every transfer's source range is checksum-verified before it is
+    /// copied: repair must never *multiply* silent corruption by stamping
+    /// a rotten replica onto a fresh home. A mismatch aborts with
+    /// [`Error::CorruptBlock`](crate::error::Error::CorruptBlock) naming
+    /// the corrupt source. Transfers already applied stay — each is an
+    /// independently valid verified copy, and repair is idempotent, so
+    /// re-running after `Dataset::scrub` quarantines and heals the source
+    /// completes exactly the remaining transfers.
     pub(crate) fn apply_repair(
         &mut self,
         plan: RepairPlan,
         cost: crate::simnet::network::PhaseCost,
-    ) -> RepairReport {
+    ) -> crate::error::Result<RepairReport> {
         use crate::restore::store::SliceBuf;
 
         let bs = self.config().block_size as u64;
         let dist = self.distribution().clone();
         for t in &plan.transfers {
+            if let Some(y) = self.stores()[t.src].verify(t.perm_start, t.blocks) {
+                return Err(crate::error::Error::CorruptBlock {
+                    dataset: self.id,
+                    block: dist.unpermute_block(y),
+                    holder: t.src,
+                });
+            }
             let buf = match self.stores()[t.src].read(t.perm_start, t.blocks) {
                 Some(bytes) => SliceBuf::Real(bytes.to_vec()),
                 None => SliceBuf::Virtual(t.blocks * bs),
@@ -355,11 +371,11 @@ impl crate::restore::registry::Dataset {
             self.holder_index_mut().insert(dist.slice_of(t.perm_start), t.dst);
         }
 
-        RepairReport {
+        Ok(RepairReport {
             transfers: plan.transfers.len(),
             unrepairable: plan.unrepairable,
             cost,
-        }
+        })
     }
 }
 
@@ -606,6 +622,27 @@ mod golden {
                     "{tag}: holder index drifted"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn repair_refuses_to_copy_a_corrupt_source() {
+        let (mut cluster, mut rs, _) = build(16, 4, Some(16));
+        cluster.kill(&[1, 5]);
+        let ds = &mut rs.datasets[0];
+        let plan = ds.plan_repair(&cluster, RepairScheme::DoubleHashing).unwrap();
+        assert!(!plan.transfers.is_empty());
+        // Rot one bit in the first planned transfer's source slice: the
+        // apply must refuse to stamp that copy onto a fresh home.
+        let t = plan.transfers[0];
+        assert!(ds.stores[t.src].corrupt_block_bit(t.perm_start, 0));
+        let cost = charge_repair_plans(&mut cluster, &[(&plan, 8)]).unwrap();
+        match ds.apply_repair(plan, cost) {
+            Err(crate::error::Error::CorruptBlock { block, holder, .. }) => {
+                assert_eq!(holder, t.src);
+                assert_eq!(block, ds.dist.unpermute_block(t.perm_start));
+            }
+            other => panic!("expected CorruptBlock, got {other:?}"),
         }
     }
 

@@ -12,6 +12,19 @@
 
 use crate::restore::block::BlockRange;
 use crate::restore::distribution::Distribution;
+use crate::restore::hashing::block_checksum;
+
+/// Seed of the per-block checksum family. The permuted block id is mixed
+/// in (`CHECKSUM_SEED ^ y`), so a checksum binds both the content *and*
+/// the position of a block — an intact block served from the wrong offset
+/// fails verification just like a bit flip.
+pub const CHECKSUM_SEED: u64 = 0x1DE7_EC7A_B10C_4B5F;
+
+/// Checksum of permuted block `y` with content `bytes`.
+#[inline]
+pub fn checksum_of(y: u64, bytes: &[u8]) -> u64 {
+    block_checksum(CHECKSUM_SEED ^ y, bytes)
+}
 
 /// Storage payload of one slice.
 #[derive(Debug, Clone)]
@@ -35,11 +48,18 @@ impl SliceBuf {
     }
 }
 
-/// One stored slice: its permuted interval and the bytes.
+/// One stored slice: its permuted interval, the bytes, and the per-block
+/// integrity checksums.
 #[derive(Debug, Clone)]
 pub struct StoredSlice {
     pub range: BlockRange,
     pub buf: SliceBuf,
+    /// One checksum per block ([`checksum_of`]), maintained by every write
+    /// path (`insert`/`write`/`write_from`) so it always reflects the
+    /// legitimately-written content — a divergence IS the definition of
+    /// silent corruption. Empty in cost-model mode (a `Virtual` buf has no
+    /// bytes to sum; verification is a no-op there).
+    pub sums: Vec<u64>,
 }
 
 /// The replica store of a single PE.
@@ -56,11 +76,37 @@ impl PeStore {
 
     /// Insert a slice, keeping the list sorted by `range.start` (callers
     /// never insert overlapping slices — submit places disjoint stored
-    /// slices, repair checks `holds` first).
+    /// slices, repair checks `holds` first). Real payloads get their
+    /// per-block checksums latched from the inserted content.
     pub fn insert(&mut self, range: BlockRange, buf: SliceBuf) {
         debug_assert_eq!(buf.len(), range.len() * self.block_size as u64);
+        let sums = match &buf {
+            SliceBuf::Real(v) => {
+                let bs = self.block_size;
+                (0..range.len())
+                    .map(|b| checksum_of(range.start + b, &v[(b as usize * bs)..][..bs]))
+                    .collect()
+            }
+            SliceBuf::Virtual(_) => Vec::new(),
+        };
         let at = self.slices.partition_point(|s| s.range.start < range.start);
-        self.slices.insert(at, StoredSlice { range, buf });
+        self.slices.insert(at, StoredSlice { range, buf, sums });
+    }
+
+    /// Remove the stored slice exactly covering `[start, start + len)` —
+    /// the scrub quarantine primitive: a corrupt copy is dropped so §IV-E
+    /// repair can re-create it from a verified survivor. Returns whether a
+    /// slice was removed (false when nothing stored or the stored slice is
+    /// wider than the asked range — quarantine is slot-granular, matching
+    /// how submit/repair place whole slices).
+    pub fn remove(&mut self, start: u64, len: u64) -> bool {
+        match self.find_idx(start, len) {
+            Some(i) if self.slices[i].range == BlockRange::new(start, start + len) => {
+                self.slices.remove(i);
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Stored slices, sorted by permuted start.
@@ -130,6 +176,7 @@ impl PeStore {
         if let SliceBuf::Real(dst) = &mut s.buf {
             let off = ((start - s.range.start) * self.block_size as u64) as usize;
             dst[off..off + bytes.len()].copy_from_slice(bytes);
+            resum(self.block_size, s.range.start, dst, &mut s.sums, start, len);
         }
     }
 
@@ -151,7 +198,112 @@ impl PeStore {
         if let (SliceBuf::Real(dst), SliceBuf::Real(src)) = (&mut s.buf, bytes_or_len) {
             let off = ((start - s.range.start) * self.block_size as u64) as usize;
             dst[off..off + src.len()].copy_from_slice(src);
+            resum(self.block_size, s.range.start, dst, &mut s.sums, start, len);
         }
+    }
+
+    /// Verify the stored checksums of `[start, start + len)` against the
+    /// current buffer content; returns the first mismatching permuted
+    /// block id, or None when everything checks out. Allocation-free —
+    /// this runs on the steady-state load path for every assembled run.
+    /// A `Virtual` slice has no bytes and verifies trivially. Panics if
+    /// the range is not stored (callers route via the distribution, like
+    /// [`PeStore::read`]).
+    pub fn verify(&self, start: u64, len: u64) -> Option<u64> {
+        let Some(s) = self.find_slice(start, len) else {
+            panic!("PeStore::verify: permuted range [{start}, {}) not stored", start + len);
+        };
+        let SliceBuf::Real(v) = &s.buf else { return None };
+        let bs = self.block_size;
+        for b in 0..len {
+            let y = start + b;
+            let at = (y - s.range.start) as usize;
+            if checksum_of(y, &v[at * bs..][..bs]) != s.sums[at] {
+                return Some(y);
+            }
+        }
+        None
+    }
+
+    /// Count the corrupt blocks in `[start, start + len)` (0 = clean) —
+    /// the scrub scanner's bulk form of [`PeStore::verify`]. Same
+    /// allocation-free walk, same panics-if-unstored contract.
+    pub fn corrupt_blocks(&self, start: u64, len: u64) -> u64 {
+        let Some(s) = self.find_slice(start, len) else {
+            panic!("PeStore::corrupt_blocks: permuted range [{start}, {}) not stored", start + len);
+        };
+        let SliceBuf::Real(v) = &s.buf else { return 0 };
+        let bs = self.block_size;
+        (0..len)
+            .filter(|&b| {
+                let y = start + b;
+                let at = (y - s.range.start) as usize;
+                checksum_of(y, &v[at * bs..][..bs]) != s.sums[at]
+            })
+            .count() as u64
+    }
+
+    /// Bytes resident in `Real` payloads only — the corruptible surface
+    /// the fault injector samples over (`Virtual` slices have no bytes a
+    /// bit flip could land on).
+    pub fn real_bytes(&self) -> u64 {
+        self.slices
+            .iter()
+            .map(|s| match &s.buf {
+                SliceBuf::Real(v) => v.len() as u64,
+                SliceBuf::Virtual(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Flip one stored bit — the silent-corruption injection primitive.
+    /// `off` indexes the concatenation of this PE's `Real` payloads in
+    /// slice order (`[0, real_bytes())`); the checksums are deliberately
+    /// NOT updated (that divergence is what detection looks for). Returns
+    /// the permuted block id whose content changed, or None when `off` is
+    /// past the resident real bytes.
+    pub fn corrupt_bit_at(&mut self, off: u64, bit: u8) -> Option<u64> {
+        let mut skip = off;
+        for s in &mut self.slices {
+            if let SliceBuf::Real(v) = &mut s.buf {
+                if skip < v.len() as u64 {
+                    v[skip as usize] ^= 1 << (bit & 7);
+                    return Some(s.range.start + skip / self.block_size as u64);
+                }
+                skip -= v.len() as u64;
+            }
+        }
+        None
+    }
+
+    /// Flip `bit` of the first byte of permuted block `y`, if this PE
+    /// stores it in a `Real` slice — the block-addressed form of
+    /// [`PeStore::corrupt_bit_at`], used by tests that must corrupt a
+    /// *specific* block on a *specific* holder (e.g. all `r` copies at
+    /// once to prove the all-replicas-corrupt path). Checksums are
+    /// deliberately NOT updated. Returns whether a stored byte changed.
+    pub fn corrupt_block_bit(&mut self, y: u64, bit: u8) -> bool {
+        let Some(i) = self.find_idx(y, 1) else { return false };
+        let bs = self.block_size;
+        let s = &mut self.slices[i];
+        if let SliceBuf::Real(v) = &mut s.buf {
+            v[(y - s.range.start) as usize * bs] ^= 1 << (bit & 7);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Recompute the checksums of blocks `[start, start + len)` of a slice
+/// starting at `slice_start` whose full payload is `buf` — shared by the
+/// write paths, allocation-free.
+#[inline]
+fn resum(block_size: usize, slice_start: u64, buf: &[u8], sums: &mut [u64], start: u64, len: u64) {
+    for b in 0..len {
+        let y = start + b;
+        let at = (y - slice_start) as usize;
+        sums[at] = checksum_of(y, &buf[at * block_size..][..block_size]);
     }
 }
 
@@ -197,6 +349,21 @@ impl HolderIndex {
             if let Ok(at) = v.binary_search(&(pe as u32)) {
                 v.remove(at);
             }
+        }
+    }
+
+    /// Remove `pe` from a single slot's holder list — the quarantine
+    /// primitive: scrub drops only the corrupt copy's membership, leaving
+    /// the holder's other (clean) slices routable. Returns whether the
+    /// entry existed.
+    pub fn remove(&mut self, slot: usize, pe: usize) -> bool {
+        let v = &mut self.slots[slot];
+        match v.binary_search(&(pe as u32)) {
+            Ok(at) => {
+                v.remove(at);
+                true
+            }
+            Err(_) => false,
         }
     }
 
@@ -355,6 +522,74 @@ mod tests {
         assert_eq!(ix.holders_of(0), &[0]);
         assert_eq!(ix.holders_of(3), &[3]);
         assert_eq!(ix, HolderIndex::rebuild(&stores, &dist));
+    }
+
+    #[test]
+    fn checksums_latched_on_insert_and_refreshed_by_writes() {
+        let mut st = PeStore::new(4);
+        st.insert(BlockRange::new(8, 16), SliceBuf::Real((0..32).collect()));
+        assert_eq!(st.verify(8, 8), None);
+        assert_eq!(st.corrupt_blocks(8, 8), 0);
+        // a legitimate write keeps the sums in step with the content
+        st.write_from(10, &[9, 9, 9, 9]);
+        assert_eq!(st.verify(8, 8), None);
+        st.write(12, &SliceBuf::Real(vec![7; 8]));
+        assert_eq!(st.verify(8, 8), None);
+        // virtual slices have nothing to verify
+        let mut vt = PeStore::new(4);
+        vt.insert(BlockRange::new(0, 8), SliceBuf::Virtual(32));
+        assert_eq!(vt.verify(0, 8), None);
+        assert_eq!(vt.corrupt_blocks(0, 8), 0);
+        assert_eq!(vt.real_bytes(), 0);
+        assert_eq!(vt.corrupt_bit_at(0, 3), None);
+    }
+
+    #[test]
+    fn corrupt_bit_is_detected_and_located() {
+        let mut st = PeStore::new(4);
+        st.insert(BlockRange::new(8, 16), SliceBuf::Real((0..32).collect()));
+        st.insert(BlockRange::new(40, 44), SliceBuf::Real(vec![5; 16]));
+        assert_eq!(st.real_bytes(), 48);
+        // offset 34 lands in the second slice (byte 2 -> block 40)
+        assert_eq!(st.corrupt_bit_at(34, 0), Some(40));
+        assert_eq!(st.verify(8, 8), None, "first slice untouched");
+        assert_eq!(st.verify(40, 4), Some(40));
+        assert_eq!(st.corrupt_blocks(40, 4), 1);
+        // offset 13 -> first slice block 11 (byte 13, 4-byte blocks)
+        assert_eq!(st.corrupt_bit_at(13, 7), Some(11));
+        assert_eq!(st.verify(8, 8), Some(11));
+        // flipping the same bit back restores a clean verify
+        assert_eq!(st.corrupt_bit_at(13, 7), Some(11));
+        assert_eq!(st.verify(8, 8), None);
+        // past the resident payload: no-op
+        assert_eq!(st.corrupt_bit_at(48, 0), None);
+    }
+
+    #[test]
+    fn remove_quarantines_exact_slices_only() {
+        let mut st = PeStore::new(1);
+        st.insert(BlockRange::new(0, 10), SliceBuf::Real(vec![1; 10]));
+        st.insert(BlockRange::new(20, 30), SliceBuf::Real(vec![2; 10]));
+        assert!(!st.remove(0, 5), "sub-range of a stored slice is not removable");
+        assert!(!st.remove(10, 5), "unstored range");
+        assert!(st.remove(20, 10));
+        assert!(!st.holds(20, 10));
+        assert!(st.holds(0, 10), "other slices survive");
+        assert_eq!(st.resident_bytes(), 10);
+    }
+
+    #[test]
+    fn holder_index_single_slot_remove() {
+        let mut ix = HolderIndex::new(3);
+        for pe in [0usize, 2, 5] {
+            ix.insert(1, pe);
+            ix.insert(2, pe);
+        }
+        assert!(ix.remove(1, 2));
+        assert!(!ix.remove(1, 2), "already gone");
+        assert!(!ix.remove(0, 2), "never held");
+        assert_eq!(ix.holders_of(1), &[0, 5]);
+        assert_eq!(ix.holders_of(2), &[0, 2, 5], "other slots untouched");
     }
 
     #[test]

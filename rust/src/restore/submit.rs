@@ -80,6 +80,12 @@ impl Dataset {
 
         // Pre-create every PE's r slice buffers (zeroed in execution mode,
         // sized per slice) and register them in the reverse holder index.
+        // This is also where integrity begins: `PeStore::insert` latches
+        // per-block checksums for every Real slice and the zero-copy
+        // `write_from` below refreshes them per written unit, so when
+        // submit returns every stored block carries the checksum of its
+        // submitted content — the reference every later load/repair/
+        // rebalance/scrub verification compares against.
         for pe in 0..p {
             for k in 0..r {
                 let range = dist.stored_slice(pe, k);
@@ -420,6 +426,26 @@ mod tests {
         let want = acc.finish();
         let ser = PhaseCost::local_copy(cluster.network(), (cfg.blocks_per_pe * 8) as u64);
         assert_eq!(report.cost, ser.then(want));
+    }
+
+    #[test]
+    fn submit_latches_checksums_for_every_stored_slice() {
+        for s_pr in [Some(16), None] {
+            let cfg = cfg(8, 64, 4, s_pr);
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            rs.submit(&mut cluster, &make_shards(8, 64 * 8)).unwrap();
+            for pe in 0..8 {
+                for s in rs.stores()[pe].slices() {
+                    assert_eq!(s.sums.len() as u64, s.range.len(), "s_pr {s_pr:?} PE {pe}");
+                    assert_eq!(
+                        rs.stores()[pe].verify(s.range.start, s.range.len()),
+                        None,
+                        "s_pr {s_pr:?} PE {pe}: fresh submit must verify clean"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -53,8 +53,115 @@ pub fn node_failure(topo: &Topology, node: usize) -> Vec<usize> {
     topo.ranks_on_node(node).collect()
 }
 
-/// One storm arrival: the wall-clock the failure strikes at and the ranks
-/// it takes down.
+/// One silent-corruption strike: flip `bit` (0–7) of resident byte `byte`
+/// on PE `pe`. `byte` indexes the concatenation of that PE's real replica
+/// payloads, exactly the addressing of
+/// [`Dataset::corrupt_bit`](crate::restore::Dataset::corrupt_bit) /
+/// `PeStore::corrupt_bit_at` — apply a strike by forwarding the triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorruptionStrike {
+    pub pe: usize,
+    pub byte: u64,
+    pub bit: u8,
+}
+
+/// Silent-corruption model: bit flips arrive as a Poisson process against
+/// the cluster clock, at `byte_flip_rate_per_s` per *resident byte* per
+/// second (so a PE holding twice the replica bytes soaks up twice the
+/// strikes — the standard memory-fault scaling). With probability
+/// `node_burst_prob` a strike is *node-correlated*: `burst_flips` extra
+/// flips pepper random PEs of the victim's node (the DRAM-channel /
+/// row-hammer-style burst the per-block checksums must catch copy by
+/// copy). The model owns its RNG, so attaching it to a [`MtbfStorm`]
+/// leaves the storm's kill sequence bit-for-bit unchanged.
+#[derive(Debug, Clone)]
+pub struct CorruptionModel {
+    byte_flip_rate_per_s: f64,
+    node_burst_prob: f64,
+    burst_flips: usize,
+    rng: Rng,
+}
+
+impl CorruptionModel {
+    pub fn new(
+        byte_flip_rate_per_s: f64,
+        node_burst_prob: f64,
+        burst_flips: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(byte_flip_rate_per_s >= 0.0);
+        assert!((0.0..=1.0).contains(&node_burst_prob));
+        CorruptionModel {
+            byte_flip_rate_per_s,
+            node_burst_prob,
+            burst_flips,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Sample the strikes landing in the window `[t0, t1)`. `resident[pe]`
+    /// is the corruptible (real) byte count of cluster rank `pe` — what
+    /// `PeStore::real_bytes` reports, summed across datasets; missing
+    /// entries count as 0. Victim bytes are drawn uniformly over the alive
+    /// resident payload via a prefix walk, so strikes concentrate where
+    /// the data is. Deterministic per seed.
+    pub fn sample_window(
+        &mut self,
+        cluster: &Cluster,
+        t0: f64,
+        t1: f64,
+        resident: &[u64],
+    ) -> Vec<CorruptionStrike> {
+        let mut strikes = Vec::new();
+        let total: u64 = cluster
+            .survivors_iter()
+            .map(|pe| resident.get(pe).copied().unwrap_or(0))
+            .sum();
+        if t1 <= t0 || self.byte_flip_rate_per_s <= 0.0 || total == 0 {
+            return strikes;
+        }
+        let rate = self.byte_flip_rate_per_s * total as f64;
+        let mut t = t0;
+        loop {
+            t += -(1.0 - self.rng.gen_f64()).ln() / rate;
+            if t >= t1 {
+                return strikes;
+            }
+            let mut target = self.rng.gen_index(total as usize) as u64;
+            let mut victim = usize::MAX;
+            for pe in cluster.survivors_iter() {
+                let n = resident.get(pe).copied().unwrap_or(0);
+                if target < n {
+                    victim = pe;
+                    break;
+                }
+                target -= n;
+            }
+            debug_assert_ne!(victim, usize::MAX, "prefix walk must land inside total");
+            let bit = self.rng.gen_index(8) as u8;
+            strikes.push(CorruptionStrike { pe: victim, byte: target, bit });
+            if self.rng.gen_bool(self.node_burst_prob) {
+                let topo = cluster.topology();
+                let peers: Vec<usize> = topo
+                    .ranks_on_node(topo.node_of(victim))
+                    .filter(|&pe| {
+                        cluster.is_alive(pe) && resident.get(pe).copied().unwrap_or(0) > 0
+                    })
+                    .collect();
+                for _ in 0..self.burst_flips {
+                    let pe = peers[self.rng.gen_index(peers.len())];
+                    let byte = self.rng.gen_index(resident[pe] as usize) as u64;
+                    let bit = self.rng.gen_index(8) as u8;
+                    strikes.push(CorruptionStrike { pe, byte, bit });
+                }
+            }
+        }
+    }
+}
+
+/// One storm arrival: the wall-clock the failure strikes at, the ranks it
+/// takes down, and the silent-corruption strikes that accumulated since
+/// the previous event (empty unless a [`CorruptionModel`] is attached).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StormEvent {
     /// Simulated absolute time of the failure (seconds; compare against
@@ -63,6 +170,10 @@ pub struct StormEvent {
     /// Cluster ranks killed by this event (one PE, or a whole node for a
     /// correlated burst).
     pub kills: Vec<usize>,
+    /// Bit flips that landed in `[previous event, at_s)` — apply them to
+    /// the stores *before* processing the kills (the rot happened while
+    /// the machine was still running).
+    pub corruption: Vec<CorruptionStrike>,
 }
 
 /// MTBF-driven failure storm: failures arrive as a Poisson process against
@@ -79,13 +190,24 @@ pub struct MtbfStorm {
     pe_mtbf_s: f64,
     node_burst_prob: f64,
     rng: Rng,
+    corruption: Option<CorruptionModel>,
 }
 
 impl MtbfStorm {
     pub fn new(pe_mtbf_s: f64, node_burst_prob: f64, seed: u64) -> Self {
         assert!(pe_mtbf_s > 0.0, "MTBF must be positive");
         assert!((0.0..=1.0).contains(&node_burst_prob));
-        MtbfStorm { pe_mtbf_s, node_burst_prob, rng: Rng::seed_from_u64(seed) }
+        MtbfStorm { pe_mtbf_s, node_burst_prob, rng: Rng::seed_from_u64(seed), corruption: None }
+    }
+
+    /// Attach a silent-corruption model: every event sampled through
+    /// [`MtbfStorm::next_event_in`] then carries the bit flips that landed
+    /// between the previous event and this one. The model has its own RNG,
+    /// so the kill sequence is bit-for-bit the one the plain storm
+    /// produces with the same seed.
+    pub fn with_corruption(mut self, model: CorruptionModel) -> Self {
+        self.corruption = Some(model);
+        self
     }
 
     /// Sample the next failure event after `cluster.now()`. Returns `None`
@@ -93,8 +215,26 @@ impl MtbfStorm {
     /// weather). The victim is drawn uniformly from the alive members via
     /// the allocation-free survivor iterator; a node burst widens it to
     /// the victim's whole node (already-dead neighbors are no-ops at
-    /// `Cluster::kill`).
+    /// `Cluster::kill`). Any attached corruption model is skipped (no
+    /// resident-byte map given) — use [`MtbfStorm::next_event_in`].
     pub fn next_event(&mut self, cluster: &Cluster) -> Option<StormEvent> {
+        self.sample_kill_event(cluster)
+    }
+
+    /// [`MtbfStorm::next_event`] plus silent corruption: `resident[pe]`
+    /// gives each cluster rank's corruptible byte count (see
+    /// [`CorruptionModel::sample_window`]), and the returned event's
+    /// `corruption` holds the strikes accumulated over the inter-arrival
+    /// window `[cluster.now(), event.at_s)`.
+    pub fn next_event_in(&mut self, cluster: &Cluster, resident: &[u64]) -> Option<StormEvent> {
+        let mut ev = self.sample_kill_event(cluster)?;
+        if let Some(model) = &mut self.corruption {
+            ev.corruption = model.sample_window(cluster, cluster.now(), ev.at_s, resident);
+        }
+        Some(ev)
+    }
+
+    fn sample_kill_event(&mut self, cluster: &Cluster) -> Option<StormEvent> {
         let alive = cluster.n_alive();
         if alive < 2 {
             return None;
@@ -111,7 +251,7 @@ impl MtbfStorm {
         } else {
             vec![victim]
         };
-        Some(StormEvent { at_s: cluster.now() + gap_s, kills })
+        Some(StormEvent { at_s: cluster.now() + gap_s, kills, corruption: Vec::new() })
     }
 }
 
@@ -213,5 +353,89 @@ mod tests {
         assert_eq!(ev.kills.len(), 48);
         let node = cluster.topology().node_of(ev.kills[0]);
         assert_eq!(ev.kills, node_failure(cluster.topology(), node));
+    }
+
+    #[test]
+    fn corruption_model_is_deterministic_and_in_bounds() {
+        let mut cluster = Cluster::new_execution(16, 4);
+        cluster.kill(&[3, 7]);
+        let resident: Vec<u64> = (0..16).map(|pe| (pe as u64 + 1) * 512).collect();
+        let mut a = CorruptionModel::new(1.0e-5, 0.3, 2, 99);
+        let mut b = CorruptionModel::new(1.0e-5, 0.3, 2, 99);
+        let sa = a.sample_window(&cluster, 0.0, 5000.0, &resident);
+        let sb = b.sample_window(&cluster, 0.0, 5000.0, &resident);
+        assert_eq!(sa, sb, "same seed, same strikes");
+        assert!(!sa.is_empty(), "rate · bytes · window ≫ 1 must strike");
+        for s in &sa {
+            assert!(cluster.is_alive(s.pe), "dead PEs hold nothing corruptible");
+            assert!(s.byte < resident[s.pe], "strike inside the resident payload");
+            assert!(s.bit < 8);
+        }
+    }
+
+    #[test]
+    fn corruption_rate_scales_with_resident_bytes_and_window() {
+        let cluster = Cluster::new_execution(8, 4);
+        let resident = vec![100_000u64; 8]; // 8e5 bytes total
+        // rate 2e-5 per byte-second over 1000 s → mean 8e5·2e-5·1000 = 16e3?
+        // keep it small: 2.5e-8 → mean 0.02/s · 1000 s = 20 strikes
+        let mut model = CorruptionModel::new(2.5e-8, 0.0, 0, 17);
+        let mut n = 0usize;
+        let windows = 50;
+        for w in 0..windows {
+            let t0 = w as f64 * 1000.0;
+            n += model.sample_window(&cluster, t0, t0 + 1000.0, &resident).len();
+        }
+        let mean = n as f64 / windows as f64;
+        assert!((14.0..26.0).contains(&mean), "mean strikes per window {mean}");
+    }
+
+    #[test]
+    fn corruption_empty_window_or_payload_is_quiet() {
+        let cluster = Cluster::new_execution(4, 2);
+        let mut model = CorruptionModel::new(1.0, 0.5, 3, 1);
+        assert!(model.sample_window(&cluster, 10.0, 10.0, &[64u64; 4]).is_empty());
+        assert!(model.sample_window(&cluster, 0.0, 100.0, &[0u64; 4]).is_empty());
+        assert!(model.sample_window(&cluster, 0.0, 100.0, &[]).is_empty());
+        let mut zero = CorruptionModel::new(0.0, 0.0, 0, 1);
+        assert!(zero.sample_window(&cluster, 0.0, 1.0e9, &[64u64; 4]).is_empty());
+    }
+
+    #[test]
+    fn corruption_bursts_stay_on_the_victims_node() {
+        let cluster = Cluster::new_execution(16, 4);
+        let resident = vec![4096u64; 16];
+        let mut model = CorruptionModel::new(1.0e-6, 1.0, 3, 5);
+        let strikes = model.sample_window(&cluster, 0.0, 2000.0, &resident);
+        assert!(strikes.len() >= 4, "every strike drags 3 burst flips along");
+        assert_eq!(strikes.len() % 4, 0);
+        let topo = cluster.topology();
+        for group in strikes.chunks(4) {
+            let node = topo.node_of(group[0].pe);
+            for s in group {
+                assert_eq!(topo.node_of(s.pe), node, "burst flip left the node");
+            }
+        }
+    }
+
+    #[test]
+    fn storm_with_corruption_keeps_kills_and_fills_the_window() {
+        let cluster = Cluster::new_execution(32, 8);
+        let resident = vec![1u64 << 20; 32];
+        let mut plain = MtbfStorm::new(1000.0, 0.0, 7);
+        let mut rotten = MtbfStorm::new(1000.0, 0.0, 7)
+            .with_corruption(CorruptionModel::new(1.0e-8, 0.0, 0, 11));
+        let pe = plain.next_event(&cluster).unwrap();
+        let re = rotten.next_event_in(&cluster, &resident).unwrap();
+        assert_eq!(pe.kills, re.kills, "kill sequence unchanged by the model");
+        assert_eq!(pe.at_s, re.at_s);
+        assert!(pe.corruption.is_empty());
+        // ~32 MiB · 1e-8/Bs ≈ 0.33 strikes/s over a ~31 s mean gap: usually
+        // some strikes, always inside the window's payload bounds
+        for s in &re.corruption {
+            assert!(s.byte < resident[s.pe]);
+        }
+        // next_event on a corruption-armed storm stays quiet (no resident map)
+        assert!(rotten.next_event(&cluster).unwrap().corruption.is_empty());
     }
 }

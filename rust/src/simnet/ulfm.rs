@@ -42,14 +42,20 @@ pub struct RankMap {
     pub old_to_new: Vec<Option<usize>>,
     /// new rank -> old rank.
     pub new_to_old: Vec<usize>,
+    /// Cluster epoch this map describes — stamped by the `ulfm` primitive
+    /// right after its epoch bump, so staleness is diagnosable from the
+    /// map alone (every [`Error::StaleRankMap`] message carries the
+    /// observed map epoch vs the cluster's expected one).
+    pub epoch: u64,
 }
 
 impl RankMap {
-    /// Identity map over `p` alive ranks.
+    /// Identity map over `p` alive ranks (epoch 0 — a fresh cluster).
     pub fn identity(p: usize) -> Self {
         RankMap {
             old_to_new: (0..p).map(Some).collect(),
             new_to_old: (0..p).collect(),
+            epoch: 0,
         }
     }
 
@@ -70,7 +76,20 @@ impl RankMap {
     /// against. Failures surface as the dedicated
     /// [`Error::StaleRankMap`].
     pub fn validate_against(&self, cluster: &Cluster) -> Result<()> {
-        let err = |m: String| Err(Error::StaleRankMap(m));
+        // Every failure message carries the observed-vs-expected epoch
+        // pair: equal epochs with a dead member means "failures landed
+        // since the reconfiguration" (kills alone do not bump the epoch);
+        // unequal epochs mean the map is from an older reconfiguration.
+        let err = |m: String| {
+            Err(Error::StaleRankMap(format!(
+                "{m} (map observed at epoch {}, cluster expects epoch {})",
+                self.epoch,
+                cluster.epoch()
+            )))
+        };
+        if self.epoch != cluster.epoch() {
+            return err("map is from an earlier reconfiguration".to_string());
+        }
         if self.old_to_new.len() != cluster.world() {
             return err(format!(
                 "rank map covers {} old ranks, cluster world is {}",
@@ -110,7 +129,8 @@ fn map_from_comm(world: usize, comm: &[usize]) -> RankMap {
     for (new, &old) in comm.iter().enumerate() {
         old_to_new[old] = Some(new);
     }
-    RankMap { old_to_new, new_to_old: comm.to_vec() }
+    // The caller stamps the epoch once its `establish_comm` bumped it.
+    RankMap { old_to_new, new_to_old: comm.to_vec(), epoch: 0 }
 }
 
 /// Agreement on the failed set: every survivor learns which PEs died.
@@ -137,7 +157,7 @@ pub fn agree(cluster: &mut Cluster) -> (Vec<usize>, PhaseCost) {
 pub fn shrink(cluster: &mut Cluster) -> (RankMap, PhaseCost) {
     let new_comm: Vec<usize> =
         cluster.comm().iter().copied().filter(|&r| cluster.is_alive(r)).collect();
-    let map = map_from_comm(cluster.world(), &new_comm);
+    let mut map = map_from_comm(cluster.world(), &new_comm);
     let p = new_comm.len().max(2) as f64;
     let cost = PhaseCost {
         sim_time_s: SHRINK_BASE_S + SHRINK_PER_LOG_S * p.log2(),
@@ -146,6 +166,7 @@ pub fn shrink(cluster: &mut Cluster) -> (RankMap, PhaseCost) {
     };
     cluster.advance(&cost);
     cluster.establish_comm(new_comm);
+    map.epoch = cluster.epoch();
     (map, cost)
 }
 
@@ -189,8 +210,9 @@ pub fn substitute(cluster: &mut Cluster) -> Result<(RankMap, PhaseCost)> {
         ..Default::default()
     };
     cluster.advance(&cost);
-    let map = map_from_comm(cluster.world(), &new_comm);
+    let mut map = map_from_comm(cluster.world(), &new_comm);
     cluster.establish_comm(new_comm);
+    map.epoch = cluster.epoch();
     Ok((map, cost))
 }
 
@@ -228,8 +250,9 @@ pub fn grow(cluster: &mut Cluster, extra: usize) -> Result<(RankMap, PhaseCost)>
         ..Default::default()
     };
     cluster.advance(&cost);
-    let map = map_from_comm(cluster.world(), &new_comm);
+    let mut map = map_from_comm(cluster.world(), &new_comm);
     cluster.establish_comm(new_comm);
+    map.epoch = cluster.epoch();
     Ok((map, cost))
 }
 
@@ -277,6 +300,26 @@ mod tests {
         assert_eq!(c.epoch(), 2);
         // identity map over the wrong world
         assert!(RankMap::identity(4).validate_against(&c).is_err());
+    }
+
+    #[test]
+    fn rank_maps_carry_their_epoch_and_errors_name_the_pair() {
+        let mut c = Cluster::new_execution(8, 4);
+        c.kill(&[2]);
+        let (map, _) = shrink(&mut c);
+        assert_eq!(map.epoch, c.epoch());
+        c.kill(&[5]);
+        let (map2, _) = shrink(&mut c);
+        assert_eq!(map2.epoch, 2);
+        // every staleness message carries observed-vs-expected epochs
+        let msg = map.validate_against(&c).unwrap_err().to_string();
+        assert!(msg.contains("observed at epoch 1"), "{msg}");
+        assert!(msg.contains("expects epoch 2"), "{msg}");
+        // equal epochs + a fresh kill: the pair is still reported
+        c.kill(&[7]);
+        let msg = map2.validate_against(&c).unwrap_err().to_string();
+        assert!(msg.contains("observed at epoch 2"), "{msg}");
+        assert!(msg.contains("expects epoch 2"), "{msg}");
     }
 
     #[test]

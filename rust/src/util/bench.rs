@@ -95,9 +95,13 @@ impl BenchResult {
     }
 
     /// One machine-readable JSON object: `{"name": ..., "ns_per_iter": ...}`.
+    /// The value is emitted with `{:?}` (shortest round-tripping repr) —
+    /// fixed-point `{:.1}` used to truncate sub-0.05 ns metrics (IDL
+    /// probabilities, fractions ride in this field) to a flat `0.0`, which
+    /// `tools/validate_bench_json.py` now rejects as a broken measurement.
     pub fn json_line(&self) -> String {
         format!(
-            "{{\"name\": \"{}\", \"ns_per_iter\": {:.1}}}",
+            "{{\"name\": \"{}\", \"ns_per_iter\": {:?}}}",
             self.name.replace('\\', "\\\\").replace('"', "\\\""),
             self.stats.mean * 1e9
         )
@@ -180,6 +184,24 @@ mod tests {
         // quotes in names stay valid JSON
         let q = BenchResult { name: "a\"b".into(), stats: Stats::from(&[1e-9]) };
         assert!(q.json_line().contains("a\\\"b"));
+    }
+
+    #[test]
+    fn json_line_keeps_tiny_values_nonzero() {
+        // Raw metrics far below 1 ns (IDL probabilities and alive fractions
+        // ride the ns_per_iter field) must not collapse to "0.0" — the
+        // validator rejects non-positive values as broken measurements.
+        let r = BenchResult::from_value("idl-prob tiny", 1.0e-12);
+        let line = r.json_line();
+        assert!(!line.contains(": 0.0}"), "{line}");
+        let v: f64 = line
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim_end_matches('}')
+            .parse()
+            .unwrap();
+        assert!(v > 0.0 && v < 1.0e-9, "{line}");
     }
 
     #[test]

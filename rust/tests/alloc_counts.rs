@@ -44,6 +44,57 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     rebalance_planning_allocations_do_not_scale_with_world();
     unequal_slice_rebalance_planning_allocations_do_not_scale_with_world();
     survivor_iteration_and_agreement_allocations_do_not_scale_with_world();
+    clean_scrub_steps_allocate_nothing_at_any_world();
+    execution_load_checksum_verification_allocations_do_not_scale_with_block_count();
+}
+
+fn clean_scrub_steps_allocate_nothing_at_any_world() {
+    // The scrub clean path — the overwhelmingly common case: every copy
+    // verifies — reads the reverse holder index and the per-slice checksum
+    // tables in place. Both a single-slot budgeted step and a full cursor
+    // wrap must make ZERO heap allocations (the quarantine list is lazily
+    // allocated only when corruption is actually found), at any world.
+    let check_at = |p: usize| {
+        let cfg = RestoreConfig::builder(p, 8, 64).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(p, 8 * 64);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let (n_step, rep) = allocs_during(|| rs.scrub(&mut cluster, 0).unwrap());
+        assert!(rep.scanned_blocks > 0 && rep.corrupt_blocks == 0);
+        assert_eq!(n_step, 0, "single-slot scrub step allocated {n_step} times at p = {p}");
+        let (n_wrap, rep) = allocs_during(|| rs.scrub(&mut cluster, u64::MAX).unwrap());
+        assert!(rep.wrapped && rep.corrupt_blocks == 0);
+        assert_eq!(n_wrap, 0, "full clean scrub wrap allocated {n_wrap} times at p = {p}");
+    };
+    check_at(8);
+    check_at(32);
+}
+
+fn execution_load_checksum_verification_allocations_do_not_scale_with_block_count() {
+    // Same p, r, and bytes per PE; only the block granularity differs 8x
+    // (512 vs 4096 blocks verified per whole-space load). The checksum
+    // cross-check on load assembly must be allocation-free: after a
+    // warm-up call the steady-state allocation count is the output-shard
+    // bookkeeping only, identical across the two granularities.
+    let count_for = |bs: usize, bpp: usize| {
+        let cfg = RestoreConfig::builder(8, bs, bpp).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(8, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, bs * bpp);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let reqs = load_all_requests(&rs, &cluster);
+        rs.load(&mut cluster, &reqs).unwrap(); // warm every scratch buffer
+        let (n, out) = allocs_during(|| rs.load(&mut cluster, &reqs).unwrap());
+        assert!(out.shards.iter().all(|s| s.bytes.is_some()), "execution mode returns bytes");
+        n
+    };
+    let coarse = count_for(64, 64); // 512 blocks, 64 B each
+    let fine = count_for(8, 512); // 4096 blocks, 8 B each — same total bytes
+    assert_eq!(
+        coarse, fine,
+        "load-path checksum verification allocations scale with block count ({coarse} vs {fine})"
+    );
 }
 
 fn survivor_iteration_and_agreement_allocations_do_not_scale_with_world() {

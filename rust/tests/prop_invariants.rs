@@ -786,6 +786,223 @@ fn prop_substitute_and_grow_maps_validate_and_go_stale_across_storm_waves() {
     assert!(regrown >= 10, "only {regrown} re-grow waves ran — generator too narrow");
 }
 
+/// Scrub under random corruption waves: quarantine + §IV-E repair must
+/// leave the incrementally maintained holder index equal to a from-scratch
+/// [`HolderIndex::rebuild`], the §IV-C memory invariant intact, and every
+/// byte of the dataset loadable and golden — whether the wave was scrubbed
+/// in one full-budget wrap or in `p` single-slot budgeted steps.
+#[test]
+fn prop_scrub_quarantine_repair_restores_index_and_bytes_under_corruption_waves() {
+    use restore::restore::DatasetId;
+
+    let mut rng = Rng::seed_from_u64(0x5C2B);
+    let mut trials = 0usize;
+    while trials < 12 {
+        let cfg = random_config(&mut rng);
+        // r >= 3 keeps every slot repairable: a wave injects at most r - 1
+        // strikes, so at least one copy of any slot survives un-rotted.
+        if cfg.replicas < 3 {
+            continue;
+        }
+        trials += 1;
+        let mut cluster = Cluster::new_execution(cfg.world, 4);
+        let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+        let shards = shards_for(&cfg, &mut rng);
+        store.submit(&mut cluster, &shards).unwrap();
+
+        for wave in 0..4 {
+            let ctx = || format!("trial {trials} wave {wave} (p={}, r={})", cfg.world, cfg.replicas);
+            let n_strikes = 1 + rng.gen_index(cfg.replicas - 1);
+            for _ in 0..n_strikes {
+                let pe = rng.gen_index(cfg.world);
+                let resident = store.stores()[pe].real_bytes();
+                if resident == 0 {
+                    continue;
+                }
+                let byte = rng.gen_u64_below(resident);
+                store.corrupt_bit(pe, byte, rng.gen_index(8) as u8);
+            }
+
+            // even waves: one full-budget wrap; odd waves: p single-slot
+            // steps (budget 0 still makes progress) composing a full circle
+            let (mut quarantined, mut repaired, mut irrecoverable) = (0usize, 0usize, 0usize);
+            if wave % 2 == 0 {
+                let rep = store.scrub(&mut cluster, u64::MAX).unwrap();
+                assert!(rep.wrapped, "{}", ctx());
+                quarantined += rep.quarantined;
+                repaired += rep.repaired;
+                irrecoverable += rep.irrecoverable;
+            } else {
+                for _ in 0..cfg.world {
+                    let rep = store.scrub(&mut cluster, 0).unwrap();
+                    quarantined += rep.quarantined;
+                    repaired += rep.repaired;
+                    irrecoverable += rep.irrecoverable;
+                }
+            }
+            assert_eq!(irrecoverable, 0, "{}: <= r-1 strikes can never eat a whole slot", ctx());
+            assert_eq!(
+                repaired, quarantined,
+                "{}: repair must re-create exactly the quarantined copies",
+                ctx()
+            );
+
+            // the incrementally maintained index equals a from-scratch scan
+            assert_eq!(
+                *store.holder_index(),
+                HolderIndex::rebuild(store.stores(), store.distribution()),
+                "{}: index drifted",
+                ctx()
+            );
+            assert_memory_invariant(store.stores(), store.distribution());
+
+            // a second wrap over the repaired store finds nothing
+            let clean = store.scrub(&mut cluster, u64::MAX).unwrap();
+            assert_eq!(clean.corrupt_blocks, 0, "{}: corruption survived the scrub", ctx());
+
+            // golden oracle: every byte reloads exactly as submitted
+            let n = cfg.n_blocks();
+            let ranges = RangeSet::new(vec![BlockRange::new(0, n)]);
+            let reqs = vec![LoadRequest { pe: 0, ranges: ranges.clone() }];
+            let out = store
+                .dataset_mut(DatasetId::FIRST)
+                .unwrap()
+                .load(&mut cluster, &reqs)
+                .unwrap_or_else(|e| panic!("{}: reload failed: {e}", ctx()));
+            assert_eq!(
+                out.shards[0].bytes.as_deref().unwrap(),
+                expected_bytes(&shards, &ranges, &cfg),
+                "{}: repaired bytes differ from golden",
+                ctx()
+            );
+        }
+    }
+}
+
+/// A dataset's layout is *complete* and *golden*: the reverse holder index
+/// equals a from-scratch rebuild, the §IV-C memory invariant holds, every
+/// slot of the current distribution has its full r copies resident, and
+/// every stored block byte-equals the originally submitted shards. A torn
+/// (partially installed) layout fails at least one of these.
+fn assert_complete_and_golden(ds: &restore::restore::Dataset, shards: &[Vec<u8>], when: &str) {
+    let dist = ds.distribution();
+    assert_eq!(
+        *ds.holder_index(),
+        HolderIndex::rebuild(ds.stores(), dist),
+        "{when}: index torn"
+    );
+    assert_memory_invariant(ds.stores(), dist);
+    let bs = ds.config().block_size;
+    let bpp = ds.config().blocks_per_pe as u64;
+    let r = ds.config().replicas;
+    for slot in 0..dist.world() {
+        let range = dist.slice_range(slot);
+        if range.is_empty() {
+            continue;
+        }
+        let holders = ds.holder_index().holders_of(slot);
+        assert_eq!(holders.len(), r, "{when}: slot {slot} copy set torn");
+        for &pe in holders {
+            let bytes = ds.stores()[pe as usize]
+                .read(range.start, range.len())
+                .unwrap_or_else(|| panic!("{when}: slot {slot} copy on PE {pe} missing"));
+            for (i, y) in (range.start..range.end).enumerate() {
+                let x = dist.unpermute_block(y);
+                let exp = &shards[(x / bpp) as usize][((x % bpp) as usize) * bs..][..bs];
+                assert_eq!(&bytes[i * bs..(i + 1) * bs], exp, "{when}: block {x} rotted");
+            }
+        }
+    }
+}
+
+/// The torn-recovery invariant: a kill injected at EVERY step boundary of
+/// the fused reshape aborts the wave with a stale-map/epoch error and
+/// leaves every dataset with either its complete old layout or the
+/// complete new one — never a torn mix — after which a retry against a
+/// freshly minted map converges. Chained across waves, so each wave's
+/// starting state is the previous wave's post-retry layout.
+#[test]
+fn prop_mid_reshape_kill_leaves_complete_old_or_new_layouts_across_waves() {
+    use restore::restore::{DatasetId, ReshapeStep};
+
+    const P: usize = 20;
+    const BPP: usize = 32;
+    const BS: usize = 8;
+    let cfg = RestoreConfig::builder(P, BS, BPP).replicas(4).build().unwrap();
+    let cfg2 = RestoreConfig::builder(P, BS, BPP).replicas(2).build().unwrap();
+    let mut cluster = Cluster::new_execution(P, 4);
+    let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+    let ds2 = store.create_dataset(cfg2.clone(), &cluster).unwrap();
+    let mut rng = Rng::seed_from_u64(0x70B4);
+    let shards = shards_for(&cfg, &mut rng);
+    let shards2 = shards_for(&cfg2, &mut rng);
+    store.submit(&mut cluster, &shards).unwrap();
+    store.dataset_mut(ds2).unwrap().submit(&mut cluster, &shards2).unwrap();
+
+    let boundaries = [
+        ReshapeStep::Validated,
+        ReshapeStep::Planned,
+        ReshapeStep::Charged,
+        ReshapeStep::Installed(0),
+        ReshapeStep::Installed(1),
+    ];
+    for (wave, &target) in boundaries.iter().enumerate() {
+        // the wave's ordinary failure, then the shrink handshake
+        let victim = *cluster.survivors().first().unwrap();
+        cluster.kill(&[victim]);
+        let (map, _cost) = ulfm::shrink(&mut cluster);
+
+        let mut fired = false;
+        let res = store.rebalance_or_acknowledge_all_with_faults(
+            &mut cluster,
+            &map,
+            &mut |step, cl| {
+                if step == target && !fired {
+                    fired = true;
+                    let extra = *cl.survivors().last().unwrap();
+                    cl.kill(&[extra]);
+                }
+            },
+        );
+        assert!(fired, "wave {wave}: boundary {target:?} never reached");
+        let err = res.expect_err("a mid-reshape kill must abort the wave");
+        assert!(
+            matches!(err, Error::StaleRankMap(_) | Error::StaleEpoch { .. }),
+            "wave {wave}: aborted with the wrong error: {err}"
+        );
+
+        // no torn state: whichever side of the install each dataset was
+        // on, its layout is complete and golden
+        let when = format!("wave {wave} after abort at {target:?}");
+        assert_complete_and_golden(store.dataset(DatasetId::FIRST).unwrap(), &shards, &when);
+        assert_complete_and_golden(store.dataset(ds2).unwrap(), &shards2, &when);
+
+        // the retry against a freshly minted map converges un-injected
+        let (map2, _cost) = ulfm::shrink(&mut cluster);
+        store
+            .rebalance_or_acknowledge_all(&mut cluster, &map2)
+            .unwrap_or_else(|e| panic!("wave {wave}: retry failed: {e}"));
+        let when = format!("wave {wave} after retry");
+        assert_complete_and_golden(store.dataset(DatasetId::FIRST).unwrap(), &shards, &when);
+        assert_complete_and_golden(store.dataset(ds2).unwrap(), &shards2, &when);
+
+        // and the load path agrees: every block of both datasets reloads
+        for (id, golden, c) in
+            [(DatasetId::FIRST, &shards, &cfg), (ds2, &shards2, &cfg2)]
+        {
+            let pe = cluster.survivors()[0];
+            let ranges = RangeSet::new(vec![BlockRange::new(0, c.n_blocks())]);
+            let reqs = vec![LoadRequest { pe, ranges: ranges.clone() }];
+            let out = store.dataset_mut(id).unwrap().load(&mut cluster, &reqs).unwrap();
+            assert_eq!(
+                out.shards[0].bytes.as_deref().unwrap(),
+                expected_bytes(golden, &ranges, c),
+                "wave {wave}: dataset {id:?} lost bytes"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_idl_simulation_never_below_r() {
     let mut rng = Rng::seed_from_u64(0x1D1);

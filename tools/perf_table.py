@@ -34,6 +34,9 @@ def fmt(name: str, value: float) -> str:
         return f"{value:.2e}"
     if "-frac" in name:
         return f"{value:.4f}"
+    if "-per-s" in name:
+        # rates (e.g. scrub throughput-blocks-per-s) ride the field raw
+        return f"{value / 1e6:.1f} M/s" if value >= 1e6 else f"{value:,.0f}/s"
     # everything else is nanoseconds (wall, sim-ns, or ns_per_iter proper)
     if value >= 1e9:
         return f"{value / 1e9:.2f} s"

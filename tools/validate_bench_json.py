@@ -3,7 +3,7 @@
 
 The bench binaries emit one JSON object per line:
 
-    {"name": <non-empty string>, "ns_per_iter": <finite number>}
+    {"name": <non-empty string>, "ns_per_iter": <finite number > 0>}
 
 `tools/perf_table.py` (and the cross-PR perf-trajectory tooling) silently
 skips nothing — a malformed line used to surface only when someone tried
@@ -58,6 +58,12 @@ def validate_file(path: str) -> list:
             problems.append(f"{where}: 'ns_per_iter' must be a number, got {value!r}")
         elif not math.isfinite(value):
             problems.append(f"{where}: 'ns_per_iter' must be finite, got {value!r}")
+        elif value <= 0:
+            # Every metric the benches emit (durations, byte counts,
+            # probabilities, fractions) is strictly positive when actually
+            # measured; a NaN-free 0.0 or negative value means a broken
+            # measurement or formatting truncation, not a fast run.
+            problems.append(f"{where}: 'ns_per_iter' must be > 0, got {value!r}")
         entries += 1
     if not entries:
         problems.append(f"{path}: no entries (empty artifact)")
