@@ -17,7 +17,7 @@ test:
 
 # The CI bench smoke set: emits BENCH_hotpath.json / BENCH_load_scale.json /
 # BENCH_rebalance.json / BENCH_fused_load.json / BENCH_policies.json /
-# BENCH_scrub.json ({name, ns_per_iter} JSON lines).
+# BENCH_scrub.json / BENCH_million.json ({name, ns_per_iter} JSON lines).
 bench-json:
 	cargo bench --bench hotpath
 	cargo bench --bench load_scale
@@ -25,6 +25,7 @@ bench-json:
 	cargo bench --bench fused_load
 	cargo bench --bench policies
 	cargo bench --bench scrub
+	cargo bench --bench million
 
 # Short mode: every bench binary runs end to end (so every BENCH_*.json
 # artifact exists) but skips the p = 24576 configurations and cuts
@@ -36,7 +37,7 @@ bench-json-short:
 	BENCH_SHORT=1 $(MAKE) bench-json
 	$(PYTHON) tools/validate_bench_json.py BENCH_hotpath.json \
 		BENCH_load_scale.json BENCH_rebalance.json BENCH_fused_load.json \
-		BENCH_policies.json BENCH_scrub.json
+		BENCH_policies.json BENCH_scrub.json BENCH_million.json
 
 # Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
 # (downloaded from CI's bench-json artifact, or produced by `make
@@ -46,6 +47,7 @@ perf-table:
 		BENCH_rebalance.json BENCH_fused_load.json
 	$(PYTHON) tools/perf_table.py --marker policy-table BENCH_policies.json
 	$(PYTHON) tools/perf_table.py --marker integrity-table BENCH_scrub.json
+	$(PYTHON) tools/perf_table.py --marker scale-table BENCH_million.json
 
 # Render the Fig-4-style weak-scaling table (ROADMAP item) from the
 # load-path and fused-load artifacts.

@@ -1,0 +1,118 @@
+//! Million-rank scale benchmarks (EXPERIMENTS.md §Scale).
+//!
+//! The O(touched) push: after the sparse epoch-stamped accumulator, the
+//! generation-stamped LeastLoaded routing table, the reverse holder map,
+//! the dense alive-list victim pick, and the Fenwick corruption sampler,
+//! the steady-state hot paths must cost what an operation *touches*, not
+//! what the machine *is*. This bench pins that at p = 2^14, 2^17, and
+//! 2^20 (cost-model mode — §VI-A's simulated-cluster methodology pushed
+//! two orders of magnitude past the paper's 24 576 PEs):
+//!
+//! * `steady-load` — a fixed 8-requester load; ns/op and the pooled
+//!   accumulator's touched-entry counts must stay flat (within 2×) from
+//!   2^14 to 2^20.
+//! * `storm step` — one MTBF kill-event sample; O(1) per event via the
+//!   cluster's dense alive list, flat across p.
+//! * `corruption window` — a 4096-strike silent-corruption window; the
+//!   per-window Fenwick build is O(p) but each strike locates its victim
+//!   byte in O(log p) (this row scales with p by design — it amortizes
+//!   the build, it does not claim flatness).
+//! * `repair planning` — the full §IV-E no-op repair scan, inherently
+//!   O(p·r); included as the honest non-flat baseline row.
+//!
+//! `BENCH_SHORT` skips the 2^20 configuration (CI schema smoke).
+
+use restore::config::RestoreConfig;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::repair::RepairScheme;
+use restore::restore::{LoadRequest, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::failure::{CorruptionModel, MtbfStorm};
+use restore::util::bench::{bench, black_box, short_mode, write_json_artifact, BenchResult};
+
+/// A fixed-size steady-state load: 8 requesters, 16 blocks each, spread
+/// across the block space — the touched set is O(1) regardless of p.
+fn steady_requests(cluster: &Cluster, n_blocks: u64) -> Vec<LoadRequest> {
+    let survivors = cluster.survivors();
+    (0..8usize)
+        .map(|i| {
+            let start = (i as u64 * n_blocks) / 8;
+            LoadRequest {
+                pe: survivors[i * survivors.len() / 8],
+                ranges: RangeSet::new(vec![BlockRange::new(start, start + 16)]),
+            }
+        })
+        .collect()
+}
+
+fn run_scale(p: usize, reps: usize, results: &mut Vec<BenchResult>) {
+    println!("--- p = {p} (cost-model) ---");
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let n_blocks = cfg.n_blocks();
+    let mut cluster = Cluster::new_execution(p, 48);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+
+    // steady-state load: ns/op must stay flat 2^14 -> 2^20
+    let reqs = steady_requests(&cluster, n_blocks);
+    let r = bench(&format!("steady-load resolve+route p={p}"), 1, reps, || {
+        black_box(store.load(&mut cluster, &reqs).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    // touched-entry counters of the load's data phase: O(touched), so the
+    // values themselves must be independent of p (and tiny)
+    let (tp, tn) = store.last_phase_touched();
+    for (what, v) in [("pes", tp), ("nodes", tn)] {
+        let r = BenchResult::from_value(&format!("steady-load touched {what} p={p}"), v as f64);
+        println!("{}", r.line());
+        results.push(r);
+    }
+
+    // storm stepping: one kill-event sample per iteration, O(1) per event
+    let mut storm = MtbfStorm::new(3600.0 * 24.0 * 365.0, 0.02, 0x5708);
+    let r = bench(&format!("storm step p={p}"), 8, reps * 64, || {
+        black_box(storm.next_event(&cluster).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    // corruption sampling: a window tuned to ~4096 strikes — O(p) build
+    // amortized over O(log p) strikes (scales with p by design)
+    let resident = vec![4096u64; p];
+    let total_bytes = 4096.0 * p as f64;
+    let mut model = CorruptionModel::new(4096.0 / total_bytes, 0.0, 0, 0xC0);
+    let mut t0 = 0.0f64;
+    let r = bench(&format!("corruption window (4096-strike) p={p}"), 1, reps, || {
+        let s = model.sample_window(&cluster, t0, t0 + 1.0, &resident);
+        t0 += 1.0;
+        black_box(s.len());
+    });
+    println!("{}", r.line());
+    results.push(r);
+
+    // repair planning: the honest O(p·r) row (no failures — a pure scan)
+    let r = bench(&format!("repair planning p={p}"), 1, reps.min(3), || {
+        black_box(store.repair_replicas(&mut cluster, RepairScheme::DoubleHashing).unwrap());
+    });
+    println!("{}", r.line());
+    results.push(r);
+}
+
+fn main() {
+    println!("=== million-rank scale benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    if short_mode() {
+        // CI schema smoke: skip 2^20, minimal reps — the artifact still
+        // exists, parses, and carries every row family.
+        run_scale(1 << 14, 2, &mut results);
+        run_scale(1 << 17, 2, &mut results);
+    } else {
+        run_scale(1 << 14, 10, &mut results);
+        run_scale(1 << 17, 6, &mut results);
+        run_scale(1 << 20, 3, &mut results);
+    }
+    write_json_artifact("BENCH_million.json", &results).expect("write BENCH_million.json");
+    println!("\nwrote BENCH_million.json ({} entries)", results.len());
+}

@@ -44,7 +44,9 @@
 //!   the hot path.
 //! * **Route** — `pick_server` walks the ≤ `r` holders through a
 //!   fixed-size stack buffer (no per-piece `Vec`), tracking per-server load
-//!   for the `LeastLoaded` policy in a dense per-PE table.
+//!   for the `LeastLoaded` policy in a generation-stamped per-PE table
+//!   ([`StampedLoad`]) that clears in O(1) instead of re-zeroing `p`
+//!   entries per load.
 //! * **Coalesce** — adjacent routed pieces with the same (requester,
 //!   server) and contiguous permuted ranges inside one slice merge into
 //!   single *runs*: one memcpy and one pack/unpack fragment each, matching
@@ -73,10 +75,12 @@ use crate::error::{Error, Result};
 use crate::restore::block::{BlockRange, RangeSet};
 use crate::restore::distribution::{Distribution, PermutedPiece};
 use crate::restore::hashing::seeded_hash;
-use crate::restore::registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
+use crate::restore::registry::{
+    Dataset, DatasetId, LoadManyOutput, LoadManyPart, PooledLoadOutput, PooledPart, PooledShard,
+};
 use crate::restore::{LoadOutput, LoadRequest, LoadedShard, ReStore};
 use crate::simnet::cluster::Cluster;
-use crate::simnet::network::Accumulator;
+use crate::simnet::network::{Accumulator, PhaseCost};
 
 #[cfg(feature = "rayon")]
 use rayon::prelude::*;
@@ -145,6 +149,59 @@ struct Run {
     slice_end: u64,
 }
 
+/// Generation-stamped per-PE byte table for the `LeastLoaded` policy.
+///
+/// The dense predecessor was re-zeroed with `resize(p, 0)` on every load
+/// — an O(p) clear even for a one-piece request. Here [`StampedLoad::begin`]
+/// bumps a generation counter instead: entries whose stamp lags the
+/// current generation read as 0, so clearing is O(1) and only the PEs the
+/// router actually charges are ever written. The backing tables are
+/// grow-only (capacity is retained across calls and across cluster
+/// shrinks, exactly like the pooled [`Accumulator`] stamp tables), and
+/// the generation is a `u64` starting at 1 so stale stamps (0) can never
+/// alias a live generation.
+#[derive(Debug, Default)]
+pub(crate) struct StampedLoad {
+    loads: Vec<u64>,
+    stamps: Vec<u64>,
+    gen: u64,
+}
+
+impl StampedLoad {
+    /// Start a fresh load over `world` PEs: O(1) in steady state (the
+    /// resize only runs while the table is still growing).
+    fn begin(&mut self, world: usize) {
+        self.gen += 1;
+        if self.loads.len() < world {
+            self.loads.resize(world, 0);
+            self.stamps.resize(world, 0);
+        }
+    }
+
+    #[inline]
+    fn get(&self, pe: usize) -> u64 {
+        if self.stamps[pe] == self.gen {
+            self.loads[pe]
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    fn add(&mut self, pe: usize, bytes: u64) {
+        if self.stamps[pe] != self.gen {
+            self.stamps[pe] = self.gen;
+            self.loads[pe] = 0;
+        }
+        self.loads[pe] += bytes;
+    }
+
+    #[cfg(test)]
+    pub(crate) fn capacity(&self) -> usize {
+        self.loads.capacity()
+    }
+}
+
 /// Reusable buffers for [`ReStore::load`]: steady-state calls perform no
 /// per-piece heap allocation — only the output shards are allocated.
 #[derive(Debug, Default)]
@@ -152,14 +209,16 @@ pub(crate) struct LoadScratch {
     routed: Vec<RoutedPiece>,
     pieces: Vec<PermutedPiece>,
     runs: Vec<Run>,
-    /// Dense per-PE byte counters for the `LeastLoaded` policy.
-    server_load: Vec<u64>,
+    /// Stamped per-PE byte counters for the `LeastLoaded` policy —
+    /// cleared in O(1) per load by a generation bump.
+    server_load: StampedLoad,
     /// Holder list for `r > INLINE_HOLDERS` and the repair fallback.
     holders: Vec<usize>,
     /// Pooled cost accumulator shared by the request and data phases
     /// (reset-and-reused via [`Cluster::phase_pooled`]) — formerly the last
-    /// O(p) allocation per `load` call.
-    acc: Accumulator,
+    /// O(p) allocation per `load` call. Crate-visible so
+    /// [`Dataset::last_phase_touched`] can report its touched-entry counts.
+    pub(crate) acc: Accumulator,
 }
 
 impl Dataset {
@@ -220,11 +279,11 @@ impl Dataset {
             }
         }
         scratch.routed.clear();
-        scratch.server_load.clear();
         // Sized by the *cluster* world, not dist.world(): the LeastLoaded
         // table is indexed by cluster ranks, which keep their original
         // numbering after a rebalance shrinks the distribution to p'.
-        scratch.server_load.resize(self.stores.len(), 0);
+        // O(1) generation bump, not an O(p) re-zero.
+        scratch.server_load.begin(self.stores.len());
         self.resolve_all(cluster, requests, scratch)?;
 
         // --- Run coalescing ---------------------------------------------
@@ -283,22 +342,53 @@ impl Dataset {
             .collect();
         if execution {
             for run in runs {
-                if let Some(y) = self.stores[run.server].verify(run.perm_start, run.len) {
-                    return Err(Error::CorruptBlock {
-                        dataset: self.id,
-                        block: self.dist.unpermute_block(y),
-                        holder: run.server,
-                    });
-                }
-                let src = self.stores[run.server]
-                    .read(run.perm_start, run.len)
-                    .expect("execution-mode store must hold real bytes");
+                let src = self.verify_and_read(run)?;
                 let dst = shards[run.req_idx].bytes.as_mut().unwrap();
                 let off = run.out_offset as usize;
                 dst[off..off + src.len()].copy_from_slice(src);
             }
         }
         Ok(shards)
+    }
+
+    /// The arena-backed assembly of [`ReStore::load_many_pooled`]: verify
+    /// and copy planned `runs` into the shared `arena`, each request's
+    /// bytes landing at its [`PooledShard`] span. Same checksum contract
+    /// as [`Dataset::assemble_shards`] — corrupt copies surface as
+    /// [`Error::CorruptBlock`] before a single byte is copied for that
+    /// run, and a failed assembly never mutates the store. Cost-model
+    /// datasets (`None` spans) copy nothing.
+    fn assemble_into_arena(
+        &self,
+        runs: &[Run],
+        shards: &[PooledShard],
+        arena: &mut [u8],
+    ) -> Result<()> {
+        if !self.is_execution_mode() {
+            return Ok(());
+        }
+        for run in runs {
+            let src = self.verify_and_read(run)?;
+            let span = shards[run.req_idx].span.as_ref().expect("execution mode has spans");
+            let off = span.start + run.out_offset as usize;
+            arena[off..off + src.len()].copy_from_slice(src);
+        }
+        Ok(())
+    }
+
+    /// Checksum-verify one run against the sums latched at submit time and
+    /// return its stored bytes — the shared kernel of both assembly paths.
+    fn verify_and_read(&self, run: &Run) -> Result<&[u8]> {
+        if let Some(y) = self.stores[run.server].verify(run.perm_start, run.len) {
+            return Err(Error::CorruptBlock {
+                dataset: self.id,
+                block: self.dist.unpermute_block(y),
+                holder: run.server,
+            });
+        }
+        Ok(self.stores[run.server]
+            .read(run.perm_start, run.len)
+            .expect("execution-mode store must hold real bytes"))
     }
 
     fn load_with_scratch(
@@ -450,11 +540,15 @@ impl Dataset {
                         let mut routed = Vec::new();
                         let mut pieces = Vec::new();
                         let mut holders = Vec::new();
+                        // Policies other than LeastLoaded never read the
+                        // load table; an empty stamped table (no backing
+                        // allocation) stands in for the shared one.
+                        let mut unused_load = StampedLoad::default();
                         self.resolve_request(
                             cluster,
                             req,
                             req_idx,
-                            &mut [],
+                            &mut unused_load,
                             &mut pieces,
                             &mut holders,
                             &mut routed,
@@ -605,11 +699,11 @@ impl Dataset {
                     // holder wins.
                     let mut best = alive[0] as usize;
                     for &pe in &alive[1..] {
-                        if scratch.server_load[pe as usize] < scratch.server_load[best] {
+                        if scratch.server_load.get(pe as usize) < scratch.server_load.get(best) {
                             best = pe as usize;
                         }
                     }
-                    scratch.server_load[best] += cand.piece.len * bs;
+                    scratch.server_load.add(best, cand.piece.len * bs);
                     best
                 };
                 scratch.routed.push(RoutedPiece {
@@ -631,7 +725,7 @@ impl Dataset {
         cluster: &Cluster,
         req: &LoadRequest,
         req_idx: usize,
-        server_load: &mut [u64],
+        server_load: &mut StampedLoad,
         pieces: &mut Vec<PermutedPiece>,
         holders: &mut Vec<usize>,
         routed: &mut Vec<RoutedPiece>,
@@ -669,7 +763,7 @@ impl Dataset {
         cluster: &Cluster,
         requester: usize,
         piece: &PermutedPiece,
-        server_load: &mut [u64],
+        server_load: &mut StampedLoad,
         holders_scratch: &mut Vec<usize>,
     ) -> Result<usize> {
         let dist = &self.dist;
@@ -743,7 +837,7 @@ impl Dataset {
                 // holder wins (keeps parity with the reference router).
                 let mut best = alive[0];
                 for &pe in &alive[1..] {
-                    if server_load[pe] < server_load[best] {
+                    if server_load.get(pe) < server_load.get(best) {
                         best = pe;
                     }
                 }
@@ -752,7 +846,7 @@ impl Dataset {
             ServerSelection::Primary => alive[0],
         };
         if matches!(self.cfg.server_selection, ServerSelection::LeastLoaded) {
-            server_load[chosen] += piece.len * self.cfg.block_size as u64;
+            server_load.add(chosen, piece.len * self.cfg.block_size as u64);
         }
         Ok(chosen)
     }
@@ -791,12 +885,106 @@ impl ReStore {
         result
     }
 
+    /// Load from several datasets into ONE pooled output arena: identical
+    /// two fused phases (and costs) as [`ReStore::load_many`], but the
+    /// assembly stage performs a **single** `Vec<u8>` allocation covering
+    /// every request of every dataset instead of one `vec![0u8; …]` per
+    /// request per dataset — the shape for requester pools that recover
+    /// many datasets at once and hand each shard out by slice. Bytes are
+    /// identical to `load_many` span for span (golden-pinned); cost-model
+    /// datasets contribute `None` spans, exactly as their `LoadedShard`
+    /// bytes would be `None`.
+    pub fn load_many_pooled(
+        &mut self,
+        cluster: &mut Cluster,
+        parts: &[(DatasetId, Vec<LoadRequest>)],
+    ) -> Result<PooledLoadOutput> {
+        let mut taken: Vec<(usize, LoadScratch)> = Vec::with_capacity(parts.len());
+        let result = self.load_many_pooled_inner(cluster, parts, &mut taken);
+        for (di, scratch) in taken {
+            self.datasets[di].scratch = scratch;
+        }
+        result
+    }
+
     fn load_many_inner(
         &mut self,
         cluster: &mut Cluster,
         parts: &[(DatasetId, Vec<LoadRequest>)],
         taken: &mut Vec<(usize, LoadScratch)>,
     ) -> Result<LoadManyOutput> {
+        let (request_cost, data_cost) = self.plan_and_charge_many(cluster, parts, taken)?;
+
+        // --- assemble per-dataset outputs --------------------------------
+        let mut out_parts: Vec<LoadManyPart> = Vec::with_capacity(parts.len());
+        for ((di, scratch), (id, requests)) in taken.iter().zip(parts) {
+            let ds = &self.datasets[*di];
+            out_parts.push(LoadManyPart {
+                dataset: *id,
+                shards: ds.assemble_shards(requests, &scratch.runs)?,
+            });
+        }
+        Ok(LoadManyOutput {
+            parts: out_parts,
+            request_cost,
+            data_cost,
+            cost: request_cost.then(data_cost),
+        })
+    }
+
+    fn load_many_pooled_inner(
+        &mut self,
+        cluster: &mut Cluster,
+        parts: &[(DatasetId, Vec<LoadRequest>)],
+        taken: &mut Vec<(usize, LoadScratch)>,
+    ) -> Result<PooledLoadOutput> {
+        let (request_cost, data_cost) = self.plan_and_charge_many(cluster, parts, taken)?;
+
+        // --- size the single arena across ALL datasets -------------------
+        let mut out_parts: Vec<PooledPart> = Vec::with_capacity(parts.len());
+        let mut total = 0usize;
+        for ((di, _), (id, requests)) in taken.iter().zip(parts) {
+            let ds = &self.datasets[*di];
+            let bs = ds.cfg.block_size as u64;
+            let execution = ds.is_execution_mode();
+            let shards: Vec<PooledShard> = requests
+                .iter()
+                .map(|r| {
+                    let span = execution.then(|| {
+                        let len = (r.ranges.total_blocks() * bs) as usize;
+                        let span = total..total + len;
+                        total += len;
+                        span
+                    });
+                    PooledShard { pe: r.pe, span }
+                })
+                .collect();
+            out_parts.push(PooledPart { dataset: *id, shards });
+        }
+
+        // --- the one pooled allocation + per-dataset verified copies -----
+        let mut arena = vec![0u8; total];
+        for ((di, scratch), part) in taken.iter().zip(&out_parts) {
+            self.datasets[*di].assemble_into_arena(&scratch.runs, &part.shards, &mut arena)?;
+        }
+        Ok(PooledLoadOutput {
+            arena,
+            parts: out_parts,
+            request_cost,
+            data_cost,
+            cost: request_cost.then(data_cost),
+        })
+    }
+
+    /// The shared front of [`ReStore::load_many`] and
+    /// [`ReStore::load_many_pooled`]: validate + plan every dataset
+    /// (clock-pure), then charge the two fused sparse all-to-alls.
+    fn plan_and_charge_many(
+        &mut self,
+        cluster: &mut Cluster,
+        parts: &[(DatasetId, Vec<LoadRequest>)],
+        taken: &mut Vec<(usize, LoadScratch)>,
+    ) -> Result<(PhaseCost, PhaseCost)> {
         // --- validate + plan every dataset (clock-pure) ------------------
         for (id, requests) in parts {
             let di = self.index_of(*id)?;
@@ -892,22 +1080,7 @@ impl ReStore {
             phase.add(server, requester, bytes)?;
         }
         let data_cost = phase.commit();
-
-        // --- assemble per-dataset outputs --------------------------------
-        let mut out_parts: Vec<LoadManyPart> = Vec::with_capacity(parts.len());
-        for ((di, scratch), (id, requests)) in taken.iter().zip(parts) {
-            let ds = &self.datasets[*di];
-            out_parts.push(LoadManyPart {
-                dataset: *id,
-                shards: ds.assemble_shards(requests, &scratch.runs)?,
-            });
-        }
-        Ok(LoadManyOutput {
-            parts: out_parts,
-            request_cost,
-            data_cost,
-            cost: request_cost.then(data_cost),
-        })
+        Ok((request_cost, data_cost))
     }
 }
 

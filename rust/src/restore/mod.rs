@@ -68,7 +68,9 @@ pub use integrity::{ScrubReport, SCRUB_REPAIR_SCHEME};
 pub use policy::{
     RecoveryAction, RecoveryOutcome, RecoveryPolicy, RecoveryStep, MAX_RECOVERY_ATTEMPTS,
 };
-pub use registry::{Dataset, DatasetId, LoadManyOutput, LoadManyPart};
+pub use registry::{
+    Dataset, DatasetId, LoadManyOutput, LoadManyPart, PooledLoadOutput, PooledPart, PooledShard,
+};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
 /// (The paper's preferred API mode: "providing exactly those ID ranges each
@@ -245,6 +247,12 @@ impl ReStore {
     /// Communicator epoch dataset 0's layout addresses.
     pub fn epoch(&self) -> u64 {
         self.ds0().epoch()
+    }
+
+    /// `(pes, nodes)` dataset 0's pooled accumulator touched in its most
+    /// recent communication phase (see [`Dataset::last_phase_touched`]).
+    pub fn last_phase_touched(&self) -> (usize, usize) {
+        self.ds0().last_phase_touched()
     }
 
     /// Cluster rank of dataset 0's distribution rank `dist_rank`.

@@ -81,6 +81,54 @@ pub struct LoadManyOutput {
     pub cost: crate::simnet::network::PhaseCost,
 }
 
+/// One request's output span inside the pooled arena of a
+/// [`ReStore::load_many_pooled`](crate::restore::ReStore::load_many_pooled)
+/// call. `span` is `None` for cost-model datasets, mirroring
+/// [`LoadedShard`]'s `bytes`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PooledShard {
+    pub pe: usize,
+    /// Byte range of this request's data inside
+    /// [`PooledLoadOutput::arena`].
+    pub span: Option<std::ops::Range<usize>>,
+}
+
+/// Data loaded for one dataset of a
+/// [`ReStore::load_many_pooled`](crate::restore::ReStore::load_many_pooled)
+/// call — request order, like [`LoadManyPart`], but the bytes live in the
+/// shared arena.
+#[derive(Debug, Clone)]
+pub struct PooledPart {
+    pub dataset: DatasetId,
+    pub shards: Vec<PooledShard>,
+}
+
+/// Result of a
+/// [`ReStore::load_many_pooled`](crate::restore::ReStore::load_many_pooled):
+/// the same two fused phase costs as [`LoadManyOutput`], with every
+/// request's bytes assembled into **one** pooled `arena` allocation
+/// instead of one `Vec<u8>` per request per dataset.
+#[derive(Debug, Clone)]
+pub struct PooledLoadOutput {
+    /// The single output allocation; each shard's bytes are
+    /// `&arena[shard.span]`.
+    pub arena: Vec<u8>,
+    /// In input-part order.
+    pub parts: Vec<PooledPart>,
+    pub request_cost: crate::simnet::network::PhaseCost,
+    pub data_cost: crate::simnet::network::PhaseCost,
+    /// Total (= request + data).
+    pub cost: crate::simnet::network::PhaseCost,
+}
+
+impl PooledLoadOutput {
+    /// Bytes of request `shard` of part `part` (`None` for cost-model
+    /// datasets) — the slice a per-request `LoadedShard` would own.
+    pub fn shard_bytes(&self, part: usize, shard: usize) -> Option<&[u8]> {
+        self.parts[part].shards[shard].span.clone().map(|s| &self.arena[s])
+    }
+}
+
 /// One dataset of the registry: the per-datatype replicated store of §V
 /// (its own `n`, `r`, `b`, seed — independent of every other dataset), with
 /// the full single-dataset lifecycle: `submit` → `load`/`repair` →
@@ -186,6 +234,15 @@ impl Dataset {
     /// Communicator epoch the current layout addresses.
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// `(pes, nodes)` the pooled accumulator touched in this dataset's most
+    /// recent communication phase (the data phase for a load). The scale
+    /// benches and the alloc-count harness assert this stays O(touched) —
+    /// bounded by the endpoints a load actually visits, independent of the
+    /// world size `p`.
+    pub fn last_phase_touched(&self) -> (usize, usize) {
+        self.scratch.acc.last_touched()
     }
 
     /// Cluster rank of distribution rank `dist_rank` (identity until the

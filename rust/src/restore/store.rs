@@ -307,6 +307,12 @@ fn resum(block_size: usize, slice_start: u64, buf: &[u8], sums: &mut [u64], star
     }
 }
 
+/// Inline holder capacity per slot of the flattened [`HolderIndex`]: the
+/// common replication levels (the paper benchmarks r = 2..4) fit entirely
+/// in the flat inline table; slots that accumulate more holders (repair
+/// re-replication, high-`r` configs) spill to a per-slot overflow list.
+const SLOT_INLINE: usize = 4;
+
 /// Reverse holder index: permuted *slot* (slice number,
 /// [`Distribution::slice_of`] of the slice start) → sorted list of PEs
 /// currently storing that slot's slice.
@@ -319,36 +325,93 @@ fn resum(block_size: usize, slice_start: u64, buf: &[u8], sums: &mut [u64], star
 /// O(p²) per repair at the paper's p = 24 576, now O(r + f) per unit.
 /// Consistency with a from-scratch store scan is enforced by
 /// [`HolderIndex::rebuild`]-based property tests.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+///
+/// ## Layout (million-rank scale)
+///
+/// The former representation — one `Vec<u32>` per slot — allocated a heap
+/// buffer for every non-empty slot and made `drop_pe` an O(all slots)
+/// sweep. Holders now live in a **flat inline table** (`SLOT_INLINE`
+/// entries per slot, one allocation for the whole index) with a sparse
+/// per-slot overflow map for the rare slots exceeding the inline capacity,
+/// and a **pe → slots reverse map** makes `drop_pe` (dead-PE reclaim) and
+/// scrub quarantine cost O(slots actually held by that PE). Equality
+/// compares per-slot holder *content* — a slot that spilled and shrank
+/// back compares equal to one that never spilled.
+#[derive(Debug, Clone, Default)]
 pub struct HolderIndex {
-    slots: Vec<Vec<u32>>,
+    /// `slots() * SLOT_INLINE` flat inline holder storage; entry `i` of
+    /// slot `s` is `inline[s * SLOT_INLINE + i]`, sorted, the first
+    /// `counts[s]` valid (unless spilled to `overflow`).
+    inline: Vec<u32>,
+    /// Holder count per slot (including spilled slots).
+    counts: Vec<u32>,
+    /// Full sorted holder list of slots whose count exceeds
+    /// `SLOT_INLINE`; entries migrate back inline when they shrink.
+    overflow: std::collections::HashMap<u32, Vec<u32>>,
+    /// pe → sorted slots held, grown on demand (cluster ranks can exceed
+    /// the slot count when spare PEs adopt replicas).
+    rev: Vec<Vec<u32>>,
 }
 
 impl HolderIndex {
     pub fn new(slots: usize) -> Self {
-        HolderIndex { slots: vec![Vec::new(); slots] }
+        HolderIndex {
+            inline: vec![0; slots * SLOT_INLINE],
+            counts: vec![0; slots],
+            overflow: std::collections::HashMap::new(),
+            rev: Vec::new(),
+        }
     }
 
     /// Number of tracked slots (0 before submit).
     pub fn slots(&self) -> usize {
-        self.slots.len()
+        self.counts.len()
     }
 
     /// Record that `pe` now stores slot `slot` (idempotent, keeps the
     /// holder list sorted for deterministic iteration order).
     pub fn insert(&mut self, slot: usize, pe: usize) {
-        let v = &mut self.slots[slot];
-        if let Err(at) = v.binary_search(&(pe as u32)) {
-            v.insert(at, pe as u32);
+        let pe32 = pe as u32;
+        let n = self.counts[slot] as usize;
+        if let Some(ov) = self.overflow.get_mut(&(slot as u32)) {
+            match ov.binary_search(&pe32) {
+                Ok(_) => return,
+                Err(at) => ov.insert(at, pe32),
+            }
+        } else if n < SLOT_INLINE {
+            let base = slot * SLOT_INLINE;
+            match self.inline[base..base + n].binary_search(&pe32) {
+                Ok(_) => return,
+                Err(at) => {
+                    self.inline.copy_within(base + at..base + n, base + at + 1);
+                    self.inline[base + at] = pe32;
+                }
+            }
+        } else {
+            // Spill: the slot outgrew its inline entries — move them to
+            // an overflow list holding the slot's FULL sorted holder set.
+            let base = slot * SLOT_INLINE;
+            let mut v = self.inline[base..base + SLOT_INLINE].to_vec();
+            match v.binary_search(&pe32) {
+                Ok(_) => return,
+                Err(at) => v.insert(at, pe32),
+            }
+            self.overflow.insert(slot as u32, v);
         }
+        self.counts[slot] += 1;
+        self.rev_insert(pe, slot);
     }
 
-    /// Remove `pe` from every slot's holder list (store reclaimed).
+    /// Remove `pe` from every slot's holder list (store reclaimed) — via
+    /// the reverse map, O(slots held by `pe`), not O(all slots).
     pub fn drop_pe(&mut self, pe: usize) {
-        for v in &mut self.slots {
-            if let Ok(at) = v.binary_search(&(pe as u32)) {
-                v.remove(at);
-            }
+        if pe >= self.rev.len() {
+            return;
+        }
+        let held = std::mem::take(&mut self.rev[pe]);
+        for &slot in &held {
+            let existed = self.forward_remove(slot as usize, pe);
+            debug_assert!(existed, "reverse map out of sync with forward index");
         }
     }
 
@@ -357,19 +420,72 @@ impl HolderIndex {
     /// the holder's other (clean) slices routable. Returns whether the
     /// entry existed.
     pub fn remove(&mut self, slot: usize, pe: usize) -> bool {
-        let v = &mut self.slots[slot];
-        match v.binary_search(&(pe as u32)) {
-            Ok(at) => {
-                v.remove(at);
-                true
+        let existed = self.forward_remove(slot, pe);
+        if existed {
+            self.rev_remove(pe, slot);
+        }
+        existed
+    }
+
+    /// Remove `pe` from slot `slot`'s forward holder list only (the
+    /// reverse-map side is the caller's responsibility).
+    fn forward_remove(&mut self, slot: usize, pe: usize) -> bool {
+        let pe32 = pe as u32;
+        if let Some(ov) = self.overflow.get_mut(&(slot as u32)) {
+            let Ok(at) = ov.binary_search(&pe32) else { return false };
+            ov.remove(at);
+            self.counts[slot] -= 1;
+            if self.counts[slot] as usize <= SLOT_INLINE {
+                // Un-spill eagerly so the representation (and memory)
+                // tracks the content.
+                let v = self.overflow.remove(&(slot as u32)).unwrap();
+                let base = slot * SLOT_INLINE;
+                self.inline[base..base + v.len()].copy_from_slice(&v);
             }
-            Err(_) => false,
+            true
+        } else {
+            let base = slot * SLOT_INLINE;
+            let n = self.counts[slot] as usize;
+            let Ok(at) = self.inline[base..base + n].binary_search(&pe32) else {
+                return false;
+            };
+            self.inline.copy_within(base + at + 1..base + n, base + at);
+            self.counts[slot] -= 1;
+            true
         }
     }
 
     /// PEs currently storing `slot`, ascending.
     pub fn holders_of(&self, slot: usize) -> &[u32] {
-        &self.slots[slot]
+        match self.overflow.get(&(slot as u32)) {
+            Some(ov) => ov,
+            None => {
+                let base = slot * SLOT_INLINE;
+                &self.inline[base..base + self.counts[slot] as usize]
+            }
+        }
+    }
+
+    /// Slots `pe` currently stores, ascending — the reverse map that makes
+    /// [`HolderIndex::drop_pe`] and scrub quarantine O(slots held).
+    pub fn slots_of(&self, pe: usize) -> &[u32] {
+        self.rev.get(pe).map_or(&[][..], |v| &v[..])
+    }
+
+    fn rev_insert(&mut self, pe: usize, slot: usize) {
+        if pe >= self.rev.len() {
+            self.rev.resize_with(pe + 1, Vec::new);
+        }
+        let v = &mut self.rev[pe];
+        if let Err(at) = v.binary_search(&(slot as u32)) {
+            v.insert(at, slot as u32);
+        }
+    }
+
+    fn rev_remove(&mut self, pe: usize, slot: usize) {
+        if let Ok(at) = self.rev[pe].binary_search(&(slot as u32)) {
+            self.rev[pe].remove(at);
+        }
     }
 
     /// From-scratch rebuild by scanning every PE store — the O(p · slices)
@@ -393,6 +509,19 @@ impl HolderIndex {
         ix
     }
 }
+
+/// Content equality: same slot count and the same holder set per slot.
+/// Deliberately representation-independent — whether a slot's holders
+/// live inline or in overflow (or which stale inline entries linger past
+/// `counts`) is a layout detail, not part of the index's meaning.
+impl PartialEq for HolderIndex {
+    fn eq(&self, other: &Self) -> bool {
+        self.slots() == other.slots()
+            && (0..self.slots()).all(|s| self.holders_of(s) == other.holders_of(s))
+    }
+}
+
+impl Eq for HolderIndex {}
 
 /// Verify the §IV-C memory formula for a fully submitted store set: every
 /// PE holds exactly its `r` stored slices — `r · n/p` blocks in the
@@ -606,5 +735,41 @@ mod tests {
         assert_eq!(ix.holders_of(1), &[] as &[u32]);
         assert_eq!(ix.holders_of(2), &[1, 3]);
         assert_eq!(ix.holders_of(3), &[2]);
+    }
+
+    #[test]
+    fn holder_index_overflow_spill_and_unspill() {
+        let mut ix = HolderIndex::new(2);
+        // 7 holders on slot 0: crosses the SLOT_INLINE boundary (spill)
+        for pe in [9usize, 1, 5, 3, 7, 0, 11] {
+            ix.insert(0, pe);
+        }
+        ix.insert(0, 5); // idempotent while spilled
+        assert_eq!(ix.holders_of(0), &[0, 1, 3, 5, 7, 9, 11]);
+        assert_eq!(ix.holders_of(1), &[] as &[u32]);
+        // reverse map tracks every holder (including past the slot count)
+        for pe in [0usize, 1, 3, 5, 7, 9, 11] {
+            assert_eq!(ix.slots_of(pe), &[0], "pe {pe}");
+        }
+        assert_eq!(ix.slots_of(2), &[] as &[u32]);
+        assert_eq!(ix.slots_of(999), &[] as &[u32], "past the reverse map");
+        assert!(!ix.remove(0, 2), "never held while spilled");
+        // shrink back below the inline capacity: content (and equality
+        // with a never-spilled index) is unaffected by the spill history
+        for pe in [9usize, 1, 7] {
+            assert!(ix.remove(0, pe));
+        }
+        assert_eq!(ix.holders_of(0), &[0, 3, 5, 11]);
+        let mut fresh = HolderIndex::new(2);
+        for pe in [0usize, 3, 5, 11] {
+            fresh.insert(0, pe);
+        }
+        assert_eq!(ix, fresh);
+        // drop_pe goes through the reverse map; both directions clear
+        ix.drop_pe(5);
+        assert_eq!(ix.holders_of(0), &[0, 3, 11]);
+        assert_eq!(ix.slots_of(5), &[] as &[u32]);
+        ix.drop_pe(999); // past the reverse map: no-op
+        assert_eq!(ix.holders_of(0), &[0, 3, 11]);
     }
 }

@@ -89,6 +89,11 @@ pub struct Cluster {
     /// identity over the base ranks (spares excluded); rewritten by the
     /// `ulfm` shrink/substitute/grow primitives.
     comm: Vec<usize>,
+    /// Alive communicator members, sorted ascending — maintained
+    /// incrementally by [`Cluster::kill`] / spare activation so hot loops
+    /// (storm victim picks, weighted corruption sampling) index the alive
+    /// set in O(1) instead of filtering the whole `state` vector.
+    alive: Vec<u32>,
     n_alive: usize,
     n_spares: usize,
     base_pes: usize,
@@ -131,6 +136,7 @@ impl Cluster {
             net,
             state,
             comm: (0..pes).collect(),
+            alive: (0..pes as u32).collect(),
             n_alive: pes,
             n_spares: spares,
             base_pes: pes,
@@ -212,6 +218,15 @@ impl Cluster {
         self.survivors_iter().collect()
     }
 
+    /// Alive communicator members as a dense sorted slice — the same
+    /// sequence as [`Cluster::survivors_iter`], but indexable in O(1).
+    /// Maintained incrementally across kills and spare activations, so
+    /// storm victim picks at million-rank worlds cost O(1) instead of an
+    /// O(p) scan per event.
+    pub fn alive_ranks(&self) -> &[u32] {
+        &self.alive
+    }
+
     /// Ranks killed so far ([`Cluster::failed_iter`] collected).
     pub fn failed(&self) -> Vec<usize> {
         self.failed_iter().collect()
@@ -245,6 +260,9 @@ impl Cluster {
     pub(crate) fn activate_spare(&mut self, rank: usize) {
         debug_assert_eq!(self.state.get(rank), Some(&PeState::Spare), "rank {rank} is not a spare");
         self.state[rank] = PeState::Alive;
+        if let Err(at) = self.alive.binary_search(&(rank as u32)) {
+            self.alive.insert(at, rank as u32);
+        }
         self.n_spares -= 1;
         self.n_alive += 1;
     }
@@ -257,6 +275,9 @@ impl Cluster {
             match self.state.get(r) {
                 Some(PeState::Alive) => {
                     self.state[r] = PeState::Failed;
+                    if let Ok(at) = self.alive.binary_search(&(r as u32)) {
+                        self.alive.remove(at);
+                    }
                     self.n_alive -= 1;
                 }
                 Some(PeState::Spare) => {
@@ -527,6 +548,30 @@ mod tests {
         c.kill(&[1, 4]);
         assert_eq!(c.survivors_iter().collect::<Vec<_>>(), c.survivors());
         assert_eq!(c.failed_iter().collect::<Vec<_>>(), c.failed());
+    }
+
+    #[test]
+    fn alive_ranks_tracks_survivors_across_kills_and_activations() {
+        let mut c = Cluster::with_spares(8, 4, 3);
+        let dense = |c: &Cluster| c.alive_ranks().iter().map(|&r| r as usize).collect::<Vec<_>>();
+        assert_eq!(dense(&c), c.survivors());
+
+        // kills: communicator members, a spare, a dead repeat, all no-ops on
+        // the invariant
+        c.kill(&[2, 9, 5, 5]);
+        assert_eq!(dense(&c), c.survivors());
+        assert_eq!(c.alive_ranks().len(), c.n_alive());
+
+        // spare activation splices the (out-of-order) trailing rank back in
+        // sorted position
+        c.activate_spare(8);
+        assert_eq!(dense(&c), c.survivors());
+        assert_eq!(dense(&c), vec![0, 1, 3, 4, 6, 7, 8]);
+
+        // kill everything; both views agree on empty
+        c.kill(&(0..c.world()).collect::<Vec<_>>());
+        assert_eq!(dense(&c), c.survivors());
+        assert!(c.alive_ranks().is_empty());
     }
 
     #[test]

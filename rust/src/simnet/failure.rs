@@ -80,6 +80,10 @@ pub struct CorruptionModel {
     node_burst_prob: f64,
     burst_flips: usize,
     rng: Rng,
+    /// Reusable Fenwick (binary indexed) tree over the alive residents,
+    /// rebuilt once per sampled window: strikes then locate their victim
+    /// byte in O(log p) instead of an O(p) prefix walk per strike.
+    fenwick: Vec<u64>,
 }
 
 impl CorruptionModel {
@@ -96,6 +100,7 @@ impl CorruptionModel {
             node_burst_prob,
             burst_flips,
             rng: Rng::seed_from_u64(seed),
+            fenwick: Vec::new(),
         }
     }
 
@@ -103,8 +108,10 @@ impl CorruptionModel {
     /// is the corruptible (real) byte count of cluster rank `pe` — what
     /// `PeStore::real_bytes` reports, summed across datasets; missing
     /// entries count as 0. Victim bytes are drawn uniformly over the alive
-    /// resident payload via a prefix walk, so strikes concentrate where
-    /// the data is. Deterministic per seed.
+    /// resident payload — a Fenwick tree built once per window locates each
+    /// strike in O(log p), landing on exactly the (victim, byte) the
+    /// verbatim prefix walk over `survivors_iter` would — so strikes
+    /// concentrate where the data is. Deterministic per seed.
     pub fn sample_window(
         &mut self,
         cluster: &Cluster,
@@ -113,11 +120,26 @@ impl CorruptionModel {
         resident: &[u64],
     ) -> Vec<CorruptionStrike> {
         let mut strikes = Vec::new();
-        let total: u64 = cluster
-            .survivors_iter()
-            .map(|pe| resident.get(pe).copied().unwrap_or(0))
-            .sum();
-        if t1 <= t0 || self.byte_flip_rate_per_s <= 0.0 || total == 0 {
+        if t1 <= t0 || self.byte_flip_rate_per_s <= 0.0 {
+            return strikes;
+        }
+        // Build the Fenwick tree over the alive residents in increasing
+        // rank order (1-based; entry i owns positions (i - lowbit(i), i]).
+        let alive = cluster.alive_ranks();
+        let n = alive.len();
+        self.fenwick.clear();
+        self.fenwick.resize(n + 1, 0);
+        let mut total = 0u64;
+        for i in 1..=n {
+            let r = resident.get(alive[i - 1] as usize).copied().unwrap_or(0);
+            total += r;
+            self.fenwick[i] += r;
+            let parent = i + (i & i.wrapping_neg());
+            if parent <= n {
+                self.fenwick[parent] += self.fenwick[i];
+            }
+        }
+        if total == 0 {
             return strikes;
         }
         let rate = self.byte_flip_rate_per_s * total as f64;
@@ -127,17 +149,25 @@ impl CorruptionModel {
             if t >= t1 {
                 return strikes;
             }
-            let mut target = self.rng.gen_index(total as usize) as u64;
-            let mut victim = usize::MAX;
-            for pe in cluster.survivors_iter() {
-                let n = resident.get(pe).copied().unwrap_or(0);
-                if target < n {
-                    victim = pe;
-                    break;
+            let target = self.rng.gen_index(total as usize) as u64;
+            // Descend: largest alive-list prefix whose resident sum stays
+            // <= target; the next entry is the victim, the remainder the
+            // byte offset inside its payload (identical to the linear walk,
+            // zero-resident survivors skipped for free).
+            let mut pos = 0usize;
+            let mut rem = target;
+            let mut step = n.next_power_of_two();
+            while step > 0 {
+                let next = pos + step;
+                if next <= n && self.fenwick[next] <= rem {
+                    rem -= self.fenwick[next];
+                    pos = next;
                 }
-                target -= n;
+                step >>= 1;
             }
-            debug_assert_ne!(victim, usize::MAX, "prefix walk must land inside total");
+            debug_assert!(pos < n, "descend must land inside total");
+            let victim = alive[pos] as usize;
+            let target = rem;
             let bit = self.rng.gen_index(8) as u8;
             strikes.push(CorruptionStrike { pe: victim, byte: target, bit });
             if self.rng.gen_bool(self.node_burst_prob) {
@@ -241,10 +271,10 @@ impl MtbfStorm {
         }
         let rate = alive as f64 / self.pe_mtbf_s;
         let gap_s = -(1.0 - self.rng.gen_f64()).ln() / rate;
-        let victim = cluster
-            .survivors_iter()
-            .nth(self.rng.gen_index(alive))
-            .expect("n_alive survivors");
+        // O(1) pick from the cluster's dense alive list — same increasing
+        // rank order as `survivors_iter().nth(..)`, so the victim sequence
+        // per seed is unchanged.
+        let victim = cluster.alive_ranks()[self.rng.gen_index(alive)] as usize;
         let kills = if self.rng.gen_bool(self.node_burst_prob) {
             let topo = cluster.topology();
             topo.ranks_on_node(topo.node_of(victim)).collect()
@@ -371,6 +401,61 @@ mod tests {
             assert!(s.byte < resident[s.pe], "strike inside the resident payload");
             assert!(s.bit < 8);
         }
+    }
+
+    /// The Fenwick descend must land every strike on exactly the
+    /// (victim, byte) the seed reference's O(p)-per-strike linear prefix
+    /// walk produced — replayed here verbatim against the same RNG stream,
+    /// over a lumpy resident map with dead PEs, parked/lost spares,
+    /// zero-resident survivors, and node bursts.
+    #[test]
+    fn fenwick_strikes_match_verbatim_prefix_walk() {
+        let mut cluster = Cluster::with_spares(24, 4, 4);
+        cluster.kill(&[2, 11, 17, 25]);
+        let resident: Vec<u64> = (0..cluster.world() as u64)
+            .map(|pe| if pe % 5 == 0 { 0 } else { (pe * 37) % 900 + 1 })
+            .collect();
+        let (rate_per_byte, burst_prob, burst_flips, seed) = (2.0e-5, 0.4, 2usize, 123u64);
+        let mut model = CorruptionModel::new(rate_per_byte, burst_prob, burst_flips, seed);
+        let got = model.sample_window(&cluster, 0.0, 4000.0, &resident);
+        assert!(!got.is_empty(), "rate · bytes · window ≫ 1 must strike");
+
+        let mut rng = Rng::seed_from_u64(seed);
+        let total: u64 = cluster.survivors_iter().map(|pe| resident[pe]).sum();
+        let rate = rate_per_byte * total as f64;
+        let mut want = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += -(1.0 - rng.gen_f64()).ln() / rate;
+            if t >= 4000.0 {
+                break;
+            }
+            let mut target = rng.gen_index(total as usize) as u64;
+            let mut victim = usize::MAX;
+            for pe in cluster.survivors_iter() {
+                if target < resident[pe] {
+                    victim = pe;
+                    break;
+                }
+                target -= resident[pe];
+            }
+            let bit = rng.gen_index(8) as u8;
+            want.push(CorruptionStrike { pe: victim, byte: target, bit });
+            if rng.gen_bool(burst_prob) {
+                let topo = cluster.topology();
+                let peers: Vec<usize> = topo
+                    .ranks_on_node(topo.node_of(victim))
+                    .filter(|&pe| cluster.is_alive(pe) && resident[pe] > 0)
+                    .collect();
+                for _ in 0..burst_flips {
+                    let pe = peers[rng.gen_index(peers.len())];
+                    let byte = rng.gen_index(resident[pe] as usize) as u64;
+                    let bit = rng.gen_index(8) as u8;
+                    want.push(CorruptionStrike { pe, byte, bit });
+                }
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

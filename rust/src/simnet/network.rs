@@ -82,18 +82,44 @@ impl PhaseCost {
 /// "sending" to itself, e.g. a replica that stays local) cost only memory
 /// bandwidth, no NIC or latency — matching the paper's experiments which
 /// explicitly exclude same-node copies by construction.
+///
+/// ## Sparse (epoch-stamped) counters
+///
+/// The per-PE and per-node counter tables are *epoch-stamped*: an entry is
+/// live only while its stamp matches the accumulator's current phase epoch,
+/// and the endpoints a phase actually charges are recorded in touched
+/// lists. Clearing for the next phase is therefore O(1) (bump the epoch,
+/// truncate the touched lists) and [`Accumulator::compute`] walks only the
+/// touched entries — a steady-state load at p = 2^20 pays for the handful
+/// of PEs it routed through, not for five length-p zeroing sweeps per
+/// phase. Untouched entries read as zero, so every bottleneck max and the
+/// NIC loop are exactly the dense sums/maxes (golden- and property-tested
+/// against a dense reference).
 #[derive(Debug)]
 pub struct Accumulator {
     net: NetworkConfig,
     topo: Topology,
+    /// Current phase stamp: an entry of the stamped tables below is live
+    /// iff its stamp equals this. Bumped by `reset`/`finish_reset`, which
+    /// is what makes clearing O(1). u64: never wraps in any realistic run,
+    /// so a stale stamp can never alias a live one.
+    epoch: u64,
+    pe_stamp: Vec<u64>,
     pe_msgs: Vec<u32>,
     pe_frags: Vec<u64>,
     pe_bytes: Vec<u64>,
+    /// PEs charged this phase (indices into the `pe_*` tables).
+    touched_pes: Vec<u32>,
+    node_stamp: Vec<u64>,
     node_bytes: Vec<u64>,
     node_msgs: Vec<u64>,
+    /// Nodes charged this phase (indices into the `node_*` tables).
+    touched_nodes: Vec<u32>,
     local_bytes: u64,
     total_bytes: u64,
     total_msgs: u64,
+    last_touched_pes: usize,
+    last_touched_nodes: usize,
 }
 
 impl Default for Accumulator {
@@ -109,35 +135,60 @@ impl Accumulator {
         Accumulator {
             net: net.clone(),
             topo: topo.clone(),
+            epoch: 1,
+            pe_stamp: vec![0; topo.pes()],
             pe_msgs: vec![0; topo.pes()],
             pe_frags: vec![0; topo.pes()],
             pe_bytes: vec![0; topo.pes()],
+            touched_pes: Vec::new(),
+            node_stamp: vec![0; topo.nodes()],
             node_bytes: vec![0; topo.nodes()],
             node_msgs: vec![0; topo.nodes()],
+            touched_nodes: Vec::new(),
             local_bytes: 0,
             total_bytes: 0,
             total_msgs: 0,
+            last_touched_pes: 0,
+            last_touched_nodes: 0,
         }
     }
 
-    /// Re-arm a pooled accumulator for a new phase: adopt `net`/`topo`,
-    /// zero every counter, and keep the vectors' capacity — after a warm-up
-    /// phase at the same world size this performs no heap allocation (the
-    /// last O(p) allocation of every `ReStore::load` call, pooled in its
-    /// `LoadScratch`).
+    /// Re-arm a pooled accumulator for a new phase: adopt `net`/`topo` and
+    /// invalidate every counter by bumping the phase stamp — O(1), no
+    /// zeroing sweep. The tables only ever grow (to the largest world
+    /// seen), so after a warm-up phase this performs no heap allocation
+    /// (the last O(p) allocation of every `ReStore::load` call, pooled in
+    /// its `LoadScratch`). A *shrinking* topology change (a §IV-B
+    /// rebalance to p') is handled by the same stamp bump: entries charged
+    /// against the old, larger node/PE count go stale instead of lingering
+    /// in the table — the next phase can never be billed against the old
+    /// world's capacity (regression-tested below).
     pub fn reset(&mut self, net: &NetworkConfig, topo: &Topology) {
         self.net = net.clone();
         self.topo = topo.clone();
-        self.pe_msgs.clear();
-        self.pe_msgs.resize(topo.pes(), 0);
-        self.pe_frags.clear();
-        self.pe_frags.resize(topo.pes(), 0);
-        self.pe_bytes.clear();
-        self.pe_bytes.resize(topo.pes(), 0);
-        self.node_bytes.clear();
-        self.node_bytes.resize(topo.nodes(), 0);
-        self.node_msgs.clear();
-        self.node_msgs.resize(topo.nodes(), 0);
+        let pes = self.topo.pes();
+        if self.pe_stamp.len() < pes {
+            self.pe_stamp.resize(pes, 0);
+            self.pe_msgs.resize(pes, 0);
+            self.pe_frags.resize(pes, 0);
+            self.pe_bytes.resize(pes, 0);
+        }
+        let nodes = self.topo.nodes();
+        if self.node_stamp.len() < nodes {
+            self.node_stamp.resize(nodes, 0);
+            self.node_bytes.resize(nodes, 0);
+            self.node_msgs.resize(nodes, 0);
+        }
+        self.begin_phase();
+    }
+
+    /// Start the next phase: one stamp bump invalidates every table entry
+    /// (grown entries carry stamp 0 and the epoch starts at 1, so they are
+    /// stale too); the touched lists truncate in place.
+    fn begin_phase(&mut self) {
+        self.epoch += 1;
+        self.touched_pes.clear();
+        self.touched_nodes.clear();
         self.local_bytes = 0;
         self.total_bytes = 0;
         self.total_msgs = 0;
@@ -148,20 +199,54 @@ impl Accumulator {
         self.pe_msgs.capacity()
     }
 
+    /// Touched-entry counts `(PEs, nodes)` of the most recently *finished*
+    /// pooled phase ([`Accumulator::finish_reset`]) — the scale-
+    /// independence contract surfaced to the alloc-count harness and the
+    /// million-rank bench: for a fixed request shape these must not grow
+    /// with the world size.
+    pub fn last_touched(&self) -> (usize, usize) {
+        (self.last_touched_pes, self.last_touched_nodes)
+    }
+
+    #[inline]
+    fn touch_pe(&mut self, pe: usize) {
+        if self.pe_stamp[pe] != self.epoch {
+            self.pe_stamp[pe] = self.epoch;
+            self.pe_msgs[pe] = 0;
+            self.pe_frags[pe] = 0;
+            self.pe_bytes[pe] = 0;
+            self.touched_pes.push(pe as u32);
+        }
+    }
+
+    #[inline]
+    fn touch_node(&mut self, node: usize) {
+        if self.node_stamp[node] != self.epoch {
+            self.node_stamp[node] = self.epoch;
+            self.node_bytes[node] = 0;
+            self.node_msgs[node] = 0;
+            self.touched_nodes.push(node as u32);
+        }
+    }
+
     /// Register one message of `bytes` from `src` to `dst`.
     pub fn msg(&mut self, src: usize, dst: usize, bytes: u64) {
         if src == dst {
             self.local_bytes = self.local_bytes.max(bytes);
             return;
         }
+        self.touch_pe(src);
+        self.touch_pe(dst);
         self.pe_msgs[src] += 1;
         self.pe_msgs[dst] += 1;
         self.pe_bytes[src] += bytes;
         self.pe_bytes[dst] += bytes;
         let (ns, nd) = (self.topo.node_of(src), self.topo.node_of(dst));
+        self.touch_node(ns);
         self.node_bytes[ns] += bytes;
         self.node_msgs[ns] += 1;
         if nd != ns {
+            self.touch_node(nd);
             self.node_bytes[nd] += bytes;
             self.node_msgs[nd] += 1;
         }
@@ -172,6 +257,7 @@ impl Accumulator {
     /// Charge `count` non-contiguous fragments handled by `pe` this phase
     /// (packing on the sender, unpacking on the receiver).
     pub fn frag(&mut self, pe: usize, count: u64) {
+        self.touch_pe(pe);
         self.pe_frags[pe] += count;
     }
 
@@ -179,33 +265,41 @@ impl Accumulator {
         self.compute()
     }
 
-    /// Compute the phase cost and zero the counters in place (keeping
-    /// vector capacity) so the accumulator is ready for the next
-    /// [`Accumulator::reset`]-free phase at the same world size.
+    /// Compute the phase cost and clear in place — O(touched): record the
+    /// touched-entry counts, bump the stamp, truncate the touched lists.
+    /// The accumulator is ready for the next [`Accumulator::reset`]-free
+    /// phase at the same world size.
     pub fn finish_reset(&mut self) -> PhaseCost {
         let cost = self.compute();
-        self.pe_msgs.fill(0);
-        self.pe_frags.fill(0);
-        self.pe_bytes.fill(0);
-        self.node_bytes.fill(0);
-        self.node_msgs.fill(0);
-        self.local_bytes = 0;
-        self.total_bytes = 0;
-        self.total_msgs = 0;
+        self.last_touched_pes = self.touched_pes.len();
+        self.last_touched_nodes = self.touched_nodes.len();
+        self.begin_phase();
         cost
     }
 
     fn compute(&self) -> PhaseCost {
-        let bmsgs = self.pe_msgs.iter().copied().max().unwrap_or(0) as u64;
-        let bfrags = self.pe_frags.iter().copied().max().unwrap_or(0);
-        let bbytes = self.pe_bytes.iter().copied().max().unwrap_or(0);
+        // Bottleneck maxes over the touched entries only: every untouched
+        // entry is (logically) zero, so the maxes equal the dense sweep's.
+        let mut bmsgs = 0u64;
+        let mut bfrags = 0u64;
+        let mut bbytes = 0u64;
+        for &pe in &self.touched_pes {
+            let pe = pe as usize;
+            bmsgs = bmsgs.max(self.pe_msgs[pe] as u64);
+            bfrags = bfrags.max(self.pe_frags[pe]);
+            bbytes = bbytes.max(self.pe_bytes[pe]);
+        }
         // the binding node: the one with the largest *degraded* byte time;
         // track the worst per-node degradation factor as well (the pruned
         // global links suffer the same message interleaving, so it also
-        // scales the bisection bound below)
+        // scales the bisection bound below). Untouched nodes contribute a
+        // zero byte time and never update degrade_max (b == 0), so walking
+        // only the touched nodes is exact.
         let mut nic_time = 0.0f64;
         let mut degrade_max = 1.0f64;
-        for (&b, &m) in self.node_bytes.iter().zip(&self.node_msgs) {
+        for &node in &self.touched_nodes {
+            let node = node as usize;
+            let (b, m) = (self.node_bytes[node], self.node_msgs[node]);
             let per_pe = m as f64 / self.net.pes_per_node as f64;
             let degrade = 1.0 + self.net.frag_gamma * (1.0 + per_pe).ln();
             nic_time = nic_time.max(b as f64 / self.net.node_bw_bytes_per_s * degrade);
@@ -355,6 +449,78 @@ mod tests {
         // without an intervening reset the next phase starts from zero
         assert_eq!(acc.finish_reset(), PhaseCost::default());
         assert_eq!(acc.pe_capacity(), cap, "capacity must be retained");
+    }
+
+    /// Satellite regression: after a topology *shrink* (a §IV-B rebalance
+    /// to p'), entries charged against the old, larger PE/node count must
+    /// go stale — a pooled accumulator re-armed at the smaller world has
+    /// to cost phases exactly like a fresh accumulator built at p', with
+    /// no leakage from the pre-shrink phase (whose node 1 no longer
+    /// exists) and no loss of vector capacity.
+    #[test]
+    fn reset_to_smaller_topology_drops_stale_entries() {
+        let (net, big) = setup(96); // 2 nodes
+        let small = Topology::new(48, 48); // 1 node after the "rebalance"
+        let mut pooled = Accumulator::new(&net, &big);
+        // a heavy pre-shrink phase touching both nodes and high ranks
+        for dst in 48..96 {
+            pooled.msg(0, dst, 1_000_000);
+        }
+        pooled.frag(95, 7);
+        let _ = pooled.finish_reset();
+        let cap = pooled.pe_capacity();
+
+        for round in 0..2 {
+            pooled.reset(&net, &small);
+            let mut fresh = Accumulator::new(&net, &small);
+            for (s, d, b) in [(0usize, 17usize, 4096u64), (3, 3, 512), (40, 2, 64)] {
+                pooled.msg(s, d, b + round);
+                fresh.msg(s, d, b + round);
+            }
+            pooled.frag(17, 2);
+            fresh.frag(17, 2);
+            assert_eq!(pooled.finish_reset(), fresh.finish(), "round {round}");
+            assert_eq!(pooled.last_touched(), (4, 1), "round {round}");
+        }
+        assert_eq!(pooled.pe_capacity(), cap, "shrink must keep capacity");
+
+        // ...and growing back re-admits the high ranks with clean counters
+        pooled.reset(&net, &big);
+        let mut fresh = Accumulator::new(&net, &big);
+        pooled.msg(0, 95, 1234);
+        fresh.msg(0, 95, 1234);
+        assert_eq!(pooled.finish_reset(), fresh.finish());
+    }
+
+    /// The sparse accumulator must be charge-identical to the dense seed
+    /// reference over random phase sequences with pooled reuse between
+    /// (the in-file companion of the full property test in
+    /// `rust/tests/prop_invariants.rs`).
+    #[test]
+    fn sparse_accumulator_matches_dense_reference_over_random_phases() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(0x5BA25E);
+        let net = NetworkConfig::default();
+        let mut pooled = Accumulator::default();
+        for phase in 0..200 {
+            let p = 1 + rng.gen_index(200);
+            let ppn = 1 + rng.gen_index(48);
+            let topo = Topology::new(p, ppn);
+            pooled.reset(&net, &topo);
+            let mut fresh = Accumulator::new(&net, &topo);
+            for _ in 0..rng.gen_index(32) {
+                let (s, d) = (rng.gen_index(p), rng.gen_index(p));
+                let b = rng.gen_u64_below(1 << 20);
+                pooled.msg(s, d, b);
+                fresh.msg(s, d, b);
+                if rng.gen_bool(0.3) {
+                    let (pe, n) = (rng.gen_index(p), 1 + rng.gen_u64_below(8));
+                    pooled.frag(pe, n);
+                    fresh.frag(pe, n);
+                }
+            }
+            assert_eq!(pooled.finish_reset(), fresh.finish(), "phase {phase} (p={p})");
+        }
     }
 
     #[test]

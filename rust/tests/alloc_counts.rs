@@ -15,7 +15,9 @@
 //! would land in the process-global counter and flake the equalities.
 
 use restore::config::{RestoreConfig, ServerSelection};
+use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::load::{load_all_requests, scatter_requests};
+use restore::restore::LoadRequest;
 use restore::restore::rebalance::{plan_rebalance, MigrationTransfer};
 use restore::restore::repair::RepairScheme;
 use restore::restore::ReStore;
@@ -46,6 +48,45 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     survivor_iteration_and_agreement_allocations_do_not_scale_with_world();
     clean_scrub_steps_allocate_nothing_at_any_world();
     execution_load_checksum_verification_allocations_do_not_scale_with_block_count();
+    steady_load_touched_entries_do_not_scale_with_world();
+}
+
+fn steady_load_touched_entries_do_not_scale_with_world() {
+    // The pooled accumulator's per-phase reset walks only the entries the
+    // previous phase touched: a fixed 8-request workload (requester i + 1
+    // loads the first 16 blocks of PE i's shard; Primary selection and a
+    // contiguous layout pin the servers to PEs 0..8 at any world) must
+    // record EQUAL touched-entry counts at p = 64 and p = 4096 — bounded
+    // by the endpoints the workload names, not the world size.
+    let touched_for = |p: usize| {
+        let cfg = RestoreConfig::builder(p, 8, 64)
+            .replicas(4)
+            .server_selection(ServerSelection::Primary)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit_virtual(&mut cluster).unwrap();
+        let reqs: Vec<LoadRequest> = (0..8u64)
+            .map(|i| LoadRequest {
+                pe: i as usize + 1,
+                ranges: RangeSet::new(vec![BlockRange::new(i * 64, i * 64 + 16)]),
+            })
+            .collect();
+        rs.load(&mut cluster, &reqs).unwrap();
+        rs.last_phase_touched()
+    };
+    let small = touched_for(64);
+    let large = touched_for(4096);
+    assert_eq!(
+        small, large,
+        "steady-load touched entries scale with world ({small:?} vs {large:?})"
+    );
+    let (tp, tn) = small;
+    assert!(
+        tp > 0 && tp <= 16 && tn <= 4,
+        "workload names ~9 endpoints on 3 nodes, accumulator touched ({tp}, {tn})"
+    );
 }
 
 fn clean_scrub_steps_allocate_nothing_at_any_world() {

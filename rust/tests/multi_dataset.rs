@@ -222,6 +222,67 @@ fn load_many_matches_sequential_scatter_recovery() {
     }
 }
 
+/// Pooled-arena fused load: `load_many_pooled` plans and charges exactly
+/// like `load_many` (identical phase costs) but assembles every dataset's
+/// shards into ONE output arena — each shard a span of it, byte-identical
+/// to the per-shard `Vec` the unpooled path allocates. Cost-model datasets
+/// contribute no bytes: their spans are `None`, and they pool fine next to
+/// execution-mode datasets in the same call.
+#[test]
+fn load_many_pooled_matches_unpooled_span_for_span() {
+    let (mut cluster, mut store, ds1, _, _) = build_two(16, None, ServerSelection::Primary);
+    cluster.kill(&[3, 7, 15]);
+    let parts = [
+        (DatasetId::FIRST, scatter_for(64, &cluster, &[3, 7, 15])),
+        (ds1, scatter_for(32, &cluster, &[3])),
+    ];
+
+    let fused = store.load_many(&mut cluster, &parts).unwrap();
+    let pooled = store.load_many_pooled(&mut cluster, &parts).unwrap();
+
+    assert_eq!(pooled.request_cost, fused.request_cost, "same plan, same request phase");
+    assert_eq!(pooled.data_cost, fused.data_cost, "same plan, same data phase");
+    assert_eq!(pooled.cost, fused.cost);
+
+    // span-for-span byte parity with the unpooled per-shard Vecs, and the
+    // arena is exactly the concatenation of the spans in emission order
+    let mut expected_total = 0usize;
+    assert_eq!(pooled.parts.len(), fused.parts.len());
+    for (d, (fpart, ppart)) in fused.parts.iter().zip(&pooled.parts).enumerate() {
+        assert_eq!(ppart.dataset, fpart.dataset);
+        assert_eq!(ppart.shards.len(), fpart.shards.len());
+        for (i, (fs, ps)) in fpart.shards.iter().zip(&ppart.shards).enumerate() {
+            assert_eq!(ps.pe, fs.pe, "dataset {d} shard {i}");
+            assert_eq!(
+                pooled.shard_bytes(d, i),
+                fs.bytes.as_deref(),
+                "dataset {d} shard {i} bytes"
+            );
+            expected_total += fs.bytes.as_ref().map_or(0, |b| b.len());
+        }
+    }
+    assert_eq!(pooled.arena.len(), expected_total, "one arena, no slack");
+
+    // a cost-model dataset pooled next to an execution one: virtual shards
+    // have no spans, real shards keep theirs
+    let mut cluster2 = Cluster::new_execution(8, 4);
+    let cfg_r = RestoreConfig::builder(8, 8, 64).replicas(2).build().unwrap();
+    let cfg_v = RestoreConfig::builder(8, 8, 64).replicas(2).build().unwrap();
+    let mut store2 = ReStore::new(cfg_r, &cluster2).unwrap();
+    let dsv = store2.create_dataset(cfg_v, &cluster2).unwrap();
+    store2.submit(&mut cluster2, &make_shards(8, 64 * 8, 3)).unwrap();
+    store2.dataset_mut(dsv).unwrap().submit_virtual(&mut cluster2).unwrap();
+    cluster2.kill(&[2]);
+    let mixed = [
+        (DatasetId::FIRST, scatter_for(64, &cluster2, &[2])),
+        (dsv, scatter_for(64, &cluster2, &[2])),
+    ];
+    let out = store2.load_many_pooled(&mut cluster2, &mixed).unwrap();
+    assert!(out.parts[0].shards.iter().all(|s| s.span.is_some()));
+    assert!(out.parts[1].shards.iter().all(|s| s.span.is_none()));
+    assert!(out.cost.total_bytes > 0, "virtual loads still charge the cost model");
+}
+
 #[test]
 fn load_many_rejects_duplicates_unknown_ids_and_out_of_space_requests() {
     let (mut cluster, mut store, ds1, _, _) = build_two(8, Some(16), ServerSelection::Random);

@@ -202,6 +202,133 @@ fn prop_load_all_partitions_whole_id_space() {
     }
 }
 
+/// Bidirectional holder-index consistency: `slots_of(pe)` (the reverse
+/// pe → slots map that makes `drop_pe` O(slots held)) and `holders_of(s)`
+/// (the forward slot → PEs view) must describe the same relation.
+fn assert_holder_index_reverse_consistent(idx: &HolderIndex, world: usize, when: &str) {
+    for pe in 0..world {
+        for &s in idx.slots_of(pe) {
+            assert!(
+                idx.holders_of(s as usize).binary_search(&(pe as u32)).is_ok(),
+                "{when}: reverse map lists slot {s} for PE {pe} but the forward view disagrees"
+            );
+        }
+    }
+    for s in 0..idx.slots() {
+        for &pe in idx.holders_of(s) {
+            assert!(
+                idx.slots_of(pe as usize).binary_search(&(s as u32)).is_ok(),
+                "{when}: forward view lists PE {pe} on slot {s} but the reverse map disagrees"
+            );
+        }
+    }
+}
+
+/// Model-based reverse-map property: against a naive `BTreeSet` oracle,
+/// random insert / remove / drop_pe interleavings (spanning the inline ↔
+/// overflow spill boundary both ways) must keep both views of the
+/// [`HolderIndex`] exact — including `remove`'s existed-bit.
+#[test]
+fn prop_holder_index_reverse_map_matches_btree_oracle_under_random_ops() {
+    use std::collections::BTreeSet;
+
+    let mut rng = Rng::seed_from_u64(0x2E58);
+    for trial in 0..40 {
+        let slots = 1 + rng.gen_index(24);
+        // world > slots so spare-rank PEs beyond the slot count exercise the
+        // grow-on-demand reverse map
+        let world = slots + 1 + rng.gen_index(16);
+        let mut idx = HolderIndex::new(slots);
+        let mut model: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); slots];
+        for op in 0..400 {
+            let roll = rng.gen_f64();
+            if roll < 0.55 {
+                let (s, pe) = (rng.gen_index(slots), rng.gen_index(world));
+                idx.insert(s, pe);
+                model[s].insert(pe as u32);
+            } else if roll < 0.8 {
+                let (s, pe) = (rng.gen_index(slots), rng.gen_index(world));
+                let existed = idx.remove(s, pe);
+                assert_eq!(
+                    existed,
+                    model[s].remove(&(pe as u32)),
+                    "trial {trial} op {op}: remove({s}, {pe}) existed-bit"
+                );
+            } else {
+                let pe = rng.gen_index(world);
+                idx.drop_pe(pe);
+                for set in &mut model {
+                    set.remove(&(pe as u32));
+                }
+            }
+        }
+        for (s, set) in model.iter().enumerate() {
+            let want: Vec<u32> = set.iter().copied().collect();
+            assert_eq!(idx.holders_of(s), &want[..], "trial {trial}: slot {s} forward view");
+        }
+        for pe in 0..world {
+            let want: Vec<u32> = (0..slots)
+                .filter(|&s| model[s].contains(&(pe as u32)))
+                .map(|s| s as u32)
+                .collect();
+            assert_eq!(idx.slots_of(pe), &want[..], "trial {trial}: PE {pe} reverse view");
+        }
+    }
+}
+
+/// The epoch-stamped sparse accumulator pooled across phases and
+/// topologies must charge every phase identically to a fresh
+/// densely-zeroed accumulator over random message/fragment mixes —
+/// including empty phases, self-messages (free), and reuse across
+/// shrinking and regrowing topologies — while walking only the entries
+/// the phase touched.
+#[test]
+fn prop_pooled_sparse_accumulator_charges_like_fresh_dense() {
+    use restore::config::NetworkConfig;
+    use restore::simnet::network::Accumulator;
+    use restore::simnet::topology::Topology;
+
+    let mut rng = Rng::seed_from_u64(0xACC0);
+    let mut pooled = Accumulator::default();
+    for trial in 0..25 {
+        let p = 2 + rng.gen_index(300);
+        let ppn = [1usize, 2, 4, 8, 48][rng.gen_index(5)];
+        let topo = Topology::new(p, ppn);
+        let net = NetworkConfig::default();
+        for phase in 0..8 {
+            pooled.reset(&net, &topo);
+            let mut fresh = Accumulator::new(&net, &topo);
+            let n_msgs = rng.gen_index(24);
+            let mut endpoints = 0usize;
+            for _ in 0..n_msgs {
+                let (src, dst) = (rng.gen_index(p), rng.gen_index(p));
+                let bytes = rng.gen_u64_below(1 << 16);
+                pooled.msg(src, dst, bytes);
+                fresh.msg(src, dst, bytes);
+                endpoints += 2;
+            }
+            for _ in 0..rng.gen_index(6) {
+                let pe = rng.gen_index(p);
+                let count = 1 + rng.gen_u64_below(16);
+                pooled.frag(pe, count);
+                fresh.frag(pe, count);
+                endpoints += 1;
+            }
+            assert_eq!(
+                pooled.finish_reset(),
+                fresh.finish(),
+                "trial {trial} phase {phase} (p={p}, ppn={ppn})"
+            );
+            let (tp, tn) = pooled.last_touched();
+            assert!(
+                tp <= endpoints.min(p) && tn <= endpoints.min(topo.nodes()),
+                "trial {trial} phase {phase}: touched ({tp}, {tn}) exceeds the \
+                 {endpoints} endpoints the phase visited"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
     // After ANY sequence of kills, repairs, and dead-store reclaims, the
@@ -222,6 +349,11 @@ fn prop_holder_index_matches_store_scan_under_kill_repair_storms() {
                 "trial {trial} (p={}, r={}): index drifted {when}",
                 cfg.world,
                 cfg.replicas
+            );
+            assert_holder_index_reverse_consistent(
+                store.holder_index(),
+                store.stores().len(),
+                &format!("trial {trial} {when}"),
             );
         };
         check(&store, "after submit");

@@ -37,6 +37,9 @@ def fmt(name: str, value: float) -> str:
     if "-per-s" in name:
         # rates (e.g. scrub throughput-blocks-per-s) ride the field raw
         return f"{value / 1e6:.1f} M/s" if value >= 1e6 else f"{value:,.0f}/s"
+    if "touched" in name:
+        # sparse-accumulator touched-entry counters (BENCH_million.json)
+        return f"{value:,.0f} entries"
     # everything else is nanoseconds (wall, sim-ns, or ns_per_iter proper)
     if value >= 1e9:
         return f"{value / 1e9:.2f} s"
