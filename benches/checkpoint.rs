@@ -1,0 +1,165 @@
+//! Checkpointing benchmark (EXPERIMENTS.md §Checkpointing).
+//!
+//! Two questions, two sections, both in cost-model mode at the paper's
+//! production scales (p = 1536 and p = 24576):
+//!
+//! * **What does a checkpoint cost, full vs delta?** A full resubmit
+//!   re-replicates the whole dataset; a delta resubmit of k dirty blocks
+//!   re-replicates only those blocks' replica sets. Reported as simulated
+//!   nanoseconds and replicated bytes per checkpoint for the full space
+//!   and for k = 64 scattered dirty blocks — the message/byte parity
+//!   contract (`Dirty` charges exactly what the touched blocks cost) made
+//!   quantitative.
+//!
+//! * **What does overlap buy at each checkpoint interval?** The
+//!   GASPI-style async-checkpoint framing (arXiv:1505.04628): an
+//!   iterative app checkpoints every I iterations, and replication either
+//!   blocks the loop (`Overlap::Blocking`) or hides behind the next
+//!   iteration's compute (`Overlap::Compute`), paying only the *exposed*
+//!   remainder. Swept over I ∈ {1, 4, 16} with the per-iteration compute
+//!   calibrated to one full-checkpoint latency, so overlap has exactly
+//!   one iteration's worth of compute to hide behind. Reported as
+//!   checkpoint overhead per iteration (ns) for both modes plus the
+//!   recomputation exposure of the interval (worst-case lost work on a
+//!   failure: I iterations + the checkpoint latency itself).
+//!
+//! With `BENCH_SHORT=1` the p = 24576 configuration is skipped and the
+//! sweep is shortened (the CI schema smoke — see `make bench-json-short`).
+//! Emits `BENCH_checkpoint.json` in the `{name, ns_per_iter}` artifact
+//! schema (the name states the unit).
+
+use restore::config::RestoreConfig;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::{Overlap, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::util::bench::{black_box, short_mode, write_json_artifact, BenchResult};
+
+const PPN: usize = 48;
+const DELTA_BLOCKS: u64 = 64;
+
+fn whole_space(store: &ReStore) -> RangeSet {
+    RangeSet::new(vec![BlockRange::new(0, store.distribution().n_blocks())])
+}
+
+/// k single blocks scattered evenly across the block space — the worst
+/// coalescing case for a delta (every dirty block is its own message).
+fn scattered(store: &ReStore, k: u64) -> RangeSet {
+    let n = store.distribution().n_blocks();
+    let stride = (n / k).max(1);
+    RangeSet::new((0..k).map(|i| BlockRange::new(i * stride, i * stride + 1)).collect())
+}
+
+/// Section 1: full-vs-delta checkpoint cost at scale.
+fn full_vs_delta_at(p: usize, results: &mut Vec<BenchResult>) {
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let mut cluster = Cluster::with_spares(p, PPN, 0);
+    let mut store = ReStore::new(cfg, &cluster).unwrap();
+    store.submit_virtual(&mut cluster).unwrap();
+
+    let full = whole_space(&store);
+    let rep_full = store.resubmit_virtual(&mut cluster, &full, Overlap::Blocking).unwrap();
+    let delta = scattered(&store, DELTA_BLOCKS);
+    let rep_delta = store.resubmit_virtual(&mut cluster, &delta, Overlap::Blocking).unwrap();
+    assert_eq!(rep_delta.dirty_blocks, DELTA_BLOCKS);
+    assert!(rep_delta.replicated_bytes < rep_full.replicated_bytes / 100);
+
+    let tag = format!("p={p}");
+    println!(
+        "checkpoint {tag}: full sim {:.2} ms ({:.1} MiB), delta k={DELTA_BLOCKS} sim \
+         {:.3} ms ({:.1} KiB) -> {:.0}x cheaper",
+        rep_full.cost.sim_time_s * 1e3,
+        rep_full.replicated_bytes as f64 / (1u64 << 20) as f64,
+        rep_delta.cost.sim_time_s * 1e3,
+        rep_delta.replicated_bytes as f64 / (1u64 << 10) as f64,
+        rep_full.cost.sim_time_s / rep_delta.cost.sim_time_s,
+    );
+    results.push(BenchResult::from_value(
+        &format!("checkpoint full-resubmit-sim-ns {tag}"),
+        rep_full.cost.sim_time_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("checkpoint full-resubmit-bytes {tag}"),
+        rep_full.replicated_bytes as f64,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("checkpoint delta-resubmit-sim-ns {tag} k={DELTA_BLOCKS}"),
+        rep_delta.cost.sim_time_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("checkpoint delta-resubmit-bytes {tag} k={DELTA_BLOCKS}"),
+        rep_delta.replicated_bytes as f64,
+    ));
+    black_box(rep_full.version);
+}
+
+/// Section 2: overlapped-vs-blocking overhead swept over the checkpoint
+/// interval I. Per-iteration compute = one full-checkpoint latency, so
+/// `Overlap::Compute` has exactly one iteration to hide behind.
+fn overlap_sweep_at(p: usize, results: &mut Vec<BenchResult>) {
+    let iters = if short_mode() { 8 } else { 32 };
+    // Calibrate: one full-checkpoint simulated latency on a throwaway store.
+    let cfg = RestoreConfig::paper_default(p).unwrap();
+    let mut cal_cluster = Cluster::with_spares(p, PPN, 0);
+    let mut cal = ReStore::new(cfg.clone(), &cal_cluster).unwrap();
+    cal.submit_virtual(&mut cal_cluster).unwrap();
+    let full = whole_space(&cal);
+    let compute_s =
+        cal.resubmit_virtual(&mut cal_cluster, &full, Overlap::Blocking).unwrap().cost.sim_time_s;
+
+    for &interval in &[1usize, 4, 16] {
+        let mut overhead = [0.0f64; 2]; // [blocking, overlapped]
+        let mut ck_latency = 0.0f64;
+        for (mode, slot) in [(Overlap::Blocking, 0), (Overlap::Compute(compute_s), 1)] {
+            let mut cluster = Cluster::with_spares(p, PPN, 0);
+            let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+            store.submit_virtual(&mut cluster).unwrap();
+            let t0 = cluster.now();
+            for it in 0..iters {
+                cluster.tick_compute(compute_s);
+                if (it + 1) % interval == 0 {
+                    let dirty = whole_space(&store);
+                    let rep = store.resubmit_virtual(&mut cluster, &dirty, mode).unwrap();
+                    ck_latency = rep.cost.sim_time_s;
+                }
+            }
+            // everything beyond pure compute is checkpoint overhead
+            overhead[slot] = (cluster.now() - t0) - iters as f64 * compute_s;
+        }
+        let tag = format!("p={p} interval={interval}");
+        // worst-case lost work on a failure just before a checkpoint lands
+        let exposure_s = interval as f64 * compute_s + ck_latency;
+        println!(
+            "checkpoint sweep {tag}: blocking overhead {:.2} ms/iter, overlapped \
+             {:.2} ms/iter ({:.0}% hidden), exposure {:.1} ms",
+            overhead[0] / iters as f64 * 1e3,
+            overhead[1] / iters as f64 * 1e3,
+            (1.0 - overhead[1] / overhead[0].max(f64::EPSILON)) * 1e2,
+            exposure_s * 1e3,
+        );
+        results.push(BenchResult::from_value(
+            &format!("checkpoint blocking-overhead-ns-per-iter {tag}"),
+            overhead[0] / iters as f64 * 1e9,
+        ));
+        results.push(BenchResult::from_value(
+            &format!("checkpoint overlapped-overhead-ns-per-iter {tag}"),
+            overhead[1] / iters as f64 * 1e9,
+        ));
+        results.push(BenchResult::from_value(
+            &format!("checkpoint exposure-ns {tag}"),
+            exposure_s * 1e9,
+        ));
+    }
+}
+
+fn main() {
+    println!("=== checkpoint benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let scales: &[usize] = &[1536, 24576];
+    let scales = if short_mode() { &scales[..1] } else { scales };
+    for &p in scales {
+        full_vs_delta_at(p, &mut results);
+        overlap_sweep_at(p, &mut results);
+    }
+    write_json_artifact("BENCH_checkpoint.json", &results).expect("write BENCH_checkpoint.json");
+    println!("\nwrote BENCH_checkpoint.json ({} entries)", results.len());
+}

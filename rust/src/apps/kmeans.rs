@@ -17,7 +17,7 @@
 //! real PJRT compute, small p) and **cost-model** (schedules + calibrated
 //! per-iteration compute time, the paper's PE counts).
 
-use crate::apps::{secondary_replicas, Ownership};
+use crate::apps::{checkpoint_state, checkpoint_state_virtual, secondary_replicas, Ownership};
 use crate::config::RestoreConfig;
 use crate::error::{Error, Result};
 use crate::restore::block::{BlockRange, RangeSet};
@@ -202,12 +202,14 @@ pub fn run_execution(
     let mut centers = starting_centers(params.seed, params.k, dims);
 
     // Second dataset (§V: one ReStore object per datatype): the shared
-    // starting centroids, checkpointed with their own r/b — every PE
-    // submits the identical serialization, so any survivor can re-fetch a
-    // bit-exact copy after a failure (verified below).
+    // centroids, checkpointed with their own r/b — every PE submits the
+    // identical serialization, so any survivor can re-fetch a bit-exact
+    // copy after a failure (verified below). The centers evolve, so each
+    // iteration resubmits them as a new version; `centroid_blocks` tracks
+    // the latest *committed* serialization — exactly what loads serve.
     let centroid_cfg = centroid_restore_cfg(p, params.k, dims)?;
     let centroid_bpp = centroid_cfg.blocks_per_pe as u64;
-    let centroid_blocks = f32s_to_blocks(&centers, centroid_cfg.block_size);
+    let mut centroid_blocks = f32s_to_blocks(&centers, centroid_cfg.block_size);
     let centroid_ds = store.create_dataset(centroid_cfg, cluster)?;
     let centroid_shards: Vec<Vec<u8>> = vec![centroid_blocks.clone(); p];
     let submit_c = store.dataset_mut(centroid_ds)?.submit(cluster, &centroid_shards)?;
@@ -281,6 +283,27 @@ pub fn run_execution(
         centers = upd.into_iter().next().unwrap();
         report.sim_kmeans_loop_s += cluster.now() - loop_t0;
 
+        // ---- per-iteration centroid checkpoint -----------------------------
+        // Resubmit the updated centers as a delta version, overlapped
+        // against this iteration's (already charged) compute time; a layout
+        // that can't take a resubmit — e.g. after an acknowledge-only
+        // shrink — skips the checkpoint and keeps serving the last
+        // committed version.
+        let ck_t0 = cluster.now();
+        let new_blocks = f32s_to_blocks(&centers, centroid_cfg.block_size);
+        let global = new_blocks.repeat(p); // every PE's region: same bytes
+        if checkpoint_state(
+            store.dataset_mut(centroid_ds)?,
+            cluster,
+            &global,
+            max_pe_compute,
+        )?
+        .is_some()
+        {
+            centroid_blocks = new_blocks;
+        }
+        report.sim_restore_s += cluster.now() - ck_t0;
+
         // ---- failure injection + recovery ---------------------------------
         let dead = schedule.sample(&mut rng, &cluster.survivors());
         let dead: Vec<usize> =
@@ -327,7 +350,7 @@ pub fn run_execution(
             let point_shards_out = match store.load_many(cluster, &parts) {
                 Ok(fused) => {
                     // the recovered centroid shards must be bit-exact
-                    // copies of the canonical starting-center serialization
+                    // copies of the latest *committed* centroid version
                     let got = fused.parts[1].shards[0].bytes.as_ref().expect("execution mode");
                     for (i, chunk) in got.chunks(centroid_blocks.len()).enumerate() {
                         assert_eq!(
@@ -418,6 +441,12 @@ pub fn run_cost_model(
         cluster.tick_compute(compute_s_per_iter);
         cluster.allreduce_cost_only(reduce_bytes);
         report.sim_kmeans_loop_s += cluster.now() - loop_t0;
+
+        // per-iteration centroid checkpoint (cost model): the schedule of a
+        // full-vector resubmit, overlapped against the iteration's compute
+        let ck_t0 = cluster.now();
+        checkpoint_state_virtual(store.dataset_mut(centroid_ds)?, cluster, compute_s_per_iter)?;
+        report.sim_restore_s += cluster.now() - ck_t0;
 
         let dead = schedule.sample(&mut rng, &cluster.survivors());
         let dead: Vec<usize> =

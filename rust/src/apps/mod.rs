@@ -16,16 +16,23 @@
 //!
 //! Each app checkpoints TWO datasets (§V: "one ReStore object per
 //! datatype"): its bulk input (points / edges / MSA sites, r = 4, 64 B
-//! blocks) and a small state dataset (starting centroids / initial rank
-//! vector / model state, [`secondary_replicas`], 32 B blocks). Failure
-//! recovery drives both through ONE fused `load_many` round and ONE fused
-//! shrink handshake.
+//! blocks) and a small *mutable* state dataset (centroids / rank vector /
+//! model state, [`secondary_replicas`], 32 B blocks). The state evolves
+//! every iteration, so the apps resubmit it as a new version per iteration
+//! ([`checkpoint_state`]) — a checksum delta overlapped against the
+//! iteration's compute, GASPI-style — and failure recovery re-fetches the
+//! latest *committed* version through the same fused `load_many` round and
+//! fused shrink handshake as the bulk input.
 
 pub mod kmeans;
 pub mod pagerank;
 pub mod raxml;
 
+use crate::error::{Error, Result};
 use crate::restore::block::{BlockRange, RangeSet};
+use crate::restore::registry::Dataset;
+use crate::restore::resubmit::{Overlap, ResubmitMode};
+use crate::simnet::cluster::Cluster;
 
 /// Replication level for an application's *secondary* dataset (centroids,
 /// rank vectors, model state): lower than the point/edge/site data's
@@ -36,6 +43,68 @@ pub fn secondary_replicas(world: usize) -> usize {
         2
     } else {
         1
+    }
+}
+
+/// Cut a full serialized state buffer (`n_blocks * block_size` bytes, in
+/// original block order) into the per-slice shards [`Dataset::resubmit`]
+/// expects under the dataset's *current* distribution — the identity
+/// partition before any failure, the rewritten §IV-A layout after a
+/// rebalance.
+pub fn checkpoint_shards(ds: &Dataset, global: &[u8]) -> Vec<Vec<u8>> {
+    let dist = ds.distribution();
+    let bs = ds.config().block_size;
+    (0..dist.world())
+        .map(|j| {
+            let r = dist.slice_range(j);
+            global[r.start as usize * bs..r.end as usize * bs].to_vec()
+        })
+        .collect()
+}
+
+/// Per-iteration checkpoint of an evolving state dataset: resubmit the new
+/// serialization as a delta version (unchanged blocks detected by the PR 7
+/// per-block checksums), overlapped against the iteration's already-charged
+/// compute time so only the exposed remainder costs wall clock.
+///
+/// Degrades to a no-op (`Ok(None)`) when the current layout cannot accept a
+/// resubmit — dead submitters after an acknowledge-only shrink, or whole
+/// slots lost on a low-replication dataset — since the state also lives in
+/// app memory; the dataset then keeps serving its last committed version.
+/// Returns `Some(exposed_seconds)` when the new version committed.
+pub fn checkpoint_state(
+    ds: &mut Dataset,
+    cluster: &mut Cluster,
+    global: &[u8],
+    compute_overlap_s: f64,
+) -> Result<Option<f64>> {
+    let shards = checkpoint_shards(ds, global);
+    match ds.resubmit(
+        cluster,
+        &shards,
+        ResubmitMode::DeltaByChecksum,
+        Overlap::Compute(compute_overlap_s),
+    ) {
+        Ok(rep) => Ok(Some(rep.exposed_s)),
+        Err(Error::DeadPe(_)) | Err(Error::IrrecoverableDataLoss { .. }) => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+/// Cost-model twin of [`checkpoint_state`]: charges the schedule of a
+/// full-vector resubmit (every block dirty — iterative state rarely leaves
+/// a block untouched) overlapped against the iteration's compute, without
+/// materializing bytes. Same degradation rules.
+pub fn checkpoint_state_virtual(
+    ds: &mut Dataset,
+    cluster: &mut Cluster,
+    compute_overlap_s: f64,
+) -> Result<Option<f64>> {
+    let dirty = RangeSet::new(vec![BlockRange::new(0, ds.distribution().n_blocks())]);
+    match ds.resubmit_virtual(cluster, &dirty, Overlap::Compute(compute_overlap_s)) {
+        Ok(rep) => Ok(Some(rep.exposed_s)),
+        Err(Error::DeadPe(_)) | Err(Error::IrrecoverableDataLoss { .. }) => Ok(None),
+        Err(e) => Err(e),
     }
 }
 

@@ -9,7 +9,7 @@
 //! for a fixed-shape AOT kernel; DESIGN.md §3/S19), same recovery skeleton
 //! as the other apps.
 
-use crate::apps::{secondary_replicas, Ownership};
+use crate::apps::{checkpoint_state, secondary_replicas, Ownership};
 use crate::config::RestoreConfig;
 use crate::error::Result;
 use crate::restore::block::{BlockRange, RangeSet};
@@ -116,21 +116,28 @@ pub fn run(
     report.sim_restore_s += submit.cost.sim_time_s;
     drop(shards);
 
-    // Second dataset (§V: one ReStore object per datatype): the initial
-    // rank vector (1/n per vertex as f64 bit patterns), checkpointed with
-    // its own r/b — a restarted survivor re-fetches a dead PE's rank shard
-    // bit-exactly after every failure (verified below). 32 B blocks hold 4
-    // vertices' ranks; the edge dataset keeps its larger blocks and r = 4.
+    // Second dataset (§V: one ReStore object per datatype): the rank
+    // vector (f64 bit patterns), checkpointed with its own r/b — a
+    // restarted survivor re-fetches a dead PE's rank shard bit-exactly
+    // after every failure (verified below). 32 B blocks hold 4 vertices'
+    // ranks; the edge dataset keeps its larger blocks and r = 4. The ranks
+    // evolve, so each iteration resubmits them as a new version;
+    // `committed_ranks` mirrors the latest committed serialization of the
+    // whole block space (PE d's region = PE d's rank shard).
     let rank_cfg = rank_restore_cfg(p, params)?;
+    let rank_bs = rank_cfg.block_size;
     let rank_bpp = rank_cfg.blocks_per_pe as u64;
     let rank0 = (1.0f64 / total_vertices as f64).to_bits();
     let rank_shard =
-        u64s_to_blocks(&vec![rank0; params.vertices_per_pe], rank_cfg.block_size);
+        u64s_to_blocks(&vec![rank0; params.vertices_per_pe], rank_bs);
+    let shard_bytes = rank_shard.len();
     let rank_ds = store.create_dataset(rank_cfg, cluster)?;
     let rank_shards: Vec<Vec<u8>> = vec![rank_shard.clone(); p];
     let submit_r = store.dataset_mut(rank_ds)?.submit(cluster, &rank_shards)?;
     report.sim_restore_s += submit_r.cost.sim_time_s;
     drop(rank_shards);
+    let mut committed_ranks: Vec<u8> = rank_shard.repeat(p);
+    drop(rank_shard);
 
     // ownership in blocks; vertices_per_block for edge<->vertex mapping
     let vertices_per_block = bs / (8 * epv);
@@ -173,6 +180,31 @@ pub fn run(
         }
         report.final_delta = delta;
 
+        // ---- per-iteration rank-vector checkpoint --------------------------
+        // Resubmit the updated ranks as a new version, overlapped against
+        // this iteration's (already charged) scatter compute; serialized
+        // per original PE so each region matches the original per-shard
+        // padding. Power iteration touches every rank, so the checksum
+        // delta degenerates to a full resubmit — the mode stays uniform
+        // across the apps and pays only one hashing pass for it.
+        let ck_t0 = cluster.now();
+        let mut global = Vec::with_capacity(p * shard_bytes);
+        for pe in 0..p {
+            let bits: Vec<u64> = ranks
+                [pe * params.vertices_per_pe..(pe + 1) * params.vertices_per_pe]
+                .iter()
+                .map(|r| r.to_bits())
+                .collect();
+            global.extend_from_slice(&u64s_to_blocks(&bits, rank_bs));
+        }
+        let compute_overlap = total_vertices as f64 * epv as f64 / 2e9;
+        if checkpoint_state(store.dataset_mut(rank_ds)?, cluster, &global, compute_overlap)?
+            .is_some()
+        {
+            committed_ranks = global;
+        }
+        report.sim_restore_s += cluster.now() - ck_t0;
+
         // ---- failures ------------------------------------------------------
         let dead: Vec<usize> = if params.failure_fraction > 0.0 {
             schedule
@@ -214,10 +246,18 @@ pub fn run(
             let parts = [(edges_ds, requests), (rank_ds, rank_reqs)];
             let edge_shards_out = match store.load_many(cluster, &parts) {
                 Ok(fused) => {
-                    // the recovered initial-rank shards must be bit-exact
+                    // the recovered rank shards must be bit-exact copies of
+                    // the latest *committed* checkpoint version (load
+                    // output is in normalized ascending block order)
                     let got = fused.parts[1].shards[0].bytes.as_ref().expect("execution mode");
-                    for (i, chunk) in got.chunks(rank_shard.len()).enumerate() {
-                        assert_eq!(chunk, &rank_shard[..], "recovered rank shard {i} diverged");
+                    let mut dead_sorted = dead.clone();
+                    dead_sorted.sort_unstable();
+                    for (chunk, &d) in got.chunks(shard_bytes).zip(&dead_sorted) {
+                        assert_eq!(
+                            chunk,
+                            &committed_ranks[d * shard_bytes..(d + 1) * shard_bytes],
+                            "recovered rank shard of PE {d} diverged"
+                        );
                     }
                     fused.parts.into_iter().next().unwrap().shards
                 }

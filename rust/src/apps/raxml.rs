@@ -16,7 +16,7 @@
 //! = 36 B/site, padded to 64 B blocks: 1 site = 1 block, which conveniently
 //! matches the paper's 64 B block granularity.
 
-use crate::apps::secondary_replicas;
+use crate::apps::{checkpoint_state_virtual, secondary_replicas};
 use crate::config::{PfsConfig, RestoreConfig};
 use crate::error::Result;
 use crate::pfs::{CacheState, Pfs, PfsMethod};
@@ -67,6 +67,9 @@ impl PhyloDataset {
 pub struct RecoveryTimes {
     /// ReStore submit (one-time).
     pub restore_submit_s: f64,
+    /// Exposed (non-overlapped) time of the per-round model-state
+    /// checkpoints before the failure.
+    pub restore_checkpoint_s: f64,
     /// ReStore load after a failure (redistribution to all survivors).
     pub restore_load_s: f64,
     /// RBA file from PFS, OS cache cold.
@@ -198,6 +201,16 @@ pub fn measure_recovery(
     store.dataset_mut(model_ds)?.submit_virtual(&mut cluster)?;
     let submit_s = cluster.now() - t0;
 
+    // RAxML-NG re-optimizes the evolutionary model between tree moves:
+    // checkpoint the evolving model state as new versions (one resubmit
+    // per optimization round, overlapped against the round's likelihood
+    // compute) so the recovery below serves the latest committed model.
+    let ck_t0 = cluster.now();
+    for _round in 0..3 {
+        checkpoint_state_virtual(store.dataset_mut(model_ds)?, &mut cluster, 0.01)?;
+    }
+    let checkpoint_s = cluster.now() - ck_t0;
+
     let dead: Vec<usize> = (0..kill_count.min(world - 1)).map(|i| i * 7 % world).collect();
     let dead: Vec<usize> = {
         let mut d = dead;
@@ -257,6 +270,7 @@ pub fn measure_recovery(
 
     Ok(RecoveryTimes {
         restore_submit_s: submit_s,
+        restore_checkpoint_s: checkpoint_s,
         restore_load_s: load_s,
         pfs_uncached_s: uncached,
         pfs_cached_s: cached,

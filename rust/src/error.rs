@@ -28,8 +28,11 @@ pub enum Error {
     UnknownDataset { dataset: u32, datasets: usize },
 
     /// submit() called more than once. The paper's library supports
-    /// submitting data exactly once (§V); so does this reproduction.
-    #[error("ReStore::submit may only be called once per instance")]
+    /// submitting data exactly once per dataset (§V); publishing a *new
+    /// version* of already-submitted data goes through the versioned
+    /// mutable-dataset path (`Dataset::resubmit` / `resubmit_virtual`)
+    /// instead.
+    #[error("ReStore::submit may only be called once per instance; use resubmit for new versions")]
     AlreadySubmitted,
 
     /// load() called before submit().
@@ -64,6 +67,18 @@ pub enum Error {
     /// failures to obtain a current map.
     #[error("stale rank map: {0}; re-run ulfm shrink/substitute/grow after the latest failures")]
     StaleRankMap(String),
+
+    /// A versioned resubmit was torn down mid-flight: a failure or a
+    /// communicator reconfiguration (epoch bump) landed between staging
+    /// and commit, so the staged version was discarded whole. Loads keep
+    /// serving the last *committed* version (`version`) byte-exactly —
+    /// never a torn mix of old and new blocks. Re-drive recovery (the
+    /// usual rebalance/acknowledge handshake), then retry the resubmit.
+    #[error(
+        "resubmit of dataset {dataset} aborted before commit; the staged version was discarded \
+         and loads keep serving committed version {version}"
+    )]
+    ResubmitAborted { dataset: crate::restore::registry::DatasetId, version: u64 },
 
     /// A stored block's bytes no longer match the checksum latched at
     /// submit time — silent corruption (bit rot, a torn write) on the

@@ -89,6 +89,15 @@ impl Dataset {
     /// communicator ([`Error::StaleEpoch`](crate::error::Error::StaleEpoch)):
     /// rebalance or acknowledge first, which also re-clamps the cursor
     /// into the (possibly shrunk) new slot space.
+    ///
+    /// The cursor also survives the mutable-dataset write path: an
+    /// in-place [`Dataset::resubmit`](crate::restore::Dataset::resubmit)
+    /// keeps it (same slot space; commit re-latches the written blocks'
+    /// checksums, so the ongoing wrap keeps verifying clean), while a
+    /// shape-changing
+    /// [`Dataset::resubmit_reshaped`](crate::restore::Dataset::resubmit_reshaped)
+    /// resets it to 0 — and the entry clamp below backstops any path that
+    /// shrinks the slot space under a mid-wrap cursor.
     pub fn scrub(&mut self, cluster: &mut Cluster, budget_blocks: u64) -> Result<ScrubReport> {
         self.ensure_submitted()?;
         self.ensure_current_epoch(cluster)?;
@@ -370,6 +379,52 @@ mod tests {
         assert_eq!(report.corrupt_blocks, 1);
         assert_eq!(report.quarantined, 1);
         assert_eq!(report.repaired, 1);
+    }
+
+    /// Regression: a resubmit that shrinks the dataset below the current
+    /// slot count must not leave a mid-wrap scrub cursor pointing past the
+    /// end of the new slot space (an out-of-range `slice_range` walk).
+    #[test]
+    fn scrub_cursor_survives_shrinking_resubmit_mid_wrap() {
+        use crate::restore::Overlap;
+        let (mut cluster, mut rs, _) = build();
+        // park the cursor deep into the wrap: 12 of 16 slots visited
+        let per_slot = (R * BPP) as u64;
+        for _ in 0..12 {
+            rs.scrub(&mut cluster, per_slot).unwrap();
+        }
+        assert_eq!(rs.datasets()[0].scrub_slot, 12);
+
+        // in-place resubmit: slot space unchanged, cursor stays put and the
+        // rest of the wrap verifies the re-latched checksums clean
+        let new_shards: Vec<Vec<u8>> =
+            (0..P).map(|pe| (0..BPP * BS).map(|i| (pe * 13 + i) as u8).collect()).collect();
+        rs.resubmit(
+            &mut cluster,
+            &new_shards,
+            crate::restore::ResubmitMode::Full,
+            Overlap::Blocking,
+        )
+        .unwrap();
+        assert_eq!(rs.datasets()[0].scrub_slot, 12, "in-place resubmit keeps the cursor");
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert_eq!(report.corrupt_blocks, 0, "new version scrubs clean");
+
+        // park mid-wrap again, then shrink to 8 blocks (8 slots < cursor):
+        // the shape-changing resubmit resets the cursor and the next scrub
+        // walks the new, smaller slot space without panicking
+        for _ in 0..12 {
+            rs.scrub(&mut cluster, per_slot).unwrap();
+        }
+        assert_eq!(rs.datasets()[0].scrub_slot, 12);
+        let small: Vec<u8> = (0..8 * BS).map(|i| i as u8).collect();
+        rs.datasets[0].resubmit_reshaped(&mut cluster, &small, Overlap::Blocking).unwrap();
+        assert_eq!(rs.datasets()[0].scrub_slot, 0, "shape change resets the cursor");
+        assert_eq!(rs.distribution().world(), 8);
+        let report = rs.scrub(&mut cluster, u64::MAX).unwrap();
+        assert!(report.wrapped);
+        assert_eq!(report.corrupt_blocks, 0);
+        assert_eq!(report.scanned_blocks, (R * 8) as u64, "R copies of 8 blocks");
     }
 
     #[test]

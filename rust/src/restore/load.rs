@@ -20,6 +20,12 @@
 //! costs **zero network** (pinned by the `self_served_load_costs_zero_network`
 //! golden test).
 //!
+//! **Versioned (mutable) datasets:** loads always serve the latest
+//! *committed* version. An in-flight [`crate::restore::resubmit`]
+//! replicates into a separate staging store (double-buffered), which the
+//! router below never reads — a load racing a checkpoint returns the
+//! previous complete version, never a torn mix of old and new blocks.
+//!
 //! ## The routing pipeline (perf)
 //!
 //! Recovery latency is the paper's headline number ("in the range of

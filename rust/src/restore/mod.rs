@@ -11,7 +11,13 @@
 //!   [`DatasetId`] key; [`ReStore`] owns a `Vec<Dataset>` and keeps the
 //!   historical single-dataset API as a facade over dataset 0.
 //! * [`store`] — per-PE in-memory replica storage.
-//! * [`submit`] — the one-time checkpoint creation path.
+//! * [`submit`] — the initial checkpoint creation path (version 1).
+//! * [`resubmit`] — the mutable-dataset write path: versioned
+//!   [`Dataset::resubmit`] (full / dirty-range / checksum-delta) with
+//!   double-buffered staging, GASPI-style compute overlap, and an
+//!   epoch-tagged atomic commit that aborts to the previous committed
+//!   version on any mid-flight failure; plus the shape-changing
+//!   [`Dataset::resubmit_reshaped`] and [`ReStore::delete_dataset`].
 //! * [`load`] — the recovery path (request resolution + sparse all-to-all),
 //!   the fused cross-dataset [`ReStore::load_many`], plus the
 //!   request-pattern helpers for the paper's three benchmark operations.
@@ -48,6 +54,7 @@ pub mod policy;
 pub mod rebalance;
 pub mod registry;
 pub mod repair;
+pub mod resubmit;
 pub mod serialize;
 pub mod store;
 pub mod submit;
@@ -71,6 +78,7 @@ pub use policy::{
 pub use registry::{
     Dataset, DatasetId, LoadManyOutput, LoadManyPart, PooledLoadOutput, PooledPart, PooledShard,
 };
+pub use resubmit::{Overlap, ResubmitMode, ResubmitReport, ResubmitStep};
 
 /// A per-PE load request: the *original* block ID ranges this PE wants.
 /// (The paper's preferred API mode: "providing exactly those ID ranges each
@@ -160,6 +168,10 @@ pub struct ReStore {
     /// steady-state no-O(p)-alloc contract as each dataset's own
     /// `LoadScratch` accumulator).
     pub(crate) fused_acc: Accumulator,
+    /// Registry slots vacated by [`ReStore::delete_dataset`], reused (LIFO)
+    /// by the next [`ReStore::create_dataset`] so surviving `DatasetId`s
+    /// stay stable and the registry vec never compacts under live ids.
+    pub(crate) free: Vec<u32>,
 }
 
 impl ReStore {
@@ -169,30 +181,78 @@ impl ReStore {
         Ok(ReStore {
             datasets: vec![Dataset::new(DatasetId(0), cfg, cluster)?],
             fused_acc: Accumulator::default(),
+            free: Vec::new(),
         })
     }
 
     /// Register an additional dataset (its own `n`, `r`, `b`, seed — §V's
     /// "one ReStore object per datatype"). The config's world must match
-    /// the cluster's; everything else is independent per dataset.
+    /// the cluster's; everything else is independent per dataset. Reuses
+    /// the most recently [deleted](ReStore::delete_dataset) registry slot
+    /// if one exists — ids of deleted datasets come back for new datasets,
+    /// while ids of surviving datasets never move.
     pub fn create_dataset(&mut self, cfg: RestoreConfig, cluster: &Cluster) -> Result<DatasetId> {
-        let id = DatasetId(self.datasets.len() as u32);
-        self.datasets.push(Dataset::new(id, cfg, cluster)?);
-        Ok(id)
+        if let Some(slot) = self.free.pop() {
+            let id = DatasetId(slot);
+            // Build first so a config error leaves the free slot available.
+            match Dataset::new(id, cfg, cluster) {
+                Ok(ds) => {
+                    self.datasets[id.index()] = ds;
+                    Ok(id)
+                }
+                Err(e) => {
+                    self.free.push(slot);
+                    Err(e)
+                }
+            }
+        } else {
+            let id = DatasetId(self.datasets.len() as u32);
+            self.datasets.push(Dataset::new(id, cfg, cluster)?);
+            Ok(id)
+        }
     }
 
-    /// Number of registered datasets (≥ 1).
+    /// Delete a dataset: every replica byte is reclaimed immediately and
+    /// the id answers [`Error::UnknownDataset`] until
+    /// [`ReStore::create_dataset`] reuses the slot. Dataset 0 backs the
+    /// single-dataset facade and cannot be deleted. Deleting twice is an
+    /// `UnknownDataset` error, not a panic.
+    pub fn delete_dataset(&mut self, id: DatasetId) -> Result<()> {
+        if id == DatasetId::FIRST {
+            return Err(Error::Config(
+                "dataset 0 backs the single-dataset facade and cannot be deleted".into(),
+            ));
+        }
+        let i = self.index_of(id)?;
+        let ds = &mut self.datasets[i];
+        for pe in 0..ds.stores.len() {
+            ds.stores[pe].clear();
+        }
+        ds.holder_index = HolderIndex::new(ds.dist.world());
+        ds.staging = None;
+        ds.submitted = false;
+        ds.execution = false;
+        ds.deleted = true;
+        self.free.push(id.0);
+        Ok(())
+    }
+
+    /// Number of registry slots (≥ 1), **including** tombstones of deleted
+    /// datasets awaiting slot reuse — the upper bound on live ids, not the
+    /// live count.
     pub fn n_datasets(&self) -> usize {
         self.datasets.len()
     }
 
-    /// All registered datasets, in id order.
+    /// All registry slots in id order, including deleted tombstones (test
+    /// with [`ReStore::dataset`], which rejects deleted ids, before
+    /// trusting a slot).
     pub fn datasets(&self) -> &[Dataset] {
         &self.datasets
     }
 
     pub(crate) fn index_of(&self, id: DatasetId) -> Result<usize> {
-        if id.index() < self.datasets.len() {
+        if id.index() < self.datasets.len() && !self.datasets[id.index()].deleted {
             Ok(id.index())
         } else {
             Err(Error::UnknownDataset { dataset: id.0, datasets: self.datasets.len() })
@@ -277,6 +337,32 @@ impl ReStore {
         self.ds0_mut().submit_virtual(cluster)
     }
 
+    /// Committed data version of dataset 0 (see [`Dataset::version`]).
+    pub fn version(&self) -> u64 {
+        self.ds0().version()
+    }
+
+    /// Publish a new version of dataset 0 (see [`Dataset::resubmit`]).
+    pub fn resubmit(
+        &mut self,
+        cluster: &mut Cluster,
+        shards: &[Vec<u8>],
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.ds0_mut().resubmit(cluster, shards, mode, overlap)
+    }
+
+    /// Cost-model resubmit of dataset 0 (see [`Dataset::resubmit_virtual`]).
+    pub fn resubmit_virtual(
+        &mut self,
+        cluster: &mut Cluster,
+        dirty: &RangeSet,
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.ds0_mut().resubmit_virtual(cluster, dirty, overlap)
+    }
+
     /// Load from dataset 0 (see [`Dataset::load`]).
     pub fn load(&mut self, cluster: &mut Cluster, requests: &[LoadRequest]) -> Result<LoadOutput> {
         self.ds0_mut().load(cluster, requests)
@@ -304,7 +390,9 @@ impl ReStore {
     /// stores reclaimed, all dataset epochs caught up to the cluster's.
     pub fn acknowledge_shrink(&mut self, cluster: &Cluster) -> Result<()> {
         for ds in &mut self.datasets {
-            ds.acknowledge_shrink(cluster)?;
+            if !ds.deleted {
+                ds.acknowledge_shrink(cluster)?;
+            }
         }
         Ok(())
     }
@@ -423,7 +511,7 @@ impl ReStore {
             }
         }
         for (i, ds) in self.datasets.iter_mut().enumerate() {
-            if outcomes[i].is_none() {
+            if outcomes[i].is_none() && !ds.deleted {
                 ds.acknowledge_shrink(cluster)?;
             }
         }

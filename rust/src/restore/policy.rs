@@ -20,6 +20,12 @@
 //!    [`ReStore::repair_replicas_all`] round restores its replication
 //!    level in place (§IV-E).
 //!
+//! Reconfiguration is version-safe for mutable datasets: both adoption
+//! paths (rebalance and acknowledge) drop any in-flight `resubmit` staging
+//! and carry only the latest *committed* version forward — a checkpoint
+//! interrupted by a failure storm aborts to the previous complete version
+//! rather than migrating half-replicated state.
+//!
 //! Each policy degrades gracefully instead of failing: [`Substitute`]
 //! falls back to a plain shrink when the spare pool cannot cover the dead
 //! (`degraded = true` in the outcome), and [`ShrinkThenRegrow`] re-grows

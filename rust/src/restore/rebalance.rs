@@ -41,7 +41,11 @@
 //!    (`RankMap::new_to_old`), stores, and holder index in under the
 //!    cluster's bumped epoch. `submit`/`load`/`repair` validate their
 //!    layout epoch against `Cluster::epoch`, so a reshape can never be
-//!    silently ignored.
+//!    silently ignored. The swap also drops any in-flight `resubmit`
+//!    staging (it addressed the old layout); the dataset's *committed*
+//!    version migrates, and the epoch bump makes a staged-but-uncommitted
+//!    checkpoint abort cleanly back to it
+//!    ([`crate::error::Error::ResubmitAborted`]).
 //!
 //! The same lattice walk covers every map shape: a **substitution** map
 //! (`p' = p`, a spare seated in a dead rank's position) degenerates to a

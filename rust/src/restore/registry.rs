@@ -129,12 +129,42 @@ impl PooledLoadOutput {
     }
 }
 
+/// The in-flight half of a double-buffered (GASPI-style) resubmit: the
+/// new version's replica slices land here while `Dataset::stores` keeps
+/// serving the previous *committed* version. Commit drains these staged
+/// slices into the committed stores (and, for a shape-changing resubmit,
+/// swaps in the whole `new_layout`); any failure or epoch bump observed at
+/// a `ResubmitStep` boundary drops the staging wholesale — loads never see
+/// a torn mix. See `restore/resubmit.rs`.
+pub(crate) struct Staging {
+    /// Machine-sized store shells holding ONLY the staged slices.
+    pub(crate) stores: Vec<PeStore>,
+    /// The version this staging will commit as (committed version + 1).
+    pub(crate) version: u64,
+    /// Original-id blocks being re-replicated (the dirty set's cardinality).
+    pub(crate) dirty_blocks: u64,
+    /// Total replicated payload (Σ staged slice bytes across all holders).
+    pub(crate) replicated_bytes: u64,
+    /// For a shape-changing full resubmit: the complete new layout swapped
+    /// in at commit (in-place delta/full resubmits leave this `None`).
+    pub(crate) new_layout: Option<StagedLayout>,
+}
+
+/// New layout carried by a shape-changing resubmit's staging.
+pub(crate) struct StagedLayout {
+    pub(crate) dist: Distribution,
+    pub(crate) pe_map: Vec<u32>,
+    pub(crate) holder_index: HolderIndex,
+}
+
 /// One dataset of the registry: the per-datatype replicated store of §V
 /// (its own `n`, `r`, `b`, seed — independent of every other dataset), with
-/// the full single-dataset lifecycle: `submit` → `load`/`repair` →
-/// `rebalance`/`acknowledge_shrink`. The heavy path implementations live
-/// in their historical modules (`submit.rs`, `load.rs`, `repair.rs`,
-/// `rebalance.rs`) as `impl Dataset` blocks.
+/// the full versioned-mutable lifecycle: `submit` (version 1) →
+/// `load`/`repair` → `resubmit` (versions 2, 3, ... — full, dirty-range, or
+/// checksum-delta) → `rebalance`/`acknowledge_shrink` →
+/// `ReStore::delete_dataset`. The heavy path implementations live in their
+/// historical modules (`submit.rs`, `load.rs`, `repair.rs`, `rebalance.rs`,
+/// `resubmit.rs`) as `impl Dataset` blocks.
 pub struct Dataset {
     pub(crate) id: DatasetId,
     pub(crate) cfg: RestoreConfig,
@@ -168,8 +198,24 @@ pub struct Dataset {
     /// Incremental scrub cursor: the next permuted *slot* (slice number)
     /// `Dataset::scrub` will verify. Wraps at the distribution world and
     /// is re-clamped after a rebalance shrinks the slot space — see
-    /// `restore/integrity.rs`.
+    /// `restore/integrity.rs`. In-place resubmits keep the cursor (the
+    /// slot space is unchanged and staged bytes re-latch their checksums
+    /// at commit); a shape-changing resubmit resets it to 0.
     pub(crate) scrub_slot: usize,
+    /// Committed data version: 0 before submit, 1 after `submit`, bumped
+    /// by every committed `resubmit`. Orthogonal to `epoch` (which tracks
+    /// the *communicator*): the epoch says which world the layout
+    /// addresses, the version says which generation of bytes it serves.
+    pub(crate) version: u64,
+    /// In-flight double-buffered resubmit, if any (`restore/resubmit.rs`).
+    /// Dropped wholesale by `install_layout`/`acknowledge_shrink` — a
+    /// reconfiguration always aborts back to the committed version.
+    pub(crate) staging: Option<Staging>,
+    /// Tombstone set by `ReStore::delete_dataset`: the slot stays in the
+    /// registry vec (so surviving `DatasetId`s remain stable) until
+    /// `create_dataset` reuses it; every `index_of` lookup answers
+    /// `UnknownDataset` in between.
+    pub(crate) deleted: bool,
 }
 
 impl Dataset {
@@ -202,6 +248,9 @@ impl Dataset {
             epoch: cluster.epoch(),
             scratch: LoadScratch::default(),
             scrub_slot: 0,
+            version: 0,
+            staging: None,
+            deleted: false,
         })
     }
 
@@ -234,6 +283,20 @@ impl Dataset {
     /// Communicator epoch the current layout addresses.
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Committed data version: 0 before submit, 1 after `submit`, +1 per
+    /// committed [`resubmit`](Dataset::resubmit). Loads always serve
+    /// exactly this version's bytes — an aborted resubmit never moves it.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Is a double-buffered resubmit staged but not yet committed? (Only
+    /// observable from a fault-injection callback — the public resubmit
+    /// entry points either commit or abort before returning.)
+    pub fn replication_in_flight(&self) -> bool {
+        self.staging.is_some()
     }
 
     /// `(pes, nodes)` the pooled accumulator touched in this dataset's most
@@ -282,6 +345,9 @@ impl Dataset {
                 self.holder_index.drop_pe(pe);
             }
         }
+        // Reconfiguration aborts any in-flight resubmit: the staged
+        // version targeted the pre-shrink world and must never commit.
+        self.staging = None;
         self.epoch = cluster.epoch();
         Ok(())
     }
@@ -312,6 +378,10 @@ impl Dataset {
         self.pe_map = pe_map;
         self.stores = stores;
         self.holder_index = holder_index;
+        // The migrated layout carries the committed version only; any
+        // in-flight resubmit staging addressed the old layout and is
+        // dropped (never committed) on reconfiguration.
+        self.staging = None;
         self.epoch = cluster.epoch();
     }
 

@@ -19,6 +19,13 @@
 //! Both support the refined §IV-E hybrid: the first `r` placements follow
 //! the §IV-A deterministic layout (perfect balance), the probing sequence
 //! only takes over for replacements — `O(r + f)` time, `O(1)` space.
+//!
+//! Repair heals the latest *committed* version only: `resubmit` staging is
+//! never a repair source or target (an in-flight checkpoint either commits
+//! — becoming the version repair protects — or aborts and vanishes), and a
+//! later in-place resubmit reaches probing-sequence replica homes through
+//! the reverse [`crate::restore::store::HolderIndex`] rather than assuming
+//! deterministic §IV-A positions.
 
 use std::collections::HashMap;
 

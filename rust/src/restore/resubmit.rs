@@ -1,0 +1,1133 @@
+//! Versioned resubmit: the mutable-dataset write path.
+//!
+//! The paper's library submits each dataset exactly once (§V), but its
+//! target applications checkpoint *evolving* state every iteration —
+//! k-means centroids, PageRank rank vectors, RAxML model state. This
+//! module turns the write-once store into a versioned-mutable one:
+//!
+//! - **Delta detection.** A resubmit re-replicates only changed blocks.
+//!   The caller either supplies a dirty [`RangeSet`] outright
+//!   ([`ResubmitMode::Dirty`] — O(dirty) work, no hashing) or asks the
+//!   store to diff the new shards against the per-block checksums latched
+//!   at the previous submit ([`ResubmitMode::DeltaByChecksum`] — one
+//!   checksum per block, no byte compares against remote copies).
+//!
+//! - **Double-buffered replication.** New-version replica slices land in
+//!   a *staging* store (`Dataset::staging`) while the committed stores
+//!   keep serving loads — the GASPI async one-sided checkpointing shape
+//!   (arXiv:1505.04628): the copy overlaps the application's next compute
+//!   step ([`Overlap::Compute`]), and only the *exposed* remainder
+//!   `max(0, t_repl − t_compute)` costs wall-clock.
+//!
+//! - **Epoch-tagged atomic commit.** A version counter sits beside the
+//!   communicator epoch. Failures or reconfigurations observed at any
+//!   [`ResubmitStep`] boundary abort the resubmit by dropping the staging
+//!   wholesale ([`Error::ResubmitAborted`]): loads keep serving the
+//!   previous committed version byte-exactly, never a torn mix. Only the
+//!   commit step — a local buffer swap, atomic in the simulator — moves
+//!   the version forward.
+//!
+//! A shape-changing variant ([`Dataset::resubmit_reshaped`]) publishes a
+//! version with a different block count: it stages a complete fresh §IV-A
+//! layout (over `min(p, n')` of the current ranks) and swaps it in at
+//! commit, resetting the scrub cursor to the new, possibly smaller slot
+//! space.
+
+use crate::error::{Error, Result};
+use crate::restore::block::{BlockRange, RangeSet};
+use crate::restore::distribution::{Distribution, PermutedPiece};
+use crate::restore::registry::{Dataset, StagedLayout, Staging};
+use crate::restore::store::{checksum_of, HolderIndex, PeStore, SliceBuf};
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::{Accumulator, PhaseCost};
+
+/// Which blocks of the new version differ from the committed one.
+#[derive(Debug, Clone, Copy)]
+pub enum ResubmitMode<'a> {
+    /// Re-replicate every block (a full checkpoint).
+    Full,
+    /// The caller knows exactly which *original* block IDs changed (e.g.
+    /// the iteration's write set); only those are re-replicated, with no
+    /// hashing — O(dirty) work regardless of the dataset size.
+    Dirty(&'a RangeSet),
+    /// Diff the new shards against the per-block checksums latched at the
+    /// previous commit; blocks whose checksum is unchanged are skipped.
+    /// Execution mode only (cost-model datasets carry no sums).
+    DeltaByChecksum,
+}
+
+/// How the replication phase is charged against the simulated clock.
+#[derive(Debug, Clone, Copy)]
+pub enum Overlap {
+    /// Synchronous checkpoint: the full replication cost advances the
+    /// clock before resubmit returns.
+    Blocking,
+    /// GASPI-style overlap: the application's next compute step takes the
+    /// given seconds and runs concurrently with replication, so only the
+    /// *exposed* remainder `max(0, t_repl − t_compute)` advances the
+    /// clock. The caller charges its compute step itself (e.g. via
+    /// `Cluster::tick_compute`), exactly as it would without
+    /// checkpointing.
+    Compute(f64),
+}
+
+/// Boundaries of the resubmit state machine at which a fault-injection
+/// callback runs (mirroring `ReshapeStep`/`RecoveryStep` from the
+/// recovery machinery). After every pre-commit boundary the resubmit
+/// revalidates the epoch and every participant; a violation aborts to the
+/// previous committed version ([`Error::ResubmitAborted`]). A kill at
+/// [`ResubmitStep::Committed`] is an ordinary post-commit failure — the
+/// new version is already live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResubmitStep {
+    /// Inputs validated; nothing staged yet.
+    Validated,
+    /// The new version's replica slices sit in the staging store; loads
+    /// still serve the committed version.
+    Staged,
+    /// Replication cost charged (blocking or overlap-exposed).
+    Charged,
+    /// Version counter bumped; the new version is the committed one.
+    Committed,
+}
+
+impl ResubmitStep {
+    /// Every boundary, in order — what an exhaustive kill-at-every-step
+    /// test iterates.
+    pub const ALL: [ResubmitStep; 4] = [
+        ResubmitStep::Validated,
+        ResubmitStep::Staged,
+        ResubmitStep::Charged,
+        ResubmitStep::Committed,
+    ];
+}
+
+/// What a committed resubmit did and cost.
+#[derive(Debug, Clone)]
+pub struct ResubmitReport {
+    /// The version this resubmit committed (previous committed + 1).
+    pub version: u64,
+    /// Original-ID blocks re-replicated (the dirty set's cardinality; the
+    /// full block count for `Full`/reshaped resubmits).
+    pub dirty_blocks: u64,
+    /// Total replicated payload: Σ over dirty pieces of `len · b` bytes
+    /// per holder copy.
+    pub replicated_bytes: u64,
+    /// Full replication cost (serialization copy + sparse all-to-all),
+    /// independent of how much of it the overlap hid.
+    pub cost: PhaseCost,
+    /// Wall-clock the clock actually advanced for replication:
+    /// `cost.sim_time_s` when [`Overlap::Blocking`], the exposed
+    /// remainder under [`Overlap::Compute`].
+    pub exposed_s: f64,
+}
+
+/// Scratch for the per-source message coalescing of the staging walk:
+/// dense per-destination byte/fragment tallies plus the touched list, so
+/// one (src, dst) pair costs exactly one message no matter how many dirty
+/// pieces it carries — the same coalescing submit applies.
+struct Coalesce {
+    dst_bytes: Vec<u64>,
+    dst_pieces: Vec<u64>,
+    touched: Vec<u32>,
+}
+
+impl Coalesce {
+    fn new(machine_world: usize) -> Self {
+        Coalesce {
+            dst_bytes: vec![0; machine_world],
+            dst_pieces: vec![0; machine_world],
+            touched: Vec::new(),
+        }
+    }
+
+    fn add(&mut self, dst: usize, bytes: u64) {
+        if self.dst_bytes[dst] == 0 {
+            self.touched.push(dst as u32);
+        }
+        self.dst_bytes[dst] += bytes;
+        self.dst_pieces[dst] += 1;
+    }
+
+    /// Emit one coalesced message per touched destination of source
+    /// `src`, then clear — submit's granularity: `msg` even when
+    /// `dst == src` (the accumulator models that as a local copy),
+    /// fragments on both endpoints, the source's only once.
+    fn flush(&mut self, src: usize, acc: &mut Accumulator) {
+        for &d in &self.touched {
+            let d = d as usize;
+            acc.msg(src, d, self.dst_bytes[d]);
+            acc.frag(src, self.dst_pieces[d]);
+            if d != src {
+                acc.frag(d, self.dst_pieces[d]);
+            }
+            self.dst_bytes[d] = 0;
+            self.dst_pieces[d] = 0;
+        }
+        self.touched.clear();
+    }
+}
+
+impl Dataset {
+    /// Publish a new version of this dataset's data (same block count and
+    /// layout): re-replicate the blocks `mode` marks dirty into a staging
+    /// store, charge the copy per `overlap`, and commit atomically.
+    /// `shards[j]` is distribution rank `j`'s serialized shard
+    /// (`slice_len(j) · block_size` bytes — the same partition `shard_of`
+    /// describes, also after a rebalance). Execution mode only; the
+    /// cost-model twin is [`Dataset::resubmit_virtual`].
+    pub fn resubmit(
+        &mut self,
+        cluster: &mut Cluster,
+        shards: &[Vec<u8>],
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.resubmit_with_faults(cluster, shards, mode, overlap, &mut |_, _| {})
+    }
+
+    /// [`Dataset::resubmit`] with a fault-injection callback fired at
+    /// every [`ResubmitStep`] boundary (the torn-resubmit test surface).
+    pub fn resubmit_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        shards: &[Vec<u8>],
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+        inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
+    ) -> Result<ResubmitReport> {
+        self.resubmit_inner(cluster, Some(shards), mode, overlap, inject)
+    }
+
+    /// Cost-model resubmit: schedules and costs are identical to the
+    /// execution-mode [`Dataset::resubmit`] of the same dirty set, but no
+    /// bytes are materialized. Cost-model datasets carry no checksums, so
+    /// the dirty set is always explicit.
+    pub fn resubmit_virtual(
+        &mut self,
+        cluster: &mut Cluster,
+        dirty: &RangeSet,
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.resubmit_inner(cluster, None, ResubmitMode::Dirty(dirty), overlap, &mut |_, _| {})
+    }
+
+    fn resubmit_inner(
+        &mut self,
+        cluster: &mut Cluster,
+        shards: Option<&[Vec<u8>]>,
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+        inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
+    ) -> Result<ResubmitReport> {
+        self.ensure_submitted()?;
+        self.ensure_current_epoch(cluster)?;
+        if shards.is_some() != self.execution {
+            return Err(Error::Config(if self.execution {
+                "resubmit_virtual on an execution-mode dataset: use resubmit (real shards)".into()
+            } else {
+                "resubmit with real shards on a cost-model dataset: use resubmit_virtual".into()
+            }));
+        }
+        if let Overlap::Compute(t) = overlap {
+            if !t.is_finite() || t < 0.0 {
+                return Err(Error::Config(format!("resubmit overlap compute time {t} invalid")));
+            }
+        }
+        let bs = self.cfg.block_size as u64;
+        if let Some(shards) = shards {
+            if shards.len() != self.dist.world() {
+                return Err(Error::Config(format!(
+                    "resubmit: got {} shards for distribution world {}",
+                    shards.len(),
+                    self.dist.world()
+                )));
+            }
+            for (j, s) in shards.iter().enumerate() {
+                let want = (self.dist.slice_len(j) * bs) as usize;
+                if s.len() != want {
+                    return Err(Error::Config(format!(
+                        "resubmit: rank {j} shard has {} bytes, expected {want}",
+                        s.len()
+                    )));
+                }
+            }
+        }
+        self.check_resubmit_participants(cluster)?;
+
+        inject(ResubmitStep::Validated, cluster);
+        if !self.resubmit_still_valid(cluster) {
+            return Err(self.abort_resubmit());
+        }
+
+        // Resolve the dirty set (original block IDs).
+        let n = self.dist.n_blocks();
+        let owned: RangeSet;
+        let dirty: &RangeSet = match mode {
+            ResubmitMode::Full => {
+                owned = RangeSet::new(vec![BlockRange::new(0, n)]);
+                &owned
+            }
+            ResubmitMode::Dirty(set) => {
+                if set.ranges().last().is_some_and(|r| r.end > n) {
+                    return Err(Error::Config(format!(
+                        "resubmit: dirty set extends past the dataset's {n} blocks"
+                    )));
+                }
+                set
+            }
+            ResubmitMode::DeltaByChecksum => {
+                let Some(shards) = shards else {
+                    return Err(Error::Config(
+                        "checksum-delta resubmit needs real shards; cost-model datasets \
+                         pass an explicit dirty set"
+                            .into(),
+                    ));
+                };
+                owned = self.delta_by_checksum(shards);
+                &owned
+            }
+        };
+
+        // Stage: build the new version's replica slices next to (never
+        // inside) the committed stores, and accumulate the sparse
+        // all-to-all cost of shipping them — one coalesced message per
+        // (source, holder) pair, exactly submit's granularity.
+        let dist = self.dist.clone();
+        let machine = self.stores.len();
+        let mut staged: Vec<PeStore> =
+            (0..machine).map(|_| PeStore::new(self.cfg.block_size)).collect();
+        let mut acc = Accumulator::new(cluster.network(), cluster.topology());
+        let mut co = Coalesce::new(machine);
+        let mut pieces: Vec<PermutedPiece> = Vec::new();
+        let mut replicated = 0u64;
+        let mut max_src_bytes = 0u64;
+        let mut cur_src_bytes = 0u64;
+        let mut cur_src: Option<usize> = None;
+        for range in dirty.ranges() {
+            let mut cur = range.start;
+            while cur < range.end {
+                // Owner of original block `cur`: shard partition boundaries
+                // coincide with slice boundaries in original ID space.
+                let j = dist.slice_of(cur);
+                let stop = range.end.min(dist.slice_end(j));
+                let src = self.pe_map[j] as usize;
+                if cur_src != Some(src) {
+                    if let Some(s) = cur_src {
+                        co.flush(s, &mut acc);
+                        max_src_bytes = max_src_bytes.max(cur_src_bytes);
+                        cur_src_bytes = 0;
+                    }
+                    cur_src = Some(src);
+                }
+                cur_src_bytes += (stop - cur) * bs;
+                pieces.clear();
+                dist.permuted_pieces(BlockRange::new(cur, stop), &mut pieces);
+                for pc in &pieces {
+                    let slot = dist.slice_of(pc.perm_start);
+                    let holders = self.holder_index.holders_of(slot);
+                    if holders.is_empty() {
+                        // Every copy of this slot is lost/quarantined; a new
+                        // version cannot be placed until repair re-creates
+                        // holders. Nothing staged has committed — clean abort.
+                        return Err(Error::IrrecoverableDataLoss {
+                            dataset: self.id,
+                            start: pc.perm_start,
+                            end: pc.perm_start + pc.len,
+                        });
+                    }
+                    let piece_bytes = pc.len * bs;
+                    let prange = BlockRange::new(pc.perm_start, pc.perm_start + pc.len);
+                    for &h in holders {
+                        let d = h as usize;
+                        co.add(d, piece_bytes);
+                        replicated += piece_bytes;
+                        let buf = match shards {
+                            Some(shards) => {
+                                let off =
+                                    ((pc.orig_start - dist.slice_start(j)) * bs) as usize;
+                                SliceBuf::Real(
+                                    shards[j][off..off + piece_bytes as usize].to_vec(),
+                                )
+                            }
+                            None => SliceBuf::Virtual(piece_bytes),
+                        };
+                        staged[d].insert(prange, buf);
+                    }
+                }
+                cur = stop;
+            }
+        }
+        if let Some(s) = cur_src {
+            co.flush(s, &mut acc);
+            max_src_bytes = max_src_bytes.max(cur_src_bytes);
+        }
+        let dirty_blocks = dirty.total_blocks();
+        self.staging = Some(Staging {
+            stores: staged,
+            version: self.version + 1,
+            dirty_blocks,
+            replicated_bytes: replicated,
+            new_layout: None,
+        });
+
+        inject(ResubmitStep::Staged, cluster);
+        if !self.resubmit_still_valid(cluster) {
+            return Err(self.abort_resubmit());
+        }
+
+        // Charge: local serialization of each source's dirty bytes (the
+        // §IV-C doubled-memory copy, bottlenecked by the largest source)
+        // then the replication all-to-all, overlapped per `overlap`.
+        let ser_cost = PhaseCost::local_copy(cluster.network(), max_src_bytes);
+        let cost = ser_cost.then(acc.finish());
+        let exposed_s = match overlap {
+            Overlap::Blocking => {
+                cluster.advance(&cost);
+                cost.sim_time_s
+            }
+            Overlap::Compute(t) => {
+                let exposed = (cost.sim_time_s - t).max(0.0);
+                cluster.tick_compute(exposed);
+                exposed
+            }
+        };
+
+        inject(ResubmitStep::Charged, cluster);
+        if !self.resubmit_still_valid(cluster) {
+            return Err(self.abort_resubmit());
+        }
+
+        // Commit: drain the staged slices into the committed stores — a
+        // local swap, atomic in the simulator. `write_from` re-latches the
+        // per-block checksums, so scrub/load verification tracks the new
+        // version with no cursor disturbance (the slot space is unchanged).
+        let staging = self.staging.take().expect("staged above");
+        for (pe, st) in staging.stores.iter().enumerate() {
+            for sl in st.slices() {
+                if let SliceBuf::Real(bytes) = &sl.buf {
+                    self.stores[pe].write_from(sl.range.start, bytes);
+                }
+            }
+        }
+        self.version = staging.version;
+
+        inject(ResubmitStep::Committed, cluster);
+
+        Ok(ResubmitReport {
+            version: self.version,
+            dirty_blocks,
+            replicated_bytes: replicated,
+            cost,
+            exposed_s,
+        })
+    }
+
+    /// Publish a new version with a *different block count* (always a full
+    /// checkpoint): stages a complete fresh §IV-A layout over
+    /// `min(p, n')` of the dataset's current ranks and swaps it in at
+    /// commit, resetting the scrub cursor to the new slot space.
+    /// `global` is the new serialized content (`n' · block_size` bytes).
+    pub fn resubmit_reshaped(
+        &mut self,
+        cluster: &mut Cluster,
+        global: &[u8],
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.resubmit_reshaped_with_faults(cluster, global, overlap, &mut |_, _| {})
+    }
+
+    /// [`Dataset::resubmit_reshaped`] with the boundary fault callback.
+    pub fn resubmit_reshaped_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        global: &[u8],
+        overlap: Overlap,
+        inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
+    ) -> Result<ResubmitReport> {
+        self.ensure_submitted()?;
+        self.ensure_current_epoch(cluster)?;
+        if !self.execution {
+            return Err(Error::Config(
+                "resubmit_reshaped needs real bytes (execution mode)".into(),
+            ));
+        }
+        if let Overlap::Compute(t) = overlap {
+            if !t.is_finite() || t < 0.0 {
+                return Err(Error::Config(format!("resubmit overlap compute time {t} invalid")));
+            }
+        }
+        let bs = self.cfg.block_size as u64;
+        if global.is_empty() || global.len() as u64 % bs != 0 {
+            return Err(Error::Config(format!(
+                "resubmit_reshaped: {} bytes is not a positive multiple of block size {bs}",
+                global.len()
+            )));
+        }
+        let n_new = global.len() as u64 / bs;
+        let r = self.dist.replicas();
+        let world_new = (self.dist.world() as u64).min(n_new) as usize;
+        if world_new < r {
+            return Err(Error::Config(format!(
+                "resubmit_reshaped: {n_new} blocks cannot carry r = {r} replicas over \
+                 {world_new} ranks"
+            )));
+        }
+        let s_pr = self.cfg.perm_range_blocks.map(|s| s as u64);
+        let dist_new = Distribution::new_balanced(
+            world_new,
+            n_new,
+            r,
+            s_pr,
+            self.cfg.seed,
+            self.cfg.placement_offset,
+        )?;
+        let pe_map_new: Vec<u32> = self.pe_map[..world_new].to_vec();
+        for &pe in &pe_map_new {
+            if !cluster.is_alive(pe as usize) {
+                return Err(Error::DeadPe(pe as usize));
+            }
+        }
+
+        inject(ResubmitStep::Validated, cluster);
+        if !(self.epoch == cluster.epoch()
+            && pe_map_new.iter().all(|&pe| cluster.is_alive(pe as usize)))
+        {
+            return Err(self.abort_resubmit());
+        }
+
+        // Stage the complete new layout: every rank's r slices, built by
+        // un-permuting the global buffer, plus a fresh holder index.
+        let machine = self.stores.len();
+        let mut staged: Vec<PeStore> =
+            (0..machine).map(|_| PeStore::new(self.cfg.block_size)).collect();
+        let mut hi_new = HolderIndex::new(world_new);
+        let mut replicated = 0u64;
+        for j in 0..world_new {
+            for k in 0..r {
+                let range = dist_new.stored_slice(j, k);
+                let slot = dist_new.slice_of(range.start);
+                let pe = pe_map_new[j] as usize;
+                let mut buf = vec![0u8; (range.len() * bs) as usize];
+                for (i, y) in (range.start..range.end).enumerate() {
+                    let x = dist_new.unpermute_block(y) as usize;
+                    buf[i * bs as usize..(i + 1) * bs as usize]
+                        .copy_from_slice(&global[x * bs as usize..(x + 1) * bs as usize]);
+                }
+                staged[pe].insert(range, SliceBuf::Real(buf));
+                hi_new.insert(slot, pe);
+                replicated += range.len() * bs;
+            }
+        }
+        // Cost: each new owner scatters its new shard to the r holders of
+        // every piece, coalesced per (source, destination) like submit.
+        let mut acc = Accumulator::new(cluster.network(), cluster.topology());
+        let mut co = Coalesce::new(machine);
+        let mut pieces: Vec<PermutedPiece> = Vec::new();
+        let mut max_src_bytes = 0u64;
+        for j in 0..world_new {
+            let src = pe_map_new[j] as usize;
+            max_src_bytes = max_src_bytes.max(dist_new.slice_len(j) * bs);
+            pieces.clear();
+            dist_new.permuted_pieces(dist_new.shard_of(j), &mut pieces);
+            for pc in &pieces {
+                for k in 0..r {
+                    let dst = pe_map_new[dist_new.holder(pc.perm_start, k)] as usize;
+                    co.add(dst, pc.len * bs);
+                }
+            }
+            co.flush(src, &mut acc);
+        }
+        self.staging = Some(Staging {
+            stores: staged,
+            version: self.version + 1,
+            dirty_blocks: n_new,
+            replicated_bytes: replicated,
+            new_layout: Some(StagedLayout {
+                dist: dist_new,
+                pe_map: pe_map_new.clone(),
+                holder_index: hi_new,
+            }),
+        });
+
+        inject(ResubmitStep::Staged, cluster);
+        if !(self.epoch == cluster.epoch()
+            && pe_map_new.iter().all(|&pe| cluster.is_alive(pe as usize)))
+        {
+            return Err(self.abort_resubmit());
+        }
+
+        let ser_cost = PhaseCost::local_copy(cluster.network(), max_src_bytes);
+        let cost = ser_cost.then(acc.finish());
+        let exposed_s = match overlap {
+            Overlap::Blocking => {
+                cluster.advance(&cost);
+                cost.sim_time_s
+            }
+            Overlap::Compute(t) => {
+                let exposed = (cost.sim_time_s - t).max(0.0);
+                cluster.tick_compute(exposed);
+                exposed
+            }
+        };
+
+        inject(ResubmitStep::Charged, cluster);
+        if !(self.epoch == cluster.epoch()
+            && pe_map_new.iter().all(|&pe| cluster.is_alive(pe as usize)))
+        {
+            return Err(self.abort_resubmit());
+        }
+
+        // Commit: the staged stores ARE the new version's stores — swap the
+        // whole layout in atomically and restart the scrub walk in the new
+        // (possibly smaller) slot space.
+        let staging = self.staging.take().expect("staged above");
+        let layout = staging.new_layout.expect("reshaped staging carries a layout");
+        let version = staging.version;
+        self.install_layout(
+            cluster,
+            layout.dist,
+            layout.pe_map,
+            staging.stores,
+            layout.holder_index,
+        );
+        self.scrub_slot = 0;
+        self.version = version;
+
+        inject(ResubmitStep::Committed, cluster);
+
+        Ok(ResubmitReport {
+            version: self.version,
+            dirty_blocks: n_new,
+            replicated_bytes: replicated,
+            cost,
+            exposed_s,
+        })
+    }
+
+    /// Diff new shards against the committed per-block checksums: a block
+    /// is dirty when no surviving holder's latched sum matches the new
+    /// content's checksum.
+    fn delta_by_checksum(&self, shards: &[Vec<u8>]) -> RangeSet {
+        let bs = self.cfg.block_size as u64;
+        let mut runs: Vec<BlockRange> = Vec::new();
+        for j in 0..self.dist.world() {
+            let shard = self.dist.shard_of(j);
+            for x in shard.start..shard.end {
+                let off = ((x - shard.start) * bs) as usize;
+                let blk = &shards[j][off..off + bs as usize];
+                let y = self.dist.permute_block(x);
+                let slot = self.dist.slice_of(y);
+                let committed = self
+                    .holder_index
+                    .holders_of(slot)
+                    .iter()
+                    .find_map(|&h| self.stores[h as usize].block_sum(y));
+                if committed != Some(checksum_of(y, blk)) {
+                    match runs.last_mut() {
+                        Some(last) if last.end == x => last.end = x + 1,
+                        _ => runs.push(BlockRange::new(x, x + 1)),
+                    }
+                }
+            }
+        }
+        RangeSet::new(runs)
+    }
+
+    /// Are all resubmit participants alive — every source rank
+    /// (`pe_map`) and every current holder of every slot? `DeadPe`
+    /// otherwise.
+    fn check_resubmit_participants(&self, cluster: &Cluster) -> Result<()> {
+        for &pe in &self.pe_map {
+            if !cluster.is_alive(pe as usize) {
+                return Err(Error::DeadPe(pe as usize));
+            }
+        }
+        for slot in 0..self.dist.world() {
+            for &h in self.holder_index.holders_of(slot) {
+                if !cluster.is_alive(h as usize) {
+                    return Err(Error::DeadPe(h as usize));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mid-flight revalidation at every boundary: same epoch, every
+    /// participant still alive.
+    fn resubmit_still_valid(&self, cluster: &Cluster) -> bool {
+        self.epoch == cluster.epoch() && self.check_resubmit_participants(cluster).is_ok()
+    }
+
+    /// Drop any staging and produce the abort error: the previous
+    /// committed version stays live, byte-exactly.
+    fn abort_resubmit(&mut self) -> Error {
+        self.staging = None;
+        Error::ResubmitAborted { dataset: self.id, version: self.version }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::restore::ReStore;
+
+    fn cfg(p: usize, bpp: usize, r: usize, s_pr: Option<usize>) -> RestoreConfig {
+        RestoreConfig::builder(p, 8, bpp).replicas(r).perm_range_blocks(s_pr).build().unwrap()
+    }
+
+    fn make_shards(world: usize, bytes: usize) -> Vec<Vec<u8>> {
+        (0..world).map(|pe| (0..bytes).map(|i| (pe * 31 + i) as u8).collect()).collect()
+    }
+
+    /// Read every original block back from its first holder.
+    fn global_bytes(rs: &ReStore) -> Vec<u8> {
+        let dist = rs.distribution();
+        let mut out = Vec::new();
+        for x in 0..dist.n_blocks() {
+            let y = dist.permute_block(x);
+            let slot = dist.slice_of(y);
+            let h = rs.holder_index().holders_of(slot)[0] as usize;
+            out.extend_from_slice(rs.stores()[h].read(y, 1).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn full_resubmit_replaces_every_copy_and_bumps_version() {
+        let cfg = cfg(8, 64, 4, Some(16));
+        let mut cluster = Cluster::new_execution(8, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, 64 * 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        assert_eq!(rs.dataset(crate::restore::DatasetId::FIRST).unwrap().version(), 1);
+
+        let new: Vec<Vec<u8>> =
+            shards.iter().map(|s| s.iter().map(|b| b.wrapping_add(7)).collect()).collect();
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        let rep = ds
+            .resubmit(&mut cluster, &new, ResubmitMode::Full, Overlap::Blocking)
+            .unwrap();
+        assert_eq!(rep.version, 2);
+        assert_eq!(rep.dirty_blocks, 8 * 64);
+        // every copy of every block serves the new bytes and verifies clean
+        let dist = rs.distribution().clone();
+        for x in 0..dist.n_blocks() {
+            let y = dist.permute_block(x);
+            let pe = (x / 64) as usize;
+            let off = ((x % 64) * 8) as usize;
+            for k in 0..4 {
+                let holder = dist.holder(y, k);
+                assert_eq!(rs.stores()[holder].read(y, 1).unwrap(), &new[pe][off..off + 8]);
+                assert_eq!(rs.stores()[holder].verify(y, 1), None);
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_resubmit_touches_only_dirty_blocks() {
+        let cfg = cfg(8, 64, 2, Some(16));
+        let mut cluster = Cluster::new_execution(8, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, 64 * 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+
+        // rewrite blocks [10, 20) (all inside PE 0's shard of 64 blocks)
+        let mut new = shards.clone();
+        for x in 10..20usize {
+            for b in &mut new[0][x * 8..(x + 1) * 8] {
+                *b ^= 0xFF;
+            }
+        }
+        let dirty = RangeSet::new(vec![BlockRange::new(10, 20)]);
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        let rep = ds
+            .resubmit(&mut cluster, &new, ResubmitMode::Dirty(&dirty), Overlap::Blocking)
+            .unwrap();
+        assert_eq!(rep.dirty_blocks, 10);
+        assert_eq!(rep.replicated_bytes, 10 * 8 * 2); // r = 2 copies
+        // whole dataset now equals the new content (clean blocks kept)
+        let flat: Vec<u8> = new.concat();
+        assert_eq!(global_bytes(&rs), flat);
+    }
+
+    #[test]
+    fn checksum_delta_matches_explicit_dirty_cost_exactly() {
+        let cfg = cfg(8, 64, 4, Some(16));
+        let dirty = RangeSet::new(vec![BlockRange::new(3, 9), BlockRange::new(100, 130)]);
+        let shards = make_shards(8, 64 * 8);
+        let mut new = shards.clone();
+        for r in dirty.ranges() {
+            for x in r.start..r.end {
+                let pe = (x / 64) as usize;
+                let off = ((x % 64) * 8) as usize;
+                for b in &mut new[pe][off..off + 8] {
+                    *b = b.wrapping_mul(3).wrapping_add(1);
+                }
+            }
+        }
+
+        let run = |mode: ResubmitMode<'_>| {
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+            rs.submit(&mut cluster, &shards).unwrap();
+            let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+            let rep = ds.resubmit(&mut cluster, &new, mode, Overlap::Blocking).unwrap();
+            (rep, cluster.now(), global_bytes(&rs))
+        };
+        let (d_rep, d_now, d_bytes) = run(ResubmitMode::DeltaByChecksum);
+        let (e_rep, e_now, e_bytes) = run(ResubmitMode::Dirty(&dirty));
+        let (f_rep, _, f_bytes) = run(ResubmitMode::Full);
+
+        // message/byte parity: the checksum diff re-replicates exactly the
+        // explicitly-declared dirty blocks, nothing more
+        assert_eq!(d_rep.dirty_blocks, dirty.total_blocks());
+        assert_eq!(d_rep.cost, e_rep.cost);
+        assert_eq!(d_rep.replicated_bytes, e_rep.replicated_bytes);
+        assert_eq!(d_now, e_now);
+        // and strictly less than a full resubmit of the same content
+        assert!(d_rep.replicated_bytes < f_rep.replicated_bytes);
+        assert!(d_rep.cost.total_bytes < f_rep.cost.total_bytes);
+        assert!(d_rep.cost.total_msgs <= f_rep.cost.total_msgs);
+        // all three commit identical bytes
+        assert_eq!(d_bytes, e_bytes);
+        assert_eq!(d_bytes, f_bytes);
+    }
+
+    #[test]
+    fn virtual_resubmit_costs_match_real() {
+        let cfg = cfg(8, 64, 4, Some(16));
+        let dirty = RangeSet::new(vec![BlockRange::new(0, 16), BlockRange::new(200, 260)]);
+
+        let mut c1 = Cluster::new_execution(8, 4);
+        let mut rs1 = ReStore::new(cfg.clone(), &c1).unwrap();
+        let shards = make_shards(8, 64 * 8);
+        rs1.submit(&mut c1, &shards).unwrap();
+        let mut new = shards.clone();
+        new[0][0] ^= 1;
+        let real = rs1
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit(&mut c1, &new, ResubmitMode::Dirty(&dirty), Overlap::Blocking)
+            .unwrap();
+
+        let mut c2 = Cluster::new_execution(8, 4);
+        let mut rs2 = ReStore::new(cfg, &c2).unwrap();
+        rs2.submit_virtual(&mut c2).unwrap();
+        let virt = rs2
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit_virtual(&mut c2, &dirty, Overlap::Blocking)
+            .unwrap();
+        assert_eq!(real.cost, virt.cost);
+        assert_eq!(real.replicated_bytes, virt.replicated_bytes);
+        assert_eq!(c1.now(), c2.now());
+    }
+
+    #[test]
+    fn overlap_hides_replication_up_to_the_compute_time() {
+        let cfg = cfg(8, 64, 2, None);
+        let dirty = RangeSet::new(vec![BlockRange::new(0, 512)]);
+
+        let elapsed = |overlap: Overlap| {
+            let mut cluster = Cluster::new_execution(8, 2);
+            let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+            rs.submit_virtual(&mut cluster).unwrap();
+            let before = cluster.now();
+            let rep = rs
+                .dataset_mut(crate::restore::DatasetId::FIRST)
+                .unwrap()
+                .resubmit_virtual(&mut cluster, &dirty, overlap)
+                .unwrap();
+            (cluster.now() - before, rep)
+        };
+        let (blocking_dt, blocking) = elapsed(Overlap::Blocking);
+        assert!(blocking_dt > 0.0);
+        assert!((blocking.exposed_s - blocking.cost.sim_time_s).abs() < 1e-12);
+
+        // compute longer than the copy: fully hidden, zero exposed time
+        let (hidden_dt, hidden) = elapsed(Overlap::Compute(blocking.cost.sim_time_s * 2.0));
+        assert_eq!(hidden.exposed_s, 0.0);
+        assert_eq!(hidden_dt, 0.0);
+        // compute covering half: only the remainder is exposed
+        let half = blocking.cost.sim_time_s / 2.0;
+        let (half_dt, half_rep) = elapsed(Overlap::Compute(half));
+        assert!((half_rep.exposed_s - (blocking.cost.sim_time_s - half)).abs() < 1e-12);
+        assert!((half_dt - half_rep.exposed_s).abs() < 1e-12);
+        // the modeled full cost is identical regardless of overlap
+        assert_eq!(blocking.cost, hidden.cost);
+        assert_eq!(blocking.cost, half_rep.cost);
+    }
+
+    #[test]
+    fn kill_at_each_boundary_aborts_to_committed_version() {
+        for step in [ResubmitStep::Validated, ResubmitStep::Staged, ResubmitStep::Charged] {
+            let cfg = cfg(8, 32, 2, Some(16));
+            let mut cluster = Cluster::new_execution(8, 2);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            let shards = make_shards(8, 32 * 8);
+            rs.submit(&mut cluster, &shards).unwrap();
+            let committed = global_bytes(&rs);
+
+            let new: Vec<Vec<u8>> =
+                shards.iter().map(|s| s.iter().map(|b| !b).collect()).collect();
+            let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+            let err = ds
+                .resubmit_with_faults(
+                    &mut cluster,
+                    &new,
+                    ResubmitMode::Full,
+                    Overlap::Blocking,
+                    &mut |s, c| {
+                        if s == step {
+                            c.kill(&[3]);
+                        }
+                    },
+                )
+                .unwrap_err();
+            assert!(
+                matches!(err, Error::ResubmitAborted { version: 1, .. }),
+                "step {step:?}: {err}"
+            );
+            let ds = rs.dataset(crate::restore::DatasetId::FIRST).unwrap();
+            assert_eq!(ds.version(), 1, "step {step:?}");
+            assert!(!ds.replication_in_flight(), "step {step:?}: staging dropped");
+            // surviving holders still serve the old version byte-exactly
+            let dist = rs.distribution().clone();
+            for x in 0..dist.n_blocks() {
+                let y = dist.permute_block(x);
+                for k in 0..2 {
+                    let h = dist.holder(y, k);
+                    if cluster.is_alive(h) {
+                        assert_eq!(
+                            rs.stores()[h].read(y, 1).unwrap(),
+                            &committed[(x * 8) as usize..(x * 8 + 8) as usize],
+                            "step {step:?}: block {x} copy {k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kill_at_committed_keeps_the_new_version() {
+        let cfg = cfg(8, 32, 2, None);
+        let mut cluster = Cluster::new_execution(8, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, 32 * 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let new: Vec<Vec<u8>> = shards.iter().map(|s| s.iter().map(|b| !b).collect()).collect();
+        let rep = rs
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit_with_faults(
+                &mut cluster,
+                &new,
+                ResubmitMode::Full,
+                Overlap::Blocking,
+                &mut |s, c| {
+                    if s == ResubmitStep::Committed {
+                        c.kill(&[5]);
+                    }
+                },
+            )
+            .unwrap();
+        assert_eq!(rep.version, 2);
+        assert_eq!(rs.dataset(crate::restore::DatasetId::FIRST).unwrap().version(), 2);
+    }
+
+    #[test]
+    fn resubmit_guards_mode_epoch_and_shapes() {
+        let cfg = cfg(4, 32, 2, None);
+        let mut cluster = Cluster::new_execution(4, 2);
+        let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+        let shards = make_shards(4, 32 * 8);
+        let dirty = RangeSet::new(vec![BlockRange::new(0, 4)]);
+
+        // before submit
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        assert!(matches!(
+            ds.resubmit(&mut cluster, &shards, ResubmitMode::Full, Overlap::Blocking),
+            Err(Error::NotSubmitted)
+        ));
+        rs.submit(&mut cluster, &shards).unwrap();
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        // wrong shard count / wrong shard size
+        assert!(ds
+            .resubmit(&mut cluster, &shards[..3], ResubmitMode::Full, Overlap::Blocking)
+            .is_err());
+        let bad = vec![vec![0u8; 8]; 4];
+        assert!(ds.resubmit(&mut cluster, &bad, ResubmitMode::Full, Overlap::Blocking).is_err());
+        // dirty set out of bounds
+        let oob = RangeSet::new(vec![BlockRange::new(0, 4 * 32 + 1)]);
+        assert!(ds
+            .resubmit(&mut cluster, &shards, ResubmitMode::Dirty(&oob), Overlap::Blocking)
+            .is_err());
+        // execution dataset refuses the cost-model entry point and vice versa
+        assert!(ds.resubmit_virtual(&mut cluster, &dirty, Overlap::Blocking).is_err());
+        let mut c2 = Cluster::new_execution(4, 2);
+        let mut rv = ReStore::new(cfg, &c2).unwrap();
+        rv.submit_virtual(&mut c2).unwrap();
+        let dv = rv.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        assert!(dv
+            .resubmit(&mut c2, &shards, ResubmitMode::Full, Overlap::Blocking)
+            .is_err());
+        assert!(dv
+            .resubmit_inner(
+                &mut c2,
+                None,
+                ResubmitMode::DeltaByChecksum,
+                Overlap::Blocking,
+                &mut |_, _| {},
+            )
+            .is_err());
+        // negative overlap
+        assert!(dv.resubmit_virtual(&mut c2, &dirty, Overlap::Compute(-1.0)).is_err());
+        // dead source rank
+        cluster.kill(&[2]);
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        assert!(matches!(
+            ds.resubmit(&mut cluster, &shards, ResubmitMode::Full, Overlap::Blocking),
+            Err(Error::DeadPe(2))
+        ));
+    }
+
+    #[test]
+    fn empty_dirty_set_commits_a_free_version() {
+        let cfg = cfg(4, 32, 2, None);
+        let mut cluster = Cluster::new_execution(4, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(4, 32 * 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let before = cluster.now();
+        // identical content under checksum-delta: nothing to replicate
+        let rep = rs
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit(&mut cluster, &shards, ResubmitMode::DeltaByChecksum, Overlap::Blocking)
+            .unwrap();
+        assert_eq!(rep.dirty_blocks, 0);
+        assert_eq!(rep.replicated_bytes, 0);
+        assert_eq!(rep.cost.total_msgs, 0);
+        assert_eq!(cluster.now(), before);
+        assert_eq!(rep.version, 2);
+    }
+
+    #[test]
+    fn reshaped_resubmit_changes_block_count_and_resets_scrub_cursor() {
+        let cfg = cfg(8, 32, 2, None);
+        let mut cluster = Cluster::new_execution(8, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit(&mut cluster, &make_shards(8, 32 * 8)).unwrap();
+
+        // shrink to 4 blocks total (< world): layout re-forms over 4 ranks
+        let global: Vec<u8> = (0..4 * 8).map(|i| i as u8).collect();
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        let rep = ds.resubmit_reshaped(&mut cluster, &global, Overlap::Blocking).unwrap();
+        assert_eq!(rep.version, 2);
+        assert_eq!(rep.dirty_blocks, 4);
+        let ds = rs.dataset(crate::restore::DatasetId::FIRST).unwrap();
+        assert_eq!(ds.distribution().n_blocks(), 4);
+        assert_eq!(ds.distribution().world(), 4);
+        assert_eq!(global_bytes(&rs), global);
+        // every copy verifies clean under the fresh layout
+        let dist = rs.distribution().clone();
+        for pe in 0..4 {
+            for s in rs.stores()[pe].slices() {
+                assert_eq!(rs.stores()[pe].verify(s.range.start, s.range.len()), None);
+            }
+        }
+        crate::restore::store::assert_memory_invariant(rs.stores(), &dist);
+
+        // grow back up: 64 blocks over the full 8 ranks again
+        let big: Vec<u8> = (0..64 * 8).map(|i| (i * 7) as u8).collect();
+        let rep = rs
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit_reshaped(&mut cluster, &big, Overlap::Blocking)
+            .unwrap();
+        assert_eq!(rep.version, 3);
+        assert_eq!(rs.distribution().n_blocks(), 64);
+        assert_eq!(rs.distribution().world(), 8);
+        assert_eq!(global_bytes(&rs), big);
+    }
+
+    #[test]
+    fn reshaped_kill_at_boundaries_aborts_whole_layout() {
+        for step in [ResubmitStep::Validated, ResubmitStep::Staged, ResubmitStep::Charged] {
+            let cfg = cfg(8, 32, 2, None);
+            let mut cluster = Cluster::new_execution(8, 2);
+            let mut rs = ReStore::new(cfg, &cluster).unwrap();
+            let shards = make_shards(8, 32 * 8);
+            rs.submit(&mut cluster, &shards).unwrap();
+            let committed = global_bytes(&rs);
+
+            let global: Vec<u8> = (0..16 * 8).map(|i| i as u8).collect();
+            let err = rs
+                .dataset_mut(crate::restore::DatasetId::FIRST)
+                .unwrap()
+                .resubmit_reshaped_with_faults(
+                    &mut cluster,
+                    &global,
+                    Overlap::Blocking,
+                    &mut |s, c| {
+                        if s == step {
+                            c.kill(&[1]);
+                        }
+                    },
+                )
+                .unwrap_err();
+            assert!(matches!(err, Error::ResubmitAborted { version: 1, .. }), "step {step:?}");
+            let ds = rs.dataset(crate::restore::DatasetId::FIRST).unwrap();
+            assert_eq!(ds.version(), 1);
+            assert_eq!(ds.distribution().n_blocks(), 8 * 32, "old geometry kept");
+            // surviving copies still carry the committed version
+            let dist = rs.distribution().clone();
+            for x in 0..dist.n_blocks() {
+                let y = dist.permute_block(x);
+                for k in 0..2 {
+                    let h = dist.holder(y, k);
+                    if cluster.is_alive(h) {
+                        assert_eq!(
+                            rs.stores()[h].read(y, 1).unwrap(),
+                            &committed[(x * 8) as usize..(x * 8 + 8) as usize]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resubmit_after_rebalance_uses_the_reshaped_shards() {
+        // shrink 8 → 6 via the recovery handshake, then resubmit in the
+        // new geometry: shards follow the post-rebalance slice partition.
+        let cfg = cfg(8, 32, 2, Some(16));
+        let mut cluster = Cluster::new_execution(8, 2);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, 32 * 8);
+        rs.submit(&mut cluster, &shards).unwrap();
+        cluster.kill(&[2, 5]);
+        let (map, _cost) = crate::simnet::ulfm::shrink(&mut cluster);
+        rs.rebalance(&mut cluster, &map).unwrap();
+
+        let dist = rs.distribution().clone();
+        assert_eq!(dist.world(), 6);
+        let flat: Vec<u8> = (0..dist.n_blocks() * 8).map(|i| (i * 13) as u8).collect();
+        let new_shards: Vec<Vec<u8>> = (0..6)
+            .map(|j| {
+                let sh = dist.shard_of(j);
+                flat[(sh.start * 8) as usize..(sh.end * 8) as usize].to_vec()
+            })
+            .collect();
+        let rep = rs
+            .dataset_mut(crate::restore::DatasetId::FIRST)
+            .unwrap()
+            .resubmit(&mut cluster, &new_shards, ResubmitMode::Full, Overlap::Blocking)
+            .unwrap();
+        assert_eq!(rep.version, 2);
+        assert_eq!(global_bytes(&rs), flat);
+    }
+}

@@ -162,6 +162,21 @@ impl PeStore {
         self.find_idx(start, len).is_some()
     }
 
+    /// The latched checksum of permuted block `y`, if this PE stores it in
+    /// a `Real` slice — the delta-resubmit comparator: a new version's
+    /// block is unchanged exactly when `checksum_of(y, new_bytes)` equals
+    /// this stored sum. Returns `None` for unstored ranges and `Virtual`
+    /// slices (cost-model datasets carry no sums; their callers must pass
+    /// an explicit dirty set).
+    pub fn block_sum(&self, y: u64) -> Option<u64> {
+        let i = self.find_idx(y, 1)?;
+        let s = &self.slices[i];
+        match &s.buf {
+            SliceBuf::Real(_) => Some(s.sums[(y - s.range.start) as usize]),
+            SliceBuf::Virtual(_) => None,
+        }
+    }
+
     /// Write `bytes` into an already-inserted `Real` slice straight from a
     /// borrowed source slice — the zero-copy submit path: no intermediate
     /// `Vec` per written unit. `bytes.len()` must be a whole number of

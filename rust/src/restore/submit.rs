@@ -189,6 +189,10 @@ impl Dataset {
         }
         let cost = phase.commit();
 
+        // The initial submit commits version 1 (0 = never submitted);
+        // every later `Dataset::resubmit` commit bumps it further.
+        self.version = 1;
+
         Ok(SubmitReport { cost: ser_cost.then(cost) })
     }
 }

@@ -17,7 +17,7 @@
 use restore::config::{RestoreConfig, ServerSelection};
 use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::load::{load_all_requests, scatter_requests};
-use restore::restore::LoadRequest;
+use restore::restore::{LoadRequest, Overlap, ResubmitMode};
 use restore::restore::rebalance::{plan_rebalance, MigrationTransfer};
 use restore::restore::repair::RepairScheme;
 use restore::restore::ReStore;
@@ -49,6 +49,42 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     clean_scrub_steps_allocate_nothing_at_any_world();
     execution_load_checksum_verification_allocations_do_not_scale_with_block_count();
     steady_load_touched_entries_do_not_scale_with_world();
+    dirty_resubmit_allocations_do_not_scale_with_block_count();
+}
+
+fn dirty_resubmit_allocations_do_not_scale_with_block_count() {
+    // A k-dirty in-place resubmit stages and charges only the dirty
+    // ranges: with the SAME fixed dirty set, the allocation count must be
+    // identical at 8x the total block count (bpp 64 vs 512) — O(k) in the
+    // dirty blocks, never O(n) in the dataset size.
+    let count_for = |bpp: usize| {
+        let cfg = RestoreConfig::builder(8, 8, bpp).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(8, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        let shards = make_shards(8, 8 * bpp);
+        rs.submit(&mut cluster, &shards).unwrap();
+        let mut new = shards;
+        for s in &mut new {
+            for b in &mut s[24..56] {
+                *b ^= 0xA5;
+            }
+        }
+        let dirty = RangeSet::new(vec![BlockRange::new(3, 7), BlockRange::new(40, 44)]);
+        // warm-up resubmit so staging scratch reaches steady-state size
+        rs.resubmit(&mut cluster, &new, ResubmitMode::Dirty(&dirty), Overlap::Blocking).unwrap();
+        let (n, rep) = allocs_during(|| {
+            rs.resubmit(&mut cluster, &new, ResubmitMode::Dirty(&dirty), Overlap::Blocking)
+                .unwrap()
+        });
+        assert_eq!(rep.dirty_blocks, 8, "fixed dirty set re-replicates 8 blocks");
+        n
+    };
+    let small = count_for(64);
+    let large = count_for(512);
+    assert_eq!(
+        small, large,
+        "dirty resubmit allocation count scales with total blocks ({small} vs {large})"
+    );
 }
 
 fn steady_load_touched_entries_do_not_scale_with_world() {

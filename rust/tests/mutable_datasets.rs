@@ -1,0 +1,275 @@
+//! Integration: the mutable-dataset lifecycle — versioned resubmit,
+//! dataset deletion with slot reuse, and torn-checkpoint safety under
+//! random interleavings of mutation, failure, and recovery.
+//!
+//! The golden contracts this suite pins:
+//!
+//! * **slot reuse** — `delete_dataset` frees a registry slot that the next
+//!   `create_dataset` reuses; surviving `DatasetId`s never move, deleted
+//!   ids answer `UnknownDataset` (also on double delete), and dataset 0
+//!   (the facade's dataset) cannot be deleted.
+//! * **committed-version oracle** — after ANY random interleaving of
+//!   {full resubmit, delta resubmit, kill + recover, mid-resubmit kill},
+//!   a whole-space load returns exactly the latest committed version's
+//!   bytes — identical to what a FRESH single-version store submitted
+//!   with that content serves. A resubmit aborted by a mid-flight kill
+//!   changes nothing.
+//! * **torn-resubmit safety at every boundary** — exercised both
+//!   exhaustively (per `ResubmitStep`) in `restore/resubmit.rs` unit tests
+//!   and probabilistically here under recovery chains.
+
+use restore::config::RestoreConfig;
+use restore::error::Error;
+use restore::restore::block::{BlockRange, RangeSet};
+use restore::restore::{DatasetId, LoadRequest, Overlap, ReStore, ResubmitMode, ResubmitStep};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::ulfm;
+use restore::util::rng::Rng;
+
+const P: usize = 8;
+const BS: usize = 8;
+const BPP: usize = 32;
+const N_BLOCKS: u64 = (P * BPP) as u64;
+
+fn cfg() -> RestoreConfig {
+    RestoreConfig::builder(P, BS, BPP)
+        .replicas(2)
+        .perm_range_blocks(Some(16))
+        .build()
+        .unwrap()
+}
+
+fn small_cfg(p: usize, salt: u64) -> RestoreConfig {
+    RestoreConfig::builder(p, 16, 8).replicas(2).seed(salt).build().unwrap()
+}
+
+/// Cut a flat `n_blocks * bs` buffer into the per-rank shards the
+/// dataset's CURRENT distribution expects (identity before any failure,
+/// the §IV-B reshaped partition after a rebalance).
+fn shards_of(rs: &ReStore, flat: &[u8]) -> Vec<Vec<u8>> {
+    let dist = rs.distribution();
+    (0..dist.world())
+        .map(|j| {
+            let sh = dist.shard_of(j);
+            flat[(sh.start as usize) * BS..(sh.end as usize) * BS].to_vec()
+        })
+        .collect()
+}
+
+/// Load the whole original block space from the first survivor.
+fn load_all(rs: &mut ReStore, cluster: &mut Cluster) -> Vec<u8> {
+    let pe = cluster.survivors()[0];
+    let reqs = vec![LoadRequest {
+        pe,
+        ranges: RangeSet::new(vec![BlockRange::new(0, N_BLOCKS)]),
+    }];
+    let out = rs.load(cluster, &reqs).unwrap();
+    out.shards[0].bytes.clone().expect("execution mode")
+}
+
+// ---------------------------------------------------------------------------
+// delete_dataset / create_dataset slot reuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn delete_frees_slot_and_surviving_ids_stay_stable() {
+    let cluster = Cluster::new_execution(4, 2);
+    let mut rs = ReStore::new(small_cfg(4, 1), &cluster).unwrap();
+    let a = rs.create_dataset(small_cfg(4, 2), &cluster).unwrap();
+    let b = rs.create_dataset(small_cfg(4, 3), &cluster).unwrap();
+    assert_eq!((a.index(), b.index()), (1, 2));
+
+    let mut cluster = cluster;
+    let shards_b: Vec<Vec<u8>> = (0..4).map(|pe| vec![pe as u8; 8 * 16]).collect();
+    rs.dataset_mut(b).unwrap().submit(&mut cluster, &shards_b).unwrap();
+
+    rs.delete_dataset(a).unwrap();
+    // deleted id answers UnknownDataset everywhere, including double delete
+    assert!(matches!(rs.dataset(a), Err(Error::UnknownDataset { .. })));
+    assert!(matches!(rs.dataset_mut(a), Err(Error::UnknownDataset { .. })));
+    assert!(matches!(rs.delete_dataset(a), Err(Error::UnknownDataset { .. })));
+    // the surviving dataset keeps its id AND its bytes
+    let reqs = vec![LoadRequest {
+        pe: 0,
+        ranges: RangeSet::new(vec![BlockRange::new(8, 16)]),
+    }];
+    let out = rs.dataset_mut(b).unwrap().load(&mut cluster, &reqs).unwrap();
+    assert_eq!(out.shards[0].bytes.as_deref().unwrap(), &[1u8; 8 * 16][..]);
+    // registry never compacts under live ids
+    assert_eq!(rs.n_datasets(), 3);
+
+    // create-after-delete reuses the freed slot; the new dataset is fresh
+    let c = rs.create_dataset(small_cfg(4, 9), &cluster).unwrap();
+    assert_eq!(c, a, "freed slot must be reused");
+    assert_eq!(rs.n_datasets(), 3, "no registry growth on reuse");
+    let ds = rs.dataset(c).unwrap();
+    assert_eq!(ds.version(), 0);
+    assert!(!ds.is_submitted());
+    let shards_c: Vec<Vec<u8>> = (0..4).map(|pe| vec![0x40 | pe as u8; 8 * 16]).collect();
+    rs.dataset_mut(c).unwrap().submit(&mut cluster, &shards_c).unwrap();
+    assert_eq!(rs.dataset(c).unwrap().version(), 1);
+
+    // dataset 0 backs the facade and cannot be deleted
+    assert!(matches!(rs.delete_dataset(DatasetId::FIRST), Err(Error::Config(_))));
+    // a config error during reuse keeps the slot free for the next attempt
+    rs.delete_dataset(c).unwrap();
+    let wrong_world = RestoreConfig::builder(5, 16, 8).replicas(1).build().unwrap();
+    assert!(rs.create_dataset(wrong_world, &cluster).is_err());
+    let again = rs.create_dataset(small_cfg(4, 11), &cluster).unwrap();
+    assert_eq!(again, c);
+}
+
+#[test]
+fn recovery_skips_deleted_tombstones() {
+    let mut cluster = Cluster::new_execution(8, 4);
+    let mut rs = ReStore::new(cfg(), &cluster).unwrap();
+    let extra = rs.create_dataset(small_cfg(8, 4), &cluster).unwrap();
+    let flat: Vec<u8> = (0..N_BLOCKS as usize * BS).map(|i| i as u8).collect();
+    rs.submit(&mut cluster, &shards_of(&rs, &flat)).unwrap();
+    let extra_shards: Vec<Vec<u8>> = (0..8).map(|pe| vec![pe as u8; 8 * 16]).collect();
+    rs.dataset_mut(extra).unwrap().submit(&mut cluster, &extra_shards).unwrap();
+    rs.delete_dataset(extra).unwrap();
+
+    // the fused handshake must adopt the shrink without touching (or
+    // resurrecting) the tombstone
+    cluster.kill(&[3]);
+    let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+    rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+    assert!(matches!(rs.dataset(extra), Err(Error::UnknownDataset { .. })));
+    assert_eq!(load_all(&mut rs, &mut cluster), flat);
+}
+
+// ---------------------------------------------------------------------------
+// property test: random mutation/failure chains vs a fresh-store oracle
+// ---------------------------------------------------------------------------
+
+/// Mutate `k` random blocks of `flat` deterministically.
+fn mutate_blocks(rng: &mut Rng, flat: &mut [u8], k: usize) -> RangeSet {
+    let mut ranges = Vec::new();
+    for _ in 0..k {
+        let x = rng.gen_u64_below(N_BLOCKS);
+        for b in &mut flat[(x as usize) * BS..(x as usize + 1) * BS] {
+            *b = b.wrapping_mul(31).wrapping_add(rng.gen_index(251) as u8);
+        }
+        ranges.push(BlockRange::new(x, x + 1));
+    }
+    RangeSet::new(ranges)
+}
+
+#[test]
+fn random_mutation_failure_chains_always_serve_the_committed_version() {
+    for scenario in 0u64..6 {
+        let mut rng = Rng::seed_from_u64(0xD15C0 ^ scenario);
+        let mut cluster = Cluster::new_execution(P, 2);
+        let mut rs = ReStore::new(cfg(), &cluster).unwrap();
+
+        // committed-content oracle: the flat bytes of the latest version
+        let mut oracle: Vec<u8> =
+            (0..N_BLOCKS as usize * BS).map(|i| (i as u8) ^ scenario as u8).collect();
+        rs.submit(&mut cluster, &shards_of(&rs, &oracle)).unwrap();
+        let mut expected_version = 1u64;
+
+        for _op in 0..10 {
+            match rng.gen_index(4) {
+                // full resubmit of fully fresh content
+                0 => {
+                    let mut next = oracle.clone();
+                    for b in &mut next {
+                        *b = b.wrapping_add(0x11);
+                    }
+                    let shards = shards_of(&rs, &next);
+                    rs.resubmit(&mut cluster, &shards, ResubmitMode::Full, Overlap::Blocking)
+                        .unwrap();
+                    oracle = next;
+                    expected_version += 1;
+                }
+                // delta resubmit of k dirty blocks (explicit set and
+                // checksum diff must both commit the same content)
+                1 => {
+                    let mut next = oracle.clone();
+                    let dirty = mutate_blocks(&mut rng, &mut next, 1 + rng.gen_index(6));
+                    let shards = shards_of(&rs, &next);
+                    let mode = if rng.gen_bool(0.5) {
+                        ResubmitMode::Dirty(&dirty)
+                    } else {
+                        ResubmitMode::DeltaByChecksum
+                    };
+                    let rep = rs.resubmit(&mut cluster, &shards, mode, Overlap::Blocking).unwrap();
+                    assert!(rep.dirty_blocks <= dirty.total_blocks());
+                    oracle = next;
+                    expected_version += 1;
+                }
+                // kill wave + full recovery (shrink + rebalance)
+                2 => {
+                    if cluster.n_alive() <= 4 {
+                        continue;
+                    }
+                    let victims = cluster.survivors();
+                    let v = victims[rng.gen_index(victims.len())];
+                    cluster.kill(&[v]);
+                    let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+                    rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+                }
+                // kill landing INSIDE a resubmit: aborts to the committed
+                // version, then recover so later ops see a healthy layout
+                _ => {
+                    if cluster.n_alive() <= 4 {
+                        continue;
+                    }
+                    let mut next = oracle.clone();
+                    let dirty = mutate_blocks(&mut rng, &mut next, 3);
+                    let shards = shards_of(&rs, &next);
+                    let boundary = [
+                        ResubmitStep::Validated,
+                        ResubmitStep::Staged,
+                        ResubmitStep::Charged,
+                    ][rng.gen_index(3)];
+                    let victims = cluster.survivors();
+                    let v = victims[rng.gen_index(victims.len())];
+                    let err = rs
+                        .dataset_mut(DatasetId::FIRST)
+                        .unwrap()
+                        .resubmit_with_faults(
+                            &mut cluster,
+                            &shards,
+                            ResubmitMode::Dirty(&dirty),
+                            Overlap::Blocking,
+                            &mut |s, c| {
+                                if s == boundary {
+                                    c.kill(&[v]);
+                                }
+                            },
+                        )
+                        .unwrap_err();
+                    assert!(
+                        matches!(err, Error::ResubmitAborted { .. }),
+                        "boundary {boundary:?}: {err}"
+                    );
+                    // oracle unchanged: the staged version never committed
+                    let (_failed, map, _cost) = ulfm::recover(&mut cluster);
+                    rs.rebalance_or_acknowledge(&mut cluster, &map).unwrap();
+                }
+            }
+
+            // invariant after EVERY op: loads serve the oracle bytes and
+            // the version counter matches the committed lineage
+            assert_eq!(
+                load_all(&mut rs, &mut cluster),
+                oracle,
+                "scenario {scenario}: committed version diverged from oracle"
+            );
+            assert_eq!(rs.version(), expected_version, "scenario {scenario}");
+        }
+
+        // final cross-check against a genuinely fresh single-version store:
+        // submit the oracle content once and compare whole-space loads.
+        let mut fresh_cluster = Cluster::new_execution(P, 2);
+        let mut fresh = ReStore::new(cfg(), &fresh_cluster).unwrap();
+        fresh.submit(&mut fresh_cluster, &shards_of(&fresh, &oracle)).unwrap();
+        assert_eq!(
+            load_all(&mut fresh, &mut fresh_cluster),
+            load_all(&mut rs, &mut cluster),
+            "scenario {scenario}: mutated store diverged from fresh oracle store"
+        );
+    }
+}

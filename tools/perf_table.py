@@ -30,6 +30,13 @@ import sys
 def fmt(name: str, value: float) -> str:
     if "migrated-bytes" in name:
         return f"{value / 2**30:.2f} GiB"
+    if "-bytes" in name:
+        # byte counters with a wide dynamic range (e.g. full vs delta
+        # checkpoint sizes in BENCH_checkpoint.json): pick a unit
+        for unit, scale in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+            if value >= scale:
+                return f"{value / scale:.2f} {unit}"
+        return f"{value:.0f} B"
     if "idl-prob" in name:
         return f"{value:.2e}"
     if "-frac" in name:
