@@ -17,8 +17,8 @@ test:
 
 # The CI bench smoke set: emits BENCH_hotpath.json / BENCH_load_scale.json /
 # BENCH_rebalance.json / BENCH_fused_load.json / BENCH_policies.json /
-# BENCH_scrub.json / BENCH_million.json / BENCH_checkpoint.json
-# ({name, ns_per_iter} JSON lines).
+# BENCH_scrub.json / BENCH_million.json / BENCH_checkpoint.json /
+# BENCH_kv.json ({name, ns_per_iter} JSON lines).
 bench-json:
 	cargo bench --bench hotpath
 	cargo bench --bench load_scale
@@ -28,6 +28,7 @@ bench-json:
 	cargo bench --bench scrub
 	cargo bench --bench million
 	cargo bench --bench checkpoint
+	cargo bench --bench kv
 
 # Short mode: every bench binary runs end to end (so every BENCH_*.json
 # artifact exists) but skips the p = 24576 configurations and cuts
@@ -40,7 +41,7 @@ bench-json-short:
 	$(PYTHON) tools/validate_bench_json.py BENCH_hotpath.json \
 		BENCH_load_scale.json BENCH_rebalance.json BENCH_fused_load.json \
 		BENCH_policies.json BENCH_scrub.json BENCH_million.json \
-		BENCH_checkpoint.json
+		BENCH_checkpoint.json BENCH_kv.json
 
 # Render the EXPERIMENTS.md §Perf measured table from BENCH_*.json files
 # (downloaded from CI's bench-json artifact, or produced by `make
@@ -52,6 +53,7 @@ perf-table:
 	$(PYTHON) tools/perf_table.py --marker integrity-table BENCH_scrub.json
 	$(PYTHON) tools/perf_table.py --marker scale-table BENCH_million.json
 	$(PYTHON) tools/perf_table.py --marker checkpoint-table BENCH_checkpoint.json
+	$(PYTHON) tools/perf_table.py --marker kv-table BENCH_kv.json
 
 # Render the Fig-4-style weak-scaling table (ROADMAP item) from the
 # load-path and fused-load artifacts.

@@ -1,0 +1,149 @@
+//! KV serving benchmark (EXPERIMENTS.md §KV).
+//!
+//! Drives the Zipf serving trace (`apps::kvserve`) at the paper's
+//! production scales (p = 1536 and p = 24576) to answer two questions:
+//!
+//! * **What does batching buy?** The same read-only Zipf trace served
+//!   twice with the cache disabled — once fused 256 gets per `KvBatch`,
+//!   once one get at a time. The fused run must send strictly fewer
+//!   messages for at most the same bytes (the §IV-C fewer-messages
+//!   argument applied to point reads; the EXACT per-get byte/message
+//!   golden contract lives in `rust/tests/kv_store.rs`). Reported as the
+//!   message-savings fraction.
+//!
+//! * **What does the cache buy under failures?** The read-heavy trace
+//!   (Zipf(1.1), 8 frontends, write rounds every 16 batches) with MTBF
+//!   failures landing mid-trace and the Shrink policy recovering, served
+//!   cached vs uncached. Cached p50 must be strictly below the uncached
+//!   ablation; stale serves must be zero across every epoch/version bump.
+//!   Also reported: hit rate, p99, and the recovery blast radius (miss
+//!   fraction of the first reads after each recovery, i.e. how much of
+//!   the cache one epoch bump strands).
+//!
+//! With `BENCH_SHORT=1` only p = 1536 runs and the trace shrinks (the CI
+//! schema smoke — see `make bench-json-short`). Emits `BENCH_kv.json` in
+//! the `{name, ns_per_iter}` artifact schema (names carry units; the
+//! always-zero stale-serve counter is tagged `zero-ok` for the
+//! validator).
+
+use restore::apps::kvserve::{run_zipf_trace, KvTraceConfig};
+use restore::restore::policy::Shrink;
+use restore::util::bench::{short_mode, write_json_artifact, BenchResult};
+
+/// Section 1: batched vs unbatched message counts, cache off.
+fn msg_savings_at(p: usize, ops: usize, results: &mut Vec<BenchResult>) {
+    let mut cfg = KvTraceConfig::read_heavy(p, ops, 0xB47C);
+    cfg.cache_capacity = 0;
+    cfg.write_every_batches = 0; // read-only: byte totals must be comparable
+    let mut unb = cfg.clone();
+    unb.batch = 1;
+
+    let batched = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+    let unbatched = run_zipf_trace(&unb, &mut Shrink).unwrap();
+    assert!(
+        batched.total_msgs < unbatched.total_msgs,
+        "fused batches must send strictly fewer messages ({} vs {})",
+        batched.total_msgs,
+        unbatched.total_msgs
+    );
+    // Zipf duplicates dedup and adjacent keys coalesce inside a batch, so
+    // fused bytes may drop below sequential — never above.
+    assert!(batched.total_bytes <= unbatched.total_bytes);
+    let savings = 1.0 - batched.total_msgs as f64 / unbatched.total_msgs as f64;
+
+    let tag = format!("p={p}");
+    println!(
+        "kv {tag}: batch=256 sent {} msgs vs {} unbatched -> {:.1}% fewer \
+         ({} vs {} bytes)",
+        batched.total_msgs,
+        unbatched.total_msgs,
+        savings * 1e2,
+        batched.total_bytes,
+        unbatched.total_bytes,
+    );
+    results.push(BenchResult::from_value(&format!("kv msg-savings-frac {tag}"), savings));
+    results.push(BenchResult::from_value(
+        &format!("kv batched-msgs-count {tag}"),
+        batched.total_msgs as f64,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv unbatched-msgs-count {tag}"),
+        unbatched.total_msgs as f64,
+    ));
+}
+
+/// Section 2: cached vs uncached latency under MTBF failures.
+fn latency_at(p: usize, ops: usize, results: &mut Vec<BenchResult>) {
+    let mut cfg = KvTraceConfig::read_heavy(p, ops, 0xCAC4E);
+    cfg.pe_mtbf_s = p as f64 * 0.02;
+    cfg.min_failures = 1;
+    let mut uncached_cfg = cfg.clone();
+    uncached_cfg.cache_capacity = 0;
+
+    let cached = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+    let uncached = run_zipf_trace(&uncached_cfg, &mut Shrink).unwrap();
+    assert!(
+        cached.p50_s < uncached.p50_s,
+        "cached p50 must beat the uncached ablation ({:.3e} vs {:.3e} s)",
+        cached.p50_s,
+        uncached.p50_s
+    );
+    assert_eq!(cached.stale_serves, 0, "no cached value may survive a stamp bump");
+    assert_eq!(uncached.stale_serves, 0);
+    assert!(cached.failures >= 1, "the storm must land mid-trace");
+
+    let tag = format!("p={p}");
+    println!(
+        "kv {tag}: cached p50 {:.2} us / p99 {:.2} us (hit rate {:.1}%), uncached p50 \
+         {:.2} us / p99 {:.2} us; {} failures, blast radius {:.1}%, stale serves 0",
+        cached.p50_s * 1e6,
+        cached.p99_s * 1e6,
+        cached.hit_rate * 1e2,
+        uncached.p50_s * 1e6,
+        uncached.p99_s * 1e6,
+        cached.failures,
+        cached.blast_radius() * 1e2,
+    );
+    results.push(BenchResult::from_value(
+        &format!("kv cached p50 sim-ns {tag}"),
+        cached.p50_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv cached p99 sim-ns {tag}"),
+        cached.p99_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv uncached p50 sim-ns {tag}"),
+        uncached.p50_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv uncached p99 sim-ns {tag}"),
+        uncached.p99_s * 1e9,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv hit-rate-frac {tag}"),
+        cached.hit_rate,
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv blast-radius-frac {tag}"),
+        cached.blast_radius(),
+    ));
+    results.push(BenchResult::from_value(
+        &format!("kv stale-serves-count zero-ok {tag}"),
+        cached.stale_serves as f64,
+    ));
+}
+
+fn main() {
+    println!("=== kv serving benchmarks ===\n");
+    let mut results: Vec<BenchResult> = Vec::new();
+    let scales: &[usize] = &[1536, 24576];
+    let scales = if short_mode() { &scales[..1] } else { scales };
+    let ops = if short_mode() { 8192 } else { 32768 };
+    for &p in scales {
+        msg_savings_at(p, ops, &mut results);
+        latency_at(p, ops, &mut results);
+    }
+    write_json_artifact("BENCH_kv.json", &results).expect("write BENCH_kv.json");
+    println!("\nwrote BENCH_kv.json ({} entries)", results.len());
+}

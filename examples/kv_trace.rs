@@ -1,0 +1,185 @@
+//! A Zipf KV serving trace over two datasets — batched + cached vs a
+//! sequential uncached oracle, with a failure landing mid-trace.
+//!
+//! Two identical execution-mode stores serve the SAME trace:
+//!
+//! * the **main** store serves reads through a `KvStore` with per-PE
+//!   caches, 32 gets fused per `KvBatch` (one request + one data sparse
+//!   all-to-all for all misses across both datasets);
+//! * the **oracle** twin serves every get individually with caching
+//!   disabled — a fresh load from the holders each time.
+//!
+//! Every single value is compared byte-for-byte between the two, through
+//! write rounds (`put_many` riding the dirty-resubmit path on both) and
+//! a 2-PE kill mid-trace (ULFM recovery + shrink rebalance on both). At
+//! the end the main store's caches are audited against its replicas —
+//! zero mismatches, zero stale serves — and the fused trace must have
+//! sent strictly fewer messages than the oracle's sequential serving.
+//!
+//! Run with: `cargo run --release --example kv_trace`
+
+use restore::config::RestoreConfig;
+use restore::restore::{DatasetId, KvBatch, KvStore, Overlap, ReStore, Zipf};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::ulfm;
+use restore::util::rng::Rng;
+
+const P: usize = 16;
+const BS: usize = 32;
+const BPP: usize = 64;
+const R: usize = 4;
+const N_KEYS: u64 = (P * BPP) as u64;
+const BATCH: usize = 32;
+const BATCHES: usize = 24;
+const FRONTENDS: usize = 4;
+const CACHE_SLOTS: usize = 256;
+const WRITE_EVERY: usize = 4;
+const WRITES_PER_ROUND: usize = 8;
+const THETA: f64 = 0.9;
+
+fn image(salt: u8) -> Vec<u8> {
+    (0..N_KEYS as usize * BS).map(|i| (i as u8).wrapping_mul(13).wrapping_add(salt)).collect()
+}
+
+fn shards_of(store: &ReStore, flat: &[u8]) -> Vec<Vec<u8>> {
+    let dist = store.distribution();
+    (0..dist.world())
+        .map(|j| {
+            let r = dist.shard_of(j);
+            flat[r.start as usize * BS..r.end as usize * BS].to_vec()
+        })
+        .collect()
+}
+
+/// One serving stack: cluster + store with two submitted datasets + kv
+/// front-end registered over both.
+fn stack(cache_slots: usize) -> (Cluster, ReStore, KvStore, Vec<DatasetId>) {
+    let cfg = RestoreConfig::builder(P, BS, BPP).replicas(R).build().unwrap();
+    let mut cluster = Cluster::new_execution(P, 4);
+    let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+    store.submit(&mut cluster, &shards_of(&store, &image(1))).unwrap();
+    let id2 = store.create_dataset(cfg, &cluster).unwrap();
+    let shards2 = shards_of(&store, &image(2));
+    store.dataset_mut(id2).unwrap().submit(&mut cluster, &shards2).unwrap();
+    let ids = vec![DatasetId::FIRST, id2];
+    let mut kv = KvStore::new();
+    for (i, &id) in ids.iter().enumerate() {
+        kv.register_with_image(&store, id, cache_slots, image(1 + i as u8)).unwrap();
+    }
+    (cluster, store, kv, ids)
+}
+
+fn main() {
+    let (mut cluster, mut store, mut kv, ids) = stack(CACHE_SLOTS);
+    let (mut o_cluster, mut o_store, mut o_kv, o_ids) = stack(0);
+    assert_eq!(ids, o_ids);
+    println!(
+        "serving {} keys x {BS} B over {} datasets on p={P} (r={R}), \
+         batch={BATCH}, {FRONTENDS} frontends",
+        N_KEYS,
+        ids.len()
+    );
+
+    let zipf = Zipf::new(N_KEYS as usize, THETA);
+    let mut rng = Rng::seed_from_u64(0xE7);
+    let mut fused_msgs = 0u64;
+    let mut seq_msgs = 0u64;
+    let mut write_round = 0usize;
+
+    for b in 0..BATCHES {
+        // -- the failure lands exactly mid-trace, on BOTH stacks --
+        if b == BATCHES / 2 {
+            println!("\n*** PEs 14 and 15 die mid-trace ***");
+            for (cl, st) in [(&mut cluster, &mut store), (&mut o_cluster, &mut o_store)] {
+                cl.kill(&[14, 15]);
+                let (_failed, map, _cost) = ulfm::recover(cl);
+                st.rebalance_or_acknowledge_all(cl, &map).unwrap();
+            }
+            // the epoch bump strands every cached entry — audited, not swept
+            for &id in &ids {
+                let audit = kv.validate_cache(&store, id).unwrap();
+                assert_eq!(audit.live_entries, 0, "no cache entry may survive the epoch bump");
+            }
+        }
+
+        let frontends: Vec<usize> =
+            cluster.alive_ranks().iter().take(FRONTENDS).map(|&r| r as usize).collect();
+        let mut batch = KvBatch::new();
+        let mut trace: Vec<(DatasetId, usize, u64)> = Vec::with_capacity(BATCH);
+        for i in 0..BATCH {
+            let pe = frontends[rng.gen_index(frontends.len())];
+            let id = ids[i % ids.len()];
+            let key = zipf.sample(&mut rng);
+            batch.get(id, pe, key);
+            trace.push((id, pe, key));
+        }
+
+        // fused + cached on the main stack ...
+        let out = kv.execute(&mut store, &mut cluster, &batch).unwrap();
+        fused_msgs += out.cost.total_msgs;
+        // ... vs one fresh uncached load per get on the oracle twin
+        for (i, &(id, pe, key)) in trace.iter().enumerate() {
+            let oracle = o_kv.get(&mut o_store, &mut o_cluster, id, pe, key).unwrap();
+            seq_msgs += oracle.cost.total_msgs;
+            assert_eq!(
+                out.value(i).unwrap(),
+                oracle.bytes.unwrap().as_slice(),
+                "batch {b} get {i}: cached batched value diverged from the fresh-load oracle"
+            );
+        }
+
+        // -- write rounds ride the dirty-resubmit path on BOTH stacks --
+        if (b + 1) % WRITE_EVERY == 0 {
+            write_round += 1;
+            let id = ids[write_round % ids.len()];
+            let keys: Vec<u64> =
+                (0..WRITES_PER_ROUND).map(|_| zipf.sample(&mut rng)).collect();
+            let values: Vec<Vec<u8>> = keys
+                .iter()
+                .map(|&k| {
+                    (0..BS).map(|j| (k as u8).wrapping_add(j as u8) ^ write_round as u8).collect()
+                })
+                .collect();
+            let writes: Vec<(u64, &[u8])> =
+                keys.iter().zip(&values).map(|(&k, v)| (k, v.as_slice())).collect();
+            kv.put_many(&mut store, &mut cluster, id, &writes, Overlap::Blocking).unwrap();
+            o_kv.put_many(&mut o_store, &mut o_cluster, id, &writes, Overlap::Blocking).unwrap();
+        }
+    }
+
+    // -- scans map a key range onto one RangeSet load; same oracle check --
+    let pe = cluster.alive_ranks()[0] as usize;
+    let scan = kv.scan(&mut store, &mut cluster, ids[0], pe, 100, 164).unwrap();
+    let o_scan = o_kv.scan(&mut o_store, &mut o_cluster, ids[0], pe, 100, 164).unwrap();
+    assert_eq!(scan.bytes.unwrap(), o_scan.bytes.unwrap());
+
+    // -- final audit: every live cache entry matches a live replica --
+    let mut hits = 0u64;
+    let mut gets = 0u64;
+    let mut stale = 0u64;
+    for &id in &ids {
+        let audit = kv.validate_cache(&store, id).unwrap();
+        assert_eq!(audit.mismatched_entries, 0, "cache coherent with the replicas");
+        let s = kv.stats(id).unwrap();
+        hits += s.hits;
+        gets += s.hits + s.misses;
+        stale += s.stale_serves;
+    }
+    assert!(
+        fused_msgs < seq_msgs,
+        "fused batches must send strictly fewer messages ({fused_msgs} vs {seq_msgs})"
+    );
+    assert_eq!(stale, 0);
+
+    println!(
+        "\n{} gets in {BATCHES} batches, {} write rounds, 1 scan; all values \
+         byte-identical to the fresh-load oracle",
+        gets, write_round
+    );
+    println!(
+        "kv_trace: hit-rate={:.3} msg-savings={:.3} stale-serves={stale}",
+        hits as f64 / gets as f64,
+        1.0 - fused_msgs as f64 / seq_msgs as f64,
+    );
+    println!("kv_trace: OK");
+}

@@ -1,0 +1,331 @@
+//! Zipf KV serving trace: the driver behind `benches/kv.rs`.
+//!
+//! Models the ROADMAP's "millions of users" serving shape over the
+//! cost-model substrate: a pool of frontend PEs issues skewed point reads
+//! (Zipf(θ) — a handful of hot keys dominate) in batches against one or
+//! more datasets, interleaved with point-write rounds, while an MTBF
+//! failure storm kills PEs mid-trace and a [`RecoveryPolicy`] repairs the
+//! store between batches. Per-get *simulated* latency is recorded for
+//! every read — a cache hit costs one local block copy, a miss costs its
+//! batch's fused request + data all-to-all — so the trace reports the
+//! serving numbers the bench publishes: p50/p99 latency, cache hit rate,
+//! message/byte totals (for the batched-vs-unbatched ablation), and the
+//! recovery *blast radius* (how many of the reads issued right after a
+//! failure miss, because the epoch bump stranded every cached entry).
+
+use crate::config::RestoreConfig;
+use crate::error::{Error, Result};
+use crate::restore::kv::{KvBatch, KvStore, Zipf};
+use crate::restore::policy::RecoveryPolicy;
+use crate::restore::registry::DatasetId;
+use crate::restore::resubmit::Overlap;
+use crate::restore::ReStore;
+use crate::simnet::cluster::Cluster;
+use crate::simnet::failure::MtbfStorm;
+use crate::simnet::network::PhaseCost;
+use crate::util::rng::Rng;
+
+/// Shape of one Zipf serving trace (see [`run_zipf_trace`]).
+#[derive(Debug, Clone)]
+pub struct KvTraceConfig {
+    /// World size.
+    pub p: usize,
+    /// PEs per node (failure-burst and topology granularity).
+    pub ppn: usize,
+    pub blocks_per_pe: usize,
+    pub block_size: usize,
+    pub replicas: usize,
+    /// Datasets served (≥ 1); gets spread round-robin across them.
+    pub datasets: usize,
+    /// Total point gets to serve.
+    pub ops: usize,
+    /// Gets fused per [`KvBatch`] (1 = the unbatched ablation).
+    pub batch: usize,
+    /// Zipf skew θ (≈ 0.99 is the YCSB default; higher = hotter head).
+    pub theta: f64,
+    /// Per-PE cache slots (0 = the uncached ablation).
+    pub cache_capacity: usize,
+    /// Requester pool: gets are issued by the first `frontends` alive PEs
+    /// (0 = every alive PE is a frontend).
+    pub frontends: usize,
+    /// Issue a write round every this many batches (0 = read-only trace).
+    pub write_every_batches: usize,
+    /// Point writes per write round.
+    pub writes_per_round: usize,
+    /// Per-PE MTBF driving the failure storm (0 = no failures).
+    pub pe_mtbf_s: f64,
+    /// If no failure fired by the trace midpoint, jump the clock to the
+    /// next storm event until this many have fired — keeps blast-radius
+    /// measurements meaningful on short traces.
+    pub min_failures: usize,
+    /// Gets counted into the blast-radius window after each recovery.
+    pub post_failure_window: usize,
+    /// Inter-batch arrival gap (simulated seconds) — what lets the storm
+    /// clock make progress relative to per-op service times.
+    pub think_s: f64,
+    pub seed: u64,
+}
+
+impl KvTraceConfig {
+    /// A read-heavy serving mix at world size `p`: Zipf(1.1) reads in
+    /// batches of 256 from 8 frontend PEs over 2 datasets, a 64-key write
+    /// round every 16 batches, r = 4.
+    pub fn read_heavy(p: usize, ops: usize, seed: u64) -> KvTraceConfig {
+        KvTraceConfig {
+            p,
+            ppn: 48,
+            blocks_per_pe: 64,
+            block_size: 256,
+            replicas: 4,
+            datasets: 2,
+            ops,
+            batch: 256,
+            theta: 1.1,
+            cache_capacity: 16384,
+            frontends: 8,
+            write_every_batches: 16,
+            writes_per_round: 64,
+            pe_mtbf_s: 0.0,
+            min_failures: 0,
+            post_failure_window: 2048,
+            think_s: 2e-4,
+            seed,
+        }
+    }
+}
+
+/// What a [`run_zipf_trace`] run served and cost.
+#[derive(Debug, Clone, Default)]
+pub struct KvTraceReport {
+    pub gets: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_rate: f64,
+    /// Median / 99th-percentile simulated per-get latency (seconds).
+    pub p50_s: f64,
+    pub p99_s: f64,
+    /// Network totals across every read batch (hit serving adds none).
+    pub total_msgs: u64,
+    pub total_bytes: u64,
+    pub puts: u64,
+    /// Write rounds skipped because a holder was dead / a slot was lost
+    /// at issue time (the app keeps its authoritative copy and retries).
+    pub skipped_puts: u64,
+    pub failures: u64,
+    pub recoveries: u64,
+    pub recovery_time_s: f64,
+    /// Gets issued inside the post-recovery windows, and how many of them
+    /// missed (the cache-invalidation blast radius).
+    pub blast_gets: u64,
+    pub blast_misses: u64,
+    pub stale_serves: u64,
+    pub sim_time_s: f64,
+}
+
+impl KvTraceReport {
+    /// Miss fraction inside the post-recovery windows.
+    pub fn blast_radius(&self) -> f64 {
+        if self.blast_gets == 0 {
+            0.0
+        } else {
+            self.blast_misses as f64 / self.blast_gets as f64
+        }
+    }
+
+    /// Fraction of issued writes that had to be skipped.
+    pub fn skipped_put_rate(&self) -> f64 {
+        let total = self.puts + self.skipped_puts;
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped_puts as f64 / total as f64
+        }
+    }
+}
+
+/// Drive one Zipf serving trace over cost-model datasets and report the
+/// serving numbers. Deterministic for a given config (storm included).
+pub fn run_zipf_trace(
+    cfg: &KvTraceConfig,
+    policy: &mut dyn RecoveryPolicy,
+) -> Result<KvTraceReport> {
+    assert!(cfg.datasets >= 1 && cfg.batch >= 1 && cfg.ops >= 1);
+    let rcfg = RestoreConfig::builder(cfg.p, cfg.block_size, cfg.blocks_per_pe)
+        .replicas(cfg.replicas)
+        .build()?;
+    let mut cluster = Cluster::new_execution(cfg.p, cfg.ppn);
+    let mut store = ReStore::new(rcfg.clone(), &cluster)?;
+    store.submit_virtual(&mut cluster)?;
+    let mut ids = vec![DatasetId::FIRST];
+    for _ in 1..cfg.datasets {
+        let id = store.create_dataset(rcfg.clone(), &cluster)?;
+        store.dataset_mut(id)?.submit_virtual(&mut cluster)?;
+        ids.push(id);
+    }
+    let mut kv = KvStore::new();
+    for &id in &ids {
+        kv.register(&store, id, cfg.cache_capacity)?;
+    }
+
+    let n_keys = (cfg.p * cfg.blocks_per_pe) as usize;
+    let zipf = Zipf::new(n_keys, cfg.theta);
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut storm = (cfg.pe_mtbf_s > 0.0)
+        .then(|| MtbfStorm::new(cfg.pe_mtbf_s, 0.1, cfg.seed ^ 0x5707_11));
+    let mut pending = storm.as_mut().and_then(|s| s.next_event(&cluster));
+
+    let mut rep = KvTraceReport::default();
+    let mut lat: Vec<f64> = Vec::with_capacity(cfg.ops);
+    let mut blast_left = 0usize;
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    while served < cfg.ops {
+        // Fire every storm event the clock has reached; if the trace is
+        // half done without a failure, jump to the next event so short
+        // traces still measure a blast radius.
+        while let Some(ev) = pending.as_ref() {
+            let due = ev.at_s <= cluster.now();
+            let force = rep.failures < cfg.min_failures as u64 && served >= cfg.ops / 2;
+            if !(due || force) {
+                break;
+            }
+            if !due {
+                cluster.tick_compute(ev.at_s - cluster.now());
+            }
+            let ev = pending.take().expect("checked above");
+            cluster.kill(&ev.kills);
+            rep.failures += ev.kills.len() as u64;
+            let outcome = policy.recover(&mut cluster, &mut store)?;
+            rep.recoveries += 1;
+            rep.recovery_time_s += outcome.recovery_time_s;
+            blast_left = cfg.post_failure_window;
+            pending = storm.as_mut().and_then(|s| s.next_event(&cluster));
+        }
+
+        cluster.tick_compute(cfg.think_s);
+        let alive = cluster.alive_ranks();
+        let pool = if cfg.frontends == 0 {
+            alive.len()
+        } else {
+            cfg.frontends.min(alive.len())
+        };
+        let mut batch = KvBatch::new();
+        let k = cfg.batch.min(cfg.ops - served);
+        for i in 0..k {
+            let pe = alive[rng.gen_index(pool)] as usize;
+            let id = ids[(served + i) % ids.len()];
+            batch.get(id, pe, zipf.sample(&mut rng));
+        }
+        let out = kv.execute(&mut store, &mut cluster, &batch)?;
+        served += k;
+        batches += 1;
+        rep.gets += k as u64;
+        rep.hits += out.hits;
+        rep.misses += out.misses;
+        rep.total_msgs += out.cost.total_msgs;
+        rep.total_bytes += out.cost.total_bytes;
+        let hit_lat =
+            PhaseCost::local_copy(cluster.network(), cfg.block_size as u64).sim_time_s;
+        let miss_lat = out.request_cost.sim_time_s + out.data_cost.sim_time_s;
+        for g in &out.gets {
+            lat.push(if g.hit { hit_lat } else { miss_lat });
+            if blast_left > 0 {
+                blast_left -= 1;
+                rep.blast_gets += 1;
+                if !g.hit {
+                    rep.blast_misses += 1;
+                }
+            }
+        }
+
+        // Write round: commit a Zipf key set as one dirty resubmit.
+        if cfg.write_every_batches > 0
+            && batches % cfg.write_every_batches == 0
+            && cfg.writes_per_round > 0
+        {
+            let keys: Vec<u64> =
+                (0..cfg.writes_per_round).map(|_| zipf.sample(&mut rng)).collect();
+            let id = ids[batches / cfg.write_every_batches % ids.len()];
+            match kv.put_virtual(&mut store, &mut cluster, id, &keys, Overlap::Blocking) {
+                Ok(_) => rep.puts += keys.len() as u64,
+                Err(Error::DeadPe(_))
+                | Err(Error::IrrecoverableDataLoss { .. })
+                | Err(Error::ResubmitAborted { .. }) => {
+                    rep.skipped_puts += keys.len() as u64;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    lat.sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    rep.p50_s = lat[lat.len() / 2];
+    rep.p99_s = lat[(lat.len() * 99 / 100).min(lat.len() - 1)];
+    rep.hit_rate = if rep.gets == 0 { 0.0 } else { rep.hits as f64 / rep.gets as f64 };
+    for &id in &ids {
+        rep.stale_serves += kv.stats(id)?.stale_serves;
+    }
+    rep.sim_time_s = cluster.now();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::restore::policy::Shrink;
+
+    #[test]
+    fn read_heavy_trace_caches_and_batches() {
+        let cfg = KvTraceConfig { ops: 4096, ..KvTraceConfig::read_heavy(96, 4096, 11) };
+        let rep = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+        assert_eq!(rep.gets, 4096);
+        assert_eq!(rep.hits + rep.misses, rep.gets);
+        assert!(rep.hit_rate > 0.3, "Zipf(1.1) from 8 frontends should hit: {}", rep.hit_rate);
+        assert!(rep.p50_s > 0.0 && rep.p99_s >= rep.p50_s);
+        assert_eq!(rep.stale_serves, 0);
+        assert!(rep.puts > 0);
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = KvTraceConfig { ops: 2048, ..KvTraceConfig::read_heavy(96, 2048, 5) };
+        let a = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+        let b = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+        assert_eq!(a.total_msgs, b.total_msgs);
+        assert_eq!(a.total_bytes, b.total_bytes);
+        assert_eq!((a.hits, a.misses), (b.hits, b.misses));
+        assert_eq!(a.p99_s, b.p99_s);
+    }
+
+    #[test]
+    fn failures_mid_trace_recover_and_blast_the_cache() {
+        let mut cfg = KvTraceConfig::read_heavy(96, 8192, 23);
+        cfg.pe_mtbf_s = 96.0 * 0.05;
+        cfg.min_failures = 1;
+        let rep = run_zipf_trace(&cfg, &mut Shrink).unwrap();
+        assert!(rep.failures >= 1, "min_failures must force at least one event");
+        assert!(rep.recoveries >= 1);
+        assert!(rep.recovery_time_s > 0.0);
+        assert!(rep.blast_gets > 0);
+        // the epoch bump stranded the cache: post-recovery reads miss more
+        assert!(rep.blast_misses > 0);
+        assert_eq!(rep.stale_serves, 0);
+    }
+
+    #[test]
+    fn unbatched_ablation_sends_more_messages() {
+        let mut a = KvTraceConfig::read_heavy(96, 2048, 7);
+        a.cache_capacity = 0;
+        let mut b = a.clone();
+        b.batch = 1;
+        let batched = run_zipf_trace(&a, &mut Shrink).unwrap();
+        let unbatched = run_zipf_trace(&b, &mut Shrink).unwrap();
+        assert!(
+            batched.total_msgs < unbatched.total_msgs,
+            "fused batches must send strictly fewer messages: {} vs {}",
+            batched.total_msgs,
+            unbatched.total_msgs
+        );
+        assert!(batched.total_bytes <= unbatched.total_bytes);
+    }
+}

@@ -8,6 +8,10 @@
 //!   through ReStore (vs. the RBA-file-on-PFS baseline) after failures.
 //! * [`pagerank`] — the third application the paper names (§IV-C): a
 //!   vertex-partitioned PageRank whose edge shards live in ReStore.
+//! * [`kvserve`] — the Zipf KV serving trace behind `benches/kv.rs`:
+//!   batched cached point reads + write rounds under an MTBF failure
+//!   storm, reporting p50/p99 latency, hit rate, and recovery blast
+//!   radius.
 //!
 //! All three share the same skeleton: generate per-PE input, `submit` once,
 //! iterate compute + allreduce, and on failure run the ULFM recovery
@@ -25,6 +29,7 @@
 //! fused shrink handshake as the bulk input.
 
 pub mod kmeans;
+pub mod kvserve;
 pub mod pagerank;
 pub mod raxml;
 

@@ -93,6 +93,11 @@ pub enum Error {
     )]
     CorruptBlock { dataset: crate::restore::registry::DatasetId, block: u64, holder: usize },
 
+    /// A KV operation referenced a key at or beyond the dataset's key
+    /// space (keys are block ids: `[0, n_blocks)`).
+    #[error("kv: key {key} out of range for dataset {dataset} ({keys} keys)")]
+    KeyOutOfRange { dataset: crate::restore::registry::DatasetId, key: u64, keys: u64 },
+
     /// PJRT / XLA runtime error (only constructed with the `pjrt` feature;
     /// the variant itself stays so error handling is feature-independent).
     #[error("xla runtime: {0}")]

@@ -1,0 +1,1193 @@
+//! KV serving layer: a `get`/`put`/`scan` front-end over the registry.
+//!
+//! The registry already IS a replicated key-value store in everything but
+//! API: keys are block ids, the Feistel permutation (§IV-A) hashes them
+//! across PEs, every block has `r` live holders, and the load router
+//! balances reads over them. This module adds the serving shape the
+//! ROADMAP's "millions of users" north star asks for (the Fohry & Fink
+//! ULFM KV store, PAPERS.md), with two perf levers on the read path:
+//!
+//! - **Request batching** ([`KvBatch`]). Many small point gets — across
+//!   requesters, keys, and *datasets* — fuse into ONE request sparse
+//!   all-to-all plus ONE data sparse all-to-all through
+//!   [`ReStore::load_many_pooled`]: per-(dataset, requester) key sets fold
+//!   into maximal [`RangeSet`] runs and ride the existing plan/merge
+//!   machinery. This is §IV-C's fewer-messages argument applied to point
+//!   reads: bytes equal the k sequential single-key gets (the request
+//!   phase charges per piece descriptor, not per message), while message
+//!   count drops to one per distinct (requester, server) pair — strictly
+//!   below `2k` whenever any two gets share a pair (golden-tested in
+//!   `rust/tests/kv_store.rs`).
+//!
+//! - **A per-PE read cache** with O(1) invalidation. Each requester PE
+//!   owns a bounded direct-mapped cache whose entries are stamped with
+//!   the dataset's `(epoch, version)` pair ([`Dataset::stamp`]) plus a
+//!   table-local generation. A rebalance/substitution bumps the epoch, a
+//!   resubmit bumps the version, and [`KvStore::invalidate`] bumps the
+//!   generation (the repair/scrub-heal hook) — each stamps *every* cached
+//!   entry stale in O(1), never by sweeping, exactly the generation trick
+//!   PR 8's stamped load table uses. A hit performs zero allocations and
+//!   never touches the network accumulator: it charges one local memcpy
+//!   ([`PhaseCost::local_copy`]) and serves bytes straight out of the
+//!   cache arena. Serving a stale value is structurally impossible —
+//!   every read validates the dataset epoch first (a stale epoch is an
+//!   error, not a silent serve) and a hit requires all three stamps to
+//!   match the *current* dataset state; the [`KvStats::stale_serves`]
+//!   tripwire recounts the comparison at serve time and stays zero.
+//!
+//! Writes ride PR 9's mutable-dataset path: [`KvStore::put_many`] applies
+//! point writes to a flat authoritative image and commits them as a
+//! [`ResubmitMode::Dirty`] resubmit (atomic version bump, abort falls
+//! back to the committed version with the image rolled back);
+//! [`KvStore::scan`] maps a key range onto a single `RangeSet` load
+//! through the router. Cache-coherence across all of it is prop-tested
+//! against an uncached fresh-load oracle under random
+//! get/put/kill/recover/scan interleavings.
+
+use crate::error::{Error, Result};
+use crate::restore::block::{BlockRange, RangeSet};
+use crate::restore::load::{point_get_ranges, point_get_requests};
+use crate::restore::registry::DatasetId;
+use crate::restore::resubmit::{Overlap, ResubmitMode, ResubmitReport};
+use crate::restore::{LoadRequest, ReStore};
+use crate::simnet::cluster::Cluster;
+use crate::simnet::network::PhaseCost;
+use crate::util::rng::Rng;
+
+/// Slot-empty marker in a [`PeCache`]; no valid key reaches it (a key is
+/// a block id, bounded by the dataset's block count).
+const EMPTY_KEY: u64 = u64::MAX;
+
+/// Read-path counters of one registered dataset (see [`KvStore::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvStats {
+    /// Gets served from the per-PE cache (no network phase).
+    pub hits: u64,
+    /// Gets that went to the holders through the load router.
+    pub misses: u64,
+    /// Point writes committed through the resubmit path.
+    pub puts: u64,
+    /// Range scans served.
+    pub scans: u64,
+    /// Cached entries whose stamps no longer matched the dataset at the
+    /// moment of serving. The hit predicate already requires matching
+    /// stamps, so this is a tripwire that must stay 0 — it recounts the
+    /// comparison after the hit decision (the `stale-serves=0` marker in
+    /// `examples/kv_trace.rs` and the Zipf bench asserts on it).
+    pub stale_serves: u64,
+    /// O(1) whole-table invalidations (epoch/version bumps are implicit;
+    /// this counts explicit [`KvStore::invalidate`] generation bumps).
+    pub invalidations: u64,
+}
+
+impl KvStats {
+    /// Fraction of gets served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One requester PE's bounded direct-mapped read cache. Parallel arrays:
+/// slot `key % capacity` holds the key plus the `(epoch, version, gen)`
+/// stamps it was filled under; `values` is a single `capacity ·
+/// block_size` arena (empty for cost-model datasets, which cache the
+/// *locality* of a key, not bytes). Invalidation never walks these
+/// arrays — a stamp bump anywhere strands every entry at once.
+struct PeCache {
+    keys: Vec<u64>,
+    epochs: Vec<u64>,
+    versions: Vec<u64>,
+    gens: Vec<u64>,
+    values: Vec<u8>,
+}
+
+impl PeCache {
+    fn new(capacity: usize, block_size: usize, execution: bool) -> PeCache {
+        PeCache {
+            keys: vec![EMPTY_KEY; capacity],
+            epochs: vec![0; capacity],
+            versions: vec![0; capacity],
+            gens: vec![0; capacity],
+            values: if execution { vec![0; capacity * block_size] } else { Vec::new() },
+        }
+    }
+}
+
+/// One registered dataset's serving state inside a [`KvStore`].
+struct Table {
+    dataset: DatasetId,
+    /// Cache slots per requester PE (0 disables caching entirely).
+    capacity: usize,
+    /// Table-local generation stamp: bumped by [`KvStore::invalidate`],
+    /// invalidating every cached entry in O(1) without an epoch or
+    /// version change (the repair/scrub-heal contract).
+    gen: u64,
+    /// Lazily allocated per requester rank — only PEs that actually read
+    /// through the cache pay for slots.
+    caches: Vec<Option<Box<PeCache>>>,
+    /// Flat authoritative content (`n_blocks · block_size` bytes, original
+    /// block order) mirroring the committed version — the write path's
+    /// source of truth ([`KvStore::put_many`]). `None` for cost-model
+    /// tables and read-only registrations.
+    image: Option<Vec<u8>>,
+    stats: KvStats,
+}
+
+impl Table {
+    fn slot(&self, key: u64) -> usize {
+        (key % self.capacity as u64) as usize
+    }
+
+    /// Is `(pe, key)` cached at exactly the current stamps? Allocation-free.
+    fn probe(&self, pe: usize, key: u64, epoch: u64, version: u64) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let Some(Some(c)) = self.caches.get(pe) else {
+            return false;
+        };
+        let s = self.slot(key);
+        c.keys[s] == key
+            && c.epochs[s] == epoch
+            && c.versions[s] == version
+            && c.gens[s] == self.gen
+    }
+
+    /// Fill `(pe, key)` at the current stamps; `bytes` is `None` for
+    /// cost-model datasets (the stamp alone is the cache entry).
+    fn fill(
+        &mut self,
+        pe: usize,
+        key: u64,
+        epoch: u64,
+        version: u64,
+        bytes: Option<&[u8]>,
+        bs: usize,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.caches.len() <= pe {
+            self.caches.resize_with(pe + 1, || None);
+        }
+        let (capacity, gen) = (self.capacity, self.gen);
+        let c = self.caches[pe]
+            .get_or_insert_with(|| Box::new(PeCache::new(capacity, bs, bytes.is_some())));
+        let s = (key % capacity as u64) as usize;
+        c.keys[s] = key;
+        c.epochs[s] = epoch;
+        c.versions[s] = version;
+        c.gens[s] = gen;
+        if let Some(b) = bytes {
+            c.values[s * bs..(s + 1) * bs].copy_from_slice(b);
+        }
+    }
+}
+
+/// A served value: borrowed straight from the cache arena on a hit
+/// (allocation-free), owned on a cache-disabled miss.
+pub enum KvBytes<'a> {
+    /// Served from the per-PE cache arena.
+    Cached(&'a [u8]),
+    /// Served from the holders (cache disabled for this table).
+    Owned(Vec<u8>),
+}
+
+impl KvBytes<'_> {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            KvBytes::Cached(b) => b,
+            KvBytes::Owned(b) => b,
+        }
+    }
+}
+
+impl std::ops::Deref for KvBytes<'_> {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+/// Result of a single [`KvStore::get`].
+pub struct KvGet<'a> {
+    /// The value's `block_size` bytes (`None` for cost-model datasets).
+    pub bytes: Option<KvBytes<'a>>,
+    /// Served from the per-PE cache?
+    pub hit: bool,
+    /// What this get charged the clock: a local memcpy on a hit, the
+    /// two-phase load cost on a miss.
+    pub cost: PhaseCost,
+}
+
+/// Result of a [`KvStore::scan`].
+pub struct KvScan {
+    /// The range's bytes in key order (`None` for cost-model datasets).
+    pub bytes: Option<Vec<u8>>,
+    pub cost: PhaseCost,
+}
+
+/// A batch of point gets — possibly spanning several datasets — fused
+/// into one two-phase sparse all-to-all by [`KvStore::execute`].
+#[derive(Debug, Clone, Default)]
+pub struct KvBatch {
+    gets: Vec<(DatasetId, usize, u64)>,
+}
+
+impl KvBatch {
+    pub fn new() -> KvBatch {
+        KvBatch::default()
+    }
+
+    /// Queue a point get: requester `pe` wants `key` of `dataset`.
+    /// Duplicate `(dataset, pe, key)` entries are served from one fetch.
+    pub fn get(&mut self, dataset: DatasetId, pe: usize, key: u64) -> &mut KvBatch {
+        self.gets.push((dataset, pe, key));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.gets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gets.is_empty()
+    }
+}
+
+/// One get's outcome inside a [`KvBatchOutput`], in input order.
+#[derive(Debug, Clone)]
+pub struct KvBatchGet {
+    pub dataset: DatasetId,
+    pub pe: usize,
+    pub key: u64,
+    pub hit: bool,
+    /// This get's bytes as `&output.values[span]` (`None` for cost-model
+    /// datasets).
+    pub span: Option<std::ops::Range<usize>>,
+}
+
+/// Result of a fused [`KvStore::execute`]: every value in one arena, the
+/// batch's hits charged as one fused local copy and its misses as exactly
+/// one request + one data sparse all-to-all across all datasets.
+#[derive(Debug, Clone)]
+pub struct KvBatchOutput {
+    /// Single output allocation; each get's bytes are `&values[span]`.
+    pub values: Vec<u8>,
+    /// Per-get outcomes, in the order the gets were queued.
+    pub gets: Vec<KvBatchGet>,
+    pub hits: u64,
+    pub misses: u64,
+    /// The fused request phase (zero if every get hit).
+    pub request_cost: PhaseCost,
+    /// The fused data phase (zero if every get hit).
+    pub data_cost: PhaseCost,
+    /// Total charged: hit memcpys + request + data.
+    pub cost: PhaseCost,
+}
+
+impl KvBatchOutput {
+    /// Bytes of get `i` (input order); `None` for cost-model datasets.
+    pub fn value(&self, i: usize) -> Option<&[u8]> {
+        self.gets[i].span.clone().map(|s| &self.values[s])
+    }
+}
+
+/// What [`KvStore::validate_cache`] found — the prop-test teeth.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvCacheAudit {
+    /// Entries whose stamps match the dataset's current
+    /// `(epoch, version)` and the table generation — the servable set.
+    pub live_entries: u64,
+    /// Entries stranded by an epoch/version/generation bump. Stale
+    /// entries are *inert* (the hit predicate skips them); they are
+    /// counted, never served.
+    pub stale_entries: u64,
+    /// Live entries whose cached bytes differ from a live holder's
+    /// committed bytes. Any nonzero value is a cache-coherence bug.
+    pub mismatched_entries: u64,
+}
+
+/// The KV serving front-end: a set of registered datasets, each with its
+/// per-PE read cache and (optionally) a flat write-through image. See the
+/// module docs for the serving model.
+#[derive(Default)]
+pub struct KvStore {
+    tables: Vec<Table>,
+}
+
+impl KvStore {
+    pub fn new() -> KvStore {
+        KvStore::default()
+    }
+
+    fn table_index(&self, id: DatasetId) -> Result<usize> {
+        self.tables
+            .iter()
+            .position(|t| t.dataset == id)
+            .ok_or_else(|| Error::Config(format!("kv: dataset {id} is not registered")))
+    }
+
+    /// Register `id` for serving with `cache_capacity` slots per
+    /// requester PE (0 disables the cache — the uncached ablation). The
+    /// table starts without an image, so [`KvStore::put_many`] is
+    /// unavailable (cost-model tables write via [`KvStore::put_virtual`]).
+    pub fn register(
+        &mut self,
+        store: &ReStore,
+        id: DatasetId,
+        cache_capacity: usize,
+    ) -> Result<()> {
+        store.dataset(id)?;
+        if self.tables.iter().any(|t| t.dataset == id) {
+            return Err(Error::Config(format!("kv: dataset {id} is already registered")));
+        }
+        self.tables.push(Table {
+            dataset: id,
+            capacity: cache_capacity,
+            gen: 0,
+            caches: Vec::new(),
+            image: None,
+            stats: KvStats::default(),
+        });
+        Ok(())
+    }
+
+    /// [`KvStore::register`] plus a flat authoritative `image`
+    /// (`n_blocks · block_size` bytes in original block order) that must
+    /// equal the dataset's committed content — the bytes submitted (or
+    /// last resubmitted). The image is the write path's source of truth:
+    /// [`KvStore::put_many`] applies point writes to it and commits them
+    /// as a dirty resubmit, rolling the image back if the resubmit
+    /// aborts, so it always mirrors the committed version.
+    pub fn register_with_image(
+        &mut self,
+        store: &ReStore,
+        id: DatasetId,
+        cache_capacity: usize,
+        image: Vec<u8>,
+    ) -> Result<()> {
+        let ds = store.dataset(id)?;
+        ds.ensure_submitted()?;
+        if !ds.is_execution_mode() {
+            return Err(Error::Config(format!(
+                "kv: register_with_image on cost-model dataset {id} (no bytes); use register"
+            )));
+        }
+        let want = ds.distribution().n_blocks() as usize * ds.config().block_size;
+        if image.len() != want {
+            return Err(Error::Config(format!(
+                "kv: dataset {id} image has {} bytes, expected {want}",
+                image.len()
+            )));
+        }
+        self.register(store, id, cache_capacity)?;
+        self.tables.last_mut().expect("just registered").image = Some(image);
+        Ok(())
+    }
+
+    /// Read-path counters of `id` (copied out).
+    pub fn stats(&self, id: DatasetId) -> Result<KvStats> {
+        Ok(self.tables[self.table_index(id)?].stats)
+    }
+
+    /// The authoritative flat image of `id`, if registered with one.
+    pub fn image(&self, id: DatasetId) -> Result<Option<&[u8]>> {
+        Ok(self.tables[self.table_index(id)?].image.as_deref())
+    }
+
+    /// Strand every cached entry of `id` in O(1) by bumping the table
+    /// generation — the hook for events that change holder placement
+    /// without an epoch or version bump (e.g. [`Dataset::scrub`] healing
+    /// a quarantined copy, [`ReStore::repair_replicas_all`]). Epoch and
+    /// version bumps invalidate implicitly; this covers everything else.
+    ///
+    /// [`Dataset::scrub`]: crate::restore::registry::Dataset::scrub
+    pub fn invalidate(&mut self, id: DatasetId) -> Result<()> {
+        let t = self.table_index(id)?;
+        self.tables[t].gen += 1;
+        self.tables[t].stats.invalidations += 1;
+        Ok(())
+    }
+
+    /// [`KvStore::invalidate`] for every registered dataset.
+    pub fn invalidate_all(&mut self) {
+        for t in &mut self.tables {
+            t.gen += 1;
+            t.stats.invalidations += 1;
+        }
+    }
+
+    /// Point read: requester `pe` gets `key` of `id`. A cache hit charges
+    /// one local `block_size` memcpy and allocates nothing; a miss is a
+    /// single-key load through the router (any of the `r` holders
+    /// serves), which then fills the cache. The dataset must be at the
+    /// cluster's current epoch — after a failure, recovery must run
+    /// before any read ([`Error::StaleEpoch`] otherwise), which is what
+    /// makes a stale serve structurally impossible rather than merely
+    /// unlikely.
+    pub fn get(
+        &mut self,
+        store: &mut ReStore,
+        cluster: &mut Cluster,
+        id: DatasetId,
+        pe: usize,
+        key: u64,
+    ) -> Result<KvGet<'_>> {
+        let t = self.table_index(id)?;
+        let (epoch, version, bs, n_blocks, execution) = {
+            let ds = store.dataset(id)?;
+            ds.ensure_submitted()?;
+            ds.ensure_current_epoch(cluster)?;
+            let (e, v) = ds.stamp();
+            (e, v, ds.config().block_size, ds.distribution().n_blocks(), ds.is_execution_mode())
+        };
+        if key >= n_blocks {
+            return Err(Error::KeyOutOfRange { dataset: id, key, keys: n_blocks });
+        }
+        if !cluster.is_alive(pe) {
+            return Err(Error::DeadPe(pe));
+        }
+
+        if self.tables[t].probe(pe, key, epoch, version) {
+            // Tripwire: recount the stamp comparison at serve time. The
+            // probe above already required it, so this can only fire if a
+            // future refactor lets the dataset move between probe and
+            // serve — it must stay 0 (asserted by bench and example).
+            let (e2, v2) = store.dataset(id)?.stamp();
+            if (e2, v2) != (epoch, version) {
+                self.tables[t].stats.stale_serves += 1;
+            } else {
+                let cost = PhaseCost::local_copy(cluster.network(), bs as u64);
+                cluster.advance(&cost);
+                let tbl = &mut self.tables[t];
+                tbl.stats.hits += 1;
+                let s = tbl.slot(key);
+                let c = tbl.caches[pe].as_ref().expect("probe hit implies cache");
+                let bytes = execution.then(|| KvBytes::Cached(&c.values[s * bs..(s + 1) * bs]));
+                return Ok(KvGet { bytes, hit: true, cost });
+            }
+        }
+
+        // Miss: one single-key load through the router, then fill.
+        let reqs = [LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(key, key + 1)]) }];
+        let out = store.dataset_mut(id)?.load(cluster, &reqs)?;
+        let value = out.shards.into_iter().next().expect("one request, one shard").bytes;
+        let tbl = &mut self.tables[t];
+        tbl.stats.misses += 1;
+        tbl.fill(pe, key, epoch, version, value.as_deref(), bs);
+        Ok(KvGet { bytes: value.map(KvBytes::Owned), hit: false, cost: out.cost })
+    }
+
+    /// Serve a whole [`KvBatch`] fused: hits are charged as ONE local
+    /// copy of their summed bytes (the network accumulator is never
+    /// touched), and all misses — across every dataset in the batch —
+    /// fold into per-(dataset, requester) range sets and ride ONE
+    /// [`ReStore::load_many_pooled`] call: exactly one request sparse
+    /// all-to-all plus one data sparse all-to-all, total message count
+    /// one per distinct (requester, server) pair. Planning allocations
+    /// are O(batch size), independent of the world size (pinned by
+    /// `rust/tests/alloc_counts.rs`).
+    pub fn execute(
+        &mut self,
+        store: &mut ReStore,
+        cluster: &mut Cluster,
+        batch: &KvBatch,
+    ) -> Result<KvBatchOutput> {
+        struct Meta {
+            id: DatasetId,
+            table: usize,
+            epoch: u64,
+            version: u64,
+            bs: usize,
+            n_blocks: u64,
+            execution: bool,
+        }
+        // One registry validation per distinct dataset.
+        let mut metas: Vec<Meta> = Vec::new();
+        for &(id, _, _) in &batch.gets {
+            if metas.iter().any(|m| m.id == id) {
+                continue;
+            }
+            let table = self.table_index(id)?;
+            let ds = store.dataset(id)?;
+            ds.ensure_submitted()?;
+            ds.ensure_current_epoch(cluster)?;
+            let (epoch, version) = ds.stamp();
+            metas.push(Meta {
+                id,
+                table,
+                epoch,
+                version,
+                bs: ds.config().block_size,
+                n_blocks: ds.distribution().n_blocks(),
+                execution: ds.is_execution_mode(),
+            });
+        }
+        let meta_of = |metas: &[Meta], id: DatasetId| -> usize {
+            metas.iter().position(|m| m.id == id).expect("meta collected above")
+        };
+
+        // Resolve every get against its cache; validate as we go.
+        let mut hit_flags: Vec<bool> = Vec::with_capacity(batch.gets.len());
+        let mut hits = 0u64;
+        let mut hit_bytes = 0u64;
+        for &(id, pe, key) in &batch.gets {
+            let m = &metas[meta_of(&metas, id)];
+            if key >= m.n_blocks {
+                return Err(Error::KeyOutOfRange { dataset: id, key, keys: m.n_blocks });
+            }
+            if !cluster.is_alive(pe) {
+                return Err(Error::DeadPe(pe));
+            }
+            let hit = self.tables[m.table].probe(pe, key, m.epoch, m.version);
+            if hit {
+                hits += 1;
+                hit_bytes += m.bs as u64;
+            }
+            hit_flags.push(hit);
+        }
+
+        // All hits together are one fused local copy; nothing of a hit
+        // ever reaches the network accumulator.
+        let hit_cost = if hits > 0 {
+            let cost = PhaseCost::local_copy(cluster.network(), hit_bytes);
+            cluster.advance(&cost);
+            cost
+        } else {
+            PhaseCost::default()
+        };
+
+        // Group misses per (dataset, requester); fold each group's sorted
+        // deduplicated keys into maximal ranges -> the fused load parts.
+        let mut miss: Vec<(usize, usize, u64)> = batch
+            .gets
+            .iter()
+            .zip(&hit_flags)
+            .filter(|&(_, &hit)| !hit)
+            .map(|(&(id, pe, key), _)| (meta_of(&metas, id), pe, key))
+            .collect();
+        miss.sort_unstable();
+        let mut parts: Vec<(DatasetId, Vec<LoadRequest>)> = Vec::new();
+        // (meta, pe) -> (part, shard), in the order requests were built.
+        let mut lookup: Vec<(usize, usize, usize, usize)> = Vec::new();
+        let mut keys_scratch: Vec<u64> = Vec::new();
+        let mut i = 0;
+        while i < miss.len() {
+            let (mi, pe) = (miss[i].0, miss[i].1);
+            keys_scratch.clear();
+            while i < miss.len() && miss[i].0 == mi && miss[i].1 == pe {
+                keys_scratch.push(miss[i].2);
+                i += 1;
+            }
+            let req = point_get_requests(pe, &mut keys_scratch);
+            let part = match parts.iter().position(|(id, _)| *id == metas[mi].id) {
+                Some(p) => p,
+                None => {
+                    parts.push((metas[mi].id, Vec::new()));
+                    parts.len() - 1
+                }
+            };
+            lookup.push((mi, pe, part, parts[part].1.len()));
+            parts[part].1.push(req);
+        }
+        let pooled =
+            if parts.is_empty() { None } else { Some(store.load_many_pooled(cluster, &parts)?) };
+
+        // Lay out the output arena in input order and fill it: hits from
+        // the cache slots, misses from the pooled arena.
+        let mut gets_out: Vec<KvBatchGet> = Vec::with_capacity(batch.gets.len());
+        let mut total = 0usize;
+        for (&(id, pe, key), &hit) in batch.gets.iter().zip(&hit_flags) {
+            let m = &metas[meta_of(&metas, id)];
+            let span = m.execution.then(|| {
+                let s = total..total + m.bs;
+                total += m.bs;
+                s
+            });
+            gets_out.push(KvBatchGet { dataset: id, pe, key, hit, span });
+        }
+        let mut values = vec![0u8; total];
+        for g in &gets_out {
+            let Some(span) = g.span.clone() else { continue };
+            let m = &metas[meta_of(&metas, g.dataset)];
+            if g.hit {
+                let tbl = &self.tables[m.table];
+                let s = tbl.slot(g.key);
+                let c = tbl.caches[g.pe].as_ref().expect("probe hit implies cache");
+                values[span].copy_from_slice(&c.values[s * m.bs..(s + 1) * m.bs]);
+            } else {
+                let (_, _, part, shard) = *lookup
+                    .iter()
+                    .find(|&&(mi, pe, _, _)| metas[mi].id == g.dataset && pe == g.pe)
+                    .expect("every miss has a request");
+                let bytes = pooled
+                    .as_ref()
+                    .expect("misses imply a pooled load")
+                    .shard_bytes(part, shard)
+                    .expect("execution dataset has a span");
+                let off = offset_in(&parts[part].1[shard].ranges, g.key) * m.bs;
+                values[span].copy_from_slice(&bytes[off..off + m.bs]);
+            }
+        }
+
+        // Fill caches with the missed values at the current stamps, and
+        // settle per-table stats.
+        for g in &gets_out {
+            let m = &metas[meta_of(&metas, g.dataset)];
+            let tbl = &mut self.tables[m.table];
+            if g.hit {
+                tbl.stats.hits += 1;
+            } else {
+                tbl.stats.misses += 1;
+                let bytes = g.span.clone().map(|s| &values[s]);
+                tbl.fill(g.pe, g.key, m.epoch, m.version, bytes, m.bs);
+            }
+        }
+
+        let (request_cost, data_cost) = match &pooled {
+            Some(p) => (p.request_cost, p.data_cost),
+            None => (PhaseCost::default(), PhaseCost::default()),
+        };
+        let misses = batch.gets.len() as u64 - hits;
+        Ok(KvBatchOutput {
+            values,
+            gets: gets_out,
+            hits,
+            misses,
+            request_cost,
+            data_cost,
+            cost: hit_cost.then(request_cost.then(data_cost)),
+        })
+    }
+
+    /// Point writes: apply `writes` (`(key, value)` pairs, each value
+    /// exactly `block_size` bytes) to the authoritative image and commit
+    /// them as ONE [`ResubmitMode::Dirty`] resubmit — adjacent keys
+    /// coalesce into ranges, replication double-buffers against the
+    /// staging store, and the version bump atomically strands every
+    /// cached entry of the previous version. If the resubmit aborts
+    /// (failure mid-replication), the image is rolled back so it keeps
+    /// mirroring the committed version; re-run recovery and retry.
+    /// Requires [`KvStore::register_with_image`].
+    pub fn put_many(
+        &mut self,
+        store: &mut ReStore,
+        cluster: &mut Cluster,
+        id: DatasetId,
+        writes: &[(u64, &[u8])],
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        let t = self.table_index(id)?;
+        let (bs, n_blocks) = {
+            let ds = store.dataset(id)?;
+            (ds.config().block_size, ds.distribution().n_blocks())
+        };
+        for &(key, bytes) in writes {
+            if key >= n_blocks {
+                return Err(Error::KeyOutOfRange { dataset: id, key, keys: n_blocks });
+            }
+            if bytes.len() != bs {
+                return Err(Error::Config(format!(
+                    "kv: put value for key {key} has {} bytes, block size is {bs}",
+                    bytes.len()
+                )));
+            }
+        }
+        let tbl = &mut self.tables[t];
+        let Some(image) = tbl.image.as_mut() else {
+            return Err(Error::Config(format!(
+                "kv: dataset {id} has no image; put_many needs register_with_image \
+                 (cost-model tables write via put_virtual)"
+            )));
+        };
+        // Apply to the image, remembering the previous bytes: an aborted
+        // resubmit rolls back so the image never runs ahead of the
+        // committed version.
+        let mut undo: Vec<(u64, Vec<u8>)> = Vec::with_capacity(writes.len());
+        let mut dirty_keys: Vec<u64> = Vec::with_capacity(writes.len());
+        for &(key, bytes) in writes {
+            let off = key as usize * bs;
+            undo.push((key, image[off..off + bs].to_vec()));
+            image[off..off + bs].copy_from_slice(bytes);
+            dirty_keys.push(key);
+        }
+        let dirty = point_get_ranges(&mut dirty_keys);
+        match store.dataset_mut(id)?.resubmit_flat(
+            cluster,
+            image,
+            ResubmitMode::Dirty(&dirty),
+            overlap,
+        ) {
+            Ok(rep) => {
+                tbl.stats.puts += writes.len() as u64;
+                Ok(rep)
+            }
+            Err(e) => {
+                for (key, old) in undo.iter().rev() {
+                    let off = *key as usize * bs;
+                    image[off..off + bs].copy_from_slice(old);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Cost-model point writes: commit `keys` as one dirty resubmit (no
+    /// bytes move; schedules and costs are identical to the
+    /// execution-mode write of the same key set). Tables registered with
+    /// an image must use [`KvStore::put_many`] — a virtual write would
+    /// silently desynchronize it.
+    pub fn put_virtual(
+        &mut self,
+        store: &mut ReStore,
+        cluster: &mut Cluster,
+        id: DatasetId,
+        keys: &[u64],
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        let t = self.table_index(id)?;
+        if self.tables[t].image.is_some() {
+            return Err(Error::Config(format!(
+                "kv: dataset {id} has an authoritative image; use put_many"
+            )));
+        }
+        let n_blocks = store.dataset(id)?.distribution().n_blocks();
+        for &key in keys {
+            if key >= n_blocks {
+                return Err(Error::KeyOutOfRange { dataset: id, key, keys: n_blocks });
+            }
+        }
+        let mut sorted = keys.to_vec();
+        let dirty = point_get_ranges(&mut sorted);
+        let rep = store.dataset_mut(id)?.resubmit_virtual(cluster, &dirty, overlap)?;
+        self.tables[t].stats.puts += keys.len() as u64;
+        Ok(rep)
+    }
+
+    /// Range read: requester `pe` gets keys `[start, end)` of `id` as one
+    /// `RangeSet` load through the router (one request per holder pair,
+    /// not one per key). Scans bypass the point cache — a range read
+    /// would evict `end - start` hot point entries for keys that are
+    /// rarely re-read individually.
+    pub fn scan(
+        &mut self,
+        store: &mut ReStore,
+        cluster: &mut Cluster,
+        id: DatasetId,
+        pe: usize,
+        start: u64,
+        end: u64,
+    ) -> Result<KvScan> {
+        let t = self.table_index(id)?;
+        let n_blocks = store.dataset(id)?.distribution().n_blocks();
+        if end > n_blocks {
+            return Err(Error::KeyOutOfRange { dataset: id, key: end - 1, keys: n_blocks });
+        }
+        if start >= end {
+            return Err(Error::Config(format!("kv: empty scan [{start}, {end})")));
+        }
+        if !cluster.is_alive(pe) {
+            return Err(Error::DeadPe(pe));
+        }
+        let reqs = [LoadRequest { pe, ranges: RangeSet::new(vec![BlockRange::new(start, end)]) }];
+        let out = store.dataset_mut(id)?.load(cluster, &reqs)?;
+        self.tables[t].stats.scans += 1;
+        let shard = out.shards.into_iter().next().expect("one request, one shard");
+        Ok(KvScan { bytes: shard.bytes, cost: out.cost })
+    }
+
+    /// Audit `id`'s cache against the store: classify every entry as live
+    /// (stamps current) or stale (stranded by a bump), and byte-compare
+    /// every live entry against a live holder's committed bytes
+    /// (execution datasets). Walks the cache — test/debug surface, not a
+    /// serving path. `mismatched_entries != 0` is a coherence bug; stale
+    /// entries are normal (they are counted, never served).
+    pub fn validate_cache(&self, store: &ReStore, id: DatasetId) -> Result<KvCacheAudit> {
+        let t = self.table_index(id)?;
+        let ds = store.dataset(id)?;
+        let (epoch, version) = ds.stamp();
+        let dist = ds.distribution();
+        let bs = ds.config().block_size;
+        let tbl = &self.tables[t];
+        let mut audit = KvCacheAudit::default();
+        for cache in tbl.caches.iter().flatten() {
+            for s in 0..tbl.capacity {
+                let key = cache.keys[s];
+                if key == EMPTY_KEY {
+                    continue;
+                }
+                let live = cache.epochs[s] == epoch
+                    && cache.versions[s] == version
+                    && cache.gens[s] == tbl.gen;
+                if !live {
+                    audit.stale_entries += 1;
+                    continue;
+                }
+                audit.live_entries += 1;
+                if cache.values.is_empty() {
+                    continue; // cost-model: the stamp is the whole entry
+                }
+                let cached = &cache.values[s * bs..(s + 1) * bs];
+                let y = dist.permute_block(key);
+                let stored = ds
+                    .holder_index()
+                    .holders_of(dist.slice_of(y))
+                    .iter()
+                    .find_map(|&h| ds.stores()[h as usize].read(y, 1));
+                if stored != Some(cached) {
+                    audit.mismatched_entries += 1;
+                }
+            }
+        }
+        Ok(audit)
+    }
+}
+
+/// Offset (in blocks) of `key` within a request's range set — where the
+/// fused load placed its bytes inside the request's pooled span.
+fn offset_in(ranges: &RangeSet, key: u64) -> usize {
+    let mut off = 0u64;
+    for r in ranges.ranges() {
+        if key < r.end {
+            debug_assert!(key >= r.start, "key below its own request's ranges");
+            return (off + (key - r.start)) as usize;
+        }
+        off += r.len();
+    }
+    unreachable!("key {key} not in its own request's ranges");
+}
+
+/// Zipf(θ) sampler over `[0, n)` — the classic skewed KV workload (key 0
+/// hottest). Built once (O(n) table), sampled by binary search on the
+/// cumulative weights; the Feistel permutation then scatters hot keys
+/// across holders, so popularity skew does not become placement skew.
+pub struct Zipf {
+    cum: Vec<f64>,
+    total: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, theta: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty key space");
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(theta);
+            cum.push(total);
+        }
+        Zipf { cum, total }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cum.len()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.gen_f64() * self.total;
+        self.cum.partition_point(|&c| c <= u).min(self.cum.len() - 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RestoreConfig;
+    use crate::simnet::ulfm;
+
+    const P: usize = 8;
+    const BS: usize = 16;
+    const BPP: usize = 8;
+    const N: u64 = (P * BPP) as u64;
+
+    fn flat_image(salt: u8) -> Vec<u8> {
+        (0..N as usize * BS).map(|i| (i as u8).wrapping_mul(31).wrapping_add(salt)).collect()
+    }
+
+    fn shards_of(store: &ReStore, flat: &[u8]) -> Vec<Vec<u8>> {
+        let dist = store.distribution();
+        (0..dist.world())
+            .map(|j| {
+                let r = dist.shard_of(j);
+                flat[r.start as usize * BS..r.end as usize * BS].to_vec()
+            })
+            .collect()
+    }
+
+    fn execution_store() -> (Cluster, ReStore, Vec<u8>) {
+        let cfg = RestoreConfig::builder(P, BS, BPP).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(P, 4);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        let image = flat_image(7);
+        store.submit(&mut cluster, &shards_of(&store, &image)).unwrap();
+        (cluster, store, image)
+    }
+
+    fn cost_model_store(p: usize) -> (Cluster, ReStore) {
+        let cfg = RestoreConfig::builder(p, BS, BPP).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        store.submit_virtual(&mut cluster).unwrap();
+        (cluster, store)
+    }
+
+    #[test]
+    fn get_miss_then_hit_serves_identical_bytes_locally() {
+        let (mut cluster, mut store, image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap();
+        assert!(!g.hit);
+        assert_eq!(g.bytes.unwrap().as_slice(), &image[11 * BS..12 * BS]);
+
+        let clock = cluster.now();
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap();
+        assert!(g.hit);
+        assert_eq!(g.bytes.unwrap().as_slice(), &image[11 * BS..12 * BS]);
+        // hit charged a local memcpy only: no messages, tiny time
+        assert_eq!(g.cost.total_msgs, 0);
+        assert!(cluster.now() > clock);
+
+        // a different requester has its own cache: miss again
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 3, 11).unwrap();
+        assert!(!g.hit);
+
+        let s = kv.stats(DatasetId::FIRST).unwrap();
+        assert_eq!((s.hits, s.misses, s.stale_serves), (1, 2, 0));
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_and_stale_epoch_never_serves() {
+        let (mut cluster, mut store, image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+        kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 5).unwrap();
+        assert!(kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 5).unwrap().hit);
+
+        cluster.kill(&[7]);
+        let (_, map, _) = ulfm::recover(&mut cluster);
+        // Before recovery adopts the epoch, a get errors out rather than
+        // serving the (potentially stale) cached value.
+        assert!(matches!(
+            kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 5),
+            Err(Error::StaleEpoch { .. })
+        ));
+        store.rebalance_or_acknowledge_all(&mut cluster, &map).unwrap();
+
+        let audit = kv.validate_cache(&store, DatasetId::FIRST).unwrap();
+        assert_eq!(audit.live_entries, 0);
+        assert!(audit.stale_entries > 0);
+
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 5).unwrap();
+        assert!(!g.hit, "epoch bump must strand the cached entry");
+        assert_eq!(g.bytes.unwrap().as_slice(), &image[5 * BS..6 * BS]);
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().stale_serves, 0);
+    }
+
+    #[test]
+    fn put_many_bumps_version_invalidates_and_serves_new_bytes() {
+        let (mut cluster, mut store, image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register_with_image(&store, DatasetId::FIRST, 32, image.clone()).unwrap();
+        kv.get(&mut store, &mut cluster, DatasetId::FIRST, 1, 20).unwrap();
+        assert!(kv.get(&mut store, &mut cluster, DatasetId::FIRST, 1, 20).unwrap().hit);
+
+        let v = vec![0xAB; BS];
+        let before = store.version();
+        kv.put_many(
+            &mut store,
+            &mut cluster,
+            DatasetId::FIRST,
+            &[(20, v.as_slice()), (21, v.as_slice())],
+            Overlap::Blocking,
+        )
+        .unwrap();
+        assert_eq!(store.version(), before + 1);
+
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 1, 20).unwrap();
+        assert!(!g.hit, "version bump must strand the cached entry");
+        assert_eq!(g.bytes.unwrap().as_slice(), &v[..]);
+        // untouched keys still serve the old content
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 1, 19).unwrap();
+        assert_eq!(g.bytes.unwrap().as_slice(), &image[19 * BS..20 * BS]);
+        // the image tracked the committed write
+        assert_eq!(&kv.image(DatasetId::FIRST).unwrap().unwrap()[20 * BS..21 * BS], &v[..]);
+    }
+
+    #[test]
+    fn direct_resubmit_strands_cache_without_a_stale_serve() {
+        let (mut cluster, mut store, mut image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+        kv.get(&mut store, &mut cluster, DatasetId::FIRST, 4, 30).unwrap();
+
+        // Mutate the dataset BEHIND the kv layer (a direct resubmit).
+        for b in &mut image[30 * BS..31 * BS] {
+            *b = b.wrapping_add(1);
+        }
+        let shards = shards_of(&store, &image);
+        store
+            .resubmit(
+                &mut cluster,
+                &shards,
+                ResubmitMode::Dirty(&RangeSet::new(vec![BlockRange::new(30, 31)])),
+                Overlap::Blocking,
+            )
+            .unwrap();
+
+        let audit = kv.validate_cache(&store, DatasetId::FIRST).unwrap();
+        assert_eq!((audit.live_entries, audit.stale_entries), (0, 1));
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 4, 30).unwrap();
+        assert!(!g.hit);
+        assert_eq!(g.bytes.unwrap().as_slice(), &image[30 * BS..31 * BS]);
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().stale_serves, 0);
+    }
+
+    #[test]
+    fn invalidate_strands_entries_without_epoch_or_version_change() {
+        let (mut cluster, mut store, _) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+        kv.get(&mut store, &mut cluster, DatasetId::FIRST, 0, 1).unwrap();
+        assert!(kv.get(&mut store, &mut cluster, DatasetId::FIRST, 0, 1).unwrap().hit);
+        kv.invalidate(DatasetId::FIRST).unwrap();
+        assert!(!kv.get(&mut store, &mut cluster, DatasetId::FIRST, 0, 1).unwrap().hit);
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().invalidations, 1);
+    }
+
+    #[test]
+    fn batch_mixes_hits_and_misses_across_datasets_byte_exactly() {
+        let (mut cluster, mut store, image) = execution_store();
+        let cfg2 = RestoreConfig::builder(P, BS, BPP).replicas(4).build().unwrap();
+        let id2 = store.create_dataset(cfg2, &cluster).unwrap();
+        let image2 = flat_image(99);
+        let shards2 = shards_of(&store, &image2);
+        store.dataset_mut(id2).unwrap().submit(&mut cluster, &shards2).unwrap();
+
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+        kv.register(&store, id2, 32).unwrap();
+        // warm two keys
+        kv.get(&mut store, &mut cluster, DatasetId::FIRST, 1, 3).unwrap();
+        kv.get(&mut store, &mut cluster, id2, 2, 40).unwrap();
+
+        let mut batch = KvBatch::new();
+        batch
+            .get(DatasetId::FIRST, 1, 3) // hit
+            .get(DatasetId::FIRST, 1, 9) // miss
+            .get(id2, 2, 40) // hit
+            .get(id2, 3, 9) // miss (other dataset, same key id)
+            .get(id2, 3, 9); // duplicate: one fetch, two outputs
+        let out = kv.execute(&mut store, &mut cluster, &batch).unwrap();
+        assert_eq!((out.hits, out.misses), (2, 3));
+        assert_eq!(out.value(0).unwrap(), &image[3 * BS..4 * BS]);
+        assert_eq!(out.value(1).unwrap(), &image[9 * BS..10 * BS]);
+        assert_eq!(out.value(2).unwrap(), &image2[40 * BS..41 * BS]);
+        assert_eq!(out.value(3).unwrap(), &image2[9 * BS..10 * BS]);
+        assert_eq!(out.value(4).unwrap(), &image2[9 * BS..10 * BS]);
+        // exactly one request + one data phase for all misses together
+        assert!(out.request_cost.sim_time_s > 0.0);
+        assert!(out.data_cost.sim_time_s > 0.0);
+
+        // everything the batch missed is now cached at current stamps
+        let audit = kv.validate_cache(&store, DatasetId::FIRST).unwrap();
+        assert_eq!(audit.mismatched_entries, 0);
+        let mut batch2 = KvBatch::new();
+        batch2.get(DatasetId::FIRST, 1, 9).get(id2, 3, 9);
+        let out2 = kv.execute(&mut store, &mut cluster, &batch2).unwrap();
+        assert_eq!((out2.hits, out2.misses), (2, 0));
+        assert_eq!(out2.cost.total_msgs, 0);
+    }
+
+    #[test]
+    fn cost_model_gets_cache_locality_and_put_virtual_invalidates() {
+        let (mut cluster, mut store) = cost_model_store(P);
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+
+        let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap();
+        assert!(!g.hit);
+        assert!(g.bytes.is_none());
+        assert!(kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap().hit);
+
+        kv.put_virtual(&mut store, &mut cluster, DatasetId::FIRST, &[11, 3], Overlap::Blocking)
+            .unwrap();
+        assert!(!kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap().hit);
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().puts, 2);
+    }
+
+    #[test]
+    fn scan_matches_the_image_and_bypasses_the_cache() {
+        let (mut cluster, mut store, image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 32).unwrap();
+        let s = kv.scan(&mut store, &mut cluster, DatasetId::FIRST, 5, 10, 20).unwrap();
+        assert_eq!(s.bytes.unwrap(), &image[10 * BS..20 * BS]);
+        // scanned keys were not cached: a point get still misses
+        assert!(!kv.get(&mut store, &mut cluster, DatasetId::FIRST, 5, 12).unwrap().hit);
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().scans, 1);
+    }
+
+    #[test]
+    fn key_bounds_and_registration_errors() {
+        let (mut cluster, mut store, _) = execution_store();
+        let mut kv = KvStore::new();
+        assert!(kv.get(&mut store, &mut cluster, DatasetId::FIRST, 0, 0).is_err());
+        kv.register(&store, DatasetId::FIRST, 8).unwrap();
+        assert!(kv.register(&store, DatasetId::FIRST, 8).is_err());
+        assert!(matches!(
+            kv.get(&mut store, &mut cluster, DatasetId::FIRST, 0, N),
+            Err(Error::KeyOutOfRange { key, keys, .. }) if key == N && keys == N
+        ));
+        let one_write: [(u64, &[u8]); 1] = [(0, &[0u8; BS])];
+        assert!(kv
+            .put_many(&mut store, &mut cluster, DatasetId::FIRST, &one_write, Overlap::Blocking)
+            .is_err());
+        assert!(kv.scan(&mut store, &mut cluster, DatasetId::FIRST, 0, 5, 5).is_err());
+    }
+
+    #[test]
+    fn capacity_zero_disables_caching_but_serves_correctly() {
+        let (mut cluster, mut store, image) = execution_store();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 0).unwrap();
+        for _ in 0..2 {
+            let g = kv.get(&mut store, &mut cluster, DatasetId::FIRST, 2, 11).unwrap();
+            assert!(!g.hit);
+            assert_eq!(g.bytes.unwrap().as_slice(), &image[11 * BS..12 * BS]);
+        }
+        assert_eq!(kv.stats(DatasetId::FIRST).unwrap().hits, 0);
+    }
+
+    #[test]
+    fn offset_in_walks_range_sets() {
+        let rs = RangeSet::new(vec![
+            BlockRange::new(2, 4),
+            BlockRange::new(7, 8),
+            BlockRange::new(10, 13),
+        ]);
+        assert_eq!(offset_in(&rs, 2), 0);
+        assert_eq!(offset_in(&rs, 3), 1);
+        assert_eq!(offset_in(&rs, 7), 2);
+        assert_eq!(offset_in(&rs, 10), 3);
+        assert_eq!(offset_in(&rs, 12), 5);
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let zipf = Zipf::new(100, 0.99);
+        let mut rng = Rng::seed_from_u64(42);
+        let mut counts = [0u32; 100];
+        for _ in 0..10_000 {
+            counts[zipf.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > 10 * counts[90].max(1) / 2, "head must dominate the tail");
+    }
+}

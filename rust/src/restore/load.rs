@@ -1271,6 +1271,32 @@ pub fn load_all_requests(store: &ReStore, cluster: &Cluster) -> Vec<LoadRequest>
         .collect()
 }
 
+/// Fold a set of point keys (block ids) into the minimal [`RangeSet`]:
+/// sort, dedup, and coalesce consecutive keys into maximal runs. Sorts
+/// `keys` in place so batch planning can reuse one scratch buffer without
+/// allocating per group (the KV batched-get path, [`crate::restore::kv`]).
+pub fn point_get_ranges(keys: &mut Vec<u64>) -> RangeSet {
+    keys.sort_unstable();
+    keys.dedup();
+    let mut ranges: Vec<BlockRange> = Vec::new();
+    for &k in keys.iter() {
+        match ranges.last_mut() {
+            Some(r) if r.end == k => r.end = k + 1,
+            _ => ranges.push(BlockRange::new(k, k + 1)),
+        }
+    }
+    RangeSet::new(ranges)
+}
+
+/// One requester's point gets as a single [`LoadRequest`]: `pe` wants
+/// each block id in `keys` (sorted in place, deduplicated, adjacent keys
+/// coalesced). Feeding these per-requester requests into
+/// [`ReStore::load_many_pooled`] fuses a whole batch of point gets into
+/// one request + one data sparse all-to-all.
+pub fn point_get_requests(pe: usize, keys: &mut Vec<u64>) -> LoadRequest {
+    LoadRequest { pe, ranges: point_get_ranges(keys) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -28,6 +28,11 @@
 //!   walks a persistent cursor over the resident replicas, quarantines
 //!   copies that fail verification, and heals them through the §IV-E
 //!   repair machinery.
+//! * [`kv`] — the KV serving front-end over the registry: point gets
+//!   through the load router, [`KvBatch`] fusing many gets (across
+//!   datasets) into one request + one data sparse all-to-all, a bounded
+//!   per-PE read cache with O(1) stamp invalidation, and point writes /
+//!   range scans riding the resubmit and load paths.
 //! * [`rebalance`] — §IV-B layout migration: rewrite the layout over the
 //!   `p'`-member communicator after any `ulfm` reshape (shrink,
 //!   substitute, or grow) with a minimal migration schedule, under a
@@ -48,6 +53,7 @@ pub mod distribution;
 pub mod hashing;
 pub mod idl;
 pub mod integrity;
+pub mod kv;
 pub mod load;
 pub mod permutation;
 pub mod policy;
@@ -72,6 +78,10 @@ use repair::{charge_repair_plans, RepairPlan, RepairReport, RepairScheme};
 use store::{HolderIndex, PeStore};
 
 pub use integrity::{ScrubReport, SCRUB_REPAIR_SCHEME};
+pub use kv::{
+    KvBatch, KvBatchGet, KvBatchOutput, KvBytes, KvCacheAudit, KvGet, KvScan, KvStats, KvStore,
+    Zipf,
+};
 pub use policy::{
     RecoveryAction, RecoveryOutcome, RecoveryPolicy, RecoveryStep, MAX_RECOVERY_ATTEMPTS,
 };

@@ -292,6 +292,16 @@ impl Dataset {
         self.version
     }
 
+    /// The `(epoch, version)` pair as one stamp. Anything that changes
+    /// what a load would return bumps one of the two — rebalance,
+    /// substitution, and re-grow bump the epoch; a committed resubmit
+    /// bumps the version — so a cached read tagged with this stamp is
+    /// provably current while the stamp still matches (the KV read
+    /// cache's O(1) invalidation contract, [`crate::restore::kv`]).
+    pub fn stamp(&self) -> (u64, u64) {
+        (self.epoch, self.version)
+    }
+
     /// Is a double-buffered resubmit staged but not yet committed? (Only
     /// observable from a fault-injection callback — the public resubmit
     /// entry points either commit or abort before returning.)

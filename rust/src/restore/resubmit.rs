@@ -168,6 +168,30 @@ impl Coalesce {
     }
 }
 
+/// Where a resubmit's new bytes come from. The write paths differ only in
+/// how a dirty piece's payload is addressed: per-rank shards index within
+/// the owner's slice, a flat image indexes by original block id, and the
+/// cost-model variant materializes nothing.
+#[derive(Clone, Copy)]
+enum NewBytes<'a> {
+    /// `shards[j]` is distribution rank `j`'s serialized shard
+    /// (`slice_len(j) · block_size` bytes) — the decomposed form apps
+    /// that keep per-rank state use ([`Dataset::resubmit`]).
+    PerRank(&'a [Vec<u8>]),
+    /// One flat buffer of the whole dataset in original block order
+    /// (`n_blocks · block_size` bytes) — the form a KV image or a
+    /// reshaped checkpoint naturally holds ([`Dataset::resubmit_flat`]).
+    Flat(&'a [u8]),
+    /// Cost-model: schedules and costs only ([`Dataset::resubmit_virtual`]).
+    Virtual,
+}
+
+impl NewBytes<'_> {
+    fn is_real(&self) -> bool {
+        !matches!(self, NewBytes::Virtual)
+    }
+}
+
 impl Dataset {
     /// Publish a new version of this dataset's data (same block count and
     /// layout): re-replicate the blocks `mode` marks dirty into a staging
@@ -196,7 +220,34 @@ impl Dataset {
         overlap: Overlap,
         inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
     ) -> Result<ResubmitReport> {
-        self.resubmit_inner(cluster, Some(shards), mode, overlap, inject)
+        self.resubmit_inner(cluster, NewBytes::PerRank(shards), mode, overlap, inject)
+    }
+
+    /// [`Dataset::resubmit`] taking the new content as ONE flat buffer in
+    /// original block order (`n_blocks · block_size` bytes) instead of
+    /// per-rank shards — the natural form for callers that keep a single
+    /// authoritative image (the KV write path, [`crate::restore::kv`]).
+    /// Identical semantics, staging, costs, and abort behavior.
+    pub fn resubmit_flat(
+        &mut self,
+        cluster: &mut Cluster,
+        flat: &[u8],
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+    ) -> Result<ResubmitReport> {
+        self.resubmit_flat_with_faults(cluster, flat, mode, overlap, &mut |_, _| {})
+    }
+
+    /// [`Dataset::resubmit_flat`] with the boundary fault callback.
+    pub fn resubmit_flat_with_faults(
+        &mut self,
+        cluster: &mut Cluster,
+        flat: &[u8],
+        mode: ResubmitMode<'_>,
+        overlap: Overlap,
+        inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
+    ) -> Result<ResubmitReport> {
+        self.resubmit_inner(cluster, NewBytes::Flat(flat), mode, overlap, inject)
     }
 
     /// Cost-model resubmit: schedules and costs are identical to the
@@ -209,20 +260,21 @@ impl Dataset {
         dirty: &RangeSet,
         overlap: Overlap,
     ) -> Result<ResubmitReport> {
-        self.resubmit_inner(cluster, None, ResubmitMode::Dirty(dirty), overlap, &mut |_, _| {})
+        let mode = ResubmitMode::Dirty(dirty);
+        self.resubmit_inner(cluster, NewBytes::Virtual, mode, overlap, &mut |_, _| {})
     }
 
     fn resubmit_inner(
         &mut self,
         cluster: &mut Cluster,
-        shards: Option<&[Vec<u8>]>,
+        bytes: NewBytes<'_>,
         mode: ResubmitMode<'_>,
         overlap: Overlap,
         inject: &mut dyn FnMut(ResubmitStep, &mut Cluster),
     ) -> Result<ResubmitReport> {
         self.ensure_submitted()?;
         self.ensure_current_epoch(cluster)?;
-        if shards.is_some() != self.execution {
+        if bytes.is_real() != self.execution {
             return Err(Error::Config(if self.execution {
                 "resubmit_virtual on an execution-mode dataset: use resubmit (real shards)".into()
             } else {
@@ -235,23 +287,36 @@ impl Dataset {
             }
         }
         let bs = self.cfg.block_size as u64;
-        if let Some(shards) = shards {
-            if shards.len() != self.dist.world() {
-                return Err(Error::Config(format!(
-                    "resubmit: got {} shards for distribution world {}",
-                    shards.len(),
-                    self.dist.world()
-                )));
-            }
-            for (j, s) in shards.iter().enumerate() {
-                let want = (self.dist.slice_len(j) * bs) as usize;
-                if s.len() != want {
+        match bytes {
+            NewBytes::PerRank(shards) => {
+                if shards.len() != self.dist.world() {
                     return Err(Error::Config(format!(
-                        "resubmit: rank {j} shard has {} bytes, expected {want}",
-                        s.len()
+                        "resubmit: got {} shards for distribution world {}",
+                        shards.len(),
+                        self.dist.world()
+                    )));
+                }
+                for (j, s) in shards.iter().enumerate() {
+                    let want = (self.dist.slice_len(j) * bs) as usize;
+                    if s.len() != want {
+                        return Err(Error::Config(format!(
+                            "resubmit: rank {j} shard has {} bytes, expected {want}",
+                            s.len()
+                        )));
+                    }
+                }
+            }
+            NewBytes::Flat(flat) => {
+                let want = (self.dist.n_blocks() * bs) as usize;
+                if flat.len() != want {
+                    return Err(Error::Config(format!(
+                        "resubmit_flat: image has {} bytes, expected {want} \
+                         (n_blocks · block_size)",
+                        flat.len()
                     )));
                 }
             }
+            NewBytes::Virtual => {}
         }
         self.check_resubmit_participants(cluster)?;
 
@@ -277,14 +342,17 @@ impl Dataset {
                 set
             }
             ResubmitMode::DeltaByChecksum => {
-                let Some(shards) = shards else {
-                    return Err(Error::Config(
-                        "checksum-delta resubmit needs real shards; cost-model datasets \
-                         pass an explicit dirty set"
-                            .into(),
-                    ));
+                owned = match bytes {
+                    NewBytes::PerRank(shards) => self.delta_by_checksum(shards),
+                    NewBytes::Flat(flat) => self.delta_by_checksum_flat(flat),
+                    NewBytes::Virtual => {
+                        return Err(Error::Config(
+                            "checksum-delta resubmit needs real shards; cost-model datasets \
+                             pass an explicit dirty set"
+                                .into(),
+                        ));
+                    }
                 };
-                owned = self.delta_by_checksum(shards);
                 &owned
             }
         };
@@ -342,15 +410,21 @@ impl Dataset {
                         let d = h as usize;
                         co.add(d, piece_bytes);
                         replicated += piece_bytes;
-                        let buf = match shards {
-                            Some(shards) => {
+                        let buf = match bytes {
+                            NewBytes::PerRank(shards) => {
                                 let off =
                                     ((pc.orig_start - dist.slice_start(j)) * bs) as usize;
                                 SliceBuf::Real(
                                     shards[j][off..off + piece_bytes as usize].to_vec(),
                                 )
                             }
-                            None => SliceBuf::Virtual(piece_bytes),
+                            NewBytes::Flat(flat) => {
+                                let off = (pc.orig_start * bs) as usize;
+                                SliceBuf::Real(
+                                    flat[off..off + piece_bytes as usize].to_vec(),
+                                )
+                            }
+                            NewBytes::Virtual => SliceBuf::Virtual(piece_bytes),
                         };
                         staged[d].insert(prange, buf);
                     }
@@ -634,6 +708,31 @@ impl Dataset {
         RangeSet::new(runs)
     }
 
+    /// [`Dataset::delta_by_checksum`] over a flat image in original block
+    /// order — the [`Dataset::resubmit_flat`] form of the same diff.
+    fn delta_by_checksum_flat(&self, flat: &[u8]) -> RangeSet {
+        let bs = self.cfg.block_size as u64;
+        let mut runs: Vec<BlockRange> = Vec::new();
+        for x in 0..self.dist.n_blocks() {
+            let off = (x * bs) as usize;
+            let blk = &flat[off..off + bs as usize];
+            let y = self.dist.permute_block(x);
+            let slot = self.dist.slice_of(y);
+            let committed = self
+                .holder_index
+                .holders_of(slot)
+                .iter()
+                .find_map(|&h| self.stores[h as usize].block_sum(y));
+            if committed != Some(checksum_of(y, blk)) {
+                match runs.last_mut() {
+                    Some(last) if last.end == x => last.end = x + 1,
+                    _ => runs.push(BlockRange::new(x, x + 1)),
+                }
+            }
+        }
+        RangeSet::new(runs)
+    }
+
     /// Are all resubmit participants alive — every source rank
     /// (`pe_map`) and every current holder of every slot? `DeadPe`
     /// otherwise.
@@ -793,6 +892,60 @@ mod tests {
         // all three commit identical bytes
         assert_eq!(d_bytes, e_bytes);
         assert_eq!(d_bytes, f_bytes);
+    }
+
+    #[test]
+    fn flat_resubmit_matches_per_rank_exactly() {
+        let cfg = cfg(8, 64, 4, Some(16));
+        let dirty = RangeSet::new(vec![BlockRange::new(3, 9), BlockRange::new(100, 130)]);
+        let shards = make_shards(8, 64 * 8);
+        let mut new = shards.clone();
+        for r in dirty.ranges() {
+            for x in r.start..r.end {
+                let pe = (x / 64) as usize;
+                let off = ((x % 64) * 8) as usize;
+                for b in &mut new[pe][off..off + 8] {
+                    *b = b.wrapping_mul(5).wrapping_add(3);
+                }
+            }
+        }
+        let flat: Vec<u8> = new.concat();
+
+        let run = |use_flat: bool, mode: ResubmitMode<'_>| {
+            let mut cluster = Cluster::new_execution(8, 4);
+            let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+            rs.submit(&mut cluster, &shards).unwrap();
+            let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+            let rep = if use_flat {
+                ds.resubmit_flat(&mut cluster, &flat, mode, Overlap::Blocking).unwrap()
+            } else {
+                ds.resubmit(&mut cluster, &new, mode, Overlap::Blocking).unwrap()
+            };
+            (rep, cluster.now(), global_bytes(&rs))
+        };
+        // the flat entry point is the SAME write, addressed differently:
+        // identical dirty sets, costs, clock, and committed bytes — for
+        // both the explicit-dirty and the checksum-delta modes
+        for mode in [ResubmitMode::Dirty(&dirty), ResubmitMode::DeltaByChecksum] {
+            let (f_rep, f_now, f_bytes) = run(true, mode);
+            let (p_rep, p_now, p_bytes) = run(false, mode);
+            assert_eq!(f_rep.dirty_blocks, dirty.total_blocks());
+            assert_eq!(f_rep.dirty_blocks, p_rep.dirty_blocks);
+            assert_eq!(f_rep.replicated_bytes, p_rep.replicated_bytes);
+            assert_eq!(f_rep.cost, p_rep.cost);
+            assert_eq!(f_now, p_now);
+            assert_eq!(f_bytes, p_bytes);
+            assert_eq!(f_bytes, flat);
+        }
+
+        // length validation: a short image is rejected before any staging
+        let mut cluster = Cluster::new_execution(8, 4);
+        let mut rs = ReStore::new(cfg.clone(), &cluster).unwrap();
+        rs.submit(&mut cluster, &shards).unwrap();
+        let ds = rs.dataset_mut(crate::restore::DatasetId::FIRST).unwrap();
+        let short = &flat[..flat.len() - 8];
+        let r = ds.resubmit_flat(&mut cluster, short, ResubmitMode::Full, Overlap::Blocking);
+        assert!(r.is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use restore::config::{RestoreConfig, ServerSelection};
 use restore::restore::block::{BlockRange, RangeSet};
 use restore::restore::load::{load_all_requests, scatter_requests};
-use restore::restore::{LoadRequest, Overlap, ResubmitMode};
+use restore::restore::{DatasetId, KvBatch, KvStore, LoadRequest, Overlap, ResubmitMode};
 use restore::restore::rebalance::{plan_rebalance, MigrationTransfer};
 use restore::restore::repair::RepairScheme;
 use restore::restore::ReStore;
@@ -50,6 +50,67 @@ fn alloc_counts_do_not_scale_with_units_world_or_pieces() {
     execution_load_checksum_verification_allocations_do_not_scale_with_block_count();
     steady_load_touched_entries_do_not_scale_with_world();
     dirty_resubmit_allocations_do_not_scale_with_block_count();
+    kv_cache_hit_path_allocates_nothing();
+    kv_batch_planning_allocations_do_not_scale_with_world();
+}
+
+fn kv_cache_hit_path_allocates_nothing() {
+    // The KV read cache's hit path contract: probe, stamp re-check, one
+    // local-copy cost charge, and a borrowed-slice return — ZERO heap
+    // allocations, with the network accumulator never touched.
+    let cfg = RestoreConfig::builder(8, 8, 64).replicas(4).build().unwrap();
+    let mut cluster = Cluster::new_execution(8, 4);
+    let mut rs = ReStore::new(cfg, &cluster).unwrap();
+    let shards = make_shards(8, 8 * 64);
+    rs.submit(&mut cluster, &shards).unwrap();
+    let mut kv = KvStore::new();
+    kv.register(&rs, DatasetId::FIRST, 32).unwrap();
+    // warm: the miss routes through the holders and fills the cache
+    let warm = kv.get(&mut rs, &mut cluster, DatasetId::FIRST, 2, 11).unwrap().hit;
+    assert!(!warm);
+    let (n, hit) = allocs_during(|| {
+        let g = kv.get(&mut rs, &mut cluster, DatasetId::FIRST, 2, 11).unwrap();
+        assert!(g.bytes.is_some());
+        g.hit
+    });
+    assert!(hit, "second identical get must hit the per-PE cache");
+    assert_eq!(n, 0, "kv cache hit path allocated {n} times");
+}
+
+fn kv_batch_planning_allocations_do_not_scale_with_world() {
+    // Fused batched-get planning is O(batch size): the same pinned
+    // 16-get workload (requester i + 1 reads two blocks of PE i's shard;
+    // Primary selection pins the servers at any world, exactly as in
+    // `steady_load_touched_entries_do_not_scale_with_world`) must record
+    // EQUAL allocation counts at p = 64 and p = 4096. Cache capacity 0 so
+    // every get takes the planning + fused-load path.
+    let count_for = |p: usize| {
+        let cfg = RestoreConfig::builder(p, 8, 64)
+            .replicas(4)
+            .server_selection(ServerSelection::Primary)
+            .build()
+            .unwrap();
+        let mut cluster = Cluster::new_execution(p, 4);
+        let mut rs = ReStore::new(cfg, &cluster).unwrap();
+        rs.submit_virtual(&mut cluster).unwrap();
+        let mut kv = KvStore::new();
+        kv.register(&rs, DatasetId::FIRST, 0).unwrap();
+        let mut batch = KvBatch::new();
+        for i in 0..8u64 {
+            batch.get(DatasetId::FIRST, i as usize + 1, i * 64);
+            batch.get(DatasetId::FIRST, i as usize + 1, i * 64 + 7);
+        }
+        kv.execute(&mut rs, &mut cluster, &batch).unwrap(); // warm scratch
+        let (n, out) = allocs_during(|| kv.execute(&mut rs, &mut cluster, &batch).unwrap());
+        assert_eq!(out.misses, 16, "cache disabled: every get takes the planning path");
+        n
+    };
+    let small = count_for(64);
+    let large = count_for(4096);
+    assert_eq!(
+        small, large,
+        "kv batch planning allocation count scales with p ({small} vs {large})"
+    );
 }
 
 fn dirty_resubmit_allocations_do_not_scale_with_block_count() {

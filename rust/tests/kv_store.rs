@@ -1,0 +1,366 @@
+//! KV serving layer integration tests.
+//!
+//! * The **golden message/byte contract** of `KvBatch`: a fused batch of
+//!   k point gets charges exactly ONE request message and ONE data
+//!   message when the keys land on one (requester, server) pair — total
+//!   message count strictly below the 2k a sequential serving of the same
+//!   gets sends — while request bytes (k · 24 B piece descriptors) and
+//!   data bytes (k · block_size) are EXACTLY equal to sequential. Keys
+//!   are chosen distinct and pairwise non-adjacent: adjacent keys would
+//!   coalesce into one descriptor and legitimately *undercut* sequential
+//!   bytes, which is a real extra saving but not the identity under test.
+//!
+//! * A **property test** driving random get / batched-get / put / scan /
+//!   kill+recover / repair+invalidate interleavings against two identical
+//!   stores: one served through a cached `KvStore`, one through an
+//!   uncached fresh-load oracle. Every served byte must be identical
+//!   between the two AND match a locally tracked expected image; after
+//!   every step the cache is audited (zero mismatched entries, zero stale
+//!   serves) — the invariant that a hit can only happen at matching
+//!   epoch + version + generation.
+
+use restore::config::RestoreConfig;
+use restore::error::Error;
+use restore::restore::repair::RepairScheme;
+use restore::restore::{DatasetId, KvBatch, KvStore, Overlap, ReStore};
+use restore::simnet::cluster::Cluster;
+use restore::simnet::ulfm;
+use restore::util::rng::Rng;
+
+fn flat_image(n_blocks: u64, bs: usize, salt: u8) -> Vec<u8> {
+    (0..n_blocks as usize * bs)
+        .map(|i| (i as u8).wrapping_mul(29).wrapping_add(salt))
+        .collect()
+}
+
+fn shards_of(store: &ReStore, bs: usize, flat: &[u8]) -> Vec<Vec<u8>> {
+    let dist = store.distribution();
+    (0..dist.world())
+        .map(|j| {
+            let r = dist.shard_of(j);
+            flat[r.start as usize * bs..r.end as usize * bs].to_vec()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// golden message/byte contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_batch_charges_one_request_and_one_data_message() {
+    const P: usize = 16;
+    const BS: usize = 32;
+    const BPP: usize = 64;
+    const K: usize = 6;
+    let n = (P * BPP) as u64;
+    let image = flat_image(n, BS, 3);
+
+    let build = || {
+        let cfg = RestoreConfig::builder(P, BS, BPP).replicas(4).build().unwrap();
+        let mut cluster = Cluster::new_execution(P, 4);
+        let mut store = ReStore::new(cfg, &cluster).unwrap();
+        store.submit(&mut cluster, &shards_of(&store, BS, &image)).unwrap();
+        let mut kv = KvStore::new();
+        kv.register(&store, DatasetId::FIRST, 0).unwrap(); // pure routing, no cache
+        (cluster, store, kv)
+    };
+    let (mut cluster, mut store, mut kv) = build();
+
+    // Pick K distinct, pairwise NON-adjacent keys that all live in the
+    // same permuted slice (= same holder set, and the router's
+    // deterministic per-(requester, slice) pick means one server), plus a
+    // requester that is not itself a holder — so the fused batch is
+    // exactly one remote (requester, server) conversation.
+    let (slot, keys) = {
+        let ds = store.dataset(DatasetId::FIRST).unwrap();
+        let dist = ds.distribution();
+        let mut per_slot: Vec<Vec<u64>> = vec![Vec::new(); dist.world()];
+        for x in 0..n {
+            per_slot[dist.slice_of(dist.permute_block(x))].push(x);
+        }
+        let (slot, xs) = per_slot
+            .iter()
+            .enumerate()
+            .find(|(_, xs)| {
+                // greedily count pairwise non-adjacent keys (sorted order)
+                let mut picked = 0u64;
+                let mut last = u64::MAX - 1;
+                for &x in xs.iter() {
+                    if last == u64::MAX - 1 || x > last + 1 {
+                        picked += 1;
+                        last = x;
+                    }
+                }
+                picked >= K as u64
+            })
+            .expect("some slice holds >= K non-adjacent keys");
+        let mut picked: Vec<u64> = Vec::new();
+        for &x in xs {
+            if picked.last().map_or(true, |&l| x > l + 1) {
+                picked.push(x);
+                if picked.len() == K {
+                    break;
+                }
+            }
+        }
+        (slot, picked)
+    };
+    let holders: Vec<u32> =
+        store.dataset(DatasetId::FIRST).unwrap().holder_index().holders_of(slot).to_vec();
+    let requester = (0..P).find(|pe| !holders.contains(&(*pe as u32))).expect("p > r");
+
+    // -- fused: ONE request sparse all-to-all + ONE data sparse all-to-all
+    let mut batch = KvBatch::new();
+    for &k in &keys {
+        batch.get(DatasetId::FIRST, requester, k);
+    }
+    let fused = kv.execute(&mut store, &mut cluster, &batch).unwrap();
+    assert_eq!(fused.hits, 0);
+    assert_eq!(
+        fused.request_cost.total_msgs, 1,
+        "all K gets share one (requester, server) pair -> one request message"
+    );
+    assert_eq!(fused.data_cost.total_msgs, 1, "one data message back");
+    assert_eq!(fused.cost.total_msgs, 2);
+
+    // -- sequential twin: the same K gets one at a time
+    let (mut s_cluster, mut s_store, mut s_kv) = build();
+    let mut seq_msgs = 0u64;
+    let mut seq_request_bytes = 0u64;
+    let mut seq_data_bytes = 0u64;
+    for (i, &k) in keys.iter().enumerate() {
+        let g = s_kv.get(&mut s_store, &mut s_cluster, DatasetId::FIRST, requester, k).unwrap();
+        assert!(!g.hit);
+        seq_msgs += g.cost.total_msgs;
+        seq_request_bytes += g.cost.total_bytes - BS as u64; // data = one block
+        seq_data_bytes += BS as u64;
+        assert_eq!(
+            g.bytes.unwrap().as_slice(),
+            fused.value(i).unwrap(),
+            "fused and sequential serve identical bytes"
+        );
+        assert_eq!(fused.value(i).unwrap(), &image[k as usize * BS..(k as usize + 1) * BS]);
+    }
+    assert_eq!(seq_msgs, 2 * K as u64, "sequential: one request + one data message per get");
+    assert!(
+        fused.cost.total_msgs < seq_msgs,
+        "fused message count must be strictly below sequential ({} vs {seq_msgs})",
+        fused.cost.total_msgs
+    );
+    // byte identity: k non-adjacent keys are k piece descriptors in the
+    // request phase and k blocks in the data phase, fused or not
+    assert_eq!(fused.request_cost.total_bytes, seq_request_bytes);
+    assert_eq!(fused.data_cost.total_bytes, seq_data_bytes);
+    assert_eq!(
+        fused.cost.total_bytes,
+        seq_request_bytes + seq_data_bytes,
+        "fusing changes message count, never bytes"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// randomized cached-vs-oracle property test
+// ---------------------------------------------------------------------------
+
+const P: usize = 12;
+const BS: usize = 16;
+const BPP: usize = 32;
+const N: u64 = (P * BPP) as u64;
+const CACHE: usize = 64;
+const OPS: usize = 160;
+
+struct Stack {
+    cluster: Cluster,
+    store: ReStore,
+    kv: KvStore,
+    ids: Vec<DatasetId>,
+}
+
+fn stack(cache_slots: usize) -> Stack {
+    let cfg = RestoreConfig::builder(P, BS, BPP).replicas(4).build().unwrap();
+    let mut cluster = Cluster::new_execution(P, 4);
+    let mut store = ReStore::new(cfg.clone(), &cluster).unwrap();
+    store.submit(&mut cluster, &shards_of(&store, BS, &flat_image(N, BS, 1))).unwrap();
+    let id2 = store.create_dataset(cfg, &cluster).unwrap();
+    let shards2 = shards_of(&store, BS, &flat_image(N, BS, 2));
+    store.dataset_mut(id2).unwrap().submit(&mut cluster, &shards2).unwrap();
+    let ids = vec![DatasetId::FIRST, id2];
+    let mut kv = KvStore::new();
+    for (i, &id) in ids.iter().enumerate() {
+        kv.register_with_image(&store, id, cache_slots, flat_image(N, BS, 1 + i as u8)).unwrap();
+    }
+    Stack { cluster, store, kv, ids }
+}
+
+/// Audit both stacks after every step: the cached side must be coherent
+/// (no live entry differing from a replica) and must never have served a
+/// stale value.
+fn audit(cached: &Stack, oracle: &Stack) {
+    for &id in &cached.ids {
+        let a = cached.kv.validate_cache(&cached.store, id).unwrap();
+        assert_eq!(a.mismatched_entries, 0, "live cache entry diverged from the replicas");
+        let s = cached.kv.stats(id).unwrap();
+        assert_eq!(s.stale_serves, 0, "a stale value was served");
+        assert_eq!(oracle.kv.stats(id).unwrap().hits, 0, "the oracle must never cache");
+    }
+    assert_eq!(
+        cached.cluster.alive_ranks(),
+        oracle.cluster.alive_ranks(),
+        "mirrored kills must keep the stacks in lockstep"
+    );
+}
+
+#[test]
+fn random_interleavings_match_uncached_oracle_byte_for_byte() {
+    for seed in [11u64, 29, 47] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut c = stack(CACHE);
+        let mut o = stack(0);
+        // the locally tracked truth: what every key must currently serve
+        let mut expected: Vec<Vec<u8>> =
+            (0..c.ids.len()).map(|i| flat_image(N, BS, 1 + i as u8)).collect();
+        let mut kills = 0usize;
+
+        for step in 0..OPS {
+            let alive: Vec<usize> =
+                c.cluster.alive_ranks().iter().map(|&r| r as usize).collect();
+            let d = rng.gen_index(c.ids.len());
+            let id = c.ids[d];
+            match rng.gen_index(14) {
+                // -- single gets (the common case) --
+                0..=5 => {
+                    let pe = alive[rng.gen_index(alive.len())];
+                    let key = rng.gen_u64_below(N);
+                    let got = c.kv.get(&mut c.store, &mut c.cluster, id, pe, key).unwrap();
+                    let want = o.kv.get(&mut o.store, &mut o.cluster, id, pe, key).unwrap();
+                    assert!(!want.hit);
+                    let got = got.bytes.unwrap();
+                    assert_eq!(got.as_slice(), want.bytes.unwrap().as_slice(), "step {step}");
+                    assert_eq!(
+                        got.as_slice(),
+                        &expected[d][key as usize * BS..(key as usize + 1) * BS]
+                    );
+                }
+                // -- fused batches across BOTH datasets --
+                6..=8 => {
+                    let mut batch = KvBatch::new();
+                    let mut trace = Vec::new();
+                    for _ in 0..8 {
+                        let pe = alive[rng.gen_index(alive.len())];
+                        let di = rng.gen_index(c.ids.len());
+                        let key = rng.gen_u64_below(N);
+                        batch.get(c.ids[di], pe, key);
+                        trace.push((di, pe, key));
+                    }
+                    let out = c.kv.execute(&mut c.store, &mut c.cluster, &batch).unwrap();
+                    for (i, &(di, pe, key)) in trace.iter().enumerate() {
+                        let want =
+                            o.kv.get(&mut o.store, &mut o.cluster, c.ids[di], pe, key).unwrap();
+                        assert_eq!(out.value(i).unwrap(), want.bytes.unwrap().as_slice());
+                        assert_eq!(
+                            out.value(i).unwrap(),
+                            &expected[di][key as usize * BS..(key as usize + 1) * BS]
+                        );
+                    }
+                }
+                // -- point writes through the dirty-resubmit path --
+                9 | 10 => {
+                    let keys: Vec<u64> = (0..4).map(|_| rng.gen_u64_below(N)).collect();
+                    let values: Vec<Vec<u8>> = keys
+                        .iter()
+                        .map(|&k| {
+                            (0..BS).map(|j| (k as u8) ^ (j as u8) ^ (step as u8)).collect()
+                        })
+                        .collect();
+                    let writes: Vec<(u64, &[u8])> =
+                        keys.iter().zip(&values).map(|(&k, v)| (k, v.as_slice())).collect();
+                    let rc = c.kv.put_many(
+                        &mut c.store,
+                        &mut c.cluster,
+                        id,
+                        &writes,
+                        Overlap::Blocking,
+                    );
+                    let ro = o.kv.put_many(
+                        &mut o.store,
+                        &mut o.cluster,
+                        id,
+                        &writes,
+                        Overlap::Blocking,
+                    );
+                    assert_eq!(rc.is_ok(), ro.is_ok(), "mirrored puts must agree (step {step})");
+                    match rc {
+                        Ok(_) => {
+                            for (&k, v) in keys.iter().zip(&values) {
+                                expected[d][k as usize * BS..(k as usize + 1) * BS]
+                                    .copy_from_slice(v);
+                            }
+                        }
+                        // a degraded layout can refuse writes; both sides
+                        // rolled their images back, truth is unchanged
+                        Err(Error::DeadPe(_))
+                        | Err(Error::IrrecoverableDataLoss { .. })
+                        | Err(Error::ResubmitAborted { .. }) => {}
+                        Err(e) => panic!("unexpected put failure at step {step}: {e}"),
+                    }
+                }
+                // -- range scans --
+                11 => {
+                    let start = rng.gen_u64_below(N - 8);
+                    let end = start + 1 + rng.gen_u64_below(8);
+                    let pe = alive[rng.gen_index(alive.len())];
+                    let got =
+                        c.kv.scan(&mut c.store, &mut c.cluster, id, pe, start, end).unwrap();
+                    let want =
+                        o.kv.scan(&mut o.store, &mut o.cluster, id, pe, start, end).unwrap();
+                    let got = got.bytes.unwrap();
+                    assert_eq!(got, want.bytes.unwrap());
+                    assert_eq!(
+                        got,
+                        &expected[d][start as usize * BS..end as usize * BS]
+                    );
+                }
+                // -- a failure + the full recovery handshake, mirrored --
+                12 => {
+                    if kills < 2 && alive.len() > P - 2 {
+                        kills += 1;
+                        let victim = alive[alive.len() - rng.gen_index(3) - 1];
+                        for s in [&mut c, &mut o] {
+                            s.cluster.kill(&[victim]);
+                            let (_failed, map, _cost) = ulfm::recover(&mut s.cluster);
+                            s.store
+                                .rebalance_or_acknowledge_all(&mut s.cluster, &map)
+                                .unwrap();
+                        }
+                        // the epoch bump must have stranded everything
+                        for &id in &c.ids {
+                            let a = c.kv.validate_cache(&c.store, id).unwrap();
+                            assert_eq!(a.live_entries, 0, "entry survived an epoch bump");
+                        }
+                    }
+                }
+                // -- repair (idempotent here) + the manual invalidation
+                //    contract for placement changes without a stamp bump --
+                _ => {
+                    for s in [&mut c, &mut o] {
+                        s.store
+                            .repair_replicas_all(&mut s.cluster, RepairScheme::DoubleHashing)
+                            .unwrap();
+                        s.kv.invalidate_all();
+                    }
+                    for &id in &c.ids {
+                        let a = c.kv.validate_cache(&c.store, id).unwrap();
+                        assert_eq!(a.live_entries, 0, "invalidate_all must strand every entry");
+                    }
+                }
+            }
+            audit(&c, &o);
+        }
+
+        // the cache did real work on this trace
+        let total_hits: u64 =
+            c.ids.iter().map(|&id| c.kv.stats(id).unwrap().hits).sum();
+        assert!(total_hits > 0, "seed {seed}: trace never hit the cache");
+    }
+}

@@ -41,6 +41,10 @@ def fmt(name: str, value: float) -> str:
         return f"{value:.2e}"
     if "-frac" in name:
         return f"{value:.4f}"
+    if "-count" in name:
+        # message/event counters (e.g. the kv bench's batched-msgs-count
+        # and zero-ok stale-serves-count rows): integers, never durations
+        return f"{value:,.0f}"
     if "-per-s" in name:
         # rates (e.g. scrub throughput-blocks-per-s) ride the field raw
         return f"{value / 1e6:.1f} M/s" if value >= 1e6 else f"{value:,.0f}/s"
@@ -73,10 +77,43 @@ def load(paths):
     return rows
 
 
+def merge_percentiles(rows):
+    """Fold ` p50 ` / ` p99 ` row pairs into one `p50/p99` row.
+
+    The latency benches emit percentile pairs as separate JSON entries
+    (the artifact schema is strictly one scalar per line); the rendered
+    table reads better with both on one row. Rows whose names differ only
+    by the percentile token are merged in place — the p50 row's position
+    is kept, the p99 row is dropped — with the combined value rendered as
+    `fmt(p50) / fmt(p99)`. Unpaired percentile rows pass through as-is.
+    """
+    merged = []
+    pending = {}  # base name -> index into merged (the p50 row)
+    for name, value, path in rows:
+        if " p50 " in name:
+            pending[name.replace(" p50 ", " ", 1)] = len(merged)
+            merged.append((name, fmt(name, value), path))
+        elif " p99 " in name:
+            base = name.replace(" p99 ", " ", 1)
+            if base in pending:
+                i = pending.pop(base)
+                p50_name, p50_text, p50_path = merged[i]
+                merged[i] = (
+                    p50_name.replace(" p50 ", " p50/p99 ", 1),
+                    f"{p50_text} / {fmt(name, value)}",
+                    p50_path,
+                )
+            else:
+                merged.append((name, fmt(name, value), path))
+        else:
+            merged.append((name, fmt(name, value), path))
+    return merged
+
+
 def render(rows) -> str:
     out = ["| bench | measured | source |", "|---|---|---|"]
-    for name, value, path in rows:
-        out.append(f"| `{name}` | {fmt(name, value)} | {path} |")
+    for name, text, path in merge_percentiles(rows):
+        out.append(f"| `{name}` | {text} | {path} |")
     return "\n".join(out)
 
 

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Regression tests for tools/validate_bench_json.py.
+
+Run by CI's bench-json smoke job (and by hand):
+
+    python3 tools/test_validate_bench_json.py
+
+Covers the schema checks and, specifically, the `zero-ok` name tag: a
+counter metric whose healthy value is exactly zero (e.g. the kv bench's
+`kv stale-serves-count zero-ok p=1536` tripwire) must pass validation at
+0.0 — while untagged zeros, negatives, and non-finite values still fail.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from validate_bench_json import validate_file  # noqa: E402
+
+
+def write_artifact(tmpdir: str, entries) -> str:
+    path = os.path.join(tmpdir, "BENCH_test.json")
+    with open(path, "w", encoding="utf-8") as fh:
+        for e in entries:
+            fh.write(e if isinstance(e, str) else json.dumps(e))
+            fh.write("\n")
+    return path
+
+
+class ValidateBenchJson(unittest.TestCase):
+    def check(self, entries) -> list:
+        with tempfile.TemporaryDirectory() as tmpdir:
+            return validate_file(write_artifact(tmpdir, entries))
+
+    def test_well_formed_artifact_passes(self):
+        self.assertEqual(
+            self.check([{"name": "load p=1536 wall", "ns_per_iter": 123.4}]), []
+        )
+
+    def test_missing_file_and_empty_artifact_fail(self):
+        self.assertTrue(validate_file("/nonexistent/BENCH_x.json"))
+        self.assertTrue(self.check([]))
+
+    def test_schema_violations_fail(self):
+        self.assertTrue(self.check(["not json"]))
+        self.assertTrue(self.check([{"name": "x"}]))  # missing ns_per_iter
+        self.assertTrue(self.check([{"name": "x", "ns_per_iter": 1, "extra": 2}]))
+        self.assertTrue(self.check([{"name": "", "ns_per_iter": 1}]))
+        self.assertTrue(self.check([{"name": "x", "ns_per_iter": "fast"}]))
+        self.assertTrue(self.check([{"name": "x", "ns_per_iter": float("nan")}]))
+
+    def test_untagged_zero_fails(self):
+        problems = self.check([{"name": "kv stale-serves-count p=1536", "ns_per_iter": 0.0}])
+        self.assertEqual(len(problems), 1)
+        self.assertIn("zero-ok", problems[0])
+
+    def test_zero_ok_tag_allows_exactly_zero(self):
+        self.assertEqual(
+            self.check(
+                [{"name": "kv stale-serves-count zero-ok p=1536", "ns_per_iter": 0.0}]
+            ),
+            [],
+        )
+
+    def test_zero_ok_tag_still_rejects_negative_and_non_finite(self):
+        self.assertTrue(
+            self.check([{"name": "x zero-ok", "ns_per_iter": -1.0}])
+        )
+        self.assertTrue(
+            self.check(['{"name": "x zero-ok", "ns_per_iter": Infinity}'])
+        )
+
+    def test_zero_ok_tag_on_positive_value_still_passes(self):
+        self.assertEqual(
+            self.check([{"name": "x zero-ok", "ns_per_iter": 7.0}]), []
+        )
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -58,12 +58,20 @@ def validate_file(path: str) -> list:
             problems.append(f"{where}: 'ns_per_iter' must be a number, got {value!r}")
         elif not math.isfinite(value):
             problems.append(f"{where}: 'ns_per_iter' must be finite, got {value!r}")
-        elif value <= 0:
+        elif value < 0:
+            problems.append(f"{where}: 'ns_per_iter' must be >= 0, got {value!r}")
+        elif value == 0 and not (isinstance(name, str) and "zero-ok" in name):
             # Every metric the benches emit (durations, byte counts,
             # probabilities, fractions) is strictly positive when actually
             # measured; a NaN-free 0.0 or negative value means a broken
-            # measurement or formatting truncation, not a fast run.
-            problems.append(f"{where}: 'ns_per_iter' must be > 0, got {value!r}")
+            # measurement or formatting truncation, not a fast run — EXCEPT
+            # counters whose healthy value IS zero (e.g. the kv bench's
+            # stale-serve tripwire), which opt in by carrying the literal
+            # `zero-ok` tag in their name.
+            problems.append(
+                f"{where}: 'ns_per_iter' must be > 0 (tag the name 'zero-ok' if "
+                f"zero is the healthy value), got {value!r}"
+            )
         entries += 1
     if not entries:
         problems.append(f"{path}: no entries (empty artifact)")
